@@ -1,0 +1,55 @@
+//! Backend-media comparison (Fig 7 scenario): run the same workload on
+//! ExPAND-Z (Z-NAND), ExPAND-P (PMEM) and ExPAND-D (DRAM) expanders and
+//! compare against the LocalDRAM baseline.
+//!
+//! Run: `cargo run --release --example backend_media [workload]`
+
+use expand_cxl::config::{Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::workloads::WorkloadId;
+
+fn main() -> anyhow::Result<()> {
+    let workload = std::env::args().nth(1).unwrap_or_else(|| "leslie3d".to_string());
+    let id = WorkloadId::parse(&workload)?;
+    let runtime = if Runtime::artifacts_available("artifacts") {
+        Some(Runtime::new("artifacts")?)
+    } else {
+        eprintln!("note: mock predictor (run `make artifacts`)");
+        None
+    };
+
+    let base_cfg = || {
+        let mut c = SimConfig::default();
+        c.hierarchy.llc.size_bytes = 4 << 20;
+        c.ssd.internal_dram_bytes = 8 << 20;
+        c.accesses = 300_000;
+        c
+    };
+
+    // LocalDRAM baseline.
+    let mut cfg = base_cfg();
+    cfg.backing = Backing::LocalDram;
+    let mut src = id.source(cfg.seed);
+    let local = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    println!("{:<10} exec={:>10.2}ms  (baseline)", "LocalDRAM", local.exec_ps as f64 / 1e9);
+
+    for media in [MediaKind::ZNand, MediaKind::Pmem, MediaKind::Dram] {
+        let mut cfg = base_cfg();
+        let internal = cfg.ssd.internal_dram_bytes;
+        cfg.ssd = SsdConfig::with_media(media);
+        cfg.ssd.internal_dram_bytes = internal;
+        cfg.prefetcher = PrefetcherKind::Expand;
+        let mut src = id.source(cfg.seed);
+        let s = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+        println!(
+            "{:<10} exec={:>10.2}ms  vs LocalDRAM {:>6.2}x  LLC-hit {:>5.1}%  ssd-internal-hit {:>5.1}%",
+            format!("ExPAND-{}", media.name().chars().next().unwrap().to_uppercase()),
+            s.exec_ps as f64 / 1e9,
+            s.speedup_over(&local),
+            s.llc_hit_ratio() * 100.0,
+            s.ssd_internal_hit * 100.0,
+        );
+    }
+    Ok(())
+}

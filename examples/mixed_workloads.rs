@@ -1,0 +1,43 @@
+//! Mixed-workload scenario (Fig 4b): distinct workloads interleaved on
+//! the cores, which intertwines the miss streams. Single-stream
+//! prefetchers (Rule1, ML without PC modality) collapse; ExPAND's
+//! PC-aware multi-modality predictor keeps the streams separable.
+//!
+//! Run: `cargo run --release --example mixed_workloads`
+
+use expand_cxl::config::PrefetcherKind;
+use expand_cxl::figures::{figure_config, FigOpts};
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::workloads::mixed::MixedTrace;
+use expand_cxl::workloads::WorkloadId;
+
+fn main() -> anyhow::Result<()> {
+    let opts = FigOpts { accesses: 300_000, ..Default::default() };
+    let runtime = match &opts.artifacts {
+        Some(d) if Runtime::artifacts_available(d) => Some(Runtime::new(d)?),
+        _ => None,
+    };
+    let mix = [WorkloadId::Cc, WorkloadId::Tc];
+
+    let mut cfg = figure_config(&opts);
+    cfg.prefetcher = PrefetcherKind::None;
+    let mut src = MixedTrace::new(&mix, cfg.seed);
+    let base = simulate(&cfg, runtime.as_ref(), &mut src)?;
+    println!("{}", base.summary());
+
+    for kind in [
+        PrefetcherKind::Rule1,
+        PrefetcherKind::Rule2,
+        PrefetcherKind::Ml1,
+        PrefetcherKind::Ml2,
+        PrefetcherKind::Expand,
+    ] {
+        let mut cfg = figure_config(&opts);
+        cfg.prefetcher = kind;
+        let mut src = MixedTrace::new(&mix, cfg.seed);
+        let s = simulate(&cfg, runtime.as_ref(), &mut src)?;
+        println!("{}   speedup {:.2}x", s.summary(), s.speedup_over(&base));
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! End-to-end driver (EXPERIMENTS.md §End-to-end): run every graph and
+//! SPEC workload through the full stack — Rust coordinator, CXL fabric,
+//! CXL-SSD model, and the AOT-compiled multi-modality transformer on the
+//! decider's hot path — and report the paper's headline metric: mean
+//! speedup of ExPAND over NoPrefetch for graph and SPEC suites (paper:
+//! 9.0x graphs, 14.7x SPEC), plus per-workload rows.
+//!
+//! Run: `make artifacts && cargo run --release --example paper_headline`
+
+use expand_cxl::config::PrefetcherKind;
+use expand_cxl::figures::{figure_config, FigOpts};
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::util::stats::geomean;
+use expand_cxl::workloads::WorkloadId;
+
+fn main() -> anyhow::Result<()> {
+    let opts = FigOpts { accesses: 400_000, ..Default::default() };
+    let runtime = match &opts.artifacts {
+        Some(dir) if Runtime::artifacts_available(dir) => Some(Runtime::new(dir)?),
+        _ => {
+            eprintln!("note: running with mock predictor (run `make artifacts` for the real one)");
+            None
+        }
+    };
+
+    println!("{:<12} {:>14} {:>14} {:>9} {:>10} {:>10}",
+        "workload", "noprefetch", "expand", "speedup", "hit-before", "hit-after");
+    let mut graph_speedups = Vec::new();
+    let mut spec_speedups = Vec::new();
+    for id in WorkloadId::ALL {
+        let mut cfg = figure_config(&opts);
+        cfg.prefetcher = PrefetcherKind::None;
+        let mut src = id.source(cfg.seed);
+        let base = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+
+        cfg.prefetcher = PrefetcherKind::Expand;
+        let mut src = id.source(cfg.seed);
+        let ex = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+
+        let s = ex.speedup_over(&base);
+        println!(
+            "{:<12} {:>12.2}ms {:>12.2}ms {:>8.2}x {:>9.1}% {:>9.1}%",
+            id.name(),
+            base.exec_ps as f64 / 1e9,
+            ex.exec_ps as f64 / 1e9,
+            s,
+            base.llc_hit_ratio() * 100.0,
+            ex.llc_hit_ratio() * 100.0
+        );
+        if id.is_graph() {
+            graph_speedups.push(s);
+        } else {
+            spec_speedups.push(s);
+        }
+    }
+    println!(
+        "\nHEADLINE  graph mean speedup: {:.2}x   SPEC mean speedup: {:.2}x",
+        geomean(&graph_speedups),
+        geomean(&spec_speedups)
+    );
+    println!("(paper reports 9.0x graphs / 14.7x SPEC vs prefetching baselines)");
+    Ok(())
+}

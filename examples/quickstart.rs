@@ -1,0 +1,45 @@
+//! Quickstart: simulate the TC graph workload on a CXL-SSD behind one
+//! switch, with and without ExPAND, and print the speedup.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (artifacts optional — falls back to the mock predictor without them).
+
+use expand_cxl::config::{PrefetcherKind, SimConfig};
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::workloads::WorkloadId;
+
+fn main() -> anyhow::Result<()> {
+    // A scaled configuration: 4 MB LLC against a ~30 MB working set.
+    let mut cfg = SimConfig::default();
+    cfg.hierarchy.llc.size_bytes = 4 << 20;
+    cfg.ssd.internal_dram_bytes = 8 << 20;
+    cfg.accesses = 300_000;
+
+    let runtime = if Runtime::artifacts_available(&cfg.artifacts_dir) {
+        Some(Runtime::new(&cfg.artifacts_dir)?)
+    } else {
+        eprintln!("note: no artifacts found; using mock predictor (run `make artifacts`)");
+        None
+    };
+
+    // Baseline: CXL-SSD without prefetching.
+    cfg.prefetcher = PrefetcherKind::None;
+    let mut src = WorkloadId::Tc.source(cfg.seed);
+    let base = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    println!("{}", base.summary());
+
+    // ExPAND: expander-driven prefetching.
+    cfg.prefetcher = PrefetcherKind::Expand;
+    let mut src = WorkloadId::Tc.source(cfg.seed);
+    let ex = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    println!("{}", ex.summary());
+
+    println!(
+        "\nExPAND speedup over NoPrefetch: {:.2}x (LLC hit {:.1}% -> {:.1}%)",
+        ex.speedup_over(&base),
+        base.llc_hit_ratio() * 100.0,
+        ex.llc_hit_ratio() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Topology sweep: enumerate fabrics of increasing depth, show the
+//! reflector's end-to-end latency calculation per level, and measure the
+//! resulting application slowdown with and without topology-aware
+//! timeliness (the paper's central ablation).
+//!
+//! Run: `cargo run --release --example topology_sweep`
+
+use expand_cxl::config::{PrefetcherKind, SimConfig};
+use expand_cxl::cxl::configspace::ConfigSpace;
+use expand_cxl::cxl::enumeration::Enumeration;
+use expand_cxl::cxl::{Fabric, Topology};
+use expand_cxl::expand::timeliness::setup_device;
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::ssd::CxlSsd;
+use expand_cxl::workloads::WorkloadId;
+
+fn main() -> anyhow::Result<()> {
+    let base_cfg = SimConfig::default();
+
+    println!("-- enumeration-time timeliness setup per switch depth --");
+    println!("{:>6} {:>12} {:>12} {:>12}", "depth", "device_ns", "vh_ns", "e2e_ns");
+    for levels in 0..=4 {
+        let topo = Topology::chain(levels);
+        let dev = topo.ssds()[0];
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &base_cfg.cxl);
+        let ssd = CxlSsd::new(&base_cfg.ssd);
+        let mut cs = ConfigSpace::endpoint(1);
+        let t = setup_device(&fabric, &e, &ssd, dev, &mut cs);
+        println!(
+            "{:>6} {:>12.1} {:>12.1} {:>12.1}",
+            t.switch_depth,
+            t.device_ps as f64 / 1000.0,
+            t.vh_ps as f64 / 1000.0,
+            t.e2e_ps as f64 / 1000.0
+        );
+    }
+
+    println!("\n-- TC slowdown vs switch depth (ExPAND, topology-aware vs not) --");
+    let runtime = if Runtime::artifacts_available("artifacts") {
+        Some(Runtime::new("artifacts")?)
+    } else {
+        None
+    };
+    println!("{:>6} {:>14} {:>14}", "depth", "aware_ms", "unaware_ms");
+    for levels in 1..=4 {
+        let mut run = |aware: bool| -> anyhow::Result<f64> {
+            let mut cfg = SimConfig::default();
+            cfg.hierarchy.llc.size_bytes = 4 << 20;
+            cfg.ssd.internal_dram_bytes = 8 << 20;
+            cfg.accesses = 200_000;
+            cfg.prefetcher = PrefetcherKind::Expand;
+            cfg.cxl.switch_levels = levels;
+            // "Unaware": the decider believes the device is directly
+            // attached (timeliness model ignores switch latency).
+            cfg.expand.timeliness_accuracy = if aware { 1.0 } else { 0.0 };
+            let mut src = WorkloadId::Tc.source(cfg.seed);
+            Ok(simulate(&cfg, runtime.as_ref(), &mut *src)?.exec_ps as f64 / 1e9)
+        };
+        println!("{:>6} {:>14.2} {:>14.2}", levels, run(true)?, run(false)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT export: train the predictors and lower them to HLO text artifacts.
+
+This is the single build-time entry point (``make artifacts``). Python
+never runs on the request path — the Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` through the PJRT CPU client (rust/src/runtime/).
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (per model: expand, ml1, ml2):
+  artifacts/<name>.hlo.txt   lowered fwd pass, trained weights as constants
+  artifacts/manifest.json    shapes/vocab contract + training metrics that
+                             the Rust runtime and Table-1d harness consume
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from .model import MODELS, make_forward, param_bytes
+from .train import train_model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO
+    printer elides big constants as ``{...}``, which the text parser on
+    the Rust side silently reads back as *zeros* — turning the baked-in
+    trained weights into an all-zero model.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(name, params, cfg):
+    """Bind trained params and lower the fwd pass for fixed export shapes.
+
+    The baselines ignore ``hint``; without the `h * 0` anchor jax would
+    drop the unused parameter from the lowered module and the Rust
+    runtime (which always feeds three buffers) would fail with a buffer-
+    count mismatch. The anchor keeps the entry signature uniform across
+    all three models.
+    """
+    fwd = make_forward(name, params, cfg, use_pallas=True)
+
+    def entry(deltas, pcs, hint):
+        logits = fwd(deltas, pcs, hint)
+        return logits + (hint * 0.0)[:, None, None]
+
+    d_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.window), jnp.int32)
+    p_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.window), jnp.int32)
+    h_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.float32)
+    lowered = jax.jit(entry).lower(d_spec, p_spec, h_spec)
+    return to_hlo_text(lowered)
+
+
+def probe_model(name, params, cfg):
+    """Canned-input predictions recorded in the manifest; the Rust
+    runtime-roundtrip test replays them to pin artifact integrity
+    (catching e.g. elided-constant or layout regressions)."""
+    _, fwd = MODELS[name]
+    probes = {}
+    for label, delta_tok in [("stride3", 67), ("stride1", 65)]:
+        deltas = np.full((cfg.batch, cfg.window), delta_tok, np.int32)
+        pcs = np.full((cfg.batch, cfg.window), 42, np.int32)
+        hint = np.zeros((cfg.batch,), np.float32)
+        logits = fwd(params, cfg, deltas, pcs, hint, use_pallas=True)
+        toks = np.argmax(np.asarray(logits)[0], axis=-1)
+        probes[label] = {"delta_token": delta_tok, "pc_token": 42,
+                         "expect_tokens": [int(t) for t in toks]}
+    return probes
+
+
+def train_cached(name, cfg, steps, out_dir):
+    """Train with an on-disk cache (build-time convenience: re-lowering
+    after an aot.py change must not cost a retrain). Cache key = model,
+    steps, seed, and config shape."""
+    import pickle
+
+    key = f"{name}-s{steps}-seed{C.SEED}-w{cfg.window}d{cfg.d_model}"
+    cache = os.path.join(out_dir, f".params_{key}.pkl")
+    if os.path.exists(cache):
+        with open(cache, "rb") as f:
+            params, metrics = pickle.load(f)
+        print(f"[aot] loaded cached params for {name} ({cache})")
+        return params, metrics
+    params, metrics = train_model(name, cfg, steps=steps)
+    with open(cache, "wb") as f:
+        pickle.dump((jax.device_get(params), metrics), f)
+    return params, metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--steps", type=int, default=C.TRAIN_STEPS)
+    ap.add_argument("--models", default="expand,ml1,ml2")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training run (CI/test path)")
+    args = ap.parse_args()
+
+    steps = 30 if args.quick else args.steps
+    os.makedirs(args.out, exist_ok=True)
+    cfg = C.EXPORT
+
+    manifest = {
+        "config": cfg.asdict(),
+        "format": "hlo-text",
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in MODELS:
+            raise SystemExit(f"unknown model {name!r}; have {sorted(MODELS)}")
+        params, metrics = train_cached(name, cfg, steps, args.out)
+        hlo = lower_model(name, params, cfg)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["models"][name] = {
+            "file": f"{name}.hlo.txt",
+            "param_bytes": param_bytes(params),
+            "hlo_chars": len(hlo),
+            "probes": probe_model(name, params, cfg),
+            **metrics,
+        }
+        print(f"[aot] wrote {path} ({len(hlo)} chars, "
+              f"{param_bytes(params)} param bytes)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared model/tokenizer configuration for the ExPAND predictor stack.
+
+These constants mirror Table 1b of the paper (attention dim 64, modality
+fusion dim 128, transformer dim 128) and define the interchange contract
+with the Rust runtime (see ``rust/src/runtime/``): window length, vocab
+sizes, batch, and prefetch degree are baked into the exported HLO shapes
+and re-read by Rust from ``artifacts/manifest.json``.
+"""
+
+from dataclasses import dataclass, asdict
+
+# --- Tokenizer contract (must match rust/src/expand/tokenize.rs) ---------
+# Address deltas are measured in 64B cache lines between successive LLC
+# misses, clamped to [-63, +63] and offset by +64 -> tokens 1..127.
+# Token 0 is out-of-vocabulary (jump larger than +-63 lines).
+DELTA_VOCAB = 128
+DELTA_CLAMP = 63
+# PCs are hashed into 256 buckets (multiplicative hash, see tokenize.rs).
+PC_VOCAB = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (Table 1b)."""
+
+    window: int = 32          # sliding window of recent LLC misses
+    d_model: int = 128        # transformer dim
+    d_head: int = 64          # attention dim
+    n_heads: int = 2          # d_head * n_heads == d_model
+    n_layers: int = 2
+    d_fusion: int = 128       # modality fusion MLP hidden dim
+    n_future: int = 4         # prefetch degree: predict next-K deltas
+    batch: int = 4            # decider batch size (fixed in HLO)
+    delta_vocab: int = DELTA_VOCAB
+    pc_vocab: int = PC_VOCAB
+    recency_beta: float = 0.25  # hint-gated recency bias slope
+
+    def asdict(self):
+        return asdict(self)
+
+
+# Default export configuration; the Rust side reads these from the
+# manifest, so changing them here is sufficient to re-shape the stack.
+EXPORT = ModelConfig()
+
+# Training hyper-parameters used by train.py at `make artifacts` time.
+TRAIN_STEPS = 1500
+TRAIN_BATCH = 64
+LEARNING_RATE = 2e-3
+EVAL_BATCHES = 8
+SEED = 20260710

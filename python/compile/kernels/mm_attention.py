@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: fused multi-modality attention.
+
+This is the compute hot-spot of ExPAND's address predictor (paper §
+"Prefetch Address and Timing Speculation"): queries come from the address
+(delta) stream, keys/values from the concatenation of the address and PC
+modality streams, and a per-window additive bias carries both the causal
+mask and the *behavior-hint-gated recency bias* (the decision-tree
+classifier's phase-change signal re-weights attention toward recent
+history — the paper's online-tuning mechanism).
+
+The whole QK^T -> softmax -> PV chain is fused in one kernel so the
+(W x S) score matrix never leaves VMEM. TPU adaptation notes are in
+DESIGN.md §Hardware-Adaptation: per-grid-step VMEM footprint is
+(W + 2S)·Dh·4B + W·S·4B ≈ 29 KB at W=32, S=64, Dh=64 — latency-bound, not
+capacity-bound, with MXU-friendly (W x Dh)·(Dh x S) matmul shapes.
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO ops that round-trip through the Rust loader.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import mm_attention_ref
+
+
+def _mm_attention_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale):
+    """One (batch*head) slice: q [W,Dh], k/v [S,Dh], bias [W,S]."""
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    b = bias_ref[0]
+    # Scores with mask + hint-recency folded into the additive bias.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + b
+    # Numerically-stable softmax, fully in registers/VMEM.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def _mm_attention_impl(q, k, v, bias, interpret=True):
+    """Pallas forward implementation (see mm_attention for the contract)."""
+    bh, w, dh = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    kern = functools.partial(_mm_attention_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, s), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, w, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, bias)
+
+
+@jax.custom_vjp
+def mm_attention(q, k, v, bias):
+    """Fused multi-modality attention.
+
+    Args:
+      q:    f32[BH, W, Dh]  queries (address-stream modality).
+      k:    f32[BH, S, Dh]  keys over concatenated modalities (S = 2W).
+      v:    f32[BH, S, Dh]  values over concatenated modalities.
+      bias: f32[BH, W, S]   additive bias = causal mask + hint * recency.
+
+    Returns:
+      f32[BH, W, Dh] attention output.
+
+    Forward runs the fused Pallas kernel (interpret mode — see module
+    docstring); the backward pass is defined via the jnp reference because
+    interpret-mode Pallas does not support reverse-mode autodiff in this
+    jax version. The online-refinement path only differentiates at build
+    time, so this costs nothing on the request path.
+    """
+    return _mm_attention_impl(q, k, v, bias)
+
+
+def _vjp_fwd(q, k, v, bias):
+    return _mm_attention_impl(q, k, v, bias), (q, k, v, bias)
+
+
+def _vjp_bwd(residuals, g):
+    _, vjp = jax.vjp(mm_attention_ref, *residuals)
+    return vjp(g)
+
+
+mm_attention.defvjp(_vjp_fwd, _vjp_bwd)

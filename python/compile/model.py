@@ -1,0 +1,297 @@
+"""L2: the address-predictor models, in JAX, calling the L1 Pallas kernel.
+
+Three models share one I/O contract so the Rust runtime drives them through
+a single typed interface (rust/src/runtime/predictor.rs):
+
+    inputs : deltas i32[B, W], pcs i32[B, W], hint f32[B]
+    output : logits f32[B, K, DELTA_VOCAB]   (K = prefetch degree)
+
+* ``expand``  — the paper's heterogeneous predictor: a multi-modality
+  transformer whose attention layer is the fused Pallas kernel
+  (kernels/mm_attention.py). The behavior-change *hint* from the decision
+  tree classifier gates an additive recency bias so the model re-weights
+  recent history after a phase change (the paper's online-tuning path).
+* ``ml1``     — LSTM baseline (hierarchical-neural-prefetcher class [39]).
+* ``ml2``     — plain causal transformer baseline (TransFetch class [32]);
+  no modality fusion, no hint.
+
+Parameters are *closed over* at export time so they lower into HLO
+constants — the Rust side never sees weights, only activations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.mm_attention import mm_attention
+from .kernels.ref import mm_attention_ref
+
+# --------------------------------------------------------------------------
+# Small building blocks
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, n_in, n_out):
+    scale = (2.0 / (n_in + n_out)) ** 0.5
+    return scale * jax.random.normal(key, (n_in, n_out), jnp.float32)
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# ExPAND multi-modality transformer
+# --------------------------------------------------------------------------
+
+
+def init_expand_params(key, cfg: ModelConfig):
+    """Initialize the ExPAND predictor parameter tree."""
+    ks = iter(jax.random.split(key, 64))
+    d, dh, nh = cfg.d_model, cfg.d_head, cfg.n_heads
+    assert dh * nh == d, "n_heads * d_head must equal d_model"
+    p = {
+        "delta_emb": 0.02 * jax.random.normal(next(ks), (cfg.delta_vocab, d)),
+        "pc_emb": 0.02 * jax.random.normal(next(ks), (cfg.pc_vocab, d)),
+        "pos_a": 0.02 * jax.random.normal(next(ks), (cfg.window, d)),
+        "pos_p": 0.02 * jax.random.normal(next(ks), (cfg.window, d)),
+        "ln_f": _ln_init(d),
+        "layers": [],
+        # K small per-offset heads + a tied projection into delta vocab.
+        "head_proj": [_dense_init(next(ks), d, d) for _ in range(cfg.n_future)],
+        "head_bias": [jnp.zeros((cfg.delta_vocab,), jnp.float32) for _ in range(cfg.n_future)],
+    }
+    for _ in range(cfg.n_layers):
+        lp = {
+            "ln_a": _ln_init(d),
+            "ln_p": _ln_init(d),
+            "ln_m": _ln_init(d),
+            "wq": _dense_init(next(ks), d, nh * dh),
+            "wk": _dense_init(next(ks), d, nh * dh),
+            "wv": _dense_init(next(ks), d, nh * dh),
+            "wo": _dense_init(next(ks), nh * dh, d),
+            "w1": _dense_init(next(ks), d, cfg.d_fusion),
+            "w2": _dense_init(next(ks), cfg.d_fusion, d),
+        }
+        p["layers"].append(lp)
+    return p
+
+
+def _attention_bias(cfg: ModelConfig, hint, n_heads):
+    """Additive bias [B, H, W, 2W]: causal mask over both modality halves
+    plus a hint-gated recency slope (the online-tuning mechanism)."""
+    w = cfg.window
+    i = jnp.arange(w)[:, None]
+    j = jnp.arange(w)[None, :]
+    causal = jnp.where(j <= i, 0.0, -1e9).astype(jnp.float32)  # [W, W]
+    # Same causal structure for the addr half and the pc half.
+    mask = jnp.concatenate([causal, causal], axis=-1)  # [W, 2W]
+    # Recency: prefer recent key positions; gated by the behavior hint.
+    rec_half = (-cfg.recency_beta * (i - j)).astype(jnp.float32)  # <=0 for j<=i
+    rec = jnp.concatenate([rec_half, rec_half], axis=-1)  # [W, 2W]
+    bias = mask[None, None] + hint[:, None, None, None] * rec[None, None]
+    return jnp.broadcast_to(bias, (hint.shape[0], n_heads, w, 2 * w))
+
+
+def expand_fwd(params, cfg: ModelConfig, deltas, pcs, hint, use_pallas=True):
+    """ExPAND predictor forward pass.
+
+    Args:
+      deltas: i32[B, W] delta tokens (newest last).
+      pcs:    i32[B, W] hashed PC tokens.
+      hint:   f32[B] behavior-change hint in [0, 1].
+      use_pallas: route attention through the fused Pallas kernel (export
+        path) or the jnp reference (training path; numerically identical).
+    Returns:
+      logits f32[B, K, delta_vocab].
+    """
+    b, w = deltas.shape
+    d, dh, nh = cfg.d_model, cfg.d_head, cfg.n_heads
+    attn_fn = mm_attention if use_pallas else mm_attention_ref
+
+    x = params["delta_emb"][deltas] + params["pos_a"][None]  # [B, W, D]
+    pe = params["pc_emb"][pcs] + params["pos_p"][None]       # [B, W, D]
+    bias = _attention_bias(cfg, hint, nh)                    # [B, H, W, 2W]
+    bias_f = bias.reshape(b * nh, w, 2 * w)
+
+    for lp in params["layers"]:
+        xn = layer_norm(x, lp["ln_a"]["g"], lp["ln_a"]["b"])
+        pn = layer_norm(pe, lp["ln_p"]["g"], lp["ln_p"]["b"])
+        ctx = jnp.concatenate([xn, pn], axis=1)              # [B, 2W, D]
+
+        def split_heads(t, length):
+            return (
+                t.reshape(b, length, nh, dh)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * nh, length, dh)
+            )
+
+        q = split_heads(xn @ lp["wq"], w)
+        k = split_heads(ctx @ lp["wk"], 2 * w)
+        v = split_heads(ctx @ lp["wv"], 2 * w)
+        o = attn_fn(q, k, v, bias_f)                         # [B*H, W, Dh]
+        o = (
+            o.reshape(b, nh, w, dh)
+            .transpose(0, 2, 1, 3)
+            .reshape(b, w, nh * dh)
+        )
+        x = x + o @ lp["wo"]
+        xm = layer_norm(x, lp["ln_m"]["g"], lp["ln_m"]["b"])
+        x = x + jax.nn.gelu(xm @ lp["w1"]) @ lp["w2"]
+
+    f = layer_norm(x[:, -1], params["ln_f"]["g"], params["ln_f"]["b"])  # [B, D]
+    # Tied output embedding: per-offset projection then delta_emb^T.
+    logits = [
+        (f @ hp) @ params["delta_emb"].T + hb
+        for hp, hb in zip(params["head_proj"], params["head_bias"])
+    ]
+    return jnp.stack(logits, axis=1)  # [B, K, V]
+
+
+# --------------------------------------------------------------------------
+# ML1: LSTM baseline
+# --------------------------------------------------------------------------
+
+
+def init_ml1_params(key, cfg: ModelConfig):
+    ks = iter(jax.random.split(key, 16))
+    d = cfg.d_model
+    return {
+        "delta_emb": 0.02 * jax.random.normal(next(ks), (cfg.delta_vocab, d)),
+        "pc_emb": 0.02 * jax.random.normal(next(ks), (cfg.pc_vocab, d)),
+        "wx": _dense_init(next(ks), d, 4 * d),
+        "wh": _dense_init(next(ks), d, 4 * d),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "ln_f": _ln_init(d),
+        "head_proj": [_dense_init(next(ks), d, d) for _ in range(cfg.n_future)],
+        "head_bias": [jnp.zeros((cfg.delta_vocab,), jnp.float32) for _ in range(cfg.n_future)],
+    }
+
+
+def ml1_fwd(params, cfg: ModelConfig, deltas, pcs, hint, use_pallas=True):
+    """LSTM baseline: embeds delta+pc sums, scans an LSTM, K heads.
+
+    ``hint``/``use_pallas`` are accepted for interface uniformity; the
+    baseline ignores them (it has no phase-change path and no kernel).
+    """
+    del hint, use_pallas
+    b, w = deltas.shape
+    d = cfg.d_model
+    x = params["delta_emb"][deltas] + params["pc_emb"][pcs]  # [B, W, D]
+    xt = x.transpose(1, 0, 2)  # [W, B, D] for scan
+
+    def step(carry, xin):
+        h, c = carry
+        z = xin @ params["wx"] + h @ params["wh"] + params["bias"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((b, d), jnp.float32)
+    (h, _), _ = jax.lax.scan(step, (h0, h0), xt)
+    f = layer_norm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = [
+        (f @ hp) @ params["delta_emb"].T + hb
+        for hp, hb in zip(params["head_proj"], params["head_bias"])
+    ]
+    return jnp.stack(logits, axis=1)
+
+
+# --------------------------------------------------------------------------
+# ML2: plain causal transformer baseline
+# --------------------------------------------------------------------------
+
+
+def init_ml2_params(key, cfg: ModelConfig):
+    ks = iter(jax.random.split(key, 64))
+    d, dh, nh = cfg.d_model, cfg.d_head, cfg.n_heads
+    p = {
+        "delta_emb": 0.02 * jax.random.normal(next(ks), (cfg.delta_vocab, d)),
+        "pc_emb": 0.02 * jax.random.normal(next(ks), (cfg.pc_vocab, d)),
+        "pos": 0.02 * jax.random.normal(next(ks), (cfg.window, d)),
+        "ln_f": _ln_init(d),
+        "layers": [],
+        "head_proj": [_dense_init(next(ks), d, d) for _ in range(cfg.n_future)],
+        "head_bias": [jnp.zeros((cfg.delta_vocab,), jnp.float32) for _ in range(cfg.n_future)],
+    }
+    for _ in range(cfg.n_layers):
+        p["layers"].append({
+            "ln_1": _ln_init(d),
+            "ln_2": _ln_init(d),
+            "wq": _dense_init(next(ks), d, nh * dh),
+            "wk": _dense_init(next(ks), d, nh * dh),
+            "wv": _dense_init(next(ks), d, nh * dh),
+            "wo": _dense_init(next(ks), nh * dh, d),
+            "w1": _dense_init(next(ks), d, cfg.d_fusion),
+            "w2": _dense_init(next(ks), cfg.d_fusion, d),
+        })
+    return p
+
+
+def ml2_fwd(params, cfg: ModelConfig, deltas, pcs, hint, use_pallas=True):
+    """TransFetch-class baseline: single-stream causal self-attention over
+    (delta + pc) token embeddings. No modality fusion, no hint gating."""
+    del hint, use_pallas
+    b, w = deltas.shape
+    d, dh, nh = cfg.d_model, cfg.d_head, cfg.n_heads
+    x = params["delta_emb"][deltas] + params["pc_emb"][pcs] + params["pos"][None]
+
+    i = jnp.arange(w)[:, None]
+    j = jnp.arange(w)[None, :]
+    causal = jnp.where(j <= i, 0.0, -1e9).astype(jnp.float32)
+
+    for lp in params["layers"]:
+        xn = layer_norm(x, lp["ln_1"]["g"], lp["ln_1"]["b"])
+
+        def split_heads(t):
+            return t.reshape(b, w, nh, dh).transpose(0, 2, 1, 3)
+
+        q = split_heads(xn @ lp["wq"])
+        k = split_heads(xn @ lp["wk"])
+        v = split_heads(xn @ lp["wv"])
+        s = jnp.einsum("bhwd,bhsd->bhws", q, k) / (dh ** 0.5) + causal
+        o = jnp.einsum("bhws,bhsd->bhwd", jax.nn.softmax(s, axis=-1), v)
+        o = o.transpose(0, 2, 1, 3).reshape(b, w, nh * dh)
+        x = x + o @ lp["wo"]
+        xm = layer_norm(x, lp["ln_2"]["g"], lp["ln_2"]["b"])
+        x = x + jax.nn.gelu(xm @ lp["w1"]) @ lp["w2"]
+
+    f = layer_norm(x[:, -1], params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = [
+        (f @ hp) @ params["delta_emb"].T + hb
+        for hp, hb in zip(params["head_proj"], params["head_bias"])
+    ]
+    return jnp.stack(logits, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+MODELS = {
+    "expand": (init_expand_params, expand_fwd),
+    "ml1": (init_ml1_params, ml1_fwd),
+    "ml2": (init_ml2_params, ml2_fwd),
+}
+
+
+def param_bytes(params):
+    """Total parameter storage in bytes (Table 1d 'Memory overhead')."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+
+def make_forward(name, params, cfg: ModelConfig, use_pallas=True):
+    """Bind params + config into the (deltas, pcs, hint) -> logits fn that
+    aot.py lowers; params become HLO constants."""
+    _, fwd = MODELS[name]
+    return functools.partial(fwd, params, cfg, use_pallas=use_pallas)

@@ -1,0 +1,161 @@
+"""Synthetic trace families for pretraining the address predictors.
+
+The paper pretrains the decider's models offline and refines them online.
+We pretrain on *pattern families* rather than concrete workload traces so
+the models generalize to the (structurally similar, but independently
+generated) traces the Rust workload generators emit at simulation time —
+the accuracy the Rust harness measures is therefore genuine, not leakage.
+
+Families mirror the access signatures the evaluation workloads exhibit:
+  strided       — unit/constant-stride streaming (libquantum, PR edge scans)
+  multi_stride  — loop nests cycling 2..4 strides, each tied to its own PC
+  stencil       — periodic neighbor-offset patterns (bwaves/leslie3d/lbm)
+  graph_csr     — CSR neighbor-scan bursts (+1 runs) punctuated by jumps
+                  (CC/PR/SSSP frontier expansion)
+  pointer_chase — repeating delta cycles, single PC (mcf, temporal reuse)
+  phase_change  — a boundary between two families inside the window, with
+                  hint=1 (trains the behavior-hint gating path)
+
+Tokenization contract is shared with rust/src/expand/tokenize.rs via
+config.py: delta tokens = clamp(line_delta, ±63) + 64, 0 = OOV.
+"""
+
+import numpy as np
+
+from .config import DELTA_CLAMP, DELTA_VOCAB, PC_VOCAB
+
+FAMILIES = (
+    "strided",
+    "multi_stride",
+    "stencil",
+    "graph_csr",
+    "pointer_chase",
+    "phase_change",
+)
+
+
+def tokenize_delta(delta):
+    """Map a line-granularity address delta to its vocab token."""
+    d = np.asarray(delta)
+    tok = np.clip(d, -DELTA_CLAMP, DELTA_CLAMP) + (DELTA_VOCAB // 2)
+    tok = np.where(np.abs(d) > DELTA_CLAMP, 0, tok)
+    return tok.astype(np.int32)
+
+
+def hash_pc(pc):
+    """Multiplicative PC hash into PC_VOCAB buckets (matches tokenize.rs)."""
+    pc = np.asarray(pc, dtype=np.uint64)
+    h = (pc * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(64 - 8)
+    return (h % np.uint64(PC_VOCAB)).astype(np.int32)
+
+
+# --- family generators -----------------------------------------------------
+# Each returns (deltas i64[n], pcs u64[n]) for n = window + k_future.
+
+
+def _gen_strided(rng, n):
+    s = int(rng.integers(1, 9)) * int(rng.choice([-1, 1]))
+    pc = int(rng.integers(1 << 20, 1 << 40))
+    return np.full(n, s, dtype=np.int64), np.full(n, pc, dtype=np.uint64)
+
+
+def _gen_multi_stride(rng, n):
+    k = int(rng.integers(2, 5))
+    strides = rng.integers(-16, 17, size=k)
+    strides[strides == 0] = 1
+    pcs = rng.integers(1 << 20, 1 << 40, size=k).astype(np.uint64)
+    idx = np.arange(n) % k
+    return strides[idx].astype(np.int64), pcs[idx]
+
+
+def _gen_stencil(rng, n):
+    # Periodic neighbor-offset pattern, e.g. [1, 1, L-2, 1, 1, L-2, ...]
+    period = int(rng.integers(3, 8))
+    pat = rng.integers(-40, 41, size=period)
+    pat[pat == 0] = 1
+    pc = int(rng.integers(1 << 20, 1 << 40))
+    idx = np.arange(n) % period
+    return pat[idx].astype(np.int64), np.full(n, pc, dtype=np.uint64)
+
+
+def _gen_graph_csr(rng, n):
+    # Bursts of +1 (neighbor-list scan) of geometric length, separated by
+    # large jumps (next frontier vertex). Scan and jump use distinct PCs.
+    deltas = np.empty(n, dtype=np.int64)
+    pcs = np.empty(n, dtype=np.uint64)
+    scan_pc = int(rng.integers(1 << 20, 1 << 40))
+    jump_pc = int(rng.integers(1 << 20, 1 << 40))
+    i = 0
+    while i < n:
+        burst = int(rng.geometric(0.25))
+        for _ in range(min(burst, n - i)):
+            deltas[i] = 1
+            pcs[i] = scan_pc
+            i += 1
+        if i < n:
+            deltas[i] = int(rng.integers(100, 100000)) * int(rng.choice([-1, 1]))
+            pcs[i] = jump_pc
+            i += 1
+    return deltas, pcs
+
+
+def _gen_pointer_chase(rng, n):
+    # A repeating cycle of irregular deltas — pure temporal correlation.
+    period = int(rng.integers(4, 12))
+    cyc = rng.integers(-DELTA_CLAMP, DELTA_CLAMP + 1, size=period)
+    cyc[cyc == 0] = 3
+    pc = int(rng.integers(1 << 20, 1 << 40))
+    idx = np.arange(n) % period
+    return cyc[idx].astype(np.int64), np.full(n, pc, dtype=np.uint64)
+
+
+_BASE = {
+    "strided": _gen_strided,
+    "multi_stride": _gen_multi_stride,
+    "stencil": _gen_stencil,
+    "graph_csr": _gen_graph_csr,
+    "pointer_chase": _gen_pointer_chase,
+}
+
+
+def _gen_phase_change(rng, n):
+    a, b = rng.choice(list(_BASE), size=2, replace=False)
+    cut = int(rng.integers(n // 4, 3 * n // 4))
+    da, pa = _BASE[a](rng, n)
+    db, pb = _BASE[b](rng, n)
+    return (
+        np.concatenate([da[:cut], db[cut:]]),
+        np.concatenate([pa[:cut], pb[cut:]]),
+    )
+
+
+def sample_window(rng, window, k_future, family=None):
+    """One training sample: (deltas [W], pcs [W], hint, targets [K])."""
+    fam = family or rng.choice(FAMILIES)
+    n = window + k_future
+    if fam == "phase_change":
+        d, p = _gen_phase_change(rng, n)
+        hint = 1.0
+    else:
+        d, p = _BASE[fam](rng, n)
+        hint = 0.0
+    toks = tokenize_delta(d)
+    pcs = hash_pc(p)
+    return toks[:window], pcs[:window], np.float32(hint), toks[window:]
+
+
+def sample_batch(rng, batch, window, k_future):
+    """Batched sampler -> (deltas [B,W], pcs [B,W], hint [B], tgt [B,K])."""
+    ds, ps, hs, ts = [], [], [], []
+    for _ in range(batch):
+        d, p, h, t = sample_window(rng, window, k_future)
+        ds.append(d)
+        ps.append(p)
+        hs.append(h)
+        ts.append(t)
+    return (
+        np.stack(ds).astype(np.int32),
+        np.stack(ps).astype(np.int32),
+        np.asarray(hs, np.float32),
+        np.stack(ts).astype(np.int32),
+    )

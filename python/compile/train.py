@@ -1,0 +1,127 @@
+"""Pretraining loop for the address predictors (build-time only).
+
+Runs at ``make artifacts`` before AOT export: each model is trained with a
+hand-rolled Adam (no optax in this image) on the synthetic trace families
+in traces.py, then its trained params are handed to aot.py to be baked
+into the exported HLO as constants.
+
+Training uses the pure-jnp attention reference (use_pallas=False) because
+interpret-mode Pallas under autodiff is an order of magnitude slower; the
+export path switches to the Pallas kernel, and test_model.py pins the two
+paths to identical logits.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from .model import MODELS
+from .traces import sample_batch
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam (tree-based)
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** tf)
+    vhat_scale = 1.0 / (1 - b2 ** tf)
+    new = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - lr * (mi * mhat_scale) / (jnp.sqrt(vi * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Loss / accuracy
+# --------------------------------------------------------------------------
+
+
+def _loss_fn(fwd, cfg, params, deltas, pcs, hint, targets):
+    logits = fwd(params, cfg, deltas, pcs, hint, use_pallas=False)  # [B,K,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.delta_vocab)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def _accuracy(logits, targets):
+    """Top-1 accuracy of the first-offset head (paper's 'accuracy')."""
+    pred = jnp.argmax(logits[:, 0], axis=-1)
+    return jnp.mean((pred == targets[:, 0]).astype(jnp.float32))
+
+
+def _accuracy_all(logits, targets):
+    """Top-1 accuracy averaged over all K prediction offsets."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean((pred == targets).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Training driver
+# --------------------------------------------------------------------------
+
+
+def train_model(name, cfg=C.EXPORT, steps=C.TRAIN_STEPS, batch=C.TRAIN_BATCH,
+                lr=C.LEARNING_RATE, seed=C.SEED, log_every=200, verbose=True):
+    """Train one model; returns (params, metrics dict)."""
+    init, fwd = MODELS[name]
+    key = jax.random.PRNGKey(seed + hash(name) % 1000)
+    params = init(key, cfg)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step_fn(params, opt, lr_t, deltas, pcs, hint, targets):
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss_fn(fwd, cfg, p, deltas, pcs, hint, targets)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        # Linear warmup (5%) then cosine decay to 10% of peak.
+        warm = min(1.0, i / max(1, steps // 20))
+        cos = 0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * i / steps))
+        lr_t = np.float32(lr * warm * cos)
+        d, p, h, t = sample_batch(rng, batch, cfg.window, cfg.n_future)
+        params, opt, loss = step_fn(params, opt, lr_t, d, p, h, t)
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"[train:{name}] step {i:4d} loss {float(loss):.4f}")
+
+    # Held-out evaluation on fresh samples.
+    @jax.jit
+    def eval_fn(params, deltas, pcs, hint):
+        return fwd(params, cfg, deltas, pcs, hint, use_pallas=False)
+
+    accs, accs_all = [], []
+    for _ in range(C.EVAL_BATCHES):
+        d, p, h, t = sample_batch(rng, batch, cfg.window, cfg.n_future)
+        logits = eval_fn(params, d, p, h)
+        accs.append(float(_accuracy(logits, t)))
+        accs_all.append(float(_accuracy_all(logits, t)))
+    metrics = {
+        "model": name,
+        "steps": steps,
+        "train_seconds": round(time.time() - t0, 1),
+        "eval_acc_top1": round(float(np.mean(accs)), 4),
+        "eval_acc_allk": round(float(np.mean(accs_all)), 4),
+    }
+    if verbose:
+        print(f"[train:{name}] held-out acc@1 {metrics['eval_acc_top1']:.3f} "
+              f"acc@allK {metrics['eval_acc_allk']:.3f} "
+              f"({metrics['train_seconds']}s)")
+    return params, metrics

@@ -1,0 +1,53 @@
+"""AOT export tests: HLO text integrity (no elided constants!), entry
+signature, and probe self-consistency."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import config as C
+from compile.aot import lower_model, probe_model
+from compile.model import MODELS
+
+
+@pytest.fixture(scope="module")
+def tiny_expand():
+    cfg = C.EXPORT
+    init, _ = MODELS["expand"]
+    params = init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def test_hlo_text_has_full_constants(tiny_expand):
+    """Regression: the default printer elides big constants as `{...}`,
+    which the Rust-side text parser reads back as zeros."""
+    params, cfg = tiny_expand
+    hlo = lower_model("expand", params, cfg)
+    assert "ENTRY" in hlo
+    assert "constant({...})" not in hlo, "weights were elided from the HLO text"
+    # Embeddings are 128x128 floats: the text must be megabytes, not KB.
+    assert len(hlo) > 1_000_000
+
+
+def test_entry_signature_matches_contract(tiny_expand):
+    params, cfg = tiny_expand
+    hlo = lower_model("expand", params, cfg)
+    b, w = cfg.batch, cfg.window
+    assert f"s32[{b},{w}]" in hlo, "delta/pc token parameters"
+    assert f"f32[{b}]" in hlo, "hint parameter"
+    assert f"(f32[{b},{cfg.n_future},{cfg.delta_vocab}]" in hlo, "tuple(logits) root"
+
+
+def test_probe_matches_direct_forward(tiny_expand):
+    params, cfg = tiny_expand
+    probes = probe_model("expand", params, cfg)
+    _, fwd = MODELS["expand"]
+    for label, probe in probes.items():
+        deltas = np.full((cfg.batch, cfg.window), probe["delta_token"], np.int32)
+        pcs = np.full((cfg.batch, cfg.window), probe["pc_token"], np.int32)
+        hint = np.zeros((cfg.batch,), np.float32)
+        logits = fwd(params, cfg, deltas, pcs, hint, use_pallas=True)
+        toks = np.argmax(np.asarray(logits)[0], axis=-1).tolist()
+        assert toks == probe["expect_tokens"], label

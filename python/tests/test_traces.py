@@ -1,0 +1,75 @@
+"""Trace-family generator tests: tokenization bounds, family structure,
+and learnability (targets must be predictable from the window for the
+deterministic families)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import traces
+from compile.config import DELTA_VOCAB, PC_VOCAB
+
+
+@settings(max_examples=50, deadline=None)
+@given(delta=st.integers(-(10**9), 10**9))
+def test_tokenize_delta_bounds(delta):
+    tok = int(traces.tokenize_delta(delta))
+    assert 0 <= tok < DELTA_VOCAB
+    if abs(delta) > 63:
+        assert tok == 0
+    else:
+        assert tok == delta + 64
+
+
+@settings(max_examples=50, deadline=None)
+@given(pc=st.integers(0, 2**63 - 1))
+def test_hash_pc_bounds(pc):
+    h = int(traces.hash_pc(pc))
+    assert 0 <= h < PC_VOCAB
+
+
+def test_hash_pc_reference_values():
+    """Pinned values — rust/src/expand/tokenize.rs must match these."""
+    # h = (pc * 0x9E3779B97F4A7C15) >> 56 mod 256
+    for pc in [0x401000, 0x40_0100, 1, 2**40]:
+        expect = ((pc * 0x9E3779B97F4A7C15) % 2**64) >> 56
+        assert int(traces.hash_pc(pc)) == expect % 256
+
+
+@pytest.mark.parametrize("family", traces.FAMILIES)
+def test_families_produce_valid_windows(family):
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        d, p, hint, tgt = traces.sample_window(rng, 32, 4, family=family)
+        assert d.shape == (32,) and p.shape == (32,) and tgt.shape == (4,)
+        assert d.dtype == np.int32
+        assert (d >= 0).all() and (d < DELTA_VOCAB).all()
+        assert (p >= 0).all() and (p < PC_VOCAB).all()
+        assert hint == (1.0 if family == "phase_change" else 0.0)
+
+
+def test_strided_family_is_constant():
+    rng = np.random.default_rng(2)
+    d, _, _, tgt = traces.sample_window(rng, 32, 4, family="strided")
+    assert len(set(d.tolist())) == 1
+    assert (tgt == d[0]).all(), "targets continue the stride"
+
+
+def test_pointer_chase_is_periodic():
+    rng = np.random.default_rng(3)
+    d, _, _, tgt = traces.sample_window(rng, 32, 4, family="pointer_chase")
+    # Find the period, then check targets continue it.
+    full = np.concatenate([d, tgt])
+    for period in range(4, 12):
+        if all(full[i] == full[i % period] for i in range(len(full))):
+            return
+    pytest.fail("no period found in pointer_chase")
+
+
+def test_batch_shapes():
+    rng = np.random.default_rng(4)
+    d, p, h, t = traces.sample_batch(rng, 16, 32, 4)
+    assert d.shape == (16, 32)
+    assert p.shape == (16, 32)
+    assert h.shape == (16,)
+    assert t.shape == (16, 4)

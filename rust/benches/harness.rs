@@ -1,0 +1,57 @@
+//! Minimal criterion-style bench harness (criterion is not in the
+//! offline crate set): warmup + timed iterations, mean/min/stddev
+//! reporting, and substring filtering via `cargo bench -- <filter>`.
+
+use std::time::Instant;
+
+pub struct Bench {
+    filter: Option<String>,
+    pub results: Vec<(String, f64)>,
+}
+
+impl Bench {
+    pub fn from_args() -> Self {
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench { filter, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; prints mean/min/std. `iters` counts timed
+    /// runs (after one warmup).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        f(); // warmup
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len() as f64;
+        println!(
+            "bench {:<38} mean {:>10.3} ms   min {:>10.3} ms   sd {:>8.3} ms   ({} iters)",
+            name,
+            mean * 1e3,
+            min * 1e3,
+            var.sqrt() * 1e3,
+            iters
+        );
+        self.results.push((name.to_string(), mean));
+    }
+
+    /// Report a throughput-style metric computed by the caller.
+    pub fn report(&self, name: &str, value: f64, unit: &str) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        println!("metric {:<37} {:>14.1} {unit}", name, value);
+    }
+}

@@ -1,0 +1,157 @@
+//! Paper benches: one end-to-end bench per table/figure family plus the
+//! micro-benches used by the §Perf optimization log in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Each bench
+//! executes the same code path as the corresponding figure harness on a
+//! reduced access budget and reports wall-clock, plus simulator
+//! throughput metrics.
+
+mod harness;
+
+use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
+use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::util::Rng;
+use expand_cxl::workloads::apexmap::ApexMap;
+use expand_cxl::workloads::mixed::MixedTrace;
+use expand_cxl::workloads::WorkloadId;
+use harness::Bench;
+
+const ACCESSES: usize = 60_000;
+
+fn cfg() -> SimConfig {
+    let mut c = presets::smoke();
+    c.accesses = ACCESSES;
+    c
+}
+
+fn run(c: &SimConfig, id: WorkloadId, rt: Option<&std::rc::Rc<Runtime>>) {
+    let mut src = id.source(c.seed);
+    simulate(c, rt, &mut *src).unwrap();
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    let rt = if Runtime::artifacts_available("artifacts") {
+        Some(Runtime::new("artifacts").unwrap())
+    } else {
+        eprintln!("note: no artifacts; ML benches use the mock predictor");
+        None
+    };
+
+    // --- Fig 1: locality grid (LocalDRAM vs CXL-SSD, APEX-MAP) ---------
+    b.bench("fig1_locality_grid", 3, || {
+        for &(alpha, l) in &[(1.0, 4u64), (0.01, 64u64)] {
+            for backing in [Backing::LocalDram, Backing::CxlSsd] {
+                let mut c = cfg();
+                c.backing = backing;
+                let mut src = ApexMap::with_default_mem(Rng::new(1), alpha, l);
+                simulate(&c, None, &mut src).unwrap();
+            }
+        }
+    });
+
+    // --- Fig 2a: effectiveness sweep -----------------------------------
+    b.bench("fig2a_effectiveness_sweep", 3, || {
+        for eff in [0.0, 0.5, 0.9, 1.0] {
+            let mut c = cfg();
+            c.prefetcher = PrefetcherKind::Synthetic { accuracy: eff, coverage: eff };
+            run(&c, WorkloadId::Tc, None);
+        }
+    });
+
+    // --- Fig 2c / Fig 6: switch-level sweeps ---------------------------
+    b.bench("fig2c_fig6_switch_levels", 3, || {
+        for lv in [0usize, 2, 4] {
+            let mut c = cfg();
+            c.cxl.switch_levels = lv;
+            c.prefetcher = PrefetcherKind::Synthetic { accuracy: 0.9, coverage: 0.9 };
+            run(&c, WorkloadId::Tc, None);
+        }
+    });
+
+    // --- Table 1d / Fig 4a: the prefetcher comparison ------------------
+    for kind in [
+        PrefetcherKind::None,
+        PrefetcherKind::Rule1,
+        PrefetcherKind::Rule2,
+        PrefetcherKind::Ml1,
+        PrefetcherKind::Ml2,
+        PrefetcherKind::Expand,
+    ] {
+        let name = format!("fig4a_prefetcher_{}", kind.name());
+        let k = kind.clone();
+        let rt2 = rt.clone();
+        b.bench(&name, 3, move || {
+            let mut c = cfg();
+            c.prefetcher = k.clone();
+            run(&c, WorkloadId::Pr, rt2.as_ref());
+        });
+    }
+
+    // --- Fig 4b: mixed workloads ----------------------------------------
+    b.bench("fig4b_mixed_expand", 3, || {
+        let mut c = cfg();
+        c.prefetcher = PrefetcherKind::Expand;
+        let mut src = MixedTrace::new(&[WorkloadId::Cc, WorkloadId::Tc], c.seed);
+        simulate(&c, rt.as_ref(), &mut src).unwrap();
+    });
+
+    // --- Fig 5: ExPAND vs LocalDRAM -------------------------------------
+    b.bench("fig5_localdram_vs_expand", 3, || {
+        let mut c = cfg();
+        c.backing = Backing::LocalDram;
+        run(&c, WorkloadId::Leslie3d, None);
+        let mut c = cfg();
+        c.prefetcher = PrefetcherKind::Expand;
+        run(&c, WorkloadId::Leslie3d, rt.as_ref());
+    });
+
+    // --- Fig 7: backend media -------------------------------------------
+    b.bench("fig7_backend_media", 3, || {
+        for m in [MediaKind::ZNand, MediaKind::Pmem, MediaKind::Dram] {
+            let mut c = cfg();
+            let internal = c.ssd.internal_dram_bytes;
+            c.ssd = SsdConfig::with_media(m);
+            c.ssd.internal_dram_bytes = internal;
+            c.prefetcher = PrefetcherKind::Expand;
+            run(&c, WorkloadId::Tc, rt.as_ref());
+        }
+    });
+
+    // --- Micro: simulator core throughput (events/s) ---------------------
+    {
+        let mut c = cfg();
+        c.accesses = 200_000;
+        let t0 = std::time::Instant::now();
+        run(&c, WorkloadId::Pr, None);
+        let dt = t0.elapsed().as_secs_f64();
+        b.report("micro_sim_throughput_noprefetch", c.accesses as f64 / dt, "accesses/s");
+    }
+
+    // --- Micro: predictor inference latency ------------------------------
+    if let Some(rt) = &rt {
+        for model in ["expand", "ml1", "ml2"] {
+            let p = rt.predictor(model).unwrap();
+            let shape = p.borrow().shape();
+            let win = WindowInput {
+                deltas: vec![65; shape.window],
+                pcs: vec![3; shape.window],
+                hint: 0.0,
+            };
+            let t0 = std::time::Instant::now();
+            let iters = 100;
+            for _ in 0..iters {
+                p.borrow_mut().predict(std::slice::from_ref(&win)).unwrap();
+            }
+            let per = t0.elapsed().as_secs_f64() / iters as f64;
+            b.report(
+                &format!("micro_inference_{model}"),
+                per * 1e6,
+                "us/prediction",
+            );
+        }
+    }
+
+    println!("\n{} benches completed", b.results.len());
+}

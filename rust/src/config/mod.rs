@@ -1,0 +1,495 @@
+//! Configuration system: typed config tree + TOML-subset file parser +
+//! paper presets (Table 1a/1b).
+//!
+//! Every simulator component takes its parameters from [`SimConfig`]; the
+//! CLI loads a base preset, optionally overlays a config file
+//! (`--config sim.toml`), then applies `--set section.key=value`
+//! overrides. This is the "real config system" a deployment would use.
+
+pub mod parse;
+pub mod presets;
+
+use crate::sim::time::{cycle_ps, ns, us, Ps};
+
+/// Which medium backs the expander (paper: ExPAND-Z / ExPAND-P / ExPAND-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MediaKind {
+    /// Z-NAND class flash: tRd 3 us, tWr 100 us (Table 1b).
+    ZNand,
+    /// PMEM class SCM (Intel P5800X-like): ~6x faster reads than Z-NAND.
+    Pmem,
+    /// DRAM backend: upper bound for expander-driven prefetching.
+    Dram,
+}
+
+impl MediaKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "znand" | "z-nand" | "z" => Ok(MediaKind::ZNand),
+            "pmem" | "p" => Ok(MediaKind::Pmem),
+            "dram" | "d" => Ok(MediaKind::Dram),
+            _ => anyhow::bail!("unknown media {s:?} (znand|pmem|dram)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MediaKind::ZNand => "znand",
+            MediaKind::Pmem => "pmem",
+            MediaKind::Dram => "dram",
+        }
+    }
+}
+
+/// CPU core + ROB model (Table 1a: O3 12 cores @ 3.6 GHz, 512-entry ROB).
+#[derive(Debug, Clone)]
+pub struct CpuConfig {
+    pub cores: usize,
+    pub freq_ghz: f64,
+    pub rob_entries: usize,
+    /// Sustained non-memory IPC used by the interval core model.
+    pub base_ipc: f64,
+    /// Max outstanding LLC misses (MSHRs) per core.
+    pub mshrs: usize,
+}
+
+impl CpuConfig {
+    pub fn cycle_ps(&self) -> Ps {
+        cycle_ps(self.freq_ghz)
+    }
+
+    /// Latency the ROB can hide for one isolated miss: the time to fill
+    /// the reorder window behind it.
+    pub fn rob_hide_ps(&self) -> Ps {
+        ((self.rob_entries as f64 / self.base_ipc) * self.cycle_ps() as f64) as Ps
+    }
+}
+
+impl Default for CpuConfig {
+    fn default() -> Self {
+        CpuConfig { cores: 12, freq_ghz: 3.6, rob_entries: 512, base_ipc: 2.0, mshrs: 16 }
+    }
+}
+
+/// One cache level (sizes/latencies from Table 1a).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub latency_cycles: u64,
+    pub line_bytes: usize,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        (self.size_bytes / self.line_bytes / self.ways).max(1)
+    }
+}
+
+/// The three-level hierarchy. The paper's Table 1a gives L1I 32K/2w/5c,
+/// L1D 48K/2w/5c, L2 1.25M/16w/20c; the LLC row is garbled in the text, so
+/// we use a 2.5 MB/core x 12 shared LLC (30 MB, 15-way, 40 cycles) — the
+/// Sapphire-Rapids-class value consistent with the 12-core O3 host.
+/// `llc_scale` shrinks LLC + working sets together for fast runs.
+#[derive(Debug, Clone)]
+pub struct HierarchyConfig {
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig {
+            l1d: CacheConfig { size_bytes: 48 << 10, ways: 2, latency_cycles: 5, line_bytes: 64 },
+            l2: CacheConfig {
+                size_bytes: 1_280 << 10,
+                ways: 16,
+                latency_cycles: 20,
+                line_bytes: 64,
+            },
+            llc: CacheConfig {
+                size_bytes: 30 << 20,
+                ways: 15,
+                latency_cycles: 40,
+                line_bytes: 64,
+            },
+        }
+    }
+}
+
+/// Host-local DRAM (Table 1a: tRP=tRCD=tCAS=22ns, 8 rank, 16 bank, 2 ch).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub t_rp_ns: f64,
+    pub t_rcd_ns: f64,
+    pub t_cas_ns: f64,
+    pub channels: usize,
+    pub banks_per_channel: usize,
+    /// Data burst transfer time per 64B line.
+    pub burst_ns: f64,
+}
+
+impl DramConfig {
+    /// Closed-row access latency (row activate + column read + burst).
+    pub fn miss_latency(&self) -> Ps {
+        ns(self.t_rp_ns + self.t_rcd_ns + self.t_cas_ns + self.burst_ns)
+    }
+
+    /// Open-row hit latency (column read + burst).
+    pub fn hit_latency(&self) -> Ps {
+        ns(self.t_cas_ns + self.burst_ns)
+    }
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            t_rp_ns: 22.0,
+            t_rcd_ns: 22.0,
+            t_cas_ns: 22.0,
+            channels: 2,
+            banks_per_channel: 16 * 8,
+            burst_ns: 4.0,
+        }
+    }
+}
+
+/// CXL link + switch model (Table 1a: PCIe 6.0 64 GT/s, CXL 3.0).
+#[derive(Debug, Clone)]
+pub struct CxlConfig {
+    /// Link speed per lane, GT/s.
+    pub gts: f64,
+    /// Lane count per link.
+    pub lanes: usize,
+    /// Flit size in bytes (CXL 3.0: 256B flit mode; 64B slots).
+    pub flit_bytes: usize,
+    /// Per-switch store-and-forward + arbitration latency (one direction).
+    pub switch_latency_ns: f64,
+    /// Port/PHY + retimer latency per link traversal (one direction).
+    pub link_latency_ns: f64,
+    /// Root-complex / home-agent processing per request.
+    pub rc_latency_ns: f64,
+    /// Number of switch levels between RC and the CXL-SSD (0 = direct).
+    pub switch_levels: usize,
+    /// Downstream fan-out used when building tree topologies.
+    pub fanout: usize,
+}
+
+impl Default for CxlConfig {
+    fn default() -> Self {
+        CxlConfig {
+            gts: 64.0,
+            lanes: 8,
+            flit_bytes: 256,
+            // Measured CXL switch traversals are ~180-270 ns; we use 180.
+            switch_latency_ns: 180.0,
+            link_latency_ns: 25.0,
+            rc_latency_ns: 40.0,
+            switch_levels: 1,
+            fanout: 4,
+        }
+    }
+}
+
+/// CXL-SSD device (Table 1b).
+#[derive(Debug, Clone)]
+pub struct SsdConfig {
+    pub media: MediaKind,
+    /// Backend media read/program latency.
+    pub media_read: Ps,
+    pub media_write: Ps,
+    /// Independent backend channels (queuing).
+    pub channels: usize,
+    /// Internal DRAM cache size (Table 1b: 1.5 GB).
+    pub internal_dram_bytes: usize,
+    /// Internal DRAM timing (Table 1b: tRP=tRCD=9.1ns, tRAS=19ns).
+    pub internal_dram_ns: f64,
+    /// Internal cache page size (lines are cached in pages).
+    pub page_bytes: usize,
+    /// Controller firmware/datapath overhead per request.
+    pub controller_ns: f64,
+}
+
+impl SsdConfig {
+    pub fn with_media(media: MediaKind) -> Self {
+        let (media_read, media_write) = match media {
+            MediaKind::ZNand => (us(3.0), us(100.0)),
+            // Paper: Z-NAND is "6x slower than PMEM".
+            MediaKind::Pmem => (ns(500.0), us(2.0)),
+            MediaKind::Dram => (ns(46.0), ns(46.0)),
+        };
+        SsdConfig {
+            media,
+            media_read,
+            media_write,
+            channels: 8,
+            internal_dram_bytes: 3 << 29, // 1.5 GB
+            internal_dram_ns: 9.1 + 9.1 + 4.0,
+            page_bytes: 4096,
+            controller_ns: 30.0,
+        }
+    }
+}
+
+impl Default for SsdConfig {
+    fn default() -> Self {
+        SsdConfig::with_media(MediaKind::ZNand)
+    }
+}
+
+/// Which prefetcher drives the LLC (paper's comparison set).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrefetcherKind {
+    None,
+    /// Best-offset spatial prefetcher (Michaud, HPCA'16) — paper's Rule1.
+    Rule1,
+    /// Irregular-stream temporal prefetcher (ISB class) — paper's Rule2.
+    Rule2,
+    /// LSTM-based predictor via AOT artifact — paper's ML1.
+    Ml1,
+    /// Transformer-based predictor via AOT artifact — paper's ML2.
+    Ml2,
+    /// The paper's system: expander-driven heterogeneous predictor.
+    Expand,
+    /// Oracle-backed synthetic prefetcher with parameterized
+    /// accuracy/coverage/timeliness (Fig 2a / Fig 4c harnesses).
+    Synthetic { accuracy: f64, coverage: f64 },
+}
+
+impl PrefetcherKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "noprefetch" => PrefetcherKind::None,
+            "rule1" | "best-offset" | "bo" => PrefetcherKind::Rule1,
+            "rule2" | "temporal" | "isb" => PrefetcherKind::Rule2,
+            "ml1" | "lstm" => PrefetcherKind::Ml1,
+            "ml2" | "transformer" => PrefetcherKind::Ml2,
+            "expand" => PrefetcherKind::Expand,
+            other => anyhow::bail!("unknown prefetcher {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetcherKind::None => "NoPrefetch",
+            PrefetcherKind::Rule1 => "Rule1",
+            PrefetcherKind::Rule2 => "Rule2",
+            PrefetcherKind::Ml1 => "ML1",
+            PrefetcherKind::Ml2 => "ML2",
+            PrefetcherKind::Expand => "ExPAND",
+            PrefetcherKind::Synthetic { .. } => "Synthetic",
+        }
+    }
+}
+
+/// ExPAND-specific knobs (reflector/decider/timeliness).
+#[derive(Debug, Clone)]
+pub struct ExpandConfig {
+    /// Reflector RC-side buffer (paper: 16 KB).
+    pub reflector_bytes: usize,
+    /// Decider sliding-window length (must match the artifact's window).
+    pub window: usize,
+    /// Invoke the address predictor every `stride` LLC misses.
+    pub predict_stride: usize,
+    /// Timing-predictor history entries (paper: 80 B = 10 x 8 B).
+    pub timing_entries: usize,
+    /// Timeliness-model accuracy in [0,1]; 1.0 = exact (Fig 4c sweeps it).
+    pub timeliness_accuracy: f64,
+    /// Enable the decision-tree behavior classifier (online tuning).
+    pub online_tuning: bool,
+    /// Safety margin subtracted from the prefetch issue deadline.
+    pub margin_ns: f64,
+}
+
+impl Default for ExpandConfig {
+    fn default() -> Self {
+        ExpandConfig {
+            reflector_bytes: 16 << 10,
+            window: 32,
+            predict_stride: 4,
+            timing_entries: 10,
+            timeliness_accuracy: 1.0,
+            online_tuning: true,
+            margin_ns: 500.0,
+        }
+    }
+}
+
+/// Where demand memory lives (Fig 1 / Fig 5 comparisons).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backing {
+    /// Everything in host-local DRAM (the LocalDRAM baseline).
+    LocalDram,
+    /// Working set on the CXL-SSD behind the switch fabric.
+    CxlSsd,
+}
+
+/// Top-level simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cpu: CpuConfig,
+    pub hierarchy: HierarchyConfig,
+    pub dram: DramConfig,
+    pub cxl: CxlConfig,
+    pub ssd: SsdConfig,
+    pub expand: ExpandConfig,
+    pub prefetcher: PrefetcherKind,
+    pub backing: Backing,
+    /// Accesses to simulate per run (trace length).
+    pub accesses: usize,
+    /// RNG seed for workload generation and stochastic models.
+    pub seed: u64,
+    /// Directory holding AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cpu: CpuConfig::default(),
+            hierarchy: HierarchyConfig::default(),
+            dram: DramConfig::default(),
+            cxl: CxlConfig::default(),
+            ssd: SsdConfig::default(),
+            expand: ExpandConfig::default(),
+            prefetcher: PrefetcherKind::None,
+            backing: Backing::CxlSsd,
+            accesses: 2_000_000,
+            seed: 0xE7A5D,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Apply one `section.key = value` override (config file and `--set`).
+    pub fn apply(&mut self, section: &str, key: &str, value: &str) -> anyhow::Result<()> {
+        let v = value.trim().trim_matches('"');
+        let bad = || anyhow::anyhow!("bad value {value:?} for {section}.{key}");
+        macro_rules! num {
+            () => {
+                v.parse().map_err(|_| bad())?
+            };
+        }
+        match (section, key) {
+            ("cpu", "cores") => self.cpu.cores = num!(),
+            ("cpu", "freq_ghz") => self.cpu.freq_ghz = num!(),
+            ("cpu", "rob_entries") => self.cpu.rob_entries = num!(),
+            ("cpu", "base_ipc") => self.cpu.base_ipc = num!(),
+            ("cpu", "mshrs") => self.cpu.mshrs = num!(),
+            ("llc", "size_bytes") => self.hierarchy.llc.size_bytes = num!(),
+            ("llc", "ways") => self.hierarchy.llc.ways = num!(),
+            ("llc", "latency_cycles") => self.hierarchy.llc.latency_cycles = num!(),
+            ("l2", "size_bytes") => self.hierarchy.l2.size_bytes = num!(),
+            ("l2", "ways") => self.hierarchy.l2.ways = num!(),
+            ("l1d", "size_bytes") => self.hierarchy.l1d.size_bytes = num!(),
+            ("dram", "channels") => self.dram.channels = num!(),
+            ("dram", "t_cas_ns") => self.dram.t_cas_ns = num!(),
+            ("cxl", "switch_levels") => self.cxl.switch_levels = num!(),
+            ("cxl", "switch_latency_ns") => self.cxl.switch_latency_ns = num!(),
+            ("cxl", "link_latency_ns") => self.cxl.link_latency_ns = num!(),
+            ("cxl", "lanes") => self.cxl.lanes = num!(),
+            ("cxl", "fanout") => self.cxl.fanout = num!(),
+            ("ssd", "media") => self.ssd = SsdConfig::with_media(MediaKind::parse(v)?),
+            ("ssd", "channels") => self.ssd.channels = num!(),
+            ("ssd", "internal_dram_bytes") => self.ssd.internal_dram_bytes = num!(),
+            ("ssd", "controller_ns") => self.ssd.controller_ns = num!(),
+            ("expand", "reflector_bytes") => self.expand.reflector_bytes = num!(),
+            ("expand", "predict_stride") => self.expand.predict_stride = num!(),
+            ("expand", "timeliness_accuracy") => self.expand.timeliness_accuracy = num!(),
+            ("expand", "online_tuning") => {
+                self.expand.online_tuning = v.parse().map_err(|_| bad())?
+            }
+            ("expand", "margin_ns") => self.expand.margin_ns = num!(),
+            ("sim", "accesses") => self.accesses = num!(),
+            ("sim", "seed") => self.seed = num!(),
+            ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
+            ("sim", "prefetcher") => self.prefetcher = PrefetcherKind::parse(v)?,
+            ("sim", "backing") => {
+                self.backing = match v {
+                    "local_dram" | "localdram" => Backing::LocalDram,
+                    "cxl_ssd" | "cxlssd" => Backing::CxlSsd,
+                    _ => return Err(bad()),
+                }
+            }
+            _ => anyhow::bail!("unknown config key {section}.{key}"),
+        }
+        Ok(())
+    }
+
+    /// Render the effective config (`expand config show`).
+    pub fn render(&self) -> String {
+        format!(
+            "[cpu] cores={} freq_ghz={} rob={} ipc={} mshrs={}\n\
+             [l1d] {}KB/{}w {}cyc\n[l2] {}KB/{}w {}cyc\n[llc] {}MB/{}w {}cyc\n\
+             [dram] tRP/tRCD/tCAS={}ns/{}ns/{}ns ch={}\n\
+             [cxl] {} GT/s x{} flit={}B switch={}ns/hop link={}ns levels={} fanout={}\n\
+             [ssd] media={} read={}ns write={}ns ch={} idram={}MB ctrl={}ns\n\
+             [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={}\n\
+             [sim] prefetcher={} backing={:?} accesses={} seed={:#x}",
+            self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
+            self.cpu.mshrs,
+            self.hierarchy.l1d.size_bytes >> 10, self.hierarchy.l1d.ways,
+            self.hierarchy.l1d.latency_cycles,
+            self.hierarchy.l2.size_bytes >> 10, self.hierarchy.l2.ways,
+            self.hierarchy.l2.latency_cycles,
+            self.hierarchy.llc.size_bytes >> 20, self.hierarchy.llc.ways,
+            self.hierarchy.llc.latency_cycles,
+            self.dram.t_rp_ns, self.dram.t_rcd_ns, self.dram.t_cas_ns, self.dram.channels,
+            self.cxl.gts, self.cxl.lanes, self.cxl.flit_bytes, self.cxl.switch_latency_ns,
+            self.cxl.link_latency_ns, self.cxl.switch_levels, self.cxl.fanout,
+            self.ssd.media.name(), self.ssd.media_read / 1000, self.ssd.media_write / 1000,
+            self.ssd.channels, self.ssd.internal_dram_bytes >> 20, self.ssd.controller_ns,
+            self.expand.reflector_bytes >> 10, self.expand.window, self.expand.predict_stride,
+            self.expand.timing_entries, self.expand.timeliness_accuracy,
+            self.expand.online_tuning,
+            self.prefetcher.name(), self.backing, self.accesses, self.seed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SimConfig::default();
+        assert_eq!(c.cpu.cores, 12);
+        assert_eq!(c.cpu.rob_entries, 512);
+        assert_eq!(c.hierarchy.l2.size_bytes, 1_280 << 10);
+        assert_eq!(c.ssd.media_read, 3_000_000); // 3 us in ps
+        assert_eq!(c.ssd.media_write, 100_000_000); // 100 us
+        assert_eq!(c.expand.reflector_bytes, 16 << 10);
+        assert_eq!(c.expand.timing_entries, 10); // 80 B / 8 B
+    }
+
+    #[test]
+    fn media_ratios() {
+        let z = SsdConfig::with_media(MediaKind::ZNand);
+        let p = SsdConfig::with_media(MediaKind::Pmem);
+        assert_eq!(z.media_read / p.media_read, 6); // paper: Z 6x slower than P
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = SimConfig::default();
+        c.apply("cxl", "switch_levels", "3").unwrap();
+        c.apply("ssd", "media", "pmem").unwrap();
+        c.apply("sim", "prefetcher", "expand").unwrap();
+        assert_eq!(c.cxl.switch_levels, 3);
+        assert_eq!(c.ssd.media, MediaKind::Pmem);
+        assert_eq!(c.prefetcher, PrefetcherKind::Expand);
+        assert!(c.apply("nope", "x", "1").is_err());
+        assert!(c.apply("cpu", "cores", "abc").is_err());
+    }
+
+    #[test]
+    fn rob_hide_is_plausible() {
+        let c = CpuConfig::default();
+        // 512 entries / 2 IPC * 278 ps = ~71 ns
+        let h = c.rob_hide_ps();
+        assert!(h > 60_000 && h < 80_000, "rob hide {h} ps");
+    }
+}

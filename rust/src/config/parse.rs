@@ -1,0 +1,115 @@
+//! TOML-subset parser for config files (offline substitute for `toml`).
+//!
+//! Supported grammar (sufficient for simulator configs):
+//!   [section]
+//!   key = value       # ints, floats, booleans, "strings"
+//!   # comments, blank lines
+//!
+//! Values are passed verbatim to [`SimConfig::apply`], which owns typing.
+
+use super::SimConfig;
+
+/// Parse config text and apply it onto `cfg`.
+pub fn apply_str(cfg: &mut SimConfig, text: &str) -> anyhow::Result<()> {
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated [section]", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        if section.is_empty() {
+            anyhow::bail!("line {}: key outside of [section]", lineno + 1);
+        }
+        cfg.apply(&section, k.trim(), v.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+/// Load a config file onto `cfg`.
+pub fn apply_file(cfg: &mut SimConfig, path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+    apply_str(cfg, &text)
+}
+
+/// Apply a `section.key=value` CLI override.
+pub fn apply_override(cfg: &mut SimConfig, spec: &str) -> anyhow::Result<()> {
+    let (path, value) = spec
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("--set expects section.key=value, got {spec:?}"))?;
+    let (section, key) = path
+        .split_once('.')
+        .ok_or_else(|| anyhow::anyhow!("--set expects section.key=value, got {spec:?}"))?;
+    cfg.apply(section.trim(), key.trim(), value.trim())
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MediaKind, PrefetcherKind};
+
+    #[test]
+    fn parses_full_file() {
+        let text = r#"
+# paper topology sweep
+[cxl]
+switch_levels = 4
+switch_latency_ns = 200.0
+
+[ssd]
+media = "pmem"   # ExPAND-P
+
+[sim]
+prefetcher = expand
+accesses = 500000
+"#;
+        let mut cfg = SimConfig::default();
+        apply_str(&mut cfg, text).unwrap();
+        assert_eq!(cfg.cxl.switch_levels, 4);
+        assert_eq!(cfg.cxl.switch_latency_ns, 200.0);
+        assert_eq!(cfg.ssd.media, MediaKind::Pmem);
+        assert_eq!(cfg.prefetcher, PrefetcherKind::Expand);
+        assert_eq!(cfg.accesses, 500_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let mut cfg = SimConfig::default();
+        let err = apply_str(&mut cfg, "[cpu]\ncores = twelve\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err2 = apply_str(&mut cfg, "cores = 2\n").unwrap_err();
+        assert!(err2.to_string().contains("outside"), "{err2}");
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut cfg = SimConfig::default();
+        apply_override(&mut cfg, "cpu.mshrs=32").unwrap();
+        assert_eq!(cfg.cpu.mshrs, 32);
+        assert!(apply_override(&mut cfg, "nodots").is_err());
+    }
+}

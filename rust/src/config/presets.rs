@@ -1,0 +1,76 @@
+//! Named presets reproducing the paper's configurations (Table 1).
+
+use super::{Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
+
+/// The paper's default evaluation platform (Table 1a/1b): 12-core O3 host,
+/// Z-NAND CXL-SSD behind one switch level, ExPAND prefetching.
+pub fn table1_default() -> SimConfig {
+    SimConfig::default()
+}
+
+/// LocalDRAM baseline: same host, all memory in local DRAM, no prefetch.
+pub fn local_dram() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.backing = Backing::LocalDram;
+    c.prefetcher = PrefetcherKind::None;
+    c
+}
+
+/// CXL-SSD without prefetching (the NoPrefetch normalization baseline).
+pub fn no_prefetch() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.prefetcher = PrefetcherKind::None;
+    c
+}
+
+/// ExPAND-Z / ExPAND-P / ExPAND-D media variants (Fig 7).
+pub fn expand_with_media(media: MediaKind) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.prefetcher = PrefetcherKind::Expand;
+    c.ssd = SsdConfig::with_media(media);
+    c
+}
+
+/// Fast preset for CI / smoke tests: small LLC + short traces so
+/// working sets still exceed the LLC and the miss path is exercised.
+pub fn smoke() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.hierarchy.llc.size_bytes = 2 << 20;
+    c.hierarchy.l2.size_bytes = 256 << 10;
+    c.accesses = 100_000;
+    c
+}
+
+/// Resolve a preset by name (CLI `--preset`).
+pub fn by_name(name: &str) -> anyhow::Result<SimConfig> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "table1" | "default" => table1_default(),
+        "localdram" | "local_dram" => local_dram(),
+        "noprefetch" | "no_prefetch" => no_prefetch(),
+        "expand-z" => expand_with_media(MediaKind::ZNand),
+        "expand-p" => expand_with_media(MediaKind::Pmem),
+        "expand-d" => expand_with_media(MediaKind::Dram),
+        "smoke" => smoke(),
+        other => anyhow::bail!("unknown preset {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["table1", "localdram", "noprefetch", "expand-z", "expand-p", "expand-d", "smoke"] {
+            by_name(name).unwrap();
+        }
+        assert!(by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn media_presets_differ() {
+        let z = by_name("expand-z").unwrap();
+        let d = by_name("expand-d").unwrap();
+        assert!(z.ssd.media_read > d.ssd.media_read * 10);
+    }
+}

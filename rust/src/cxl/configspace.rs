@@ -1,0 +1,83 @@
+//! Per-device PCIe configuration space (the slice of it ExPAND uses).
+//!
+//! The reflector writes the computed end-to-end latency for each CXL-SSD
+//! into a designated vendor-specific (DVSEC) register of that device's
+//! config space; the decider reads it back to convert predicted access
+//! times into prefetch *issue* deadlines. We model the config space as a
+//! sparse dword register file with the standard header fields plus the
+//! ExPAND DVSEC.
+
+use crate::sim::time::Ps;
+use std::collections::BTreeMap;
+
+/// Standard header offsets (dword-indexed).
+pub const REG_VENDOR_DEVICE: u16 = 0x0;
+pub const REG_CLASS: u16 = 0x2;
+/// ExPAND DVSEC: end-to-end latency, low/high dwords (vendor space).
+pub const REG_EXPAND_E2E_LO: u16 = 0x40;
+pub const REG_EXPAND_E2E_HI: u16 = 0x41;
+
+/// Panmnesia vendor id used by the ExPAND DVSEC in this model.
+pub const VENDOR_ID: u32 = 0x1DE5;
+
+/// A sparse 4 KB config space (dword registers).
+#[derive(Debug, Clone, Default)]
+pub struct ConfigSpace {
+    regs: BTreeMap<u16, u32>,
+}
+
+impl ConfigSpace {
+    /// Endpoint config space with the standard identification header.
+    pub fn endpoint(device_id: u16) -> Self {
+        let mut cs = ConfigSpace::default();
+        cs.write(REG_VENDOR_DEVICE, (u32::from(device_id) << 16) | VENDOR_ID);
+        cs.write(REG_CLASS, 0x0502_0000); // memory controller / CXL
+        cs
+    }
+
+    pub fn read(&self, reg: u16) -> u32 {
+        *self.regs.get(&reg).unwrap_or(&0)
+    }
+
+    pub fn write(&mut self, reg: u16, value: u32) {
+        self.regs.insert(reg, value);
+    }
+
+    /// Reflector-side: publish the end-to-end latency (ps) to the device.
+    pub fn write_e2e_latency(&mut self, e2e: Ps) {
+        self.write(REG_EXPAND_E2E_LO, (e2e & 0xFFFF_FFFF) as u32);
+        self.write(REG_EXPAND_E2E_HI, (e2e >> 32) as u32);
+    }
+
+    /// Decider-side: read the published end-to-end latency (ps).
+    pub fn read_e2e_latency(&self) -> Ps {
+        (u64::from(self.read(REG_EXPAND_E2E_HI)) << 32)
+            | u64::from(self.read(REG_EXPAND_E2E_LO))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2e_roundtrip_64bit() {
+        let mut cs = ConfigSpace::endpoint(0xE7);
+        let lat: Ps = 5_000_000_123; // > 32 bits
+        cs.write_e2e_latency(lat);
+        assert_eq!(cs.read_e2e_latency(), lat);
+    }
+
+    #[test]
+    fn header_identifies_vendor() {
+        let cs = ConfigSpace::endpoint(0xE7);
+        assert_eq!(cs.read(REG_VENDOR_DEVICE) & 0xFFFF, VENDOR_ID);
+        assert_eq!(cs.read(REG_VENDOR_DEVICE) >> 16, 0xE7);
+    }
+
+    #[test]
+    fn unwritten_regs_read_zero() {
+        let cs = ConfigSpace::default();
+        assert_eq!(cs.read(0x33), 0);
+    }
+}

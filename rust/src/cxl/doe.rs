@@ -1,0 +1,65 @@
+//! DOE (Data Object Exchange) mailbox + DSLBIS latency reporting.
+//!
+//! CXL endpoints expose CDAT (Coherent Device Attribute Table) structures
+//! through the PCIe DOE capability. The paper's reflector reads each
+//! CXL-SSD's **DSLBIS** (Device Scoped Latency and Bandwidth Information
+//! Structure) entry during enumeration to learn the device's internal
+//! access latency, then adds the virtual-hierarchy path latency to form
+//! the end-to-end value it writes back into the device's config space.
+
+use crate::sim::time::Ps;
+
+/// One DSLBIS entry (we model the read-latency entry; CDAT expresses
+/// latency in picosecond units natively, matching our time base).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dslbis {
+    /// DSMAS handle this entry scopes (we model one memory range).
+    pub handle: u8,
+    /// Read access latency from the device's CXL port to data (ps).
+    pub read_latency_ps: Ps,
+    /// Write latency (ps).
+    pub write_latency_ps: Ps,
+    /// Read bandwidth in MB/s (informational).
+    pub read_bw_mbps: u64,
+}
+
+/// The DOE mailbox of one endpoint: answers CDAT read requests.
+#[derive(Debug, Clone)]
+pub struct DoeMailbox {
+    entries: Vec<Dslbis>,
+}
+
+impl DoeMailbox {
+    pub fn new(entries: Vec<Dslbis>) -> Self {
+        DoeMailbox { entries }
+    }
+
+    /// CDAT "read entry" exchange. Returns `None` for an unknown handle
+    /// (hosts must tolerate sparse handles).
+    pub fn read_dslbis(&self, handle: u8) -> Option<Dslbis> {
+        self.entries.iter().copied().find(|e| e.handle == handle)
+    }
+
+    /// All advertised entries (host-side table walk).
+    pub fn entries(&self) -> &[Dslbis] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_known_and_unknown_handles() {
+        let mb = DoeMailbox::new(vec![Dslbis {
+            handle: 0,
+            read_latency_ps: 250_000,
+            write_latency_ps: 1_000_000,
+            read_bw_mbps: 32_000,
+        }]);
+        assert_eq!(mb.read_dslbis(0).unwrap().read_latency_ps, 250_000);
+        assert!(mb.read_dslbis(7).is_none());
+        assert_eq!(mb.entries().len(), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! PCIe enumeration over the CXL fabric.
+//!
+//! The reflector identifies each CXL-SSD's switch level during standard
+//! PCIe bus enumeration: switches behave as PCIe bridges, each consuming
+//! a bus number, so depth-first traversal with secondary/subordinate bus
+//! assignment reveals how many switches sit between the host and each
+//! endpoint (paper § "CXL switch hierarchy discovery"). This module
+//! reproduces that bus-numbering walk.
+
+use super::topology::{NodeId, NodeKind, Topology};
+use std::collections::BTreeMap;
+
+/// Enumeration record for one fabric node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EnumInfo {
+    /// Bus number the device answers on.
+    pub bus: u8,
+    /// Secondary bus (bridges only): first bus behind the bridge.
+    pub secondary: u8,
+    /// Subordinate bus (bridges only): highest bus behind the bridge.
+    pub subordinate: u8,
+    /// Switch count between RC and this node, derived from the walk.
+    pub switch_depth: u8,
+}
+
+/// Result of enumerating a topology.
+#[derive(Debug, Clone)]
+pub struct Enumeration {
+    pub info: BTreeMap<NodeId, EnumInfo>,
+}
+
+impl Enumeration {
+    /// Depth-first enumeration assigning bus numbers exactly like a PCIe
+    /// root complex: each bridge's secondary bus is the next free number;
+    /// its subordinate bus is fixed up after its subtree is walked.
+    pub fn discover(topo: &Topology) -> Self {
+        let mut info = BTreeMap::new();
+        let mut next_bus: u8 = 0;
+        fn walk(
+            topo: &Topology,
+            node: NodeId,
+            bus: u8,
+            depth: u8,
+            next_bus: &mut u8,
+            info: &mut BTreeMap<NodeId, EnumInfo>,
+        ) -> u8 {
+            let is_bridge = matches!(
+                topo.nodes[node].kind,
+                NodeKind::RootComplex | NodeKind::Switch
+            );
+            let mut rec = EnumInfo { bus, secondary: bus, subordinate: bus, switch_depth: depth };
+            if is_bridge && !topo.nodes[node].children.is_empty() {
+                *next_bus = next_bus.wrapping_add(1);
+                let child_bus = *next_bus;
+                rec.secondary = child_bus;
+                let child_depth =
+                    depth + u8::from(topo.nodes[node].kind == NodeKind::Switch);
+                let mut max_bus = child_bus;
+                for &c in &topo.nodes[node].children {
+                    max_bus = walk(topo, c, child_bus, child_depth, next_bus, info);
+                }
+                rec.subordinate = max_bus;
+            }
+            info.insert(node, rec);
+            info.get(&node).unwrap().subordinate
+        }
+        walk(topo, topo.root, 0, 0, &mut next_bus, &mut info);
+        // Children at the same level share a bus but each *bridge* child
+        // consumes further numbers; subordinate already tracks the max.
+        Enumeration { info }
+    }
+
+    /// Switch depth of a device, as the host would compute it from the
+    /// number of bridges crossed.
+    pub fn switch_depth(&self, node: NodeId) -> usize {
+        self.info[&node].switch_depth as usize
+    }
+
+    /// Validate against the ground-truth topology (used by tests and the
+    /// `expand enumerate` CLI's self-check).
+    pub fn verify(&self, topo: &Topology) -> bool {
+        topo.ssds()
+            .iter()
+            .all(|&s| self.switch_depth(s) == topo.switch_depth(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_enumeration_matches_depth() {
+        for levels in 0..5 {
+            let t = Topology::chain(levels);
+            let e = Enumeration::discover(&t);
+            assert!(e.verify(&t), "levels={levels}");
+            let ssd = t.ssds()[0];
+            assert_eq!(e.switch_depth(ssd), levels);
+        }
+    }
+
+    #[test]
+    fn tree_enumeration_depths_and_buses() {
+        let t = Topology::tree(2, 2, 4);
+        let e = Enumeration::discover(&t);
+        assert!(e.verify(&t));
+        // All SSDs behind two switch tiers.
+        for s in t.ssds() {
+            assert_eq!(e.switch_depth(s), 2);
+        }
+        // Bus numbers are unique per bridge subtree entry point.
+        let root = e.info[&t.root];
+        assert_eq!(root.bus, 0);
+        assert!(root.subordinate >= root.secondary);
+    }
+
+    #[test]
+    fn bridge_ranges_nest() {
+        let t = Topology::tree(2, 2, 2);
+        let e = Enumeration::discover(&t);
+        for node in &t.nodes {
+            if node.kind == NodeKind::Switch {
+                let rec = e.info[&node.id];
+                for &c in &node.children {
+                    let crec = e.info[&c];
+                    assert!(
+                        crec.bus >= rec.secondary && crec.bus <= rec.subordinate,
+                        "child bus {} outside bridge range {}..={}",
+                        crec.bus,
+                        rec.secondary,
+                        rec.subordinate
+                    );
+                }
+            }
+        }
+    }
+}

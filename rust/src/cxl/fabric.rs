@@ -1,0 +1,226 @@
+//! Fabric latency/queuing model: message traversal over the enumerated
+//! topology with per-link serialization and switch store-and-forward.
+//!
+//! This is what makes the CXL-SSD's *position* in the switch network
+//! matter (paper § "Latency Variation with CXL Switch Topology"): each
+//! switch level adds processing + serialization delay in both directions,
+//! and links are serially-reusable resources (queuing under load).
+
+use super::flit::serialize_ps;
+use super::topology::{NodeId, NodeKind, Topology};
+use super::transaction::{m2s_bytes, s2m_bytes, M2S, S2M, TrafficStats};
+use crate::config::CxlConfig;
+use crate::sim::time::{ns, Ps};
+use std::collections::BTreeMap;
+
+/// Direction of a traversal (affects which port queue is used).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    Down,
+    Up,
+}
+
+/// Arbitration lane: demand traffic preempts prefetch-class traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    /// Demand requests/responses (MemRd/MemRdPC/DRS).
+    Demand,
+    /// Prefetch-class traffic (BISnpData pushes, CXL.io notifications):
+    /// yields to demand reservations so speculative data movement cannot
+    /// head-of-line-block the application.
+    Prefetch,
+}
+
+/// The fabric: topology + per-link availability + traffic accounting.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub topo: Topology,
+    cfg: CxlConfig,
+    /// Per (child-node, direction) demand-lane next-free time. The link
+    /// between a node and its parent is keyed by the child id.
+    link_free: BTreeMap<(NodeId, u8), Ps>,
+    pub traffic: BTreeMap<NodeId, TrafficStats>,
+}
+
+impl Fabric {
+    pub fn new(topo: Topology, cfg: &CxlConfig) -> Self {
+        let traffic = topo.ssds().into_iter().map(|s| (s, TrafficStats::default())).collect();
+        Fabric { topo, cfg: cfg.clone(), link_free: BTreeMap::new(), traffic }
+    }
+
+    pub fn cfg(&self) -> &CxlConfig {
+        &self.cfg
+    }
+
+    /// Pure propagation latency (no queuing) of `bytes` from RC to
+    /// `dev` (or back — symmetric): per-hop link latency + serialization,
+    /// plus per-switch processing, plus RC processing.
+    pub fn path_latency(&self, dev: NodeId, bytes: usize) -> Ps {
+        let path = self.topo.path_from_root(dev);
+        let hops = (path.len() - 1) as u64; // links on the path
+        let switches = self
+            .topo
+            .path_from_root(dev)
+            .iter()
+            .filter(|&&n| self.topo.nodes[n].kind == NodeKind::Switch)
+            .count() as u64;
+        let ser = serialize_ps(&self.cfg, bytes);
+        ns(self.cfg.rc_latency_ns)
+            + hops * (ns(self.cfg.link_latency_ns) + ser)
+            + switches * ns(self.cfg.switch_latency_ns)
+    }
+
+    /// Queued traversal at absolute time `now`: walks the path charging
+    /// each link's next-free time. Returns arrival time at the far end.
+    fn traverse(&mut self, dev: NodeId, now: Ps, bytes: usize, dir: Dir) -> Ps {
+        self.traverse_lane(dev, now, bytes, dir, Lane::Demand)
+    }
+
+    fn traverse_lane(&mut self, dev: NodeId, now: Ps, bytes: usize, dir: Dir, lane: Lane) -> Ps {
+        let path = self.topo.path_from_root(dev);
+        let ser = serialize_ps(&self.cfg, bytes);
+        let mut t = now + ns(self.cfg.rc_latency_ns);
+        // Walk link by link: link i connects path[i] and path[i+1], keyed
+        // by the child (path[i+1]).
+        let links: Vec<NodeId> = path[1..].to_vec();
+        let ordered: Vec<NodeId> = match dir {
+            Dir::Down => links,
+            Dir::Up => links.into_iter().rev().collect(),
+        };
+        for child in ordered {
+            let key = (child, dir as u8);
+            let hi = self.link_free.get(&key).copied().unwrap_or(0);
+            let start = match lane {
+                // Demand ignores prefetch-lane traffic (priority) and
+                // reserves the link while serializing.
+                Lane::Demand => {
+                    let s = t.max(hi);
+                    self.link_free.insert(key, s + ser);
+                    s
+                }
+                // Prefetch-class traffic yields to demand reservations
+                // but does not reserve capacity itself: push traffic is
+                // ~0.7 GB/s against a ~60 GB/s link, and pushes are
+                // scheduled at out-of-order future deadlines — eager
+                // reservation would head-of-line-block later pushes that
+                // are due earlier (see EXPERIMENTS.md §Perf).
+                Lane::Prefetch => t.max(hi),
+            };
+            let done = start + ns(self.cfg.link_latency_ns) + ser;
+            // Switch store-and-forward after crossing into a switch.
+            t = if self.topo.nodes[child].kind == NodeKind::Switch {
+                done + ns(self.cfg.switch_latency_ns)
+            } else {
+                done
+            };
+        }
+        t
+    }
+
+    /// Host-side read round trip: M2S request down, device service time
+    /// `service` at the endpoint, S2M DRS data response up.
+    /// Returns total latency (arrival of data at RC minus `now`).
+    pub fn read_roundtrip(
+        &mut self,
+        dev: NodeId,
+        now: Ps,
+        req: M2S,
+        service: Ps,
+    ) -> Ps {
+        if let Some(t) = self.traffic.get_mut(&dev) {
+            t.record_m2s(req);
+            t.record_s2m(S2M::DrsMemData);
+        }
+        let at_dev = self.traverse(dev, now, m2s_bytes(req), Dir::Down);
+        let done_dev = at_dev + service;
+        let at_host = self.traverse(dev, done_dev, s2m_bytes(S2M::DrsMemData), Dir::Up);
+        at_host - now
+    }
+
+    /// Upward push (decider -> reflector) via BISnpData: one-way S2M with
+    /// payload, plus the host's BIRsp ack (not on the critical path).
+    pub fn bisnp_push(&mut self, dev: NodeId, now: Ps) -> Ps {
+        if let Some(t) = self.traffic.get_mut(&dev) {
+            t.record_s2m(S2M::BISnpData);
+            t.record_m2s(M2S::BIRsp);
+        }
+        let at_host =
+            self.traverse_lane(dev, now, s2m_bytes(S2M::BISnpData), Dir::Up, Lane::Prefetch);
+        at_host - now
+    }
+
+    /// One-way host -> device notification (CXL.io hit notify, small).
+    pub fn io_notify(&mut self, dev: NodeId, now: Ps) -> Ps {
+        let at_dev = self.traverse_lane(dev, now, 16, Dir::Down, Lane::Prefetch);
+        at_dev - now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CxlConfig;
+
+    fn fabric(levels: usize) -> (Fabric, NodeId) {
+        let topo = Topology::chain(levels);
+        let ssd = topo.ssds()[0];
+        (Fabric::new(topo, &CxlConfig::default()), ssd)
+    }
+
+    #[test]
+    fn deeper_topology_is_slower() {
+        let mut prev = 0;
+        for levels in 0..5 {
+            let (f, ssd) = fabric(levels);
+            let lat = f.path_latency(ssd, 80);
+            assert!(lat > prev, "level {levels}: {lat} > {prev}");
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn per_level_increment_is_switch_plus_link() {
+        let (f1, s1) = fabric(1);
+        let (f2, s2) = fabric(2);
+        let d = f2.path_latency(s2, 80) - f1.path_latency(s1, 80);
+        let cfg = CxlConfig::default();
+        let expect = ns(cfg.switch_latency_ns) + ns(cfg.link_latency_ns)
+            + serialize_ps(&cfg, 80);
+        assert_eq!(d, expect);
+    }
+
+    #[test]
+    fn roundtrip_includes_service_and_both_directions() {
+        let (mut f, ssd) = fabric(1);
+        let service = 1_000_000; // 1 us
+        let rt = f.read_roundtrip(ssd, 0, M2S::ReqMemRd, service);
+        let one_way = f.path_latency(ssd, 16);
+        assert!(rt > service + one_way, "rt {rt}");
+        // Traffic recorded.
+        let t = f.traffic[&ssd];
+        assert_eq!(t.m2s_req, 1);
+        assert_eq!(t.s2m_drs, 1);
+    }
+
+    #[test]
+    fn link_contention_queues_messages() {
+        let (mut f, ssd) = fabric(1);
+        // Two requests at the same instant: the second serializes behind
+        // the first on the shared link.
+        let a = f.read_roundtrip(ssd, 0, M2S::ReqMemRd, 0);
+        let b = f.read_roundtrip(ssd, 0, M2S::ReqMemRd, 0);
+        assert!(b > a, "queued {b} > first {a}");
+    }
+
+    #[test]
+    fn bisnp_push_is_one_way() {
+        let (mut f, ssd) = fabric(2);
+        let push = f.bisnp_push(ssd, 0);
+        let rt = {
+            let (mut f2, ssd2) = fabric(2);
+            f2.read_roundtrip(ssd2, 0, M2S::ReqMemRd, 0)
+        };
+        assert!(push < rt, "one-way {push} < roundtrip {rt}");
+        assert_eq!(f.traffic[&ssd].s2m_bisnpdata, 1);
+    }
+}

@@ -1,0 +1,53 @@
+//! Flit timing math for CXL links.
+//!
+//! CXL.mem messages are packed into flits that serialize over the PCIe
+//! PHY. We compute per-link serialization delay from the configured
+//! GT/s, lane count and flit size, including the PAM4/FEC efficiency
+//! factor of PCIe 6.0 flit mode.
+
+use crate::config::CxlConfig;
+use crate::sim::time::Ps;
+
+/// Effective payload efficiency of PCIe 6.0 flit mode (FEC + CRC + DLLP
+/// overhead inside the 256B flit: 242/256 usable, ~0.945).
+pub const FLIT_EFFICIENCY: f64 = 0.945;
+
+/// Link bytes/ns for a config (raw GT/s x lanes / 8 bits, derated).
+pub fn link_bytes_per_ns(cfg: &CxlConfig) -> f64 {
+    cfg.gts * cfg.lanes as f64 / 8.0 * FLIT_EFFICIENCY
+}
+
+/// Time to serialize `bytes` of message onto the link, rounded up to
+/// whole flits (a 16B header still occupies a flit slot share; small
+/// messages pack, so we charge fractional flits at slot granularity 64B).
+pub fn serialize_ps(cfg: &CxlConfig, bytes: usize) -> Ps {
+    let slots = bytes.div_ceil(64).max(1);
+    let wire_bytes = (slots * 64) as f64;
+    let ns = wire_bytes / link_bytes_per_ns(cfg);
+    (ns * 1000.0).round() as Ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcie6_x8_rates() {
+        let cfg = CxlConfig::default(); // 64 GT/s x8
+        let bpn = link_bytes_per_ns(&cfg);
+        assert!((bpn - 60.48).abs() < 0.01, "bytes/ns {bpn}");
+        // One 64B slot ≈ 1.06 ns.
+        let t = serialize_ps(&cfg, 16);
+        assert!((1000..1200).contains(&t), "{t} ps");
+        // A 80B DRS message takes two slots.
+        assert_eq!(serialize_ps(&cfg, 80), 2 * serialize_ps(&cfg, 64));
+    }
+
+    #[test]
+    fn narrower_link_is_slower() {
+        let mut narrow = CxlConfig::default();
+        narrow.lanes = 4;
+        let wide = CxlConfig::default();
+        assert!(serialize_ps(&narrow, 64) > serialize_ps(&wide, 64));
+    }
+}

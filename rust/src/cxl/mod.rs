@@ -1,0 +1,13 @@
+//! CXL fabric substrate: topology, enumeration, DOE/DSLBIS, config space,
+//! flit timing, CXL.mem transactions, and the queued latency model.
+
+pub mod configspace;
+pub mod doe;
+pub mod enumeration;
+pub mod fabric;
+pub mod flit;
+pub mod topology;
+pub mod transaction;
+
+pub use fabric::Fabric;
+pub use topology::{NodeId, NodeKind, Topology};

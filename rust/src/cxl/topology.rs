@@ -1,0 +1,169 @@
+//! CXL fabric topology: root complex, multi-tiered switches (CXL 3.0/3.1),
+//! and endpoint CXL-SSDs, organized into virtual hierarchies.
+//!
+//! A switch exposes one upstream port (USP) toward the host and several
+//! downstream ports (DSPs) toward deeper switches or endpoints. The
+//! fabric manager binds ports into a *virtual hierarchy* (VH) — the
+//! dedicated data path a host uses to reach its endpoints. The paper's
+//! timeliness mechanism depends on knowing, per endpoint, how many switch
+//! traversals its VH contains.
+
+/// Index into [`Topology::nodes`].
+pub type NodeId = usize;
+
+/// What a fabric node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Host root complex (one per topology here).
+    RootComplex,
+    /// CXL switch (PCIe bridge semantics for enumeration).
+    Switch,
+    /// CXL-SSD endpoint expander.
+    CxlSsd,
+}
+
+/// One node in the fabric graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: NodeKind,
+    pub parent: Option<NodeId>,
+    pub children: Vec<NodeId>,
+}
+
+/// The fabric graph (a tree rooted at the RC — one VH per host).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: Vec<Node>,
+    pub root: NodeId,
+}
+
+impl Topology {
+    /// New topology containing only a root complex.
+    pub fn new() -> Self {
+        Topology {
+            nodes: vec![Node {
+                id: 0,
+                kind: NodeKind::RootComplex,
+                parent: None,
+                children: Vec::new(),
+            }],
+            root: 0,
+        }
+    }
+
+    /// Add a node under `parent`.
+    pub fn add(&mut self, kind: NodeKind, parent: NodeId) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, kind, parent: Some(parent), children: Vec::new() });
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Linear chain: RC -> `levels` switches -> one CXL-SSD. `levels == 0`
+    /// attaches the SSD directly to the RC (the paper's no-switch
+    /// baseline in Fig 2c).
+    pub fn chain(levels: usize) -> Self {
+        let mut t = Topology::new();
+        let mut parent = t.root;
+        for _ in 0..levels {
+            parent = t.add(NodeKind::Switch, parent);
+        }
+        t.add(NodeKind::CxlSsd, parent);
+        t
+    }
+
+    /// Balanced tree: `levels` tiers of switches with `fanout` DSPs each;
+    /// SSD endpoints hang off the leaf tier (`ssds` of them, round-robin).
+    pub fn tree(levels: usize, fanout: usize, ssds: usize) -> Self {
+        let mut t = Topology::new();
+        let mut frontier = vec![t.root];
+        for _ in 0..levels {
+            let mut next = Vec::new();
+            for &p in &frontier {
+                for _ in 0..fanout {
+                    next.push(t.add(NodeKind::Switch, p));
+                }
+            }
+            frontier = next;
+        }
+        for i in 0..ssds.max(1) {
+            let p = frontier[i % frontier.len()];
+            t.add(NodeKind::CxlSsd, p);
+        }
+        t
+    }
+
+    /// All endpoint SSDs.
+    pub fn ssds(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == NodeKind::CxlSsd)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Path from the RC to `node` (inclusive both ends).
+    pub fn path_from_root(&self, node: NodeId) -> Vec<NodeId> {
+        let mut path = vec![node];
+        let mut cur = node;
+        while let Some(p) = self.nodes[cur].parent {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        path
+    }
+
+    /// Number of switches between the RC and `node`.
+    pub fn switch_depth(&self, node: NodeId) -> usize {
+        self.path_from_root(node)
+            .iter()
+            .filter(|&&id| self.nodes[id].kind == NodeKind::Switch)
+            .count()
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_depths() {
+        for levels in 0..5 {
+            let t = Topology::chain(levels);
+            let ssds = t.ssds();
+            assert_eq!(ssds.len(), 1);
+            assert_eq!(t.switch_depth(ssds[0]), levels);
+            // path = RC + switches + SSD
+            assert_eq!(t.path_from_root(ssds[0]).len(), levels + 2);
+        }
+    }
+
+    #[test]
+    fn tree_shape() {
+        let t = Topology::tree(2, 2, 4);
+        // 1 RC + 2 + 4 switches + 4 SSDs
+        assert_eq!(t.nodes.len(), 11);
+        let ssds = t.ssds();
+        assert_eq!(ssds.len(), 4);
+        for s in ssds {
+            assert_eq!(t.switch_depth(s), 2);
+        }
+    }
+
+    #[test]
+    fn path_starts_at_root_ends_at_node() {
+        let t = Topology::chain(3);
+        let ssd = t.ssds()[0];
+        let p = t.path_from_root(ssd);
+        assert_eq!(p[0], t.root);
+        assert_eq!(*p.last().unwrap(), ssd);
+    }
+}

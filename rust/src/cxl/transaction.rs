@@ -1,0 +1,124 @@
+//! CXL.mem transaction vocabulary (CXL 3.0), including the paper's two
+//! custom opcodes.
+//!
+//! Downward (master-to-subordinate, M2S): `Req` carries MemRd without
+//! payload; `RwD` carries payload (MemWr). The paper defines **MemRdPC**
+//! in RwD's custom-opcode space so every LLC-missing read piggybacks the
+//! current program counter to the decider.
+//!
+//! Upward (subordinate-to-master, S2M): `DRS`/`NDR` are normal responses;
+//! `BISnp` is CXL 3.0 back-invalidation. The paper defines **BISnpData**
+//! in BISnp's custom space so the decider can push prefetched lines into
+//! the host-side reflector buffer.
+
+/// M2S (host -> device) message classes and opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum M2S {
+    /// Request without data: plain memory read.
+    ReqMemRd,
+    /// Request with data: memory write (64B payload).
+    RwDMemWr,
+    /// Custom RwD opcode: memory read carrying the PC (paper's MemRdPC).
+    RwDMemRdPC,
+    /// Back-invalidation response (host acks a BISnp).
+    BIRsp,
+}
+
+/// S2M (device -> host) message classes and opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum S2M {
+    /// Data response (carries 64B line).
+    DrsMemData,
+    /// No-data response (completion for writes).
+    NdrCmp,
+    /// Back-invalidation snoop (no payload).
+    BISnp,
+    /// Custom BISnp opcode: snoop + pushed prefetch payload (BISnpData).
+    BISnpData,
+}
+
+/// Header+payload size in bytes of one transaction as it crosses a link.
+/// CXL.mem slot formats: 16B header slots; data adds a 64B line (and
+/// MemRdPC an 8B PC immediate packed into a second slot).
+pub fn m2s_bytes(op: M2S) -> usize {
+    match op {
+        M2S::ReqMemRd => 16,
+        M2S::RwDMemWr => 16 + 64,
+        M2S::RwDMemRdPC => 16 + 8,
+        M2S::BIRsp => 16,
+    }
+}
+
+/// Size of an S2M transaction on the wire.
+pub fn s2m_bytes(op: S2M) -> usize {
+    match op {
+        S2M::DrsMemData => 16 + 64,
+        S2M::NdrCmp => 16,
+        S2M::BISnp => 16,
+        S2M::BISnpData => 16 + 64,
+    }
+}
+
+/// Message counters for traffic accounting (per device).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrafficStats {
+    pub m2s_req: u64,
+    pub m2s_rdpc: u64,
+    pub m2s_wr: u64,
+    pub m2s_birsp: u64,
+    pub s2m_drs: u64,
+    pub s2m_ndr: u64,
+    pub s2m_bisnp: u64,
+    pub s2m_bisnpdata: u64,
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+}
+
+impl TrafficStats {
+    pub fn record_m2s(&mut self, op: M2S) {
+        self.bytes_down += m2s_bytes(op) as u64;
+        match op {
+            M2S::ReqMemRd => self.m2s_req += 1,
+            M2S::RwDMemRdPC => self.m2s_rdpc += 1,
+            M2S::RwDMemWr => self.m2s_wr += 1,
+            M2S::BIRsp => self.m2s_birsp += 1,
+        }
+    }
+
+    pub fn record_s2m(&mut self, op: S2M) {
+        self.bytes_up += s2m_bytes(op) as u64;
+        match op {
+            S2M::DrsMemData => self.s2m_drs += 1,
+            S2M::NdrCmp => self.s2m_ndr += 1,
+            S2M::BISnp => self.s2m_bisnp += 1,
+            S2M::BISnpData => self.s2m_bisnpdata += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(m2s_bytes(M2S::ReqMemRd), 16);
+        assert_eq!(m2s_bytes(M2S::RwDMemRdPC), 24); // header + PC
+        assert_eq!(s2m_bytes(S2M::DrsMemData), 80); // header + line
+        assert_eq!(s2m_bytes(S2M::BISnpData), 80); // snoop + pushed line
+        assert_eq!(s2m_bytes(S2M::BISnp), 16); // plain snoop, no payload
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut t = TrafficStats::default();
+        t.record_m2s(M2S::RwDMemRdPC);
+        t.record_s2m(S2M::DrsMemData);
+        t.record_s2m(S2M::BISnpData);
+        assert_eq!(t.m2s_rdpc, 1);
+        assert_eq!(t.s2m_drs, 1);
+        assert_eq!(t.s2m_bisnpdata, 1);
+        assert_eq!(t.bytes_down, 24);
+        assert_eq!(t.bytes_up, 160);
+    }
+}

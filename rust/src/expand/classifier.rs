@@ -1,0 +1,173 @@
+//! The decider's decision-tree behavior classifier.
+//!
+//! The paper pretrains a decision tree to bucket memory-trace windows
+//! into 64 categories; a category flip between consecutive windows is a
+//! *behavior-change event* that is fed to the transformer as a hint
+//! (which then re-weights recent history — the online-tuning path,
+//! Fig 4e). We implement the pretrained tree as a fixed feature-space
+//! partition over four interpretable trace features, each quantized to
+//! 2-3 levels, yielding 64 leaf categories (3 x 4 levels ~ 2^6). The
+//! partition is deterministic — standing in for the offline-trained tree
+//! (DESIGN.md §3) — and its *change-detection* role is what matters to
+//! the system.
+
+use super::tokenize::OOV;
+
+/// Window features the tree splits on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowFeatures {
+    /// Share of the most common delta token (stride dominance).
+    pub dominant_delta_share: f64,
+    /// Distinct PC buckets in the window (code-site diversity).
+    pub distinct_pcs: usize,
+    /// Fraction of out-of-vocabulary (large-jump) deltas.
+    pub oov_fraction: f64,
+    /// Best repeating-period score in 2..=8 (temporal pattern).
+    pub periodicity: f64,
+}
+
+/// Extract features from a token window.
+pub fn features(deltas: &[u16], pcs: &[u16]) -> WindowFeatures {
+    let n = deltas.len().max(1);
+    let mut counts = std::collections::BTreeMap::new();
+    let mut oov = 0usize;
+    for &d in deltas {
+        *counts.entry(d).or_insert(0usize) += 1;
+        oov += usize::from(d == OOV);
+    }
+    let dominant = counts.values().copied().max().unwrap_or(0);
+    let mut pcset = std::collections::BTreeSet::new();
+    pcset.extend(pcs.iter().copied());
+
+    // Periodicity: fraction of positions where deltas[i] == deltas[i-p],
+    // maximized over small periods.
+    let mut best_period = 0.0f64;
+    for p in 2..=8usize {
+        if deltas.len() <= p {
+            break;
+        }
+        let matches = (p..deltas.len()).filter(|&i| deltas[i] == deltas[i - p]).count();
+        let score = matches as f64 / (deltas.len() - p) as f64;
+        best_period = best_period.max(score);
+    }
+
+    WindowFeatures {
+        dominant_delta_share: dominant as f64 / n as f64,
+        distinct_pcs: pcset.len(),
+        oov_fraction: oov as f64 / n as f64,
+        periodicity: best_period,
+    }
+}
+
+/// The "pretrained" 64-category partition.
+pub fn categorize(f: &WindowFeatures) -> u8 {
+    let q_dom = match f.dominant_delta_share {
+        x if x >= 0.9 => 3u8,
+        x if x >= 0.6 => 2,
+        x if x >= 0.3 => 1,
+        _ => 0,
+    };
+    let q_pc = match f.distinct_pcs {
+        0..=1 => 0u8,
+        2..=3 => 1,
+        4..=6 => 2,
+        _ => 3,
+    };
+    let q_oov = match f.oov_fraction {
+        x if x >= 0.3 => 1u8,
+        _ => 0,
+    };
+    let q_per = match f.periodicity {
+        x if x >= 0.8 => 1u8,
+        _ => 0,
+    };
+    // 4 * 4 * 2 * 2 = 64 categories.
+    (q_dom << 4) | (q_pc << 2) | (q_oov << 1) | q_per
+}
+
+/// Stateful change detector the decider drives per window.
+#[derive(Debug, Clone, Default)]
+pub struct BehaviorClassifier {
+    last_category: Option<u8>,
+    pub change_events: u64,
+}
+
+impl BehaviorClassifier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify a window; returns `(category, behavior_changed)`.
+    pub fn observe(&mut self, deltas: &[u16], pcs: &[u16]) -> (u8, bool) {
+        let cat = categorize(&features(deltas, pcs));
+        let changed = match self.last_category {
+            Some(prev) => prev != cat,
+            None => false,
+        };
+        self.last_category = Some(cat);
+        self.change_events += u64::from(changed);
+        (cat, changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window_const(d: u16, pc: u16, n: usize) -> (Vec<u16>, Vec<u16>) {
+        (vec![d; n], vec![pc; n])
+    }
+
+    #[test]
+    fn constant_stride_is_dominant_and_periodic() {
+        let (d, p) = window_const(65, 3, 32);
+        let f = features(&d, &p);
+        assert!(f.dominant_delta_share > 0.99);
+        assert!(f.periodicity > 0.99);
+        assert_eq!(f.distinct_pcs, 1);
+        assert_eq!(f.oov_fraction, 0.0);
+    }
+
+    #[test]
+    fn categories_cover_full_range() {
+        let f_lo = WindowFeatures {
+            dominant_delta_share: 0.1,
+            distinct_pcs: 1,
+            oov_fraction: 0.0,
+            periodicity: 0.0,
+        };
+        let f_hi = WindowFeatures {
+            dominant_delta_share: 0.95,
+            distinct_pcs: 9,
+            oov_fraction: 0.5,
+            periodicity: 0.9,
+        };
+        assert_eq!(categorize(&f_lo), 0);
+        assert_eq!(categorize(&f_hi), 63);
+    }
+
+    #[test]
+    fn change_detection_fires_on_phase_shift() {
+        let mut c = BehaviorClassifier::new();
+        let (d1, p1) = window_const(65, 3, 32); // stride stream
+        let d2 = vec![OOV; 32]; // jump-heavy stream
+        let p2: Vec<u16> = (0..32).map(|i| (i % 8) as u16).collect();
+        let (_, ch1) = c.observe(&d1, &p1);
+        assert!(!ch1, "first window is never a change");
+        let (_, ch2) = c.observe(&d1, &p1);
+        assert!(!ch2, "same behavior, no event");
+        let (_, ch3) = c.observe(&d2, &p2);
+        assert!(ch3, "phase shift detected");
+        assert_eq!(c.change_events, 1);
+    }
+
+    #[test]
+    fn periodic_pattern_detected() {
+        // Period-3 repeating deltas.
+        let d: Vec<u16> = (0..30).map(|i| [70u16, 60, 80][i % 3]).collect();
+        let p = vec![1u16; 30];
+        let f = features(&d, &p);
+        assert!(f.periodicity > 0.99, "period-3 score {}", f.periodicity);
+        assert!(f.dominant_delta_share < 0.5);
+    }
+}

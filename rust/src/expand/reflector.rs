@@ -1,0 +1,141 @@
+//! The reflector: ExPAND's host-side component (CXL root complex + LLC
+//! controller hook).
+//!
+//! Holds a small buffer (16 KB = 256 lines, Table in paper §
+//! "Prefetching Delegation") of lines pushed up by the decider via
+//! BISnpData. On an LLC miss the LLC controller checks this buffer
+//! first; a hit is served at RC latency — no traversal of the CXL-SSD
+//! pool — and the line is promoted into the LLC. The reflector also
+//! piggybacks PCs on outgoing misses (MemRdPC) and reports host-side
+//! hits to the decider over CXL.io.
+
+use crate::sim::time::Ps;
+use std::collections::VecDeque;
+
+/// Reflector statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReflectorStats {
+    pub inserts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Lines dropped by FIFO replacement before being used.
+    pub dropped_unused: u64,
+}
+
+/// The RC-side prefetch buffer.
+#[derive(Debug, Clone)]
+pub struct Reflector {
+    /// FIFO of (line, used) — 16 KB / 64 B = 256 entries by default.
+    buf: VecDeque<(u64, bool)>,
+    capacity: usize,
+    /// RC-side service latency for a buffer hit.
+    hit_latency: Ps,
+    pub stats: ReflectorStats,
+}
+
+impl Reflector {
+    pub fn new(capacity_bytes: usize, hit_latency: Ps) -> Self {
+        Reflector {
+            buf: VecDeque::new(),
+            capacity: (capacity_bytes / 64).max(1),
+            hit_latency,
+            stats: ReflectorStats::default(),
+        }
+    }
+
+    pub fn capacity_lines(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Insert a pushed line (BISnpData payload). FIFO-evicts when full.
+    pub fn insert(&mut self, line: u64) {
+        if self.buf.iter().any(|&(l, _)| l == line) {
+            return;
+        }
+        if self.buf.len() == self.capacity {
+            if let Some((_, used)) = self.buf.pop_front() {
+                if !used {
+                    self.stats.dropped_unused += 1;
+                }
+            }
+        }
+        self.buf.push_back((line, false));
+        self.stats.inserts += 1;
+    }
+
+    /// LLC-miss path check. On hit, the line is consumed (promoted into
+    /// the LLC by the caller) and the RC service latency returned.
+    pub fn check(&mut self, line: u64) -> Option<Ps> {
+        if let Some(idx) = self.buf.iter().position(|&(l, _)| l == line) {
+            self.buf.remove(idx);
+            self.stats.hits += 1;
+            Some(self.hit_latency)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Probe without consuming (tests/invariants).
+    pub fn contains(&self, line: u64) -> bool {
+        self.buf.iter().any(|&(l, _)| l == line)
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let t = self.stats.hits + self.stats.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_256_lines_at_16kb() {
+        let r = Reflector::new(16 << 10, 40_000);
+        assert_eq!(r.capacity_lines(), 256);
+    }
+
+    #[test]
+    fn hit_consumes_line() {
+        let mut r = Reflector::new(1024, 40_000);
+        r.insert(7);
+        assert_eq!(r.check(7), Some(40_000));
+        assert_eq!(r.check(7), None);
+        assert_eq!(r.stats.hits, 1);
+        assert_eq!(r.stats.misses, 1);
+    }
+
+    #[test]
+    fn fifo_eviction_tracks_unused_drops() {
+        let mut r = Reflector::new(2 * 64, 40_000); // 2 lines
+        r.insert(1);
+        r.insert(2);
+        r.insert(3); // evicts 1, unused
+        assert!(!r.contains(1));
+        assert!(r.contains(2) && r.contains(3));
+        assert_eq!(r.stats.dropped_unused, 1);
+    }
+
+    #[test]
+    fn duplicate_insert_is_idempotent() {
+        let mut r = Reflector::new(1024, 40_000);
+        r.insert(5);
+        r.insert(5);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.stats.inserts, 1);
+    }
+}

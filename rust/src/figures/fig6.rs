@@ -1,0 +1,33 @@
+//! Fig 6: switch-level sensitivity with ExPAND (levels 1-4, normalized
+//! to level 1). Paper: graphs degrade ~1.2x/level; SPEC varies with LLC
+//! hit ratio.
+
+use super::{emit, FigOpts};
+use crate::config::PrefetcherKind;
+use crate::metrics::Table;
+use crate::workloads::WorkloadId;
+
+pub fn run(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let levels = [1usize, 2, 3, 4];
+    let mut table = Table::new(
+        "Fig 6: ExPAND slowdown vs switch level (norm to level 1)",
+        &["L1", "L2", "L3", "L4"],
+    );
+    for id in WorkloadId::ALL {
+        let mut base = 0u64;
+        let mut row = Vec::new();
+        for &lv in &levels {
+            let s = super::run_sim(opts, rt.as_ref(), id, move |c| {
+                c.prefetcher = PrefetcherKind::Expand;
+                c.cxl.switch_levels = lv;
+            })?;
+            if lv == 1 {
+                base = s.exec_ps.max(1);
+            }
+            row.push(s.exec_ps as f64 / base as f64);
+        }
+        table.row(id.name(), row);
+    }
+    emit(&table, opts, "fig6_topology")
+}

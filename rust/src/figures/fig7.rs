@@ -1,0 +1,68 @@
+//! Fig 7: backend-media diversity (ExPAND-Z / ExPAND-P / ExPAND-D).
+//!
+//! * 7a — exec time per media, normalized to LocalDRAM. Paper: Z ~3x
+//!   worse than P on average; D beats LocalDRAM everywhere (1.3-3.9x).
+//! * 7b — switch-level sensitivity per media on libquantum (highest LLC
+//!   hit ratio) and TC (lowest): high-hit workloads are switch-latency
+//!   dominated; low-hit workloads are media dominated.
+
+use super::{emit, FigOpts};
+use crate::config::{Backing, MediaKind, PrefetcherKind, SsdConfig};
+use crate::metrics::Table;
+use crate::workloads::WorkloadId;
+
+const MEDIA: [MediaKind; 3] = [MediaKind::ZNand, MediaKind::Pmem, MediaKind::Dram];
+
+fn apply_media(c: &mut crate::config::SimConfig, m: MediaKind) {
+    let scaled_internal = c.ssd.internal_dram_bytes;
+    c.ssd = SsdConfig::with_media(m);
+    c.ssd.internal_dram_bytes = scaled_internal;
+    c.prefetcher = PrefetcherKind::Expand;
+}
+
+pub fn run_7a(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let mut table = Table::new(
+        "Fig 7a: ExPAND media variants, perf normalized to LocalDRAM",
+        &["ExPAND-Z", "ExPAND-P", "ExPAND-D"],
+    );
+    for id in WorkloadId::ALL {
+        let local = super::run_sim(opts, rt.as_ref(), id, |c| {
+            c.backing = Backing::LocalDram;
+        })?;
+        let mut row = Vec::new();
+        for m in MEDIA {
+            let s = super::run_sim(opts, rt.as_ref(), id, move |c| apply_media(c, m))?;
+            row.push(s.speedup_over(&local));
+        }
+        table.row(id.name(), row);
+    }
+    emit(&table, opts, "fig7a_backend_media")
+}
+
+pub fn run_7b(opts: &FigOpts) -> anyhow::Result<()> {
+    let rt = opts.runtime();
+    let levels = [1usize, 2, 3, 4];
+    let mut table = Table::new(
+        "Fig 7b: media x switch-level slowdown (norm to level 1)",
+        &["L1", "L2", "L3", "L4"],
+    );
+    for id in [WorkloadId::Libquantum, WorkloadId::Tc] {
+        for m in MEDIA {
+            let mut base = 0u64;
+            let mut row = Vec::new();
+            for &lv in &levels {
+                let s = super::run_sim(opts, rt.as_ref(), id, move |c| {
+                    apply_media(c, m);
+                    c.cxl.switch_levels = lv;
+                })?;
+                if lv == 1 {
+                    base = s.exec_ps.max(1);
+                }
+                row.push(s.exec_ps as f64 / base as f64);
+            }
+            table.row(&format!("{}-{}", id.name(), m.name()), row);
+        }
+    }
+    emit(&table, opts, "fig7b_media_topology")
+}

@@ -1,0 +1,30 @@
+//! # expand-cxl — ExPAND reproduction
+//!
+//! Full-system reproduction of *"CXL Topology-Aware and Expander-Driven
+//! Prefetching: Unlocking SSD Performance"* (CS.AR 2025): a Rust
+//! coordinator simulating the host (interval O3 cores + cache hierarchy),
+//! the CXL fabric (multi-tier switches, enumeration, DOE/DSLBIS,
+//! CXL.mem transactions with back-invalidation) and the CXL-SSD
+//! (internal DRAM cache + Z-NAND/PMEM/DRAM backends), with the paper's
+//! ML address predictors AOT-compiled from JAX/Pallas to HLO and executed
+//! through the PJRT CPU client on the decider's hot path.
+//!
+//! Layering (see DESIGN.md):
+//! * L3 (this crate) — coordination + every simulated substrate;
+//! * L2 (`python/compile/model.py`) — predictor compute graphs, lowered
+//!   once by `make artifacts`;
+//! * L1 (`python/compile/kernels/mm_attention.py`) — fused
+//!   multi-modality attention Pallas kernel inside the L2 graph.
+
+pub mod config;
+pub mod cxl;
+pub mod expand;
+pub mod figures;
+pub mod mem;
+pub mod metrics;
+pub mod prefetch;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,202 @@
+//! `expand` — CLI launcher for the ExPAND reproduction.
+//!
+//! Subcommands:
+//!   run        simulate one workload/prefetcher configuration
+//!   figures    regenerate paper figures/tables (fig1..fig7b, table1c/d, all)
+//!   enumerate  walk the CXL fabric: bus numbers, depths, DSLBIS, e2e latency
+//!   config     show the effective configuration for a preset/overrides
+
+use expand_cxl::config::{parse as cfgparse, presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
+use expand_cxl::cxl::configspace::ConfigSpace;
+use expand_cxl::cxl::enumeration::Enumeration;
+use expand_cxl::cxl::{Fabric, NodeKind, Topology};
+use expand_cxl::expand::timeliness::setup_device;
+use expand_cxl::figures::{self, FigOpts};
+use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::runner::simulate;
+use expand_cxl::ssd::CxlSsd;
+use expand_cxl::util::cli::{render_help, Args, CommandHelp};
+use expand_cxl::workloads::WorkloadId;
+
+const COMMANDS: &[CommandHelp] = &[
+    CommandHelp {
+        name: "run",
+        summary: "simulate one workload under a chosen prefetcher",
+        usage: "expand run <workload> [--prefetcher none|rule1|rule2|ml1|ml2|expand] \
+                [--levels N] [--media znand|pmem|dram] [--backing cxl|local] \
+                [--accesses N] [--seed S] [--preset NAME] [--config FILE] [--set sec.key=v]",
+    },
+    CommandHelp {
+        name: "figures",
+        summary: "regenerate paper figures/tables",
+        usage: "expand figures <fig1|fig2a|fig2b|fig2c|fig4a|fig4b|fig4c|fig4d|fig4e|\
+                fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--accesses N] [--out DIR] \
+                [--no-artifacts]",
+    },
+    CommandHelp {
+        name: "enumerate",
+        summary: "PCIe-enumerate a CXL fabric and show timeliness setup",
+        usage: "expand enumerate [--levels N] [--fanout F] [--ssds K]",
+    },
+    CommandHelp {
+        name: "config",
+        summary: "print the effective configuration",
+        usage: "expand config show [--preset NAME] [--config FILE] [--set sec.key=v]",
+    },
+];
+
+fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = match args.get("preset") {
+        Some(p) => presets::by_name(p)?,
+        None => SimConfig::default(),
+    };
+    if let Some(path) = args.get("config") {
+        cfgparse::apply_file(&mut cfg, path)?;
+    }
+    for spec in args.get_all("set") {
+        cfgparse::apply_override(&mut cfg, spec)?;
+    }
+    if let Some(p) = args.get("prefetcher") {
+        cfg.prefetcher = PrefetcherKind::parse(p)?;
+    }
+    if let Some(l) = args.get("levels") {
+        cfg.cxl.switch_levels = l.parse()?;
+    }
+    if let Some(m) = args.get("media") {
+        let internal = cfg.ssd.internal_dram_bytes;
+        cfg.ssd = SsdConfig::with_media(MediaKind::parse(m)?);
+        cfg.ssd.internal_dram_bytes = internal;
+    }
+    if let Some(b) = args.get("backing") {
+        cfg.backing = match b {
+            "local" | "localdram" => Backing::LocalDram,
+            "cxl" | "cxlssd" => Backing::CxlSsd,
+            other => anyhow::bail!("unknown backing {other:?}"),
+        };
+    }
+    cfg.accesses = args.get_usize("accesses", cfg.accesses)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let workload = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("run: missing <workload> (try: expand run tc)"))?;
+    let id = WorkloadId::parse(workload)?;
+    let cfg = build_config(args)?;
+    let needs_artifacts = matches!(
+        cfg.prefetcher,
+        PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
+    );
+    let runtime = if needs_artifacts && Runtime::artifacts_available(&cfg.artifacts_dir) {
+        Some(Runtime::new(&cfg.artifacts_dir)?)
+    } else {
+        if needs_artifacts {
+            eprintln!(
+                "warning: artifacts not found in {:?}; using the mock predictor \
+                 (run `make artifacts`)",
+                cfg.artifacts_dir
+            );
+        }
+        None
+    };
+    eprintln!("{}", cfg.render());
+    let mut src = id.source(cfg.seed);
+    let stats = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    println!("{}", stats.summary());
+    if !stats.debug.is_empty() {
+        println!("  {}", stats.debug);
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let name = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let mut opts = FigOpts::default();
+    opts.accesses = args.get_usize("accesses", opts.accesses)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    opts.out_dir = args.get_or("out", &opts.out_dir).to_string();
+    if args.flag("no-artifacts") {
+        opts.artifacts = None;
+    } else if let Some(dir) = args.get("artifacts") {
+        opts.artifacts = Some(dir.to_string());
+    }
+    figures::run_one(name, &opts)
+}
+
+fn cmd_enumerate(args: &Args) -> anyhow::Result<()> {
+    let levels = args.get_usize("levels", 2)?;
+    let fanout = args.get_usize("fanout", 2)?;
+    let ssds = args.get_usize("ssds", 4)?;
+    let topo = Topology::tree(levels, fanout, ssds);
+    let e = Enumeration::discover(&topo);
+    let cfg = SimConfig::default();
+    let fabric = Fabric::new(topo.clone(), &cfg.cxl);
+    println!("CXL fabric: {levels} switch tiers, fanout {fanout}, {ssds} CXL-SSDs\n");
+    println!(
+        "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12} {:>12}",
+        "node", "kind", "bus", "sec", "depth", "dslbis_ns", "e2e_ns"
+    );
+    for node in &topo.nodes {
+        let info = e.info[&node.id];
+        let kind = match node.kind {
+            NodeKind::RootComplex => "root",
+            NodeKind::Switch => "switch",
+            NodeKind::CxlSsd => "cxl-ssd",
+        };
+        if node.kind == NodeKind::CxlSsd {
+            let ssd = CxlSsd::new(&cfg.ssd);
+            let mut cs = ConfigSpace::endpoint(node.id as u16);
+            let t = setup_device(&fabric, &e, &ssd, node.id, &mut cs);
+            println!(
+                "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12.1} {:>12.1}",
+                node.id,
+                kind,
+                info.bus,
+                info.secondary,
+                t.switch_depth,
+                t.device_ps as f64 / 1000.0,
+                t.e2e_ps as f64 / 1000.0,
+            );
+        } else {
+            println!(
+                "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12} {:>12}",
+                node.id, kind, info.bus, info.secondary, info.switch_depth, "-", "-"
+            );
+        }
+    }
+    anyhow::ensure!(e.verify(&topo), "enumeration self-check failed");
+    println!("\nenumeration self-check: OK (bus-walk depths match topology)");
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    println!("{}", cfg.render());
+    Ok(())
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "figures" => cmd_figures(&args),
+        "enumerate" => cmd_enumerate(&args),
+        "config" => cmd_config(&args),
+        "help" | "--help" | "-h" => {
+            print!(
+                "{}",
+                render_help("expand", "CXL topology-aware expander-driven prefetching", COMMANDS)
+            );
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command {other:?}; try `expand help`")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,289 @@
+//! Set-associative cache model with LRU replacement and prefetch tagging.
+//!
+//! Operates on *line addresses* (byte address >> 6). Each line remembers
+//! whether it was filled by a prefetch and not yet touched by demand —
+//! that first demand touch is what defines prefetch *accuracy* (useful
+//! prefetch) and *coverage* (fraction of demand requests served by
+//! prefetched data), the two effectiveness parameters of the paper's
+//! "Prefetching Impact" analysis.
+
+/// Result of a demand access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessOutcome {
+    /// Demand hit; `first_touch_of_prefetch` marks a useful prefetch.
+    Hit { first_touch_of_prefetch: bool },
+    Miss,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    tag: u64,
+    last_use: u64,
+    valid: bool,
+    /// Filled by prefetch and not yet demanded.
+    prefetch_pending: bool,
+}
+
+/// Cache statistics (demand + prefetch bookkeeping).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub demand_hits: u64,
+    pub demand_misses: u64,
+    pub prefetch_fills: u64,
+    /// Prefetched lines touched by demand before eviction (useful).
+    pub prefetch_useful: u64,
+    /// Prefetched lines evicted untouched (pollution / wasted).
+    pub prefetch_wasted: u64,
+    /// Demand-filled lines evicted by a prefetch fill.
+    pub prefetch_evictions_of_demand: u64,
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.demand_hits + self.demand_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.demand_hits as f64 / total as f64
+        }
+    }
+
+    /// Prefetch accuracy: useful / issued-and-filled.
+    pub fn prefetch_accuracy(&self) -> f64 {
+        let done = self.prefetch_useful + self.prefetch_wasted;
+        if done == 0 {
+            0.0
+        } else {
+            self.prefetch_useful as f64 / done as f64
+        }
+    }
+}
+
+/// A set-associative, LRU, write-allocate cache over line addresses.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    lines: Vec<Line>, // sets * ways, row-major per set
+    stamp: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    /// Build from byte capacity/associativity/line size.
+    pub fn new(size_bytes: usize, ways: usize, line_bytes: usize) -> Self {
+        let total_lines = (size_bytes / line_bytes).max(1);
+        let ways = ways.min(total_lines).max(1);
+        let sets = (total_lines / ways).max(1);
+        Cache {
+            sets,
+            ways,
+            lines: vec![Line::default(); sets * ways],
+            stamp: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn capacity_lines(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        // Mix the index bits so strided patterns spread across sets even
+        // for power-of-two strides.
+        let h = line.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 17;
+        (h % self.sets as u64) as usize
+    }
+
+    #[inline]
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.ways..(set + 1) * self.ways
+    }
+
+    /// Look up without updating state (used by invariants/tests).
+    pub fn probe(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        self.lines[self.slot_range(set)]
+            .iter()
+            .any(|l| l.valid && l.tag == line)
+    }
+
+    /// Demand access: updates LRU + prefetch bookkeeping. Does NOT fill on
+    /// miss — the caller decides (fill path depends on memory backing).
+    pub fn access(&mut self, line: u64) -> AccessOutcome {
+        self.stamp += 1;
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        for l in &mut self.lines[range] {
+            if l.valid && l.tag == line {
+                l.last_use = self.stamp;
+                let first = l.prefetch_pending;
+                if first {
+                    l.prefetch_pending = false;
+                    self.stats.prefetch_useful += 1;
+                }
+                self.stats.demand_hits += 1;
+                return AccessOutcome::Hit { first_touch_of_prefetch: first };
+            }
+        }
+        self.stats.demand_misses += 1;
+        AccessOutcome::Miss
+    }
+
+    /// Fill a line (demand fill or prefetch fill). Returns the evicted
+    /// line address, if any.
+    pub fn fill(&mut self, line: u64, is_prefetch: bool) -> Option<u64> {
+        self.stamp += 1;
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        // Already present (e.g. racing prefetch + demand): refresh.
+        let stamp = self.stamp;
+        for l in &mut self.lines[range.clone()] {
+            if l.valid && l.tag == line {
+                l.last_use = stamp;
+                return None;
+            }
+        }
+        // Choose victim: invalid first, else LRU.
+        let mut victim = range.start;
+        let mut best = u64::MAX;
+        for i in range {
+            let l = &self.lines[i];
+            if !l.valid {
+                victim = i;
+                break;
+            }
+            if l.last_use < best {
+                best = l.last_use;
+                victim = i;
+            }
+        }
+        let v = self.lines[victim];
+        let evicted = if v.valid {
+            if v.prefetch_pending {
+                self.stats.prefetch_wasted += 1;
+            } else if is_prefetch {
+                self.stats.prefetch_evictions_of_demand += 1;
+            }
+            Some(v.tag)
+        } else {
+            None
+        };
+        if is_prefetch {
+            self.stats.prefetch_fills += 1;
+        }
+        self.lines[victim] = Line {
+            tag: line,
+            last_use: self.stamp,
+            valid: true,
+            prefetch_pending: is_prefetch,
+        };
+        evicted
+    }
+
+    /// Back-invalidation (CXL.mem BISnp): drop the line if present.
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        for l in &mut self.lines[range] {
+            if l.valid && l.tag == line {
+                l.valid = false;
+                if l.prefetch_pending {
+                    self.stats.prefetch_wasted += 1;
+                }
+                self.stats.invalidations += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Number of currently-valid lines (for occupancy checks).
+    pub fn occupancy(&self) -> usize {
+        self.lines.iter().filter(|l| l.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let c = Cache::new(64 * 1024, 4, 64);
+        assert_eq!(c.capacity_lines(), 1024);
+        assert_eq!(c.sets(), 256);
+        assert_eq!(c.ways(), 4);
+    }
+
+    #[test]
+    fn hit_after_fill_miss_before() {
+        let mut c = Cache::new(4096, 2, 64);
+        assert_eq!(c.access(7), AccessOutcome::Miss);
+        c.fill(7, false);
+        assert!(matches!(c.access(7), AccessOutcome::Hit { first_touch_of_prefetch: false }));
+        assert_eq!(c.stats.demand_hits, 1);
+        assert_eq!(c.stats.demand_misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = Cache::new(2 * 64, 2, 64); // 1 set, 2 ways
+        assert_eq!(c.sets(), 1);
+        c.fill(1, false);
+        c.fill(2, false);
+        c.access(1); // 2 is now LRU
+        let evicted = c.fill(3, false);
+        assert_eq!(evicted, Some(2));
+        assert!(c.probe(1));
+        assert!(c.probe(3));
+        assert!(!c.probe(2));
+    }
+
+    #[test]
+    fn prefetch_accounting() {
+        let mut c = Cache::new(2 * 64, 2, 64);
+        c.fill(10, true); // prefetch fill
+        assert!(matches!(c.access(10), AccessOutcome::Hit { first_touch_of_prefetch: true }));
+        // Second touch is a plain hit.
+        assert!(matches!(c.access(10), AccessOutcome::Hit { first_touch_of_prefetch: false }));
+        assert_eq!(c.stats.prefetch_useful, 1);
+
+        // Wasted prefetch: filled then evicted untouched.
+        c.fill(11, true);
+        c.access(10);
+        c.access(10); // keep 10 hot
+        c.fill(12, false); // evicts 11 (LRU, untouched prefetch)
+        assert_eq!(c.stats.prefetch_wasted, 1);
+        assert!((c.stats.prefetch_accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = Cache::new(4096, 2, 64);
+        c.fill(5, false);
+        assert!(c.invalidate(5));
+        assert!(!c.probe(5));
+        assert!(!c.invalidate(5));
+        assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn occupancy_saturates_at_capacity() {
+        let mut c = Cache::new(8 * 64, 2, 64);
+        for i in 0..100 {
+            c.fill(i, false);
+        }
+        assert_eq!(c.occupancy(), 8);
+    }
+}

@@ -1,0 +1,185 @@
+//! Three-level cache hierarchy: private L1D/L2 per core, shared inclusive
+//! LLC. The LLC is the prefetch target (the paper offloads *LLC*
+//! prefetching to the expander) and the back-invalidation target for
+//! CXL.mem BISnp.
+
+use crate::config::HierarchyConfig;
+use crate::mem::cache::{AccessOutcome, Cache};
+use crate::sim::time::Ps;
+
+/// Where a demand access was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HitLevel {
+    L1,
+    L2,
+    Llc,
+    /// LLC miss — the runner resolves memory (DRAM or CXL-SSD) latency.
+    Memory,
+}
+
+/// Result of a hierarchy lookup.
+#[derive(Debug, Clone, Copy)]
+pub struct LookupResult {
+    pub level: HitLevel,
+    /// Lookup latency up to (and including) the level that hit; for
+    /// `Memory` this is the full traversal cost of all three misses.
+    pub latency: Ps,
+    /// The LLC hit consumed a prefetched line for the first time.
+    pub llc_prefetch_first_touch: bool,
+}
+
+/// The cache hierarchy for `cores` cores.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    l1d: Vec<Cache>,
+    l2: Vec<Cache>,
+    pub llc: Cache,
+    lat_l1: Ps,
+    lat_l2: Ps,
+    lat_llc: Ps,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &HierarchyConfig, cores: usize, cycle_ps: Ps) -> Self {
+        let mk = |c: &crate::config::CacheConfig| Cache::new(c.size_bytes, c.ways, c.line_bytes);
+        Hierarchy {
+            l1d: (0..cores).map(|_| mk(&cfg.l1d)).collect(),
+            l2: (0..cores).map(|_| mk(&cfg.l2)).collect(),
+            llc: mk(&cfg.llc),
+            lat_l1: cfg.l1d.latency_cycles * cycle_ps,
+            lat_l2: cfg.l2.latency_cycles * cycle_ps,
+            lat_llc: cfg.llc.latency_cycles * cycle_ps,
+        }
+    }
+
+    /// Demand access from `core`. Fills upper levels on LLC (or lower)
+    /// hit; on `Memory` the caller must call [`Hierarchy::fill_demand`]
+    /// once the memory fill completes.
+    pub fn access(&mut self, core: usize, line: u64) -> LookupResult {
+        if self.l1d[core].access(line) != AccessOutcome::Miss {
+            return LookupResult {
+                level: HitLevel::L1,
+                latency: self.lat_l1,
+                llc_prefetch_first_touch: false,
+            };
+        }
+        if self.l2[core].access(line) != AccessOutcome::Miss {
+            self.l1d[core].fill(line, false);
+            return LookupResult {
+                level: HitLevel::L2,
+                latency: self.lat_l1 + self.lat_l2,
+                llc_prefetch_first_touch: false,
+            };
+        }
+        match self.llc.access(line) {
+            AccessOutcome::Hit { first_touch_of_prefetch } => {
+                self.l2[core].fill(line, false);
+                self.l1d[core].fill(line, false);
+                LookupResult {
+                    level: HitLevel::Llc,
+                    latency: self.lat_l1 + self.lat_l2 + self.lat_llc,
+                    llc_prefetch_first_touch: first_touch_of_prefetch,
+                }
+            }
+            AccessOutcome::Miss => LookupResult {
+                level: HitLevel::Memory,
+                latency: self.lat_l1 + self.lat_l2 + self.lat_llc,
+                llc_prefetch_first_touch: false,
+            },
+        }
+    }
+
+    /// Fill after a memory read (demand miss path).
+    pub fn fill_demand(&mut self, core: usize, line: u64) {
+        self.llc.fill(line, false);
+        self.l2[core].fill(line, false);
+        self.l1d[core].fill(line, false);
+    }
+
+    /// Prefetch fill into the LLC only (the paper's prefetch target).
+    pub fn fill_prefetch(&mut self, line: u64) {
+        self.llc.fill(line, true);
+    }
+
+    /// Back-invalidation (BISnp): drop from every level (inclusive model).
+    pub fn back_invalidate(&mut self, line: u64) -> bool {
+        let mut any = self.llc.invalidate(line);
+        for c in &mut self.l1d {
+            any |= c.invalidate(line);
+        }
+        for c in &mut self.l2 {
+            any |= c.invalidate(line);
+        }
+        any
+    }
+
+    /// Probe the LLC without side effects.
+    pub fn llc_contains(&self, line: u64) -> bool {
+        self.llc.probe(line)
+    }
+
+    pub fn lat_llc(&self) -> Ps {
+        self.lat_llc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Hierarchy {
+        let mut cfg = HierarchyConfig::default();
+        cfg.l1d.size_bytes = 1024;
+        cfg.l2.size_bytes = 4096;
+        cfg.llc.size_bytes = 16 << 10;
+        Hierarchy::new(&cfg, 2, 278)
+    }
+
+    #[test]
+    fn miss_then_hit_ladder() {
+        let mut h = small();
+        let r = h.access(0, 42);
+        assert_eq!(r.level, HitLevel::Memory);
+        h.fill_demand(0, 42);
+        assert_eq!(h.access(0, 42).level, HitLevel::L1);
+    }
+
+    #[test]
+    fn cross_core_llc_sharing() {
+        let mut h = small();
+        assert_eq!(h.access(0, 7).level, HitLevel::Memory);
+        h.fill_demand(0, 7);
+        // Other core misses privates but hits shared LLC.
+        assert_eq!(h.access(1, 7).level, HitLevel::Llc);
+    }
+
+    #[test]
+    fn prefetch_fill_hits_in_llc_and_counts_first_touch() {
+        let mut h = small();
+        h.fill_prefetch(99);
+        let r = h.access(0, 99);
+        assert_eq!(r.level, HitLevel::Llc);
+        assert!(r.llc_prefetch_first_touch);
+        assert_eq!(h.llc.stats.prefetch_useful, 1);
+    }
+
+    #[test]
+    fn back_invalidate_removes_everywhere() {
+        let mut h = small();
+        h.access(0, 5);
+        h.fill_demand(0, 5);
+        assert!(h.back_invalidate(5));
+        assert_eq!(h.access(0, 5).level, HitLevel::Memory);
+    }
+
+    #[test]
+    fn latencies_are_ordered() {
+        let mut h = small();
+        h.access(0, 1);
+        h.fill_demand(0, 1);
+        let l1 = h.access(0, 1).latency;
+        h.access(1, 1); // LLC path for core 1 (first time): fills privates
+        let l2m = h.access(1, 2).latency; // memory
+        assert!(l1 < l2m);
+    }
+}

@@ -1,0 +1,10 @@
+//! Memory substrate: set-associative caches, the three-level hierarchy,
+//! and the host-local DRAM timing model.
+
+pub mod cache;
+pub mod dram;
+pub mod hierarchy;
+
+pub use cache::{AccessOutcome, Cache, CacheStats};
+pub use dram::DramModel;
+pub use hierarchy::{Hierarchy, HitLevel, LookupResult};

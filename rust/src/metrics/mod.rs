@@ -1,0 +1,226 @@
+//! Run statistics + report formatting shared by the CLI, figure
+//! harnesses and benches.
+
+use crate::sim::time::{fmt_ps, Ps};
+
+/// Everything a single simulation run reports.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub workload: String,
+    pub prefetcher: String,
+    pub accesses: u64,
+    pub instructions: u64,
+    /// Total simulated execution time.
+    pub exec_ps: Ps,
+    /// Time the core spent stalled on memory.
+    pub stall_ps: Ps,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub llc_hits: u64,
+    /// Demand misses that went to memory (after reflector check).
+    pub llc_misses: u64,
+    /// LLC misses served by the ExPAND reflector buffer.
+    pub reflector_hits: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
+    pub prefetch_wasted: u64,
+    pub inferences: u64,
+    /// Wall-clock the ML predictor spent (host-side perf accounting).
+    pub inference_wall_ps: Ps,
+    /// Mean end-to-end latency per demand access.
+    pub avg_access_ps: f64,
+    /// SSD internal DRAM cache hit ratio.
+    pub ssd_internal_hit: f64,
+    /// Sampled (access index, inter-LLC-access gap) series (Fig 4d).
+    pub llc_gap_series: Vec<(u64, Ps)>,
+    /// Windowed LLC hit-rate series (Fig 4e).
+    pub hit_rate_series: Vec<(u64, f64)>,
+    /// Prefetcher-internal diagnostics line.
+    pub debug: String,
+}
+
+impl RunStats {
+    /// Misses per kilo-instruction (paper's MPKI).
+    pub fn mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            return 0.0;
+        }
+        (self.llc_misses + self.reflector_hits) as f64 / (self.instructions as f64 / 1000.0)
+    }
+
+    /// LLC hit ratio over LLC-level accesses; reflector hits count as
+    /// hits (data served host-side without touching the SSD pool).
+    pub fn llc_hit_ratio(&self) -> f64 {
+        let hits = self.llc_hits + self.reflector_hits;
+        let total = hits + self.llc_misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Prefetch accuracy (useful / completed).
+    pub fn prefetch_accuracy(&self) -> f64 {
+        let done = self.prefetch_useful + self.prefetch_wasted;
+        if done == 0 {
+            0.0
+        } else {
+            self.prefetch_useful as f64 / done as f64
+        }
+    }
+
+    /// Prefetch coverage (useful / (useful + uncovered misses)).
+    pub fn prefetch_coverage(&self) -> f64 {
+        let denom = self.prefetch_useful + self.llc_misses;
+        if denom == 0 {
+            0.0
+        } else {
+            self.prefetch_useful as f64 / denom as f64
+        }
+    }
+
+    /// Speedup of this run relative to a baseline run (exec-time ratio).
+    pub fn speedup_over(&self, baseline: &RunStats) -> f64 {
+        if self.exec_ps == 0 {
+            return 0.0;
+        }
+        baseline.exec_ps as f64 / self.exec_ps as f64
+    }
+
+    /// One-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} {:<10} exec={:<12} ipc-inv={:.2} LLC-hit={:>5.1}% refl={:<6} \
+             MPKI={:>6.2} pf(acc={:.0}%, cov={:.0}%, issued={})",
+            self.workload,
+            self.prefetcher,
+            fmt_ps(self.exec_ps),
+            self.exec_ps as f64 / self.instructions.max(1) as f64 / 278.0,
+            self.llc_hit_ratio() * 100.0,
+            self.reflector_hits,
+            self.mpki(),
+            self.prefetch_accuracy() * 100.0,
+            self.prefetch_coverage() * 100.0,
+            self.prefetch_issued,
+        )
+    }
+}
+
+/// A labelled table (figure harness output format).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&format!("{:<18}", ""));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>14}"));
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:<18}"));
+            for v in vals {
+                if v.abs() >= 1000.0 {
+                    out.push_str(&format!("{v:>14.0}"));
+                } else {
+                    out.push_str(&format!("{v:>14.3}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (figure data files).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label");
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(label);
+            for v in vals {
+                out.push_str(&format!(",{v}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `dir/<name>.csv`.
+    pub fn write_csv(&self, dir: &str, name: &str) -> anyhow::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{name}.csv");
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let s = RunStats {
+            instructions: 10_000,
+            llc_hits: 80,
+            llc_misses: 20,
+            reflector_hits: 10,
+            prefetch_useful: 30,
+            prefetch_wasted: 10,
+            ..Default::default()
+        };
+        assert!((s.mpki() - 3.0).abs() < 1e-12); // (20+10)/10
+        assert!((s.llc_hit_ratio() - 90.0 / 110.0).abs() < 1e-12);
+        assert!((s.prefetch_accuracy() - 0.75).abs() < 1e-12);
+        assert!((s.prefetch_coverage() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup() {
+        let slow = RunStats { exec_ps: 2_000, ..Default::default() };
+        let fast = RunStats { exec_ps: 1_000, ..Default::default() };
+        assert!((fast.speedup_over(&slow) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("Fig X", &["a", "b"]);
+        t.row("row1", vec![1.0, 2.5]);
+        let txt = t.render();
+        assert!(txt.contains("Fig X") && txt.contains("row1"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,a,b\n"));
+        assert!(csv.contains("row1,1,2.5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a"]);
+        t.row("r", vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,216 @@
+//! ML1/ML2: host-side ML prefetcher baselines (LSTM class [39] and
+//! transformer class [32]) driving the same AOT-compiled predictors the
+//! decider uses — but *host-resident*: no expander offload, no reflector,
+//! no topology-aware timeliness. Prefetches are issued immediately on
+//! prediction with the host's ordinary fetch path, which is exactly the
+//! paper's framing of why on-CPU ML prefetching underperforms ExPAND in
+//! deep topologies.
+
+use super::{PrefetchEnv, PrefetchFill, PrefetchIssueStats, Prefetcher};
+use crate::expand::tokenize::{detokenize_delta, hash_pc, tokenize_delta};
+use crate::runtime::{AddressPredictor, WindowInput};
+use crate::sim::time::Ps;
+use crate::workloads::Access;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Expander-side prefetch runahead: the model predicts the next-K delta
+/// *pattern*; the decider extends it cyclically to this depth to buy
+/// lead time. The CXL-SSD controller can afford deep runahead — that is
+/// the paper's asymmetry argument for offloading.
+pub const RUNAHEAD: usize = 48;
+
+/// Host-side (on-CPU) runahead for the ML baselines: bounded by on-chip
+/// prefetch-queue capacity (the paper's motivation for why CPU-resident
+/// ML prefetching cannot keep up with µs-class fetch latencies).
+pub const HOST_RUNAHEAD: usize = 16;
+
+/// Extend a predicted delta pattern cyclically into absolute target
+/// lines. Stops on non-positive cumulative addresses.
+pub fn extend_targets(base: u64, deltas: &[i64], depth: usize) -> Vec<u64> {
+    if deltas.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(depth);
+    let mut cur = base as i64;
+    for k in 0..depth {
+        cur += deltas[k % deltas.len()];
+        if cur <= 0 {
+            break;
+        }
+        out.push(cur as u64);
+    }
+    out
+}
+
+/// Host-side ML prefetcher wrapping an [`AddressPredictor`].
+pub struct MlPrefetcher {
+    predictor: Rc<RefCell<dyn AddressPredictor>>,
+    label: String,
+    window: usize,
+    stride: usize,
+    deltas: Vec<i32>,
+    pcs: Vec<i32>,
+    last_line: Option<u64>,
+    since_predict: usize,
+    stats: PrefetchIssueStats,
+}
+
+impl MlPrefetcher {
+    pub fn new(
+        predictor: Rc<RefCell<dyn AddressPredictor>>,
+        label: &str,
+        stride: usize,
+    ) -> Self {
+        let window = predictor.borrow().shape().window;
+        MlPrefetcher {
+            predictor,
+            label: label.to_string(),
+            window,
+            stride: stride.max(1),
+            deltas: Vec::new(),
+            pcs: Vec::new(),
+            last_line: None,
+            since_predict: 0,
+            stats: PrefetchIssueStats::default(),
+        }
+    }
+
+    fn push_observation(&mut self, a: &Access) {
+        let delta = match self.last_line {
+            Some(prev) => a.line as i64 - prev as i64,
+            None => 0,
+        };
+        self.last_line = Some(a.line);
+        self.deltas.push(i32::from(tokenize_delta(delta)));
+        self.pcs.push(i32::from(hash_pc(a.pc)));
+        if self.deltas.len() > self.window {
+            self.deltas.remove(0);
+            self.pcs.remove(0);
+        }
+    }
+}
+
+impl Prefetcher for MlPrefetcher {
+    fn on_llc_access(
+        &mut self,
+        a: &Access,
+        hit: bool,
+        now: Ps,
+        _lookahead: &[Access],
+        env: &mut PrefetchEnv,
+    ) -> Vec<PrefetchFill> {
+        // Host-side predictors only see the miss stream (no CXL.io hit
+        // feedback channel — that is an ExPAND mechanism).
+        if hit {
+            return Vec::new();
+        }
+        self.push_observation(a);
+        self.since_predict += 1;
+        if self.deltas.len() < self.window || self.since_predict < self.stride {
+            return Vec::new();
+        }
+        self.since_predict = 0;
+        let win = WindowInput {
+            deltas: self.deltas.clone(),
+            pcs: self.pcs.clone(),
+            hint: 0.0, // baselines have no behavior-change classifier
+        };
+        let preds = match self.predictor.borrow_mut().predict(&[win]) {
+            Ok(p) => p,
+            Err(_) => return Vec::new(),
+        };
+        self.stats.inferences += 1;
+        // Decode the predicted delta pattern (stop at OOV/zero), then
+        // extend it cyclically for runahead depth.
+        let mut pattern = Vec::new();
+        for &tok in &preds[0].tokens {
+            match detokenize_delta(tok) {
+                Some(d) if d != 0 => pattern.push(d),
+                _ => break,
+            }
+        }
+        let mut fills = Vec::new();
+        for line in extend_targets(a.line, &pattern, HOST_RUNAHEAD) {
+            let Some(lat) = env.host_fetch_latency(line, now) else { continue };
+            self.stats.issued += 1;
+            fills.push(PrefetchFill { line, arrives_at: now + lat, to_reflector: false });
+        }
+        fills
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn storage_bytes(&self) -> u64 {
+        self.predictor.borrow().storage_bytes() + (self.window * 8) as u64
+    }
+
+    fn issue_stats(&self) -> PrefetchIssueStats {
+        self.stats
+    }
+
+    fn inference_ps(&self) -> Ps {
+        self.predictor.borrow().inference_ps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backing;
+    use crate::prefetch::tests::test_env_parts;
+    use crate::runtime::MockPredictor;
+
+    fn access(line: u64) -> Access {
+        Access { pc: 0x30, line, write: false, inst_gap: 5, dependent: false }
+    }
+
+    #[test]
+    fn predicts_after_window_fills_and_issues_stride_chain() {
+        let (mut f, mut s, mut d, node) = test_env_parts();
+        let mut env = PrefetchEnv {
+            fabric: &mut f,
+            ssd: &mut s,
+            ssd_node: node,
+            dram: &mut d,
+            backing: Backing::LocalDram,
+        };
+        let pred = Rc::new(RefCell::new(MockPredictor::new(MockPredictor::default_shape())));
+        let mut ml = MlPrefetcher::new(pred, "ML-test", 4);
+        let mut got = Vec::new();
+        for i in 0..64u64 {
+            let fills = ml.on_llc_access(&access(i * 3), false, i * 1000, &[], &mut env);
+            got.extend(fills);
+        }
+        assert!(!got.is_empty());
+        // Mock continues stride 3: chains 3,6,9,12 past the trigger line.
+        let a = got
+            .iter()
+            .filter(|f| {
+                let rel = f.line as i64 - 63 * 3;
+                rel > 0 && rel % 3 == 0
+            })
+            .count();
+        assert!(a > 0, "stride-3 chain prefetches present");
+        assert!(ml.issue_stats().inferences > 0);
+    }
+
+    #[test]
+    fn hits_are_ignored() {
+        let (mut f, mut s, mut d, node) = test_env_parts();
+        let mut env = PrefetchEnv {
+            fabric: &mut f,
+            ssd: &mut s,
+            ssd_node: node,
+            dram: &mut d,
+            backing: Backing::LocalDram,
+        };
+        let pred = Rc::new(RefCell::new(MockPredictor::new(MockPredictor::default_shape())));
+        let mut ml = MlPrefetcher::new(pred, "ML-test", 1);
+        for i in 0..100u64 {
+            assert!(ml.on_llc_access(&access(i), true, 0, &[], &mut env).is_empty());
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Prefetcher framework + the paper's comparison set.
+//!
+//! All prefetchers observe the *LLC access stream* (hits and misses — the
+//! stream below the L2, which is what an LLC prefetcher sees) and may
+//! schedule line fills that arrive at absolute future times. The runner
+//! materializes arrivals through its event queue, so timeliness is
+//! physical: a fill that arrives after the demand access does not help.
+
+pub mod ml;
+pub mod rule1_best_offset;
+pub mod rule2_temporal;
+pub mod synthetic;
+
+use crate::config::Backing;
+use crate::cxl::transaction::M2S;
+use crate::cxl::{Fabric, NodeId};
+use crate::mem::DramModel;
+use crate::sim::time::Ps;
+use crate::ssd::CxlSsd;
+use crate::workloads::Access;
+
+/// A scheduled line fill.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchFill {
+    pub line: u64,
+    /// Absolute arrival time at the host.
+    pub arrives_at: Ps,
+    /// Insert into the ExPAND reflector buffer instead of the LLC.
+    pub to_reflector: bool,
+}
+
+/// Memory-side environment a prefetcher uses to move data (costs are
+/// real: fabric queuing + device service + media staging).
+pub struct PrefetchEnv<'a> {
+    pub fabric: &'a mut Fabric,
+    pub ssd: &'a mut CxlSsd,
+    pub ssd_node: NodeId,
+    pub dram: &'a mut DramModel,
+    pub backing: Backing,
+}
+
+impl<'a> PrefetchEnv<'a> {
+    /// Latency for a *host-issued* prefetch read (the baseline
+    /// prefetchers' only mechanism): a normal CXL.mem round trip, or a
+    /// local DRAM read under LocalDRAM backing. Returns `None` when the
+    /// device drops the prefetch under channel backpressure (bounded
+    /// prefetch queues — demand reads are never dropped).
+    pub fn host_fetch_latency(&mut self, line: u64, now: Ps) -> Option<Ps> {
+        match self.backing {
+            Backing::LocalDram => Some(self.dram.read(line, now)),
+            Backing::CxlSsd => {
+                let at_dev = self.fabric.path_latency(self.ssd_node, 16);
+                let service = self.ssd.serve_prefetch_read(line, now + at_dev)?;
+                Some(self.fabric.read_roundtrip(self.ssd_node, now, M2S::ReqMemRd, service))
+            }
+        }
+    }
+}
+
+/// Statistics every prefetcher reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchIssueStats {
+    pub issued: u64,
+    /// Prediction-engine invocations (ML predictors).
+    pub inferences: u64,
+}
+
+/// The prefetcher interface.
+pub trait Prefetcher {
+    /// Observe one LLC-level access (`hit` = served by LLC or above-LLC
+    /// reflector). Returns fills to schedule.
+    fn on_llc_access(
+        &mut self,
+        a: &Access,
+        hit: bool,
+        now: Ps,
+        lookahead: &[Access],
+        env: &mut PrefetchEnv,
+    ) -> Vec<PrefetchFill>;
+
+    /// How many future accesses the runner should expose in `lookahead`
+    /// (only the oracle-backed synthetic prefetcher uses this).
+    fn wants_lookahead(&self) -> usize {
+        0
+    }
+
+    /// ExPAND only: check the reflector buffer on an LLC miss. Returns
+    /// the RC-side service latency when the line is present.
+    fn reflector_check(&mut self, _line: u64, _now: Ps) -> Option<Ps> {
+        None
+    }
+
+    /// A scheduled fill arrived (reflector-destined fills only; LLC fills
+    /// are applied by the runner).
+    fn on_reflector_fill(&mut self, _line: u64, _now: Ps) {}
+
+    fn name(&self) -> String;
+
+    /// Metadata/model storage (Table 1d "Memory overhead").
+    fn storage_bytes(&self) -> u64;
+
+    fn issue_stats(&self) -> PrefetchIssueStats;
+
+    /// Wall-clock spent in model inference (perf accounting; ML only).
+    fn inference_ps(&self) -> Ps {
+        0
+    }
+
+    /// Free-form internals line for diagnostics (`expand run` prints it).
+    fn debug_stats(&self) -> String {
+        String::new()
+    }
+}
+
+/// The no-op prefetcher (the paper's NoPrefetch baseline).
+pub struct NoPrefetch;
+
+impl Prefetcher for NoPrefetch {
+    fn on_llc_access(
+        &mut self,
+        _a: &Access,
+        _hit: bool,
+        _now: Ps,
+        _lookahead: &[Access],
+        _env: &mut PrefetchEnv,
+    ) -> Vec<PrefetchFill> {
+        Vec::new()
+    }
+
+    fn name(&self) -> String {
+        "NoPrefetch".into()
+    }
+
+    fn storage_bytes(&self) -> u64 {
+        0
+    }
+
+    fn issue_stats(&self) -> PrefetchIssueStats {
+        PrefetchIssueStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CxlConfig, DramConfig, SsdConfig};
+    use crate::cxl::Topology;
+
+    pub(crate) fn test_env_parts() -> (Fabric, CxlSsd, DramModel, NodeId) {
+        let topo = Topology::chain(1);
+        let node = topo.ssds()[0];
+        (
+            Fabric::new(topo, &CxlConfig::default()),
+            CxlSsd::new(&SsdConfig::default()),
+            DramModel::new(&DramConfig::default()),
+            node,
+        )
+    }
+
+    #[test]
+    fn noprefetch_is_silent() {
+        let (mut f, mut s, mut d, node) = test_env_parts();
+        let mut env = PrefetchEnv {
+            fabric: &mut f,
+            ssd: &mut s,
+            ssd_node: node,
+            dram: &mut d,
+            backing: Backing::CxlSsd,
+        };
+        let a = Access { pc: 1, line: 2, write: false, inst_gap: 1, dependent: false };
+        let mut p = NoPrefetch;
+        assert!(p.on_llc_access(&a, false, 0, &[], &mut env).is_empty());
+        assert_eq!(p.storage_bytes(), 0);
+    }
+
+    #[test]
+    fn host_fetch_latency_cxl_exceeds_dram() {
+        let (mut f, mut s, mut d, node) = test_env_parts();
+        let mut env = PrefetchEnv {
+            fabric: &mut f,
+            ssd: &mut s,
+            ssd_node: node,
+            dram: &mut d,
+            backing: Backing::CxlSsd,
+        };
+        let cxl = env.host_fetch_latency(123, 0).unwrap();
+        env.backing = Backing::LocalDram;
+        let dram = env.host_fetch_latency(456, 0).unwrap();
+        assert!(cxl > 10 * dram, "cxl {cxl} vs dram {dram}");
+    }
+}

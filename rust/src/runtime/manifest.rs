@@ -1,0 +1,127 @@
+//! Parse `artifacts/manifest.json` — the build-time contract between the
+//! Python AOT exporter and the Rust runtime (shapes, vocab, file names,
+//! training metrics).
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape contract shared by all exported predictors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShapeConfig {
+    pub window: usize,
+    pub batch: usize,
+    pub n_future: usize,
+    pub delta_vocab: usize,
+    pub pc_vocab: usize,
+}
+
+/// Per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    pub param_bytes: u64,
+    /// Held-out top-1 accuracy measured at training time (Table 1d).
+    pub eval_acc_top1: f64,
+    pub eval_acc_allk: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub shape: ShapeConfig,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub dir: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    pub fn parse_str(text: &str, dir: &str) -> anyhow::Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let need = |k: &str| -> anyhow::Result<u64> {
+            cfg.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing {k}"))
+        };
+        let shape = ShapeConfig {
+            window: need("window")? as usize,
+            batch: need("batch")? as usize,
+            n_future: need("n_future")? as usize,
+            delta_vocab: need("delta_vocab")? as usize,
+            pc_vocab: need("pc_vocab")? as usize,
+        };
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").and_then(Json::as_obj) {
+            for (name, m) in obj {
+                let get_f = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        name: name.clone(),
+                        file: m
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .unwrap_or(&format!("{name}.hlo.txt"))
+                            .to_string(),
+                        param_bytes: m.get("param_bytes").and_then(Json::as_u64).unwrap_or(0),
+                        eval_acc_top1: get_f("eval_acc_top1"),
+                        eval_acc_allk: get_f("eval_acc_allk"),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { shape, models, dir: dir.to_string() })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> anyhow::Result<std::path::PathBuf> {
+        Ok(Path::new(&self.dir).join(&self.model(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"window": 32, "d_model": 128, "batch": 4, "n_future": 4,
+                 "delta_vocab": 128, "pc_vocab": 256},
+      "format": "hlo-text",
+      "models": {
+        "expand": {"file": "expand.hlo.txt", "param_bytes": 1287168,
+                   "eval_acc_top1": 0.84, "eval_acc_allk": 0.86}
+      }
+    }"#;
+
+    #[test]
+    fn parses_shape_and_models() {
+        let m = Manifest::parse_str(SAMPLE, "artifacts").unwrap();
+        assert_eq!(m.shape.window, 32);
+        assert_eq!(m.shape.batch, 4);
+        assert_eq!(m.shape.n_future, 4);
+        assert_eq!(m.shape.delta_vocab, 128);
+        let e = m.model("expand").unwrap();
+        assert_eq!(e.param_bytes, 1_287_168);
+        assert!((e.eval_acc_top1 - 0.84).abs() < 1e-9);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_config_is_error() {
+        assert!(Manifest::parse_str(r#"{"models": {}}"#, ".").is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and serves predictions to the decider.
+//! Python never runs on this path — the artifacts are self-contained
+//! HLO with trained weights as constants.
+
+pub mod manifest;
+pub mod predictor;
+
+pub use manifest::{Manifest, ShapeConfig};
+pub use predictor::{AddressPredictor, HloPredictor, MockPredictor, Prediction, WindowInput};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Process-wide runtime: one PJRT CPU client, lazily-compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: String,
+    cache: RefCell<std::collections::BTreeMap<String, Rc<RefCell<HloPredictor>>>>,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client against `artifacts_dir`.
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Rc<Self>> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Rc::new(Runtime {
+            client,
+            dir: artifacts_dir.to_string(),
+            cache: RefCell::new(Default::default()),
+        }))
+    }
+
+    /// Manifest for the artifacts directory.
+    pub fn manifest(&self) -> anyhow::Result<Manifest> {
+        Manifest::load(&self.dir)
+    }
+
+    /// Compile (or fetch cached) the named model.
+    pub fn predictor(&self, model: &str) -> anyhow::Result<Rc<RefCell<HloPredictor>>> {
+        if let Some(p) = self.cache.borrow().get(model) {
+            return Ok(p.clone());
+        }
+        let p = Rc::new(RefCell::new(HloPredictor::load(&self.client, &self.dir, model)?));
+        self.cache.borrow_mut().insert(model.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// True if artifacts exist on disk (CLI degrades gracefully to the
+    /// mock predictor otherwise, with a warning).
+    pub fn artifacts_available(dir: &str) -> bool {
+        std::path::Path::new(dir).join("manifest.json").exists()
+    }
+}

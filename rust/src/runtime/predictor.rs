@@ -1,0 +1,250 @@
+//! Typed predictor interface over AOT-compiled HLO artifacts.
+//!
+//! [`HloPredictor`] loads an `artifacts/<name>.hlo.txt` module (trained
+//! weights baked in as constants), compiles it once on the PJRT CPU
+//! client, and serves `(delta tokens, pc tokens, hint) -> next-K delta
+//! tokens` predictions from the decider's hot path. Batches are padded to
+//! the fixed export batch size.
+//!
+//! [`MockPredictor`] is a deterministic stand-in (stride continuation)
+//! used by unit tests so the simulator's logic is testable without
+//! artifacts; integration tests cover the real path.
+
+use super::manifest::ShapeConfig;
+use crate::sim::time::Ps;
+
+/// One prediction request: the decider's sliding window.
+#[derive(Debug, Clone)]
+pub struct WindowInput {
+    /// Delta tokens, oldest first (length = shape.window).
+    pub deltas: Vec<i32>,
+    /// Hashed PC tokens, oldest first.
+    pub pcs: Vec<i32>,
+    /// Behavior-change hint in [0, 1] from the decision-tree classifier.
+    pub hint: f32,
+}
+
+/// Predicted future delta tokens (length = shape.n_future), plus the
+/// model's confidence margin for each (max-logit minus runner-up).
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub tokens: Vec<u16>,
+    pub margins: Vec<f32>,
+}
+
+/// Address-prediction backend.
+pub trait AddressPredictor {
+    /// Predict future deltas for each window.
+    fn predict(&mut self, windows: &[WindowInput]) -> anyhow::Result<Vec<Prediction>>;
+    /// Shape contract.
+    fn shape(&self) -> ShapeConfig;
+    /// Model storage footprint in bytes (Table 1d "Memory overhead").
+    fn storage_bytes(&self) -> u64;
+    fn name(&self) -> &str;
+    /// Wall-clock spent inside predictions (perf accounting).
+    fn inference_ps(&self) -> Ps {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real PJRT-backed predictor
+// ---------------------------------------------------------------------------
+
+/// PJRT-compiled predictor over an HLO-text artifact.
+pub struct HloPredictor {
+    exe: xla::PjRtLoadedExecutable,
+    shape: ShapeConfig,
+    name: String,
+    storage_bytes: u64,
+    spent: std::cell::Cell<u64>,
+}
+
+impl HloPredictor {
+    /// Load + compile `artifacts_dir/<model>.hlo.txt`.
+    pub fn load(client: &xla::PjRtClient, dir: &str, model: &str) -> anyhow::Result<Self> {
+        let manifest = super::manifest::Manifest::load(dir)?;
+        let entry = manifest.model(model)?.clone();
+        let path = manifest.hlo_path(model)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {model}: {e}"))?;
+        Ok(HloPredictor {
+            exe,
+            shape: manifest.shape,
+            name: model.to_string(),
+            storage_bytes: entry.param_bytes,
+            spent: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Run one padded batch (windows.len() <= shape.batch).
+    fn run_batch(&self, windows: &[WindowInput]) -> anyhow::Result<Vec<Prediction>> {
+        let b = self.shape.batch;
+        let w = self.shape.window;
+        let v = self.shape.delta_vocab;
+        let k = self.shape.n_future;
+        debug_assert!(windows.len() <= b);
+
+        let mut deltas = vec![0i32; b * w];
+        let mut pcs = vec![0i32; b * w];
+        let mut hints = vec![0f32; b];
+        for (i, win) in windows.iter().enumerate() {
+            anyhow::ensure!(
+                win.deltas.len() == w && win.pcs.len() == w,
+                "window length {} != export window {w}",
+                win.deltas.len()
+            );
+            deltas[i * w..(i + 1) * w].copy_from_slice(&win.deltas);
+            pcs[i * w..(i + 1) * w].copy_from_slice(&win.pcs);
+            hints[i] = win.hint;
+        }
+        let d_lit = xla::Literal::vec1(&deltas).reshape(&[b as i64, w as i64])?;
+        let p_lit = xla::Literal::vec1(&pcs).reshape(&[b as i64, w as i64])?;
+        let h_lit = xla::Literal::vec1(&hints);
+
+        let result = self.exe.execute::<xla::Literal>(&[d_lit, p_lit, h_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: a 1-tuple of logits.
+        let logits = result.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == b * k * v,
+            "logits size {} != {b}x{k}x{v}",
+            logits.len()
+        );
+
+        let mut out = Vec::with_capacity(windows.len());
+        for i in 0..windows.len() {
+            let mut tokens = Vec::with_capacity(k);
+            let mut margins = Vec::with_capacity(k);
+            for kk in 0..k {
+                let row = &logits[(i * k + kk) * v..(i * k + kk + 1) * v];
+                let (mut best, mut best_v, mut second_v) = (0usize, f32::NEG_INFINITY, f32::NEG_INFINITY);
+                for (j, &x) in row.iter().enumerate() {
+                    if x > best_v {
+                        second_v = best_v;
+                        best_v = x;
+                        best = j;
+                    } else if x > second_v {
+                        second_v = x;
+                    }
+                }
+                tokens.push(best as u16);
+                margins.push(best_v - second_v);
+            }
+            out.push(Prediction { tokens, margins });
+        }
+        Ok(out)
+    }
+}
+
+impl AddressPredictor for HloPredictor {
+    fn predict(&mut self, windows: &[WindowInput]) -> anyhow::Result<Vec<Prediction>> {
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::with_capacity(windows.len());
+        for chunk in windows.chunks(self.shape.batch) {
+            out.extend(self.run_batch(chunk)?);
+        }
+        self.spent.set(self.spent.get() + t0.elapsed().as_nanos() as u64 * 1000);
+        Ok(out)
+    }
+
+    fn shape(&self) -> ShapeConfig {
+        self.shape
+    }
+
+    fn storage_bytes(&self) -> u64 {
+        self.storage_bytes
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inference_ps(&self) -> Ps {
+        self.spent.get()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock predictor (tests / artifact-free operation)
+// ---------------------------------------------------------------------------
+
+/// Deterministic fallback: continues the most recent stable stride.
+pub struct MockPredictor {
+    shape: ShapeConfig,
+}
+
+impl MockPredictor {
+    pub fn new(shape: ShapeConfig) -> Self {
+        MockPredictor { shape }
+    }
+
+    pub fn default_shape() -> ShapeConfig {
+        ShapeConfig { window: 32, batch: 4, n_future: 4, delta_vocab: 128, pc_vocab: 256 }
+    }
+}
+
+impl AddressPredictor for MockPredictor {
+    fn predict(&mut self, windows: &[WindowInput]) -> anyhow::Result<Vec<Prediction>> {
+        let k = self.shape.n_future;
+        Ok(windows
+            .iter()
+            .map(|w| {
+                // Majority vote over the last few deltas.
+                let tail = &w.deltas[w.deltas.len().saturating_sub(4)..];
+                let mut counts = std::collections::BTreeMap::new();
+                for &d in tail {
+                    *counts.entry(d).or_insert(0u32) += 1;
+                }
+                let tok = counts
+                    .into_iter()
+                    .max_by_key(|&(_, c)| c)
+                    .map(|(d, _)| d)
+                    .unwrap_or(64) as u16;
+                Prediction { tokens: vec![tok; k], margins: vec![1.0; k] }
+            })
+            .collect())
+    }
+
+    fn shape(&self) -> ShapeConfig {
+        self.shape
+    }
+
+    fn storage_bytes(&self) -> u64 {
+        64 // a stride register, basically
+    }
+
+    fn name(&self) -> &str {
+        "mock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(d: i32) -> WindowInput {
+        WindowInput { deltas: vec![d; 32], pcs: vec![1; 32], hint: 0.0 }
+    }
+
+    #[test]
+    fn mock_continues_stride() {
+        let mut m = MockPredictor::new(MockPredictor::default_shape());
+        let out = m.predict(&[window(65), window(70)]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, vec![65, 65, 65, 65]);
+        assert_eq!(out[1].tokens, vec![70, 70, 70, 70]);
+    }
+
+    #[test]
+    fn mock_shape_contract() {
+        let m = MockPredictor::new(MockPredictor::default_shape());
+        assert_eq!(m.shape().window, 32);
+        assert_eq!(m.shape().n_future, 4);
+        assert!(m.storage_bytes() < 1024);
+    }
+}

@@ -1,0 +1,118 @@
+//! Deferred-event machinery for the trace-driven simulation.
+//!
+//! The simulator is trace-driven (the core model advances time as it
+//! replays accesses), but prefetch data movement completes at *absolute*
+//! future times (decider issue time + CXL path latency). Those arrivals
+//! live in an [`EventQueue`] and are drained by the runner whenever core
+//! time passes them — before each demand access — so a prefetched line is
+//! visible in the LLC if and only if it arrived in time. This is exactly
+//! the mechanism that makes prefetch *timeliness* observable.
+
+use crate::sim::time::Ps;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Ev<T> {
+    t: Ps,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Ev<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<T> Eq for Ev<T> {}
+impl<T> PartialOrd for Ev<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Ev<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+/// Min-heap of timed events with FIFO tie-breaking.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Ev<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Ps, payload: T) {
+        self.seq += 1;
+        self.heap.push(Ev { t, seq: self.seq, payload });
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Earliest pending event time.
+    pub fn next_time(&self) -> Option<Ps> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    /// Pop the next event if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: Ps) -> Option<(Ps, T)> {
+        if self.heap.peek().map(|e| e.t <= now).unwrap_or(false) {
+            let e = self.heap.pop().unwrap();
+            Some((e.t, e.payload))
+        } else {
+            None
+        }
+    }
+
+    /// Pop unconditionally (used at end-of-trace drain).
+    pub fn pop(&mut self) -> Option<(Ps, T)> {
+        self.heap.pop().map(|e| (e.t, e.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a1")));
+        assert_eq!(q.pop(), Some((10, "a2")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(100, 1u32);
+        q.push(200, 2u32);
+        assert_eq!(q.pop_due(50), None);
+        assert_eq!(q.pop_due(150), Some((100, 1)));
+        assert_eq!(q.pop_due(150), None);
+        assert_eq!(q.next_time(), Some(200));
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulation engine: time base, deferred events, the interval core
+//! model, and the end-to-end runner.
+
+pub mod core;
+pub mod engine;
+pub mod runner;
+pub mod time;
+
+pub use core::CoreModel;
+pub use engine::EventQueue;
+pub use time::Ps;

@@ -1,0 +1,432 @@
+//! The end-to-end simulation runner: wires cores, hierarchy, CXL fabric,
+//! CXL-SSD, and the selected prefetcher, then replays a trace.
+//!
+//! Per demand access: advance the core, materialize any prefetch fills
+//! whose arrival time has passed (timeliness is physical), look up the
+//! hierarchy, resolve LLC misses through the reflector buffer or memory
+//! (local DRAM or the CXL path with MemRdPC/ReqMemRd), and let the
+//! prefetcher observe the LLC-level stream.
+
+use crate::config::{Backing, PrefetcherKind, SimConfig};
+use crate::cxl::configspace::ConfigSpace;
+use crate::cxl::enumeration::Enumeration;
+use crate::cxl::transaction::M2S;
+use crate::cxl::{Fabric, NodeId, Topology};
+use crate::expand::timeliness::{setup_device, DeadlineModel};
+use crate::expand::ExpandPrefetcher;
+use crate::mem::{DramModel, Hierarchy, HitLevel};
+use crate::metrics::RunStats;
+use crate::prefetch::ml::MlPrefetcher;
+use crate::prefetch::rule1_best_offset::BestOffset;
+use crate::prefetch::rule2_temporal::TemporalIsb;
+use crate::prefetch::synthetic::SyntheticPrefetcher;
+use crate::prefetch::{NoPrefetch, PrefetchEnv, PrefetchFill, Prefetcher};
+use crate::runtime::{MockPredictor, Runtime};
+use crate::sim::core::CoreModel;
+use crate::sim::engine::EventQueue;
+use crate::sim::time::Ps;
+use crate::ssd::CxlSsd;
+use crate::workloads::{Access, TraceSource};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Everything needed to simulate one configuration.
+pub struct Runner {
+    pub cfg: SimConfig,
+    core: CoreModel,
+    hierarchy: Hierarchy,
+    dram: DramModel,
+    fabric: Fabric,
+    ssd: CxlSsd,
+    ssd_node: NodeId,
+    prefetcher: Box<dyn Prefetcher>,
+    events: EventQueue<PrefetchFill>,
+    lookahead: VecDeque<Access>,
+    /// Collect Fig 4d/4e time series.
+    pub collect_series: bool,
+    /// Timeliness info published at enumeration (ExPAND path).
+    pub e2e_info: Option<crate::expand::timeliness::TimelinessInfo>,
+}
+
+impl Runner {
+    /// Build a runner. `runtime` supplies compiled predictors for
+    /// ML1/ML2/ExPAND; pass `None` to fall back to the mock predictor
+    /// (unit tests / artifact-less smoke runs).
+    pub fn new(cfg: &SimConfig, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
+        let topo = Topology::chain(cfg.cxl.switch_levels);
+        let ssd_node = topo.ssds()[0];
+        let enumeration = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &cfg.cxl);
+        let ssd = CxlSsd::new(&cfg.ssd);
+        let hierarchy = Hierarchy::new(&cfg.hierarchy, cfg.cpu.cores, cfg.cpu.cycle_ps());
+        let core = CoreModel::new(&cfg.cpu);
+        let dram = DramModel::new(&cfg.dram);
+
+        // Enumeration-time timeliness setup (reflector writes e2e into
+        // the device's config space).
+        let mut cs = ConfigSpace::endpoint(0xE7);
+        let info = setup_device(&fabric, &enumeration, &ssd, ssd_node, &mut cs);
+
+        let predictor_for = |name: &str| -> anyhow::Result<
+            std::rc::Rc<std::cell::RefCell<dyn crate::runtime::AddressPredictor>>,
+        > {
+            match runtime {
+                Some(rt) => {
+                    let p = rt.predictor(name)?;
+                    Ok(p as _)
+                }
+                None => Ok(std::rc::Rc::new(std::cell::RefCell::new(MockPredictor::new(
+                    MockPredictor::default_shape(),
+                ))) as _),
+            }
+        };
+
+        let prefetcher: Box<dyn Prefetcher> = match &cfg.prefetcher {
+            PrefetcherKind::None => Box::new(NoPrefetch),
+            PrefetcherKind::Rule1 => Box::new(BestOffset::new()),
+            PrefetcherKind::Rule2 => Box::new(TemporalIsb::new()),
+            PrefetcherKind::Ml1 => {
+                Box::new(MlPrefetcher::new(predictor_for("ml1")?, "ML1", cfg.expand.predict_stride))
+            }
+            PrefetcherKind::Ml2 => {
+                Box::new(MlPrefetcher::new(predictor_for("ml2")?, "ML2", cfg.expand.predict_stride))
+            }
+            PrefetcherKind::Expand => {
+                let dm = DeadlineModel::new(
+                    &cs,
+                    crate::sim::time::ns(cfg.expand.margin_ns),
+                    cfg.expand.timeliness_accuracy,
+                    cfg.seed,
+                );
+                Box::new(ExpandPrefetcher::new(predictor_for("expand")?, &cfg.expand, dm))
+            }
+            PrefetcherKind::Synthetic { accuracy, coverage } => Box::new(SyntheticPrefetcher::new(
+                *accuracy,
+                *coverage,
+                cfg.expand.timeliness_accuracy,
+                cfg.seed,
+            )),
+        };
+
+        Ok(Runner {
+            cfg: cfg.clone(),
+            core,
+            hierarchy,
+            dram,
+            fabric,
+            ssd,
+            ssd_node,
+            prefetcher,
+            events: EventQueue::new(),
+            lookahead: VecDeque::new(),
+            collect_series: false,
+            e2e_info: Some(info),
+        })
+    }
+
+    fn apply_due_fills(&mut self) {
+        while let Some((t, fill)) = self.events.pop_due(self.core.now) {
+            if fill.to_reflector {
+                // The reflector sits beside the LLC controller: pushes
+                // for lines the LLC already holds are dropped on arrival
+                // instead of churning the 16 KB buffer.
+                if !self.hierarchy.llc_contains(fill.line) {
+                    self.prefetcher.on_reflector_fill(fill.line, t);
+                }
+            } else {
+                self.hierarchy.fill_prefetch(fill.line);
+            }
+        }
+    }
+
+    /// Replay `n` accesses from `source`; returns the run statistics.
+    pub fn run(&mut self, source: &mut dyn TraceSource, n: usize) -> RunStats {
+        let mut stats = RunStats {
+            workload: source.name(),
+            prefetcher: self.prefetcher.name(),
+            ..Default::default()
+        };
+        let lookahead_depth = self.prefetcher.wants_lookahead();
+        let mut total_access_ps: u128 = 0;
+        let mut last_llc_access: Ps = 0;
+        // Fig 4e windowed hit-rate accounting.
+        let mut win_hits = 0u64;
+        let mut win_total = 0u64;
+        const WIN: u64 = 2048;
+
+        for i in 0..n {
+            // Maintain the oracle lookahead (+1 for the current access).
+            while self.lookahead.len() < lookahead_depth + 1 {
+                self.lookahead.push_back(source.next_access());
+            }
+            let a = self.lookahead.pop_front().unwrap();
+
+            self.core.advance(a.inst_gap as u64);
+            self.apply_due_fills();
+
+            let lk = self.hierarchy.access(0, a.line);
+            let now = self.core.now;
+            let mut fills = Vec::new();
+            let mut access_latency = lk.latency as f64;
+
+            match lk.level {
+                HitLevel::L1 => {
+                    // Pipelined; absorbed into base IPC.
+                    self.core.hit(0, false);
+                    stats.l1_hits += 1;
+                }
+                HitLevel::L2 => {
+                    self.core.hit(lk.latency, a.dependent);
+                    stats.l2_hits += 1;
+                }
+                HitLevel::Llc => {
+                    self.core.hit(lk.latency, a.dependent);
+                    stats.llc_hits += 1;
+                    if lk.llc_prefetch_first_touch {
+                        // useful prefetch tracked by cache stats
+                    }
+                    let la = self.make_lookahead();
+                    let mut env = PrefetchEnv {
+                        fabric: &mut self.fabric,
+                        ssd: &mut self.ssd,
+                        ssd_node: self.ssd_node,
+                        dram: &mut self.dram,
+                        backing: self.cfg.backing,
+                    };
+                    fills = self.prefetcher.on_llc_access(&a, true, now, &la, &mut env);
+                    win_hits += 1;
+                    win_total += 1;
+                }
+                HitLevel::Memory => {
+                    // Reflector first (ExPAND's host-side fast path).
+                    if let Some(rlat) = self.prefetcher.reflector_check(a.line, now) {
+                        let lat = lk.latency + rlat;
+                        self.core.hit(lat, a.dependent);
+                        self.hierarchy.fill_demand(0, a.line);
+                        stats.reflector_hits += 1;
+                        access_latency = lat as f64;
+                        let la = self.make_lookahead();
+                        let mut env = PrefetchEnv {
+                            fabric: &mut self.fabric,
+                            ssd: &mut self.ssd,
+                            ssd_node: self.ssd_node,
+                            dram: &mut self.dram,
+                            backing: self.cfg.backing,
+                        };
+                        fills = self.prefetcher.on_llc_access(&a, true, now, &la, &mut env);
+                        win_hits += 1;
+                        win_total += 1;
+                    } else {
+                        let mem_lat = match self.cfg.backing {
+                            Backing::LocalDram => self.dram.read(a.line, now),
+                            Backing::CxlSsd => {
+                                let op = if matches!(self.cfg.prefetcher, PrefetcherKind::Expand)
+                                {
+                                    M2S::RwDMemRdPC
+                                } else {
+                                    M2S::ReqMemRd
+                                };
+                                let down = self.fabric.path_latency(
+                                    self.ssd_node,
+                                    crate::cxl::transaction::m2s_bytes(op),
+                                );
+                                let service = self.ssd.serve_read(a.line, now + down);
+                                self.fabric.read_roundtrip(self.ssd_node, now, op, service)
+                            }
+                        };
+                        debug_assert!(
+                            mem_lat < 1 << 50,
+                            "absurd mem_lat {mem_lat} at access {i} now {now}"
+                        );
+                        let total = lk.latency + mem_lat;
+                        self.core.miss(total, a.dependent);
+                        self.hierarchy.fill_demand(0, a.line);
+                        stats.llc_misses += 1;
+                        access_latency = total as f64;
+                        let la = self.make_lookahead();
+                        let mut env = PrefetchEnv {
+                            fabric: &mut self.fabric,
+                            ssd: &mut self.ssd,
+                            ssd_node: self.ssd_node,
+                            dram: &mut self.dram,
+                            backing: self.cfg.backing,
+                        };
+                        fills = self.prefetcher.on_llc_access(&a, false, now, &la, &mut env);
+                        win_total += 1;
+                    }
+                }
+            }
+
+            for f in fills {
+                self.events.push(f.arrives_at, f);
+            }
+            total_access_ps += access_latency as u128;
+
+            // Series sampling.
+            if self.collect_series && matches!(lk.level, HitLevel::Llc | HitLevel::Memory) {
+                let gap = self.core.now.saturating_sub(last_llc_access);
+                last_llc_access = self.core.now;
+                if stats.llc_gap_series.len() < 20_000 {
+                    stats.llc_gap_series.push((i as u64, gap));
+                }
+            }
+            if self.collect_series && win_total >= WIN {
+                stats
+                    .hit_rate_series
+                    .push((i as u64, win_hits as f64 / win_total as f64));
+                win_hits = 0;
+                win_total = 0;
+            }
+        }
+
+        stats.accesses = n as u64;
+        stats.instructions = self.core.insts;
+        stats.exec_ps = self.core.now;
+        stats.stall_ps = self.core.stall_ps;
+        stats.avg_access_ps = total_access_ps as f64 / n.max(1) as f64;
+        stats.ssd_internal_hit = self.ssd.internal_hit_ratio();
+        let llc = &self.hierarchy.llc.stats;
+        stats.prefetch_useful = llc.prefetch_useful + self.prefetcher.issue_stats().issued.min(stats.reflector_hits);
+        stats.prefetch_wasted = llc.prefetch_wasted;
+        stats.prefetch_issued = self.prefetcher.issue_stats().issued;
+        stats.inferences = self.prefetcher.issue_stats().inferences;
+        stats.inference_wall_ps = self.prefetcher.inference_ps();
+        stats.debug = self.prefetcher.debug_stats();
+        stats
+    }
+
+    fn make_lookahead(&self) -> Vec<Access> {
+        // Only the synthetic prefetcher asks for lookahead; avoid the
+        // copy otherwise.
+        if self.prefetcher.wants_lookahead() == 0 {
+            Vec::new()
+        } else {
+            self.lookahead.iter().copied().collect()
+        }
+    }
+
+    /// Reflector hit statistics (ExPAND runs).
+    pub fn prefetcher_name(&self) -> String {
+        self.prefetcher.name()
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn simulate(
+    cfg: &SimConfig,
+    runtime: Option<&Rc<Runtime>>,
+    source: &mut dyn TraceSource,
+) -> anyhow::Result<RunStats> {
+    let mut r = Runner::new(cfg, runtime)?;
+    Ok(r.run(source, cfg.accesses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workloads::WorkloadId;
+
+    fn smoke_cfg() -> SimConfig {
+        let mut c = presets::smoke();
+        c.accesses = 30_000;
+        c
+    }
+
+    #[test]
+    fn noprefetch_cxl_slower_than_localdram() {
+        let mut cxl = smoke_cfg();
+        cxl.backing = Backing::CxlSsd;
+        let mut local = smoke_cfg();
+        local.backing = Backing::LocalDram;
+        let mut src1 = WorkloadId::Pr.source(1);
+        let mut src2 = WorkloadId::Pr.source(1);
+        let s_cxl = simulate(&cxl, None, &mut *src1).unwrap();
+        let s_local = simulate(&local, None, &mut *src2).unwrap();
+        assert!(
+            s_cxl.exec_ps > s_local.exec_ps,
+            "cxl {} should exceed local {}",
+            s_cxl.exec_ps,
+            s_local.exec_ps
+        );
+    }
+
+    #[test]
+    fn perfect_synthetic_prefetch_speeds_up_cxl() {
+        let mut base = smoke_cfg();
+        base.prefetcher = PrefetcherKind::None;
+        let mut pf = smoke_cfg();
+        pf.prefetcher = PrefetcherKind::Synthetic { accuracy: 1.0, coverage: 1.0 };
+        let mut s1 = WorkloadId::Libquantum.source(2);
+        let mut s2 = WorkloadId::Libquantum.source(2);
+        let none = simulate(&base, None, &mut *s1).unwrap();
+        let with = simulate(&pf, None, &mut *s2).unwrap();
+        assert!(
+            with.exec_ps < none.exec_ps,
+            "prefetch {} < none {}",
+            with.exec_ps,
+            none.exec_ps
+        );
+        assert!(with.prefetch_issued > 0);
+    }
+
+    #[test]
+    fn deeper_switches_slow_down_noprefetch() {
+        let mut l1 = smoke_cfg();
+        l1.cxl.switch_levels = 1;
+        let mut l4 = smoke_cfg();
+        l4.cxl.switch_levels = 4;
+        let mut s1 = WorkloadId::Tc.source(3);
+        let mut s2 = WorkloadId::Tc.source(3);
+        let a = simulate(&l1, None, &mut *s1).unwrap();
+        let b = simulate(&l4, None, &mut *s2).unwrap();
+        assert!(b.exec_ps > a.exec_ps, "level4 {} > level1 {}", b.exec_ps, a.exec_ps);
+    }
+
+    /// Minimal in-vocabulary strided workload: the mock predictor can
+    /// learn it perfectly, isolating the reflector/decider plumbing.
+    struct Strided {
+        line: u64,
+    }
+
+    impl crate::workloads::TraceSource for Strided {
+        fn next_access(&mut self) -> crate::workloads::Access {
+            self.line += 2;
+            crate::workloads::Access {
+                pc: 0x1234,
+                line: self.line,
+                write: false,
+                inst_gap: 60,
+                dependent: false,
+            }
+        }
+
+        fn name(&self) -> String {
+            "strided".into()
+        }
+    }
+
+    #[test]
+    fn expand_with_mock_predictor_populates_reflector_stats() {
+        let mut cfg = smoke_cfg();
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.accesses = 60_000;
+        let mut src = Strided { line: 1 << 30 };
+        let s = simulate(&cfg, None, &mut src).unwrap();
+        assert!(s.prefetch_issued > 0, "decider pushed prefetches");
+        assert!(s.reflector_hits > 0, "reflector served hits: {s:?}");
+    }
+
+    #[test]
+    fn stats_are_internally_consistent() {
+        let cfg = smoke_cfg();
+        let mut src = WorkloadId::Cc.source(5);
+        let s = simulate(&cfg, None, &mut *src).unwrap();
+        assert_eq!(
+            s.accesses,
+            s.l1_hits + s.l2_hits + s.llc_hits + s.llc_misses + s.reflector_hits
+        );
+        assert!(s.instructions >= s.accesses);
+        assert!(s.exec_ps > 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! SSD-internal DRAM cache (Table 1b: 1.5 GB, tRP=tRCD=9.1 ns).
+//!
+//! CXL-SSD PoCs front their slow SCM with a large internal DRAM cache at
+//! *page* granularity (media reads fetch whole pages). We model it as a
+//! set-associative LRU page cache; hits cost internal-DRAM timing, misses
+//! trigger a backend media read on one of the device channels.
+
+/// Set-associative page cache (tags only; data is implicit).
+#[derive(Debug, Clone)]
+pub struct PageCache {
+    sets: usize,
+    ways: usize,
+    tags: Vec<u64>,
+    stamp_v: Vec<u64>,
+    valid: Vec<bool>,
+    stamp: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PageCache {
+    pub fn new(capacity_bytes: usize, page_bytes: usize, ways: usize) -> Self {
+        let pages = (capacity_bytes / page_bytes).max(1);
+        let ways = ways.min(pages).max(1);
+        let sets = (pages / ways).max(1);
+        PageCache {
+            sets,
+            ways,
+            tags: vec![0; sets * ways],
+            stamp_v: vec![0; sets * ways],
+            valid: vec![false; sets * ways],
+            stamp: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    #[inline]
+    fn set_of(&self, page: u64) -> usize {
+        let h = page.wrapping_mul(0xD1B5_4A32_D192_ED03) >> 13;
+        (h % self.sets as u64) as usize
+    }
+
+    /// Access a page; fills on miss (the caller charges media latency).
+    /// Returns true on hit.
+    pub fn access(&mut self, page: u64) -> bool {
+        self.stamp += 1;
+        let set = self.set_of(page);
+        let base = set * self.ways;
+        let mut victim = base;
+        let mut best = u64::MAX;
+        for i in base..base + self.ways {
+            if self.valid[i] && self.tags[i] == page {
+                self.stamp_v[i] = self.stamp;
+                self.hits += 1;
+                return true;
+            }
+            let key = if self.valid[i] { self.stamp_v[i] } else { 0 };
+            if key < best {
+                best = key;
+                victim = i;
+            }
+        }
+        self.misses += 1;
+        self.tags[victim] = page;
+        self.stamp_v[victim] = self.stamp;
+        self.valid[victim] = true;
+        false
+    }
+
+    /// Probe without filling.
+    pub fn contains(&self, page: u64) -> bool {
+        let set = self.set_of(page);
+        let base = set * self.ways;
+        (base..base + self.ways).any(|i| self.valid[i] && self.tags[i] == page)
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let pc = PageCache::new(1 << 20, 4096, 16);
+        assert_eq!(pc.capacity_pages(), 256);
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut pc = PageCache::new(1 << 16, 4096, 4);
+        assert!(!pc.access(42)); // cold miss fills
+        assert!(pc.access(42));
+        assert!(pc.contains(42));
+        assert_eq!(pc.hits, 1);
+        assert_eq!(pc.misses, 1);
+    }
+
+    #[test]
+    fn lru_within_set() {
+        let mut pc = PageCache::new(2 * 4096, 4096, 2); // 1 set, 2 ways
+        pc.access(1);
+        pc.access(2);
+        pc.access(1); // 2 becomes LRU
+        pc.access(3); // evicts 2
+        assert!(pc.contains(1));
+        assert!(pc.contains(3));
+        assert!(!pc.contains(2));
+    }
+
+    #[test]
+    fn thrashing_working_set_misses() {
+        let mut pc = PageCache::new(16 * 4096, 4096, 4);
+        for round in 0..4 {
+            for p in 0..64u64 {
+                pc.access(p);
+            }
+            let _ = round;
+        }
+        // Working set 4x capacity: mostly misses after warmup.
+        assert!(pc.hit_ratio() < 0.3, "hit ratio {}", pc.hit_ratio());
+    }
+}

@@ -1,0 +1,7 @@
+//! CXL-SSD device model: controller + internal DRAM cache + backend
+//! storage-class media with per-channel queuing.
+
+pub mod controller;
+pub mod dram_cache;
+
+pub use controller::CxlSsd;

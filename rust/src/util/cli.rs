@@ -1,0 +1,143 @@
+//! Declarative CLI argument parsing (offline substitute for `clap`).
+//!
+//! Supports `expand <subcommand> [positional...] [--flag] [--key value]`
+//! with typed accessors and automatic `--help` text generation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed command line: positionals + `--key value` options + flags.
+/// Repeated options are all retained (`get` returns the last;
+/// `get_all` returns every occurrence, e.g. for repeated `--set`).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `--key=value` and `--key value` both work;
+    /// a `--key` followed by another `--...` or nothing is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        out.options.entry(rest.to_string()).or_default().push(v);
+                    } else {
+                        out.flags.push(rest.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a repeatable option (e.g. `--set`).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+}
+
+/// One subcommand's help entry.
+pub struct CommandHelp {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub usage: &'static str,
+}
+
+/// Render a `--help` screen for a command table.
+pub fn render_help(program: &str, about: &str, commands: &[CommandHelp]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{program} — {about}\n");
+    let _ = writeln!(s, "USAGE:\n  {program} <command> [options]\n");
+    let _ = writeln!(s, "COMMANDS:");
+    for c in commands {
+        let _ = writeln!(s, "  {:<12} {}", c.name, c.summary);
+        let _ = writeln!(s, "  {:<12}   usage: {}", "", c.usage);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = argv("run tc --prefetcher expand --levels=2 --verbose --n 1000");
+        assert_eq!(a.positional, vec!["run", "tc"]);
+        assert_eq!(a.get("prefetcher"), Some("expand"));
+        assert_eq!(a.get("levels"), Some("2"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn typed_accessors_default_and_error() {
+        let a = argv("x --alpha 0.5 --bad abc");
+        assert_eq!(a.get_f64("alpha", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert!(a.get_u64("bad", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = argv("run --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+}

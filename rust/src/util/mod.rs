@@ -1,0 +1,8 @@
+//! Self-contained utilities (this image is offline: no rand/serde/clap).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,203 @@
+//! Deterministic PRNG for the simulator (offline substitute for `rand`).
+//!
+//! The whole evaluation must be reproducible from a seed: every stochastic
+//! choice in the workload generators, cache models, and prefetcher noise
+//! models flows through [`Rng`] (xoshiro256**, seeded via splitmix64).
+
+/// splitmix64 — used to expand a single `u64` seed into xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** 1.0 — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // Avoid the all-zero state (probability ~2^-256, but cheap to guard).
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (for per-component determinism).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. Lemire's unbiased multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n && lo < n.wrapping_neg() {
+                // fall through to retry only in the biased band
+            }
+            if lo < n.wrapping_neg() % n {
+                continue;
+            }
+            return (m >> 64) as u64;
+        }
+    }
+
+    /// Uniform in `[lo, hi)` (i64 range allowed).
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric distribution (number of trials to first success, >= 1).
+    #[inline]
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        debug_assert!(p > 0.0 && p <= 1.0);
+        let u = self.f64().max(1e-18);
+        (u.ln() / (1.0 - p).max(1e-18).ln()).floor() as u64 + 1
+    }
+
+    /// Pick a uniformly random element.
+    #[inline]
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Power-law index in `[0, n)` with exponent `alpha` (APEX-MAP's
+    /// temporal-locality knob: alpha=1 is uniform/random; alpha->0
+    /// concentrates re-use on low indices).
+    pub fn powerlaw_index(&mut self, n: u64, alpha: f64) -> u64 {
+        // Inverse-CDF of p(i) ~ i^-(1-alpha) style concentration: we follow
+        // APEX-MAP's definition where addresses are drawn as X = N * U^(1/alpha)
+        // for alpha in (0, 1]; alpha=1 -> uniform, smaller alpha -> skewed.
+        let u = self.f64();
+        let x = (n as f64) * u.powf(1.0 / alpha.clamp(1e-4, 1.0));
+        (x as u64).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn powerlaw_alpha1_uniformish_and_small_alpha_concentrates() {
+        let mut r = Rng::new(3);
+        let n = 1000u64;
+        let mean_uniform: f64 =
+            (0..20_000).map(|_| r.powerlaw_index(n, 1.0) as f64).sum::<f64>() / 20_000.0;
+        let mean_skew: f64 =
+            (0..20_000).map(|_| r.powerlaw_index(n, 0.05) as f64).sum::<f64>() / 20_000.0;
+        assert!((mean_uniform - 500.0).abs() < 25.0, "uniform mean {mean_uniform}");
+        assert!(mean_skew < 100.0, "skewed mean {mean_skew}");
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut r = Rng::new(9);
+        let p = 0.25;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.geometric(p) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,107 @@
+//! APEX-MAP re-implementation (Strohmaier & Shan, SC'05) — the locality
+//! benchmark behind the paper's Fig 1.
+//!
+//! Two knobs: `l` (vector length — spatial locality: each pick accesses
+//! `l` consecutive elements) and `alpha` (temporal locality: start
+//! indices are drawn as `N * U^(1/alpha)`; alpha=1 is uniform random,
+//! smaller alpha concentrates re-use on low addresses).
+
+use super::{Access, TraceSource};
+use crate::util::Rng;
+
+const BASE: u64 = 0x30_0000_0000;
+const PC_PICK: u64 = 0x60_0000;
+const PC_WALK: u64 = 0x60_0010;
+
+/// APEX-MAP access generator over `mem_lines` 64 B lines.
+pub struct ApexMap {
+    rng: Rng,
+    pub alpha: f64,
+    pub l: u64,
+    mem_lines: u64,
+    // Walk state.
+    cur: u64,
+    left: u64,
+}
+
+impl ApexMap {
+    pub fn new(rng: Rng, alpha: f64, l: u64, mem_lines: u64) -> Self {
+        ApexMap { rng, alpha, l: l.max(1), mem_lines: mem_lines.max(1), cur: 0, left: 0 }
+    }
+
+    /// Default memory: 64 MB-class region (1M lines), comfortably larger
+    /// than the LLC so low-alpha runs exercise re-use and high-alpha runs
+    /// miss.
+    pub fn with_default_mem(rng: Rng, alpha: f64, l: u64) -> Self {
+        ApexMap::new(rng, alpha, l, 1 << 20)
+    }
+}
+
+impl TraceSource for ApexMap {
+    fn next_access(&mut self) -> Access {
+        if self.left == 0 {
+            self.cur = self.rng.powerlaw_index(self.mem_lines, self.alpha);
+            self.left = self.l;
+            let a = Access {
+                pc: PC_PICK,
+                line: (BASE >> 6) + self.cur,
+                write: false,
+                inst_gap: 8,
+                dependent: false,
+            };
+            self.left -= 1;
+            self.cur += 1;
+            return a;
+        }
+        let a = Access {
+            pc: PC_WALK,
+            line: (BASE >> 6) + (self.cur % self.mem_lines),
+            write: false,
+            inst_gap: 4,
+            dependent: false,
+        };
+        self.cur += 1;
+        self.left -= 1;
+        a
+    }
+
+    fn name(&self) -> String {
+        format!("apexmap(a={}, L={})", self.alpha, self.l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_are_l_long_and_sequential() {
+        let mut t = ApexMap::with_default_mem(Rng::new(1), 1.0, 8);
+        let mut run = Vec::new();
+        // First access is a pick; following 7 are walk continuations.
+        for _ in 0..8 {
+            run.push(t.next_access());
+        }
+        assert_eq!(run[0].pc, PC_PICK);
+        for w in run.windows(2) {
+            assert_eq!(w[1].line, w[0].line + 1);
+        }
+        // Next one starts a new run.
+        assert_eq!(t.next_access().pc, PC_PICK);
+    }
+
+    #[test]
+    fn small_alpha_concentrates_lines() {
+        let distinct = |alpha: f64| {
+            let mut t = ApexMap::with_default_mem(Rng::new(5), alpha, 4);
+            let mut s = std::collections::BTreeSet::new();
+            for _ in 0..20_000 {
+                s.insert(t.next_access().line);
+            }
+            s.len()
+        };
+        let uniform = distinct(1.0);
+        let skewed = distinct(0.01);
+        assert!(skewed * 3 < uniform, "skewed {skewed} vs uniform {uniform}");
+    }
+}

@@ -1,0 +1,599 @@
+//! Graph workloads: real algorithm kernels (PageRank, label-propagation
+//! connected components, Bellman-Ford SSSP, adjacency-intersection
+//! triangle counting) executed over synthetic CSR graphs, emitting the
+//! memory trace of the data-structure accesses.
+//!
+//! Dataset shapes mirror the paper's SNAP sets at ~1000x scale-down
+//! (DESIGN.md §3): a local/clustered product network (amazon), a
+//! power-law web graph (google), a near-uniform road network (ca-road),
+//! a highly-skewed communication graph (wiki-talk) and a power-law social
+//! network (youtube). Working-set ordering follows Table 1c:
+//! CC < TC < PR < SSSP.
+
+use super::{Access, Chunk, TraceSource};
+use crate::util::Rng;
+
+/// Simulated base addresses of the graph arrays (bytes). Spread so the
+/// arrays never alias; entry sizes: offsets 8 B, edges 4 B, values 8 B.
+const BASE_OFFSETS: u64 = 0x1_0000_0000;
+const BASE_EDGES: u64 = 0x2_0000_0000;
+const BASE_VALUES: u64 = 0x4_0000_0000;
+const BASE_VALUES2: u64 = 0x5_0000_0000;
+const BASE_FRONTIER: u64 = 0x6_0000_0000;
+
+#[inline]
+fn line_of_offset(idx: u64) -> u64 {
+    (BASE_OFFSETS + idx * 8) >> 6
+}
+
+#[inline]
+fn line_of_edge(idx: u64) -> u64 {
+    (BASE_EDGES + idx * 4) >> 6
+}
+
+#[inline]
+fn line_of_value(idx: u64) -> u64 {
+    (BASE_VALUES + idx * 8) >> 6
+}
+
+#[inline]
+fn line_of_value2(idx: u64) -> u64 {
+    (BASE_VALUES2 + idx * 8) >> 6
+}
+
+#[inline]
+fn line_of_frontier(idx: u64) -> u64 {
+    (BASE_FRONTIER + idx * 8) >> 6
+}
+
+/// A CSR graph.
+pub struct CsrGraph {
+    pub offsets: Vec<u32>,
+    pub edges: Vec<u32>,
+}
+
+impl CsrGraph {
+    pub fn nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.edges[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Simulated working set in bytes (offsets + edges + one value array).
+    pub fn working_set_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.edges.len() * 4 + self.nodes() * 8
+    }
+
+    /// Synthesize a graph: `n` nodes, mean degree `deg`; `skew` in [0,1]
+    /// blends power-law target selection (1.0) against locally-clustered
+    /// targets (0.0, road-like).
+    ///
+    /// Skewed graphs get a genuine heavy tail: a small fraction of nodes
+    /// are *hubs* with degrees hundreds of times the mean — SNAP's
+    /// wiki-Talk/youtube have max degrees in the 10^5 range, and those
+    /// long (sorted) adjacency lists are what gives TC its long
+    /// sequential scans (the paper's "large-stride" but prefetchable
+    /// pattern). Adjacency lists are sorted, as in standard CSR builds.
+    pub fn synth(rng: &mut Rng, n: usize, deg: usize, skew: f64) -> CsrGraph {
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut edges = Vec::new();
+        offsets.push(0u32);
+        let hub_deg = ((deg * 300).min(n / 16)).max(deg * 8);
+        // Hubs sit at the low indices — the same region the power-law
+        // target distribution concentrates on, so high in-degree and
+        // high out-degree coincide (as in real social/web graphs) and
+        // neighbor scans actually walk the long hub lists.
+        let hubs = ((n as f64 * 0.002 * skew) as usize).max(if skew > 0.5 { 8 } else { 0 });
+        for v in 0..n {
+            // Degree: heavy-tailed for skewed graphs, mild otherwise.
+            let d = if v < hubs {
+                hub_deg / 2 + rng.below(hub_deg as u64 / 2) as usize
+            } else if rng.chance(0.05) {
+                deg * 4
+            } else {
+                (deg / 2).max(1) + rng.below(deg as u64) as usize
+            };
+            let start = edges.len();
+            for _ in 0..d {
+                let t = if rng.chance(skew) {
+                    rng.powerlaw_index(n as u64, 0.25) as u32
+                } else {
+                    // Local target within a +-256 window (clustering).
+                    let lo = v.saturating_sub(128) as i64;
+                    let hi = ((v + 128).min(n - 1)) as i64;
+                    rng.range_i64(lo, hi + 1) as u32
+                };
+                edges.push(t);
+            }
+            edges[start..].sort_unstable();
+            offsets.push(edges.len() as u32);
+        }
+        CsrGraph { offsets, edges }
+    }
+}
+
+/// Named dataset presets (scaled SNAP analogues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphDataset {
+    Amazon,
+    GoogleWeb,
+    CaRoad,
+    WikiTalk,
+    Youtube,
+}
+
+impl GraphDataset {
+    pub const ALL: [GraphDataset; 5] = [
+        GraphDataset::Amazon,
+        GraphDataset::GoogleWeb,
+        GraphDataset::CaRoad,
+        GraphDataset::WikiTalk,
+        GraphDataset::Youtube,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphDataset::Amazon => "amazon",
+            GraphDataset::GoogleWeb => "google-web",
+            GraphDataset::CaRoad => "ca-road",
+            GraphDataset::WikiTalk => "wiki-talk",
+            GraphDataset::Youtube => "youtube",
+        }
+    }
+
+    /// (nodes, mean degree, skew)
+    fn params(&self) -> (usize, usize, f64) {
+        match self {
+            GraphDataset::Amazon => (400_000, 6, 0.15),
+            GraphDataset::GoogleWeb => (1_000_000, 10, 0.85),
+            GraphDataset::CaRoad => (600_000, 3, 0.02),
+            GraphDataset::WikiTalk => (500_000, 12, 0.95),
+            GraphDataset::Youtube => (2_000_000, 8, 0.90),
+        }
+    }
+
+    pub fn build(&self, rng: &mut Rng) -> CsrGraph {
+        let (n, d, s) = self.params();
+        CsrGraph::synth(rng, n, d, s)
+    }
+
+    /// Smaller variant for tests/benches.
+    pub fn build_scaled(&self, rng: &mut Rng, scale_div: usize) -> CsrGraph {
+        let (n, d, s) = self.params();
+        CsrGraph::synth(rng, (n / scale_div).max(1024), d, s)
+    }
+}
+
+/// Which algorithm the trace executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Algo {
+    Cc,
+    Pr,
+    Sssp,
+    Tc,
+}
+
+/// Distinct PCs per code site (the decider's PC modality depends on
+/// these being stable per access type).
+fn pcs_for(algo: Algo) -> [u64; 4] {
+    let base = 0x40_0000 + (algo as u64) * 0x100;
+    [base, base + 0x10, base + 0x20, base + 0x30]
+}
+
+/// Graph trace generator: runs the algorithm as a resumable state
+/// machine, refilling an access chunk on demand.
+pub struct GraphTrace {
+    algo: Algo,
+    dataset: GraphDataset,
+    g: CsrGraph,
+    rng: Rng,
+    chunk: Chunk,
+    // Shared iteration state.
+    v: usize,
+    iter: u64,
+    // SSSP state.
+    dist_dirty: Vec<bool>,
+    frontier: Vec<u32>,
+    next_frontier: Vec<u32>,
+    f_idx: usize,
+    // TC state.
+    u_idx: usize,
+}
+
+impl GraphTrace {
+    fn new(algo: Algo, dataset: GraphDataset, mut rng: Rng) -> Self {
+        let g = dataset.build(&mut rng.fork(1));
+        let n = g.nodes();
+        let mut t = GraphTrace {
+            algo,
+            dataset,
+            g,
+            rng,
+            chunk: Chunk::new(),
+            v: 0,
+            iter: 0,
+            dist_dirty: Vec::new(),
+            frontier: Vec::new(),
+            next_frontier: Vec::new(),
+            f_idx: 0,
+            u_idx: 0,
+        };
+        if algo == Algo::Sssp {
+            t.dist_dirty = vec![false; n];
+            t.frontier = vec![0u32];
+        }
+        t
+    }
+
+    pub fn cc(rng: Rng) -> Self {
+        GraphTrace::new(Algo::Cc, GraphDataset::Amazon, rng)
+    }
+
+    pub fn pr(rng: Rng) -> Self {
+        GraphTrace::new(Algo::Pr, GraphDataset::GoogleWeb, rng)
+    }
+
+    pub fn sssp(rng: Rng) -> Self {
+        GraphTrace::new(Algo::Sssp, GraphDataset::Youtube, rng)
+    }
+
+    pub fn tc(rng: Rng) -> Self {
+        GraphTrace::new(Algo::Tc, GraphDataset::WikiTalk, rng)
+    }
+
+    /// Trace over an explicit dataset (dataset-sweep harnesses).
+    pub fn with_dataset(algo_name: &str, dataset: GraphDataset, rng: Rng) -> anyhow::Result<Self> {
+        let algo = match algo_name.to_ascii_lowercase().as_str() {
+            "cc" => Algo::Cc,
+            "pr" => Algo::Pr,
+            "sssp" => Algo::Sssp,
+            "tc" => Algo::Tc,
+            other => anyhow::bail!("unknown graph algo {other:?}"),
+        };
+        Ok(GraphTrace::new(algo, dataset, rng))
+    }
+
+    pub fn working_set_bytes(&self) -> usize {
+        self.g.working_set_bytes()
+    }
+
+    fn refill(&mut self) {
+        match self.algo {
+            Algo::Pr => self.refill_pr(),
+            Algo::Cc => self.refill_cc(),
+            Algo::Sssp => self.refill_sssp(),
+            Algo::Tc => self.refill_tc(),
+        }
+    }
+
+    /// PageRank: per node, read offsets, stream the edge list, gather
+    /// rank[target] per edge (the dominant random traffic), write the new
+    /// rank. Gap values tuned for Table 1c's PR MPKI class.
+    fn refill_pr(&mut self) {
+        let [pc_off, pc_edge, pc_val, pc_wr] = pcs_for(Algo::Pr);
+        let n = self.g.nodes();
+        while self.chunk.len() < 4096 {
+            let v = self.v;
+            self.chunk.push(Access {
+                pc: pc_off,
+                line: line_of_offset(v as u64),
+                write: false,
+                inst_gap: 8,
+                dependent: false,
+            });
+            let (s, e) = (self.g.offsets[v] as u64, self.g.offsets[v + 1] as u64);
+            let mut last_edge_line = u64::MAX;
+            for ei in s..e {
+                let el = line_of_edge(ei);
+                if el != last_edge_line {
+                    self.chunk.push(Access {
+                        pc: pc_edge,
+                        line: el,
+                        write: false,
+                        inst_gap: 4,
+                        dependent: false,
+                    });
+                    last_edge_line = el;
+                }
+                let t = self.g.edges[ei as usize] as u64;
+                self.chunk.push(Access {
+                    pc: pc_val,
+                    line: line_of_value(t),
+                    write: false,
+                    inst_gap: 6,
+                    dependent: false,
+                });
+            }
+            self.chunk.push(Access {
+                pc: pc_wr,
+                line: line_of_value2(v as u64),
+                write: true,
+                inst_gap: 10,
+                dependent: false,
+            });
+            self.v = (self.v + 1) % n;
+            if self.v == 0 {
+                self.iter += 1;
+            }
+        }
+    }
+
+    /// Label-propagation CC over the clustered amazon graph: like PR but
+    /// neighbor labels are mostly *local* (low MPKI — Table 1c ordering).
+    fn refill_cc(&mut self) {
+        let [pc_off, pc_edge, pc_val, pc_wr] = pcs_for(Algo::Cc);
+        let n = self.g.nodes();
+        while self.chunk.len() < 4096 {
+            let v = self.v;
+            self.chunk.push(Access {
+                pc: pc_off,
+                line: line_of_offset(v as u64),
+                write: false,
+                inst_gap: 14,
+                dependent: false,
+            });
+            let (s, e) = (self.g.offsets[v] as u64, self.g.offsets[v + 1] as u64);
+            let mut last_edge_line = u64::MAX;
+            for ei in s..e {
+                let el = line_of_edge(ei);
+                if el != last_edge_line {
+                    self.chunk.push(Access {
+                        pc: pc_edge,
+                        line: el,
+                        write: false,
+                        inst_gap: 6,
+                        dependent: false,
+                    });
+                    last_edge_line = el;
+                }
+                let t = self.g.edges[ei as usize] as u64;
+                self.chunk.push(Access {
+                    pc: pc_val,
+                    line: line_of_value(t),
+                    write: false,
+                    inst_gap: 12,
+                    dependent: false,
+                });
+            }
+            self.chunk.push(Access {
+                pc: pc_wr,
+                line: line_of_value(v as u64),
+                write: true,
+                inst_gap: 12,
+                dependent: false,
+            });
+            self.v = (self.v + 1) % n;
+        }
+    }
+
+    /// Bellman-Ford SSSP over the largest graph: frontier pops are
+    /// sequential; per-edge distance gathers are random over the biggest
+    /// value array (highest MPKI of the graph set, Table 1c: 11.03).
+    fn refill_sssp(&mut self) {
+        let [pc_front, pc_edge, pc_dist, pc_wr] = pcs_for(Algo::Sssp);
+        let n = self.g.nodes();
+        while self.chunk.len() < 4096 {
+            if self.f_idx >= self.frontier.len() {
+                // Iteration boundary: swap frontiers (restart from a
+                // random source when the wave dies out).
+                self.frontier = std::mem::take(&mut self.next_frontier);
+                self.f_idx = 0;
+                self.iter += 1;
+                if self.frontier.is_empty() {
+                    self.dist_dirty.iter_mut().for_each(|d| *d = false);
+                    self.frontier = vec![self.rng.below(n as u64) as u32];
+                }
+                continue;
+            }
+            let v = self.frontier[self.f_idx] as usize;
+            self.chunk.push(Access {
+                pc: pc_front,
+                line: line_of_frontier(self.f_idx as u64),
+                write: false,
+                inst_gap: 6,
+                dependent: false,
+            });
+            self.f_idx += 1;
+            let (s, e) = (self.g.offsets[v] as u64, self.g.offsets[v + 1] as u64);
+            let mut last_edge_line = u64::MAX;
+            for ei in s..e {
+                let el = line_of_edge(ei);
+                if el != last_edge_line {
+                    self.chunk.push(Access {
+                        pc: pc_edge,
+                        line: el,
+                        write: false,
+                        inst_gap: 4,
+                        dependent: false,
+                    });
+                    last_edge_line = el;
+                }
+                let t = self.g.edges[ei as usize] as usize;
+                self.chunk.push(Access {
+                    pc: pc_dist,
+                    line: line_of_value(t as u64),
+                    write: false,
+                    inst_gap: 5,
+                    dependent: false,
+                });
+                if !self.dist_dirty[t] {
+                    self.dist_dirty[t] = true;
+                    if self.next_frontier.len() < n / 4 {
+                        self.next_frontier.push(t as u32);
+                    }
+                    self.chunk.push(Access {
+                        pc: pc_wr,
+                        line: line_of_value(t as u64),
+                        write: true,
+                        inst_gap: 4,
+                        dependent: false,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Triangle counting over the skewed wiki graph: stream adj(v), then
+    /// jump into adj(u) for each neighbor — the paper's "large-stride"
+    /// pattern (Fig 4e discussion).
+    fn refill_tc(&mut self) {
+        let [pc_off, pc_adjv, pc_adju, _pc_wr] = pcs_for(Algo::Tc);
+        let n = self.g.nodes();
+        while self.chunk.len() < 4096 {
+            let v = self.v;
+            let (s, e) = (self.g.offsets[v] as u64, self.g.offsets[v + 1] as u64);
+            if self.u_idx == 0 {
+                self.chunk.push(Access {
+                    pc: pc_off,
+                    line: line_of_offset(v as u64),
+                    write: false,
+                    inst_gap: 18,
+                    dependent: false,
+                });
+                // Stream adj(v) once.
+                let mut last = u64::MAX;
+                for ei in s..e {
+                    let el = line_of_edge(ei);
+                    if el != last {
+                        self.chunk.push(Access {
+                            pc: pc_adjv,
+                            line: el,
+                            write: false,
+                            inst_gap: 14,
+                            dependent: false,
+                        });
+                        last = el;
+                    }
+                }
+            }
+            // Intersect with one neighbor's list per step (large stride
+            // into a distant part of the edge array; hub lists give long
+            // sequential scans).
+            let deg = (e - s) as usize;
+            if self.u_idx < deg.min(16) {
+                let u = self.g.edges[(s as usize) + self.u_idx] as usize;
+                let (us, ue) = (self.g.offsets[u] as u64, self.g.offsets[u + 1] as u64);
+                let mut last = u64::MAX;
+                for ei in us..ue.min(us + 4096) {
+                    let el = line_of_edge(ei);
+                    if el != last {
+                        self.chunk.push(Access {
+                            pc: pc_adju,
+                            line: el,
+                            write: false,
+                            inst_gap: 15,
+                            dependent: false,
+                        });
+                        last = el;
+                    }
+                }
+                self.u_idx += 1;
+            } else {
+                self.u_idx = 0;
+                self.v = (self.v + 1) % n;
+            }
+        }
+    }
+}
+
+impl TraceSource for GraphTrace {
+    fn next_access(&mut self) -> Access {
+        if self.chunk.is_empty() {
+            self.refill();
+        }
+        self.chunk.pop().expect("refill produced accesses")
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "{}/{}",
+            match self.algo {
+                Algo::Cc => "CC",
+                Algo::Pr => "PR",
+                Algo::Sssp => "SSSP",
+                Algo::Tc => "TC",
+            },
+            self.dataset.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_rng() -> Rng {
+        Rng::new(99)
+    }
+
+    #[test]
+    fn csr_synth_is_well_formed() {
+        let mut rng = small_rng();
+        let g = CsrGraph::synth(&mut rng, 1000, 6, 0.5);
+        assert_eq!(g.offsets.len(), 1001);
+        assert_eq!(*g.offsets.last().unwrap() as usize, g.edges.len());
+        assert!(g.edges.iter().all(|&t| (t as usize) < 1000));
+        let mean_deg = g.edges.len() as f64 / 1000.0;
+        assert!(mean_deg > 3.0 && mean_deg < 12.0, "mean degree {mean_deg}");
+    }
+
+    #[test]
+    fn skewed_graph_has_heavier_tail_than_local() {
+        let mut rng = small_rng();
+        let skew = CsrGraph::synth(&mut rng, 5000, 8, 0.95);
+        let local = CsrGraph::synth(&mut rng, 5000, 8, 0.0);
+        // In-degree concentration: max in-degree much larger under skew.
+        let indeg = |g: &CsrGraph| {
+            let mut d = vec![0u32; 5000];
+            for &t in &g.edges {
+                d[t as usize] += 1;
+            }
+            *d.iter().max().unwrap()
+        };
+        assert!(indeg(&skew) > 3 * indeg(&local));
+    }
+
+    #[test]
+    fn traces_emit_reasonable_structure() {
+        for mk in [GraphTrace::cc, GraphTrace::pr, GraphTrace::sssp, GraphTrace::tc] {
+            let mut t = mk(small_rng());
+            let mut writes = 0;
+            let mut lines = std::collections::BTreeSet::new();
+            for _ in 0..20_000 {
+                let a = t.next_access();
+                assert!(a.inst_gap > 0);
+                writes += a.write as u32;
+                lines.insert(a.line);
+            }
+            // Read-dominated; touches many distinct lines.
+            assert!(writes < 10_000, "{}: writes {writes}", t.name());
+            assert!(lines.len() > 500, "{}: distinct {}", t.name(), lines.len());
+        }
+    }
+
+    #[test]
+    fn working_set_ordering_cc_tc_pr_sssp() {
+        // Table 1c ordering on simulated working sets.
+        let cc = GraphTrace::cc(small_rng()).working_set_bytes();
+        let tc = GraphTrace::tc(small_rng()).working_set_bytes();
+        let pr = GraphTrace::pr(small_rng()).working_set_bytes();
+        let sssp = GraphTrace::sssp(small_rng()).working_set_bytes();
+        assert!(cc < tc && tc < pr && pr < sssp, "{cc} {tc} {pr} {sssp}");
+    }
+
+    #[test]
+    fn pcs_are_distinct_per_algo_and_site() {
+        let mut all = std::collections::BTreeSet::new();
+        for a in [Algo::Cc, Algo::Pr, Algo::Sssp, Algo::Tc] {
+            for pc in pcs_for(a) {
+                assert!(all.insert(pc), "duplicate pc {pc:#x}");
+            }
+        }
+    }
+}

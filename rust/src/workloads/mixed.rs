@@ -1,0 +1,136 @@
+//! Multi-core workload composition.
+//!
+//! * [`MixedTrace`] — each core runs a *different* workload; accesses are
+//!   interleaved round-robin with the owning core id (Fig 4b's mixed
+//!   scenario, where intertwined access streams destroy single-stream
+//!   prefetcher accuracy).
+//! * [`PhaseTrace`] — one core alternating between two workloads every
+//!   `period` accesses (Fig 4e's SSSP<->TC behavior-change scenario).
+
+use super::{Access, TraceSource, WorkloadId};
+
+/// An access tagged with its issuing core.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreAccess {
+    pub core: usize,
+    pub access: Access,
+}
+
+/// Round-robin interleave of per-core sources.
+pub struct MixedTrace {
+    sources: Vec<Box<dyn TraceSource>>,
+    next: usize,
+}
+
+impl MixedTrace {
+    pub fn new(ids: &[WorkloadId], seed: u64) -> Self {
+        let sources = ids
+            .iter()
+            .enumerate()
+            .map(|(i, id)| id.source(seed.wrapping_add(i as u64 * 0x1234_5678)))
+            .collect();
+        MixedTrace { sources, next: 0 }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Next access with its core id.
+    pub fn next_core_access(&mut self) -> CoreAccess {
+        let core = self.next;
+        self.next = (self.next + 1) % self.sources.len();
+        CoreAccess { core, access: self.sources[core].next_access() }
+    }
+
+    pub fn label(&self) -> String {
+        self.sources.iter().map(|s| s.name()).collect::<Vec<_>>().join("+")
+    }
+}
+
+impl TraceSource for MixedTrace {
+    fn next_access(&mut self) -> Access {
+        self.next_core_access().access
+    }
+
+    fn name(&self) -> String {
+        format!("mixed[{}]", self.label())
+    }
+}
+
+/// Alternate between two workloads every `period` accesses.
+pub struct PhaseTrace {
+    a: Box<dyn TraceSource>,
+    b: Box<dyn TraceSource>,
+    period: usize,
+    emitted: usize,
+    /// true while source A is active.
+    pub in_a: bool,
+}
+
+impl PhaseTrace {
+    pub fn new(a: WorkloadId, b: WorkloadId, period: usize, seed: u64) -> Self {
+        PhaseTrace {
+            a: a.source(seed),
+            b: b.source(seed ^ 0xBEEF),
+            period: period.max(1),
+            emitted: 0,
+            in_a: true,
+        }
+    }
+
+    /// Accesses until the next phase boundary.
+    pub fn until_boundary(&self) -> usize {
+        self.period - (self.emitted % self.period)
+    }
+}
+
+impl TraceSource for PhaseTrace {
+    fn next_access(&mut self) -> Access {
+        if self.emitted > 0 && self.emitted % self.period == 0 {
+            self.in_a = !self.in_a;
+        }
+        self.emitted += 1;
+        if self.in_a {
+            self.a.next_access()
+        } else {
+            self.b.next_access()
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("phase[{}<->{} @{}]", self.a.name(), self.b.name(), self.period)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_round_robins_cores() {
+        let mut m = MixedTrace::new(&[WorkloadId::Cc, WorkloadId::Tc], 1);
+        let cores: Vec<usize> = (0..6).map(|_| m.next_core_access().core).collect();
+        assert_eq!(cores, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn phase_alternates_at_period() {
+        let mut p = PhaseTrace::new(WorkloadId::Sssp, WorkloadId::Tc, 100, 3);
+        let mut phases = Vec::new();
+        for _ in 0..400 {
+            p.next_access();
+            phases.push(p.in_a);
+        }
+        assert!(phases[..99].iter().all(|&x| x));
+        assert!(phases[100..199].iter().all(|&x| !x));
+        assert!(phases[200..299].iter().all(|&x| x));
+    }
+
+    #[test]
+    fn mixed_name_mentions_components() {
+        let m = MixedTrace::new(&[WorkloadId::Cc, WorkloadId::Tc], 1);
+        assert!(m.name().contains("CC"));
+        assert!(m.name().contains("TC"));
+    }
+}

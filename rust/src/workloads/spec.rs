@@ -1,0 +1,286 @@
+//! SPEC CPU workload trace generators.
+//!
+//! Each generator reproduces the published access signature of its
+//! benchmark, calibrated to Table 1c's working set / MPKI / read-ratio
+//! columns (scaled ~1000x, DESIGN.md §3):
+//!
+//! * `bwaves`, `leslie3d`, `lbm` — 3D stencil sweeps: unit-stride runs
+//!   with fixed plane/row offsets (highly prefetchable; these are the
+//!   workloads where ExPAND beats LocalDRAM in Fig 5a).
+//! * `libquantum` — pure streaming over a large state vector with a
+//!   repeated gate loop (lowest MPKI, highest LLC hit ratio).
+//! * `mcf` — pointer chasing over an arc network: *dependent* random
+//!   reads, highest MPKI (12.17) and read ratio 0.87.
+
+use super::{Access, Chunk, TraceSource};
+use crate::util::Rng;
+
+const BASE_GRID: u64 = 0x10_0000_0000;
+const BASE_GRID2: u64 = 0x14_0000_0000;
+const BASE_ARCS: u64 = 0x18_0000_0000;
+const BASE_NODES: u64 = 0x1C_0000_0000;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Bwaves,
+    Leslie3d,
+    Lbm,
+    Libquantum,
+    Mcf,
+}
+
+/// SPEC trace state machine.
+pub struct SpecTrace {
+    kind: Kind,
+    rng: Rng,
+    chunk: Chunk,
+    /// Stencil/stream position (element index).
+    i: u64,
+    /// Grid dimensions for stencil kernels (elements).
+    nx: u64,
+    ny: u64,
+    total: u64,
+    /// mcf: current arc pointer.
+    ptr: u64,
+}
+
+impl SpecTrace {
+    fn stencil(kind: Kind, rng: Rng, nx: u64, ny: u64, nz: u64) -> Self {
+        SpecTrace { kind, rng, chunk: Chunk::new(), i: 0, nx, ny, total: nx * ny * nz, ptr: 0 }
+    }
+
+    /// bwaves: 22 MB-class grid, 7-point stencil, 8B elements.
+    pub fn bwaves(rng: Rng) -> Self {
+        SpecTrace::stencil(Kind::Bwaves, rng, 192, 192, 76) // ~2.8M elems * 8B ~ 22MB
+    }
+
+    /// leslie3d: 41 MB-class grid.
+    pub fn leslie3d(rng: Rng) -> Self {
+        SpecTrace::stencil(Kind::Leslie3d, rng, 256, 192, 104) // ~5.1M * 8B ~ 41MB
+    }
+
+    /// lbm: 22 MB-class grid, 19-point-ish lattice (more neighbors).
+    pub fn lbm(rng: Rng) -> Self {
+        SpecTrace::stencil(Kind::Lbm, rng, 192, 192, 76)
+    }
+
+    /// libquantum: streaming over a ~22 MB state vector.
+    pub fn libquantum(rng: Rng) -> Self {
+        SpecTrace {
+            kind: Kind::Libquantum,
+            rng,
+            chunk: Chunk::new(),
+            i: 0,
+            nx: 0,
+            ny: 0,
+            total: 2_800_000, // 22 MB / 8 B
+            ptr: 0,
+        }
+    }
+
+    /// mcf: ~215 MB-class arc network, pointer chasing.
+    pub fn mcf(rng: Rng) -> Self {
+        SpecTrace {
+            kind: Kind::Mcf,
+            rng,
+            chunk: Chunk::new(),
+            i: 0,
+            nx: 0,
+            ny: 0,
+            total: 3_300_000, // arcs: ~215 MB at 64 B/arc record
+            ptr: 0,
+        }
+    }
+
+    fn pc(&self, site: u64) -> u64 {
+        // Distinct code-site PCs (up to 16 sites per kernel).
+        0x50_0000 + (self.kind as u64) * 0x200 + site * 0x10
+    }
+
+    fn refill_stencil(&mut self) {
+        // Neighbor offsets in elements (center, ±x, ±row, ±plane); lbm
+        // adds diagonal lattice links.
+        let plane = self.nx * self.ny;
+        let offs: &[i64] = match self.kind {
+            Kind::Lbm => &[0, 1, -1, 192, -192, 36_864, -36_864, 193, -193, 36_865, -36_865],
+            _ => &[0, 1, -1, 192, -192, 36_864, -36_864],
+        };
+        let _ = plane;
+        while self.chunk.len() < 4096 {
+            let i = self.i as i64;
+            for (site, &o) in offs.iter().enumerate() {
+                let idx = (i + o).rem_euclid(self.total as i64) as u64;
+                self.chunk.push(Access {
+                    pc: self.pc(site as u64),
+                    line: (BASE_GRID + idx * 8) >> 6,
+                    write: false,
+                    inst_gap: 7,
+                    dependent: false,
+                });
+            }
+            // Write the updated center value to the second grid.
+            self.chunk.push(Access {
+                pc: self.pc(15),
+                line: (BASE_GRID2 + self.i * 8) >> 6,
+                write: true,
+                inst_gap: 9,
+                dependent: false,
+            });
+            self.i = (self.i + 1) % self.total;
+        }
+    }
+
+    fn refill_libquantum(&mut self) {
+        // Gate application: stream the state vector; every element pairs
+        // with a partner at a fixed power-of-two stride (the qubit bit).
+        let stride = 1u64 << (10 + (self.i / self.total) % 4);
+        while self.chunk.len() < 4096 {
+            self.chunk.push(Access {
+                pc: self.pc(0),
+                line: (BASE_GRID + self.i * 8) >> 6,
+                write: false,
+                inst_gap: 5,
+                dependent: false,
+            });
+            let partner = (self.i ^ stride) % self.total;
+            self.chunk.push(Access {
+                pc: self.pc(1),
+                line: (BASE_GRID + partner * 8) >> 6,
+                write: false,
+                inst_gap: 4,
+                dependent: false,
+            });
+            self.chunk.push(Access {
+                pc: self.pc(2),
+                line: (BASE_GRID + self.i * 8) >> 6,
+                write: true,
+                inst_gap: 6,
+                dependent: false,
+            });
+            self.i = (self.i + 1) % self.total;
+        }
+    }
+
+    fn refill_mcf(&mut self) {
+        // Network-simplex pricing loop: chase arc->head->next_arc chains;
+        // each hop's address comes from the previous load (dependent).
+        while self.chunk.len() < 4096 {
+            // Arc record read (64B record: one line).
+            self.chunk.push(Access {
+                pc: self.pc(0),
+                line: (BASE_ARCS >> 6) + self.ptr,
+                write: false,
+                inst_gap: 11,
+                dependent: true,
+            });
+            // Node potential read for the arc's head (dependent gather).
+            let node = self.ptr.wrapping_mul(0x2545_F491_4F6C_DD1D) % (self.total / 4);
+            self.chunk.push(Access {
+                pc: self.pc(1),
+                line: (BASE_NODES + node * 32) >> 6,
+                write: false,
+                inst_gap: 9,
+                dependent: true,
+            });
+            // Occasional potential update (read ratio 0.87, Table 1c).
+            if self.rng.chance(0.13) {
+                self.chunk.push(Access {
+                    pc: self.pc(2),
+                    line: (BASE_NODES + node * 32) >> 6,
+                    write: true,
+                    inst_gap: 7,
+                    dependent: false,
+                });
+            }
+            // Next arc: mostly sequential basis scan, frequent jumps.
+            self.ptr = if self.rng.chance(0.35) {
+                self.rng.below(self.total)
+            } else {
+                (self.ptr + 1) % self.total
+            };
+        }
+    }
+}
+
+impl TraceSource for SpecTrace {
+    fn next_access(&mut self) -> Access {
+        if self.chunk.is_empty() {
+            match self.kind {
+                Kind::Bwaves | Kind::Leslie3d | Kind::Lbm => self.refill_stencil(),
+                Kind::Libquantum => self.refill_libquantum(),
+                Kind::Mcf => self.refill_mcf(),
+            }
+        }
+        self.chunk.pop().expect("refill produced accesses")
+    }
+
+    fn name(&self) -> String {
+        match self.kind {
+            Kind::Bwaves => "bwaves",
+            Kind::Leslie3d => "leslie3d",
+            Kind::Lbm => "lbm",
+            Kind::Libquantum => "libquantum",
+            Kind::Mcf => "mcf",
+        }
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stencil_has_periodic_structure() {
+        let mut t = SpecTrace::bwaves(Rng::new(1));
+        // Collect deltas of the unit-stride site (pc(0), the center).
+        let mut centers = Vec::new();
+        for _ in 0..5000 {
+            let a = t.next_access();
+            if a.pc == t.pc(0) && !a.write {
+                centers.push(a.line);
+            }
+        }
+        // Center addresses advance by one element (same or next line).
+        let monotone = centers.windows(2).filter(|w| w[1] >= w[0]).count();
+        assert!(monotone as f64 > 0.95 * (centers.len() - 1) as f64);
+    }
+
+    #[test]
+    fn mcf_is_dependent_and_read_heavy() {
+        let mut t = SpecTrace::mcf(Rng::new(2));
+        let mut dep = 0;
+        let mut writes = 0;
+        for _ in 0..10_000 {
+            let a = t.next_access();
+            dep += a.dependent as u32;
+            writes += a.write as u32;
+        }
+        assert!(dep > 8_000, "dependent {dep}");
+        let wr_ratio = writes as f64 / 10_000.0;
+        assert!(wr_ratio > 0.02 && wr_ratio < 0.12, "write ratio {wr_ratio}");
+    }
+
+    #[test]
+    fn libquantum_is_streaming() {
+        let mut t = SpecTrace::libquantum(Rng::new(3));
+        let mut lines = Vec::new();
+        for _ in 0..3000 {
+            let a = t.next_access();
+            if a.pc == t.pc(0) {
+                lines.push(a.line);
+            }
+        }
+        let monotone = lines.windows(2).filter(|w| w[1] >= w[0]).count();
+        assert!(monotone == lines.len() - 1, "stream is sequential");
+    }
+
+    #[test]
+    fn working_sets_differ() {
+        // mcf's footprint (dominated by arcs at 64B each) far exceeds
+        // the 22MB-class stencil grids.
+        let bw = SpecTrace::bwaves(Rng::new(4));
+        let mc = SpecTrace::mcf(Rng::new(4));
+        assert!(mc.total * 64 > 4 * bw.total * 8);
+    }
+}

@@ -1,0 +1,40 @@
+//! Figure-harness smoke tests: every harness must run end-to-end on a
+//! small access budget and emit its CSV. Uses real artifacts when
+//! available (CI after `make artifacts`), the mock predictor otherwise.
+
+use expand_cxl::figures::{run_one, FigOpts};
+
+fn opts(tag: &str) -> FigOpts {
+    FigOpts {
+        accesses: 20_000,
+        seed: 7,
+        artifacts: Some("artifacts".to_string()),
+        out_dir: format!("target/test-results-{tag}"),
+    }
+}
+
+macro_rules! smoke {
+    ($name:ident, $fig:literal, $csv:literal) => {
+        #[test]
+        fn $name() {
+            let o = opts($fig);
+            run_one($fig, &o).expect($fig);
+            let path = format!("{}/{}.csv", o.out_dir, $csv);
+            let data = std::fs::read_to_string(&path).expect("csv exists");
+            assert!(data.lines().count() > 1, "{} has data rows", path);
+        }
+    };
+}
+
+smoke!(fig2b_emits, "fig2b", "fig2b_mpki");
+smoke!(fig2c_emits, "fig2c", "fig2c_switch_layers");
+smoke!(fig4c_emits, "fig4c", "fig4c_timeliness");
+smoke!(fig4d_emits, "fig4d", "fig4d_llc_intervals");
+smoke!(fig6_emits, "fig6", "fig6_topology");
+smoke!(fig7b_emits, "fig7b", "fig7b_media_topology");
+smoke!(table1c_emits, "table1c", "table1c_workloads");
+
+#[test]
+fn unknown_figure_errors() {
+    assert!(run_one("fig99", &opts("x")).is_err());
+}

@@ -1,0 +1,309 @@
+//! Property-based tests (self-contained harness — proptest is not in the
+//! offline crate set). Each property runs against many seeded random
+//! cases; failures print the offending seed for reproduction.
+
+use expand_cxl::cxl::enumeration::Enumeration;
+use expand_cxl::cxl::{Fabric, NodeKind, Topology};
+use expand_cxl::expand::reflector::Reflector;
+use expand_cxl::expand::timing::TimingPredictor;
+use expand_cxl::expand::tokenize;
+use expand_cxl::mem::cache::{AccessOutcome, Cache};
+use expand_cxl::sim::core::CoreModel;
+use expand_cxl::sim::engine::EventQueue;
+use expand_cxl::util::Rng;
+
+/// Run `f` over `n` seeded cases.
+fn forall(n: u64, f: impl Fn(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xBADC0DE ^ seed.wrapping_mul(0x9E37_79B9));
+        f(&mut rng, seed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache invariants (vs a reference model)
+// ---------------------------------------------------------------------------
+
+/// Reference cache: same geometry, fully explicit LRU lists.
+struct RefCache {
+    sets: Vec<Vec<u64>>, // most-recent last
+    ways: usize,
+}
+
+impl RefCache {
+    fn new(sets: usize, ways: usize) -> Self {
+        RefCache { sets: vec![Vec::new(); sets], ways }
+    }
+
+    // Mirrors Cache::set_of's hash.
+    fn set_of(&self, line: u64) -> usize {
+        let h = line.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 17;
+        (h % self.sets.len() as u64) as usize
+    }
+
+    fn access(&mut self, line: u64) -> bool {
+        let s = self.set_of(line);
+        if let Some(pos) = self.sets[s].iter().position(|&l| l == line) {
+            let l = self.sets[s].remove(pos);
+            self.sets[s].push(l);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn fill(&mut self, line: u64) {
+        let s = self.set_of(line);
+        if let Some(pos) = self.sets[s].iter().position(|&l| l == line) {
+            let l = self.sets[s].remove(pos);
+            self.sets[s].push(l);
+            return;
+        }
+        if self.sets[s].len() == self.ways {
+            self.sets[s].remove(0);
+        }
+        self.sets[s].push(line);
+    }
+}
+
+#[test]
+fn prop_cache_matches_reference_lru_model() {
+    forall(30, |rng, seed| {
+        let ways = 1 + rng.below(8) as usize;
+        let sets = 1 << rng.below(5);
+        let mut cache = Cache::new(sets * ways * 64, ways, 64);
+        assert_eq!(cache.sets(), sets, "geometry");
+        let mut reference = RefCache::new(sets, ways);
+        for step in 0..2000 {
+            let line = rng.below(sets as u64 * ways as u64 * 3);
+            let hit = cache.access(line) != AccessOutcome::Miss;
+            let ref_hit = reference.access(line);
+            assert_eq!(hit, ref_hit, "seed {seed} step {step} line {line}");
+            if !hit {
+                cache.fill(line, false);
+                reference.fill(line);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cache_occupancy_bounded() {
+    forall(20, |rng, _| {
+        let mut cache = Cache::new(4096, 4, 64);
+        for _ in 0..5000 {
+            cache.fill(rng.below(1 << 20), rng.chance(0.3));
+        }
+        assert!(cache.occupancy() <= cache.capacity_lines());
+    });
+}
+
+#[test]
+fn prop_cache_prefetch_accounting_balances() {
+    forall(20, |rng, seed| {
+        let mut cache = Cache::new(2048, 2, 64);
+        let mut fills = 0u64;
+        for _ in 0..3000 {
+            let line = rng.below(256);
+            if rng.chance(0.5) {
+                cache.access(line);
+            } else {
+                // A fill of a resident line is a refresh, not a new
+                // prefetch fill.
+                fills += u64::from(!cache.probe(line));
+                cache.fill(line, true);
+            }
+        }
+        let s = cache.stats;
+        // Every prefetch fill ends up useful, wasted, or still resident.
+        assert!(
+            s.prefetch_useful + s.prefetch_wasted <= fills,
+            "seed {seed}: {s:?} fills {fills}"
+        );
+        assert_eq!(s.prefetch_fills, fills);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Event queue ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_pops_sorted_stable() {
+    forall(30, |rng, seed| {
+        let mut q = EventQueue::new();
+        let mut items = Vec::new();
+        for i in 0..500u64 {
+            let t = rng.below(1000);
+            q.push(t, (t, i));
+            items.push(t);
+        }
+        let mut last = (0u64, 0u64);
+        let mut count = 0;
+        while let Some((t, (t2, seq))) = q.pop() {
+            assert_eq!(t, t2);
+            assert!(
+                t > last.0 || (t == last.0 && seq > last.1) || count == 0,
+                "seed {seed}: order violated"
+            );
+            last = (t, seq);
+            count += 1;
+        }
+        assert_eq!(count, 500);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Topology / enumeration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_enumeration_depth_matches_topology_on_random_trees() {
+    forall(40, |rng, seed| {
+        // Random tree: each switch gets 1-3 switch children up to a
+        // depth budget, then SSDs attach at random nodes.
+        let mut topo = Topology::new();
+        let mut frontier = vec![(topo.root, 0usize)];
+        let max_depth = 1 + rng.below(4) as usize;
+        let mut all_nodes = vec![topo.root];
+        while let Some((node, depth)) = frontier.pop() {
+            if depth >= max_depth {
+                continue;
+            }
+            for _ in 0..(1 + rng.below(3)) {
+                let sw = topo.add(NodeKind::Switch, node);
+                all_nodes.push(sw);
+                frontier.push((sw, depth + 1));
+            }
+        }
+        for _ in 0..(1 + rng.below(6)) {
+            let parent = *rng.choice(&all_nodes);
+            topo.add(NodeKind::CxlSsd, parent);
+        }
+        let e = Enumeration::discover(&topo);
+        assert!(e.verify(&topo), "seed {seed}");
+        // Bridge ranges nest.
+        for node in &topo.nodes {
+            if matches!(node.kind, NodeKind::Switch | NodeKind::RootComplex) {
+                let rec = e.info[&node.id];
+                for &c in &node.children {
+                    let crec = e.info[&c];
+                    assert!(
+                        crec.bus >= rec.secondary && crec.bus <= rec.subordinate,
+                        "seed {seed}: child bus outside bridge window"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_path_latency_monotone_in_depth_and_size() {
+    let cfg = expand_cxl::config::CxlConfig::default();
+    forall(10, |rng, _| {
+        let d1 = 1 + rng.below(3) as usize;
+        let d2 = d1 + 1 + rng.below(2) as usize;
+        let shallow = Topology::chain(d1);
+        let deep = Topology::chain(d2);
+        let fs = Fabric::new(shallow.clone(), &cfg);
+        let fd = Fabric::new(deep.clone(), &cfg);
+        let bytes = 16 + rng.below(128) as usize;
+        let a = fs.path_latency(shallow.ssds()[0], bytes);
+        let b = fd.path_latency(deep.ssds()[0], bytes);
+        assert!(b > a, "deeper path must be slower");
+        let small = fs.path_latency(shallow.ssds()[0], 16);
+        let big = fs.path_latency(shallow.ssds()[0], 4096);
+        assert!(big > small, "bigger payload must serialize longer");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Core model invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_core_time_and_insts_monotone() {
+    forall(30, |rng, seed| {
+        let mut core = CoreModel::new(&expand_cxl::config::CpuConfig::default());
+        let mut last_now = 0;
+        let mut last_insts = 0;
+        for step in 0..1000 {
+            match rng.below(3) {
+                0 => core.advance(rng.below(200)),
+                1 => {
+                    core.miss(rng.below(3_000_000), rng.chance(0.3));
+                }
+                _ => core.hit(rng.below(15_000), rng.chance(0.3)),
+            }
+            assert!(core.now >= last_now, "seed {seed} step {step}: time regressed");
+            assert!(core.insts >= last_insts, "seed {seed} step {step}: insts regressed");
+            last_now = core.now;
+            last_insts = core.insts;
+        }
+        assert!(core.stall_ps <= core.now, "stall cannot exceed elapsed time");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Reflector / timing predictor / tokenizer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_reflector_never_exceeds_capacity_and_serves_inserted() {
+    forall(30, |rng, seed| {
+        let cap_lines = 1 + rng.below(64) as usize;
+        let mut r = Reflector::new(cap_lines * 64, 1000);
+        let mut inserted = std::collections::VecDeque::new();
+        for _ in 0..500 {
+            let line = rng.below(1 << 16);
+            if rng.chance(0.7) {
+                r.insert(line);
+                inserted.push_back(line);
+                if inserted.len() > cap_lines {
+                    inserted.pop_front();
+                }
+            } else if let Some(&recent) = inserted.back() {
+                if r.contains(recent) {
+                    assert!(r.check(recent).is_some(), "seed {seed}");
+                    inserted.retain(|&l| l != recent);
+                }
+            }
+            assert!(r.len() <= cap_lines, "seed {seed}: overflow");
+        }
+    });
+}
+
+#[test]
+fn prop_timing_predictor_bounded_by_history_extremes() {
+    forall(30, |rng, _| {
+        let mut tp = TimingPredictor::new(10);
+        let mut t = 0u64;
+        let mut gaps = Vec::new();
+        for _ in 0..10 {
+            let gap = 10 + rng.below(10_000);
+            t += gap;
+            gaps.push(gap);
+            tp.record_arrival(t);
+        }
+        let g = tp.mean_gap().unwrap();
+        let lo = *gaps[1..].iter().min().unwrap();
+        let hi = *gaps[1..].iter().max().unwrap();
+        assert!(g >= lo.min(hi) && g <= hi, "mean gap {g} outside [{lo},{hi}]");
+    });
+}
+
+#[test]
+fn prop_tokenize_roundtrip_and_python_contract() {
+    forall(50, |rng, _| {
+        let d = rng.range_i64(-63, 64);
+        let tok = tokenize::tokenize_delta(d);
+        assert_eq!(tokenize::detokenize_delta(tok), Some(d));
+        let big = if rng.chance(0.5) { 64 + rng.below(1 << 30) as i64 } else { -(64 + rng.below(1 << 30) as i64) };
+        assert_eq!(tokenize::tokenize_delta(big), 0);
+        // PC hash matches the python formula exactly.
+        let pc = rng.next_u64() >> 1;
+        let expect = (pc.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) % 256;
+        assert_eq!(u64::from(tokenize::hash_pc(pc)), expect);
+    });
+}

@@ -1,0 +1,107 @@
+//! Integration: real AOT artifacts -> PJRT compile -> prediction.
+//! Requires `make artifacts` (skipped with a note otherwise).
+
+use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
+
+fn runtime() -> Option<std::rc::Rc<Runtime>> {
+    if !Runtime::artifacts_available("artifacts") {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT CPU client"))
+}
+
+#[test]
+fn expand_artifact_predicts_constant_stride() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.predictor("expand").expect("compile expand.hlo.txt");
+    let shape = p.borrow().shape();
+    assert_eq!(shape.delta_vocab, 128);
+    // Constant stride +3 => token 67, single PC.
+    let win = WindowInput {
+        deltas: vec![67; shape.window],
+        pcs: vec![42; shape.window],
+        hint: 0.0,
+    };
+    let out = p.borrow_mut().predict(&[win]).expect("inference");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].tokens.len(), shape.n_future);
+    eprintln!("stride+3 predictions: {:?}", out[0].tokens);
+    // The trained model must continue a constant stride.
+    assert_eq!(out[0].tokens[0], 67, "first-offset prediction continues stride");
+}
+
+#[test]
+fn manifest_probes_match_runtime_exactly() {
+    // The manifest records argmax tokens computed in Python at export
+    // time for canned windows; the PJRT path must reproduce them bit-for
+    // bit. This pins the whole interchange (tokenizer contract, HLO text
+    // with full constants, literal layout, tuple unwrapping, argmax).
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    let j = expand_cxl::util::json::parse(&text).unwrap();
+    for (name, _) in &manifest.models {
+        let p = rt.predictor(name).unwrap();
+        let shape = p.borrow().shape();
+        let probes = j
+            .at(&["models", name, "probes"])
+            .and_then(|x| x.as_obj())
+            .expect("probes present");
+        for (label, probe) in probes {
+            let delta = probe.get("delta_token").unwrap().as_u64().unwrap() as i32;
+            let pc = probe.get("pc_token").unwrap().as_u64().unwrap() as i32;
+            let expect: Vec<u16> = probe
+                .get("expect_tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_u64().unwrap() as u16)
+                .collect();
+            let win = WindowInput {
+                deltas: vec![delta; shape.window],
+                pcs: vec![pc; shape.window],
+                hint: 0.0,
+            };
+            let out = p.borrow_mut().predict(&[win]).unwrap();
+            assert_eq!(out[0].tokens, expect, "{name}/{label}");
+        }
+    }
+}
+
+#[test]
+fn all_three_models_load_and_run() {
+    let Some(rt) = runtime() else { return };
+    for name in ["expand", "ml1", "ml2"] {
+        let p = rt.predictor(name).expect(name);
+        let shape = p.borrow().shape();
+        let win = WindowInput {
+            deltas: (0..shape.window as i32).map(|i| 64 + (i % 3)).collect(),
+            pcs: vec![7; shape.window],
+            hint: 0.0,
+        };
+        let out = p.borrow_mut().predict(&[win]).unwrap();
+        eprintln!("{name}: tokens={:?} margins[0]={:.2}", out[0].tokens, out[0].margins[0]);
+        assert!(out[0].tokens.iter().all(|&t| (t as usize) < shape.delta_vocab));
+    }
+}
+
+#[test]
+fn batching_pads_and_chunks() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.predictor("expand").unwrap();
+    let shape = p.borrow().shape();
+    let mk = |tok: i32| WindowInput {
+        deltas: vec![tok; shape.window],
+        pcs: vec![9; shape.window],
+        hint: 0.0,
+    };
+    // 6 windows > batch of 4: must chunk into two executions.
+    let wins: Vec<WindowInput> = (0..6).map(|i| mk(65 + i % 2)).collect();
+    let out = p.borrow_mut().predict(&wins).unwrap();
+    assert_eq!(out.len(), 6);
+    // Same-input windows get identical predictions (determinism).
+    assert_eq!(out[0].tokens, out[2].tokens);
+    assert_eq!(out[1].tokens, out[3].tokens);
+}
