@@ -39,6 +39,114 @@ impl MediaKind {
             MediaKind::Dram => "dram",
         }
     }
+
+    /// Relative capacity weight used by capacity-proportional address
+    /// interleaving: flash packs denser than SCM, which packs denser
+    /// than a DRAM expander, so a heterogeneous pool maps proportionally
+    /// more of the address space onto the denser endpoints.
+    pub fn capacity_weight(&self) -> u32 {
+        match self {
+            MediaKind::ZNand => 4,
+            MediaKind::Pmem => 2,
+            MediaKind::Dram => 1,
+        }
+    }
+}
+
+/// Shape of the CXL fabric between the root complex and the CXL-SSD
+/// endpoints (`[cxl] topology = ...` / `--topology`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// RC -> `cxl.switch_levels` switches -> one CXL-SSD (the seed
+    /// simulator's shape; `switch_levels` keeps controlling the depth).
+    Chain,
+    /// Balanced tree: `levels` switch tiers of `fanout` DSPs each, with
+    /// `ssds` endpoints round-robined across the leaf tier.
+    Tree { levels: usize, fanout: usize, ssds: usize },
+    /// Custom nested tree, e.g. `(x,s(x,x),s(s(z,p)))`: `s(...)` is a
+    /// switch, `x`/`z`/`p`/`d` are endpoints (`x` = config-default media,
+    /// the letters force Z-NAND / PMEM / DRAM). See
+    /// [`crate::cxl::Topology::parse_custom`].
+    Custom(String),
+}
+
+impl TopologySpec {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("chain") {
+            return Ok(TopologySpec::Chain);
+        }
+        if let Some(rest) = t.strip_prefix("tree:") {
+            let parts: Vec<&str> = rest.split(',').collect();
+            anyhow::ensure!(
+                parts.len() == 3,
+                "tree topology is tree:<levels>,<fanout>,<ssds>, got {s:?}"
+            );
+            let num = |i: usize, what: &str| -> anyhow::Result<usize> {
+                parts[i]
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad {what} in topology {s:?}"))
+            };
+            let (levels, fanout, ssds) = (num(0, "levels")?, num(1, "fanout")?, num(2, "ssds")?);
+            anyhow::ensure!(fanout >= 1 && ssds >= 1, "tree topology needs fanout/ssds >= 1");
+            return Ok(TopologySpec::Tree { levels, fanout, ssds });
+        }
+        if t.starts_with('(') {
+            // Validate eagerly so config errors surface at parse time.
+            crate::cxl::topology::Topology::parse_custom(t)?;
+            return Ok(TopologySpec::Custom(t.to_string()));
+        }
+        anyhow::bail!(
+            "unknown topology {s:?} (chain | tree:<levels>,<fanout>,<ssds> | (s(x,..),..))"
+        )
+    }
+
+    /// Compact render for `config show` and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            TopologySpec::Chain => "chain".to_string(),
+            TopologySpec::Tree { levels, fanout, ssds } => {
+                format!("tree:{levels},{fanout},{ssds}")
+            }
+            TopologySpec::Custom(s) => s.clone(),
+        }
+    }
+}
+
+/// How the host physical address space is distributed across the pool's
+/// endpoints (`[cxl] interleave = ...` / `--interleave`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterleavePolicy {
+    /// Consecutive 64 B lines round-robin across endpoints (max
+    /// bandwidth, destroys page locality inside each device).
+    Line,
+    /// Consecutive device pages round-robin across endpoints (preserves
+    /// the internal DRAM cache's page locality; the default).
+    Page,
+    /// Page-granular striping weighted by each endpoint's media capacity
+    /// ([`MediaKind::capacity_weight`]); equals `Page` for homogeneous
+    /// pools.
+    Capacity,
+}
+
+impl InterleavePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "line" | "cacheline" => Ok(InterleavePolicy::Line),
+            "page" => Ok(InterleavePolicy::Page),
+            "capacity" | "cap" => Ok(InterleavePolicy::Capacity),
+            _ => anyhow::bail!("unknown interleave policy {s:?} (line|page|capacity)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterleavePolicy::Line => "line",
+            InterleavePolicy::Page => "page",
+            InterleavePolicy::Capacity => "capacity",
+        }
+    }
 }
 
 /// CPU core + ROB model (Table 1a: O3 12 cores @ 3.6 GHz, 512-entry ROB).
@@ -174,6 +282,10 @@ pub struct CxlConfig {
     pub switch_levels: usize,
     /// Downstream fan-out used when building tree topologies.
     pub fanout: usize,
+    /// Fabric shape (chain, balanced tree, or custom nested tree).
+    pub topology: TopologySpec,
+    /// Address-interleaving policy across the pool's endpoints.
+    pub interleave: InterleavePolicy,
 }
 
 impl Default for CxlConfig {
@@ -188,7 +300,23 @@ impl Default for CxlConfig {
             rc_latency_ns: 40.0,
             switch_levels: 1,
             fanout: 4,
+            topology: TopologySpec::Chain,
+            interleave: InterleavePolicy::Page,
         }
+    }
+}
+
+impl CxlConfig {
+    /// Materialize the configured fabric shape.
+    pub fn build_topology(&self) -> anyhow::Result<crate::cxl::Topology> {
+        use crate::cxl::Topology;
+        Ok(match &self.topology {
+            TopologySpec::Chain => Topology::chain(self.switch_levels),
+            TopologySpec::Tree { levels, fanout, ssds } => {
+                Topology::tree(*levels, *fanout, *ssds)
+            }
+            TopologySpec::Custom(spec) => Topology::parse_custom(spec)?,
+        })
     }
 }
 
@@ -391,6 +519,8 @@ impl SimConfig {
             ("cxl", "link_latency_ns") => self.cxl.link_latency_ns = num!(),
             ("cxl", "lanes") => self.cxl.lanes = num!(),
             ("cxl", "fanout") => self.cxl.fanout = num!(),
+            ("cxl", "topology") => self.cxl.topology = TopologySpec::parse(v)?,
+            ("cxl", "interleave") => self.cxl.interleave = InterleavePolicy::parse(v)?,
             ("ssd", "media") => self.ssd = SsdConfig::with_media(MediaKind::parse(v)?),
             ("ssd", "channels") => self.ssd.channels = num!(),
             ("ssd", "internal_dram_bytes") => self.ssd.internal_dram_bytes = num!(),
@@ -424,7 +554,8 @@ impl SimConfig {
             "[cpu] cores={} freq_ghz={} rob={} ipc={} mshrs={}\n\
              [l1d] {}KB/{}w {}cyc\n[l2] {}KB/{}w {}cyc\n[llc] {}MB/{}w {}cyc\n\
              [dram] tRP/tRCD/tCAS={}ns/{}ns/{}ns ch={}\n\
-             [cxl] {} GT/s x{} flit={}B switch={}ns/hop link={}ns levels={} fanout={}\n\
+             [cxl] {} GT/s x{} flit={}B switch={}ns/hop link={}ns levels={} fanout={} \
+             topo={} il={}\n\
              [ssd] media={} read={}ns write={}ns ch={} idram={}MB ctrl={}ns\n\
              [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x}",
@@ -439,6 +570,7 @@ impl SimConfig {
             self.dram.t_rp_ns, self.dram.t_rcd_ns, self.dram.t_cas_ns, self.dram.channels,
             self.cxl.gts, self.cxl.lanes, self.cxl.flit_bytes, self.cxl.switch_latency_ns,
             self.cxl.link_latency_ns, self.cxl.switch_levels, self.cxl.fanout,
+            self.cxl.topology.describe(), self.cxl.interleave.name(),
             self.ssd.media.name(), self.ssd.media_read / 1000, self.ssd.media_write / 1000,
             self.ssd.channels, self.ssd.internal_dram_bytes >> 20, self.ssd.controller_ns,
             self.expand.reflector_bytes >> 10, self.expand.window, self.expand.predict_stride,
@@ -483,6 +615,45 @@ mod tests {
         assert_eq!(c.prefetcher, PrefetcherKind::Expand);
         assert!(c.apply("nope", "x", "1").is_err());
         assert!(c.apply("cpu", "cores", "abc").is_err());
+    }
+
+    #[test]
+    fn topology_spec_parses_and_applies() {
+        assert_eq!(TopologySpec::parse("chain").unwrap(), TopologySpec::Chain);
+        assert_eq!(
+            TopologySpec::parse("tree:2,4,8").unwrap(),
+            TopologySpec::Tree { levels: 2, fanout: 4, ssds: 8 }
+        );
+        let custom = TopologySpec::parse("(x,s(x,x))").unwrap();
+        assert_eq!(custom, TopologySpec::Custom("(x,s(x,x))".to_string()));
+        assert!(TopologySpec::parse("ring").is_err());
+        assert!(TopologySpec::parse("tree:2,4").is_err());
+        assert!(TopologySpec::parse("(q)").is_err(), "bad endpoint letter");
+
+        let mut c = SimConfig::default();
+        c.apply("cxl", "topology", "tree:1,2,4").unwrap();
+        c.apply("cxl", "interleave", "line").unwrap();
+        assert_eq!(c.cxl.topology, TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 });
+        assert_eq!(c.cxl.interleave, InterleavePolicy::Line);
+        let topo = c.cxl.build_topology().unwrap();
+        assert_eq!(topo.ssds().len(), 4);
+        assert!(c.render().contains("tree:1,2,4"));
+    }
+
+    #[test]
+    fn default_topology_matches_seed_chain() {
+        let c = SimConfig::default();
+        let topo = c.cxl.build_topology().unwrap();
+        let ssds = topo.ssds();
+        assert_eq!(ssds.len(), 1);
+        assert_eq!(topo.switch_depth(ssds[0]), c.cxl.switch_levels);
+        assert_eq!(c.cxl.interleave, InterleavePolicy::Page);
+    }
+
+    #[test]
+    fn capacity_weights_rank_by_density() {
+        assert!(MediaKind::ZNand.capacity_weight() > MediaKind::Pmem.capacity_weight());
+        assert!(MediaKind::Pmem.capacity_weight() > MediaKind::Dram.capacity_weight());
     }
 
     #[test]

@@ -57,7 +57,11 @@ impl Enumeration {
                     depth + u8::from(topo.nodes[node].kind == NodeKind::Switch);
                 let mut max_bus = child_bus;
                 for &c in &topo.nodes[node].children {
-                    max_bus = walk(topo, c, child_bus, child_depth, next_bus, info);
+                    // A leaf sibling enumerated after a bridge sibling
+                    // reports the shared secondary bus, which is lower
+                    // than the bridge subtree's range — subordinate must
+                    // track the maximum across all children, not the last.
+                    max_bus = max_bus.max(walk(topo, c, child_bus, child_depth, next_bus, info));
                 }
                 rec.subordinate = max_bus;
             }
@@ -113,6 +117,30 @@ mod tests {
         let root = e.info[&t.root];
         assert_eq!(root.bus, 0);
         assert!(root.subordinate >= root.secondary);
+    }
+
+    #[test]
+    fn subordinate_covers_bridge_subtrees_before_leaf_siblings() {
+        // A switch whose children are [bridge, leaf] in that order: the
+        // leaf answers on the shared secondary bus, so the parent's
+        // subordinate must still cover the bridge subtree's higher buses.
+        let mut t = Topology::new();
+        let sw = t.add(NodeKind::Switch, t.root);
+        let deep = t.add(NodeKind::Switch, sw);
+        t.add(NodeKind::CxlSsd, deep);
+        t.add(NodeKind::CxlSsd, sw); // leaf sibling AFTER the bridge
+        let e = Enumeration::discover(&t);
+        assert!(e.verify(&t));
+        let sw_rec = e.info[&sw];
+        let deep_rec = e.info[&deep];
+        assert!(
+            deep_rec.subordinate <= sw_rec.subordinate,
+            "bridge subtree {}..{} escapes parent range {}..{}",
+            deep_rec.secondary,
+            deep_rec.subordinate,
+            sw_rec.secondary,
+            sw_rec.subordinate
+        );
     }
 
     #[test]

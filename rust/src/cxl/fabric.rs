@@ -58,9 +58,7 @@ impl Fabric {
     pub fn path_latency(&self, dev: NodeId, bytes: usize) -> Ps {
         let path = self.topo.path_from_root(dev);
         let hops = (path.len() - 1) as u64; // links on the path
-        let switches = self
-            .topo
-            .path_from_root(dev)
+        let switches = path
             .iter()
             .filter(|&&n| self.topo.nodes[n].kind == NodeKind::Switch)
             .count() as u64;
@@ -151,8 +149,16 @@ impl Fabric {
 
     /// One-way host -> device notification (CXL.io hit notify, small).
     pub fn io_notify(&mut self, dev: NodeId, now: Ps) -> Ps {
+        if let Some(t) = self.traffic.get_mut(&dev) {
+            t.record_io(16);
+        }
         let at_dev = self.traverse_lane(dev, now, 16, Dir::Down, Lane::Prefetch);
         at_dev - now
+    }
+
+    /// Per-endpoint traffic counters (zero record for non-endpoints).
+    pub fn traffic_for(&self, dev: NodeId) -> TrafficStats {
+        self.traffic.get(&dev).copied().unwrap_or_default()
     }
 }
 
@@ -210,6 +216,34 @@ mod tests {
         let a = f.read_roundtrip(ssd, 0, M2S::ReqMemRd, 0);
         let b = f.read_roundtrip(ssd, 0, M2S::ReqMemRd, 0);
         assert!(b > a, "queued {b} > first {a}");
+    }
+
+    #[test]
+    fn sibling_endpoints_queue_on_shared_upstream_link() {
+        // Two SSDs behind the same switch: the RC->switch link is shared,
+        // so simultaneous requests to *different* endpoints serialize.
+        let topo = Topology::tree(1, 1, 2);
+        let ssds = topo.ssds();
+        assert_eq!(ssds.len(), 2);
+        let mut f = Fabric::new(topo, &CxlConfig::default());
+        let a = f.read_roundtrip(ssds[0], 0, M2S::ReqMemRd, 0);
+        let b = f.read_roundtrip(ssds[1], 0, M2S::ReqMemRd, 0);
+        assert!(b > a, "shared-link queuing: {b} > {a}");
+        // Traffic is accounted per endpoint, not pooled.
+        assert_eq!(f.traffic_for(ssds[0]).m2s_req, 1);
+        assert_eq!(f.traffic_for(ssds[1]).m2s_req, 1);
+        assert_eq!(f.traffic_for(ssds[0]).s2m_drs, 1);
+    }
+
+    #[test]
+    fn io_notify_records_per_endpoint_traffic() {
+        let topo = Topology::tree(1, 2, 2);
+        let ssds = topo.ssds();
+        let mut f = Fabric::new(topo, &CxlConfig::default());
+        f.io_notify(ssds[1], 0);
+        assert_eq!(f.traffic_for(ssds[1]).m2s_io, 1);
+        assert_eq!(f.traffic_for(ssds[1]).bytes_down, 16);
+        assert_eq!(f.traffic_for(ssds[0]).m2s_io, 0);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! timeliness mechanism depends on knowing, per endpoint, how many switch
 //! traversals its VH contains.
 
+use crate::config::MediaKind;
+
 /// Index into [`Topology::nodes`].
 pub type NodeId = usize;
 
@@ -29,6 +31,9 @@ pub struct Node {
     pub kind: NodeKind,
     pub parent: Option<NodeId>,
     pub children: Vec<NodeId>,
+    /// Endpoint media override (custom topologies only; `None` means the
+    /// pool uses the configured default media).
+    pub media: Option<MediaKind>,
 }
 
 /// The fabric graph (a tree rooted at the RC — one VH per host).
@@ -47,6 +52,7 @@ impl Topology {
                 kind: NodeKind::RootComplex,
                 parent: None,
                 children: Vec::new(),
+                media: None,
             }],
             root: 0,
         }
@@ -55,8 +61,21 @@ impl Topology {
     /// Add a node under `parent`.
     pub fn add(&mut self, kind: NodeKind, parent: NodeId) -> NodeId {
         let id = self.nodes.len();
-        self.nodes.push(Node { id, kind, parent: Some(parent), children: Vec::new() });
+        self.nodes.push(Node {
+            id,
+            kind,
+            parent: Some(parent),
+            children: Vec::new(),
+            media: None,
+        });
         self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Add a CXL-SSD endpoint with an optional media override.
+    pub fn add_ssd(&mut self, parent: NodeId, media: Option<MediaKind>) -> NodeId {
+        let id = self.add(NodeKind::CxlSsd, parent);
+        self.nodes[id].media = media;
         id
     }
 
@@ -92,6 +111,75 @@ impl Topology {
             t.add(NodeKind::CxlSsd, p);
         }
         t
+    }
+
+    /// Parse a custom tree description: a parenthesized child list under
+    /// the root complex, where `s(...)` is a switch and `x`/`z`/`p`/`d`
+    /// are CXL-SSD endpoints (`x` = config-default media; the letters
+    /// force Z-NAND / PMEM / DRAM). Example: `(x,s(x,x),s(s(z,p)))`
+    /// hangs one endpoint directly off the RC, two behind one switch, and
+    /// a Z-NAND + PMEM pair behind two switch tiers.
+    pub fn parse_custom(spec: &str) -> anyhow::Result<Topology> {
+        fn parse_children(
+            t: &mut Topology,
+            parent: NodeId,
+            chars: &[char],
+            pos: &mut usize,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                chars.get(*pos) == Some(&'('),
+                "topology spec: expected '(' at position {}",
+                *pos
+            );
+            *pos += 1;
+            loop {
+                match chars.get(*pos) {
+                    Some(&'s') => {
+                        *pos += 1;
+                        let sw = t.add(NodeKind::Switch, parent);
+                        parse_children(t, sw, chars, pos)?;
+                    }
+                    Some(&c) if matches!(c, 'x' | 'z' | 'p' | 'd') => {
+                        *pos += 1;
+                        let media = match c {
+                            'z' => Some(MediaKind::ZNand),
+                            'p' => Some(MediaKind::Pmem),
+                            'd' => Some(MediaKind::Dram),
+                            _ => None,
+                        };
+                        t.add_ssd(parent, media);
+                    }
+                    other => anyhow::bail!(
+                        "topology spec: expected 's' or endpoint (x|z|p|d) at position {}, \
+                         got {other:?}",
+                        *pos
+                    ),
+                }
+                match chars.get(*pos) {
+                    Some(&',') => *pos += 1,
+                    Some(&')') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    other => anyhow::bail!(
+                        "topology spec: expected ',' or ')' at position {}, got {other:?}",
+                        *pos
+                    ),
+                }
+            }
+        }
+
+        let chars: Vec<char> = spec.chars().filter(|c| !c.is_whitespace()).collect();
+        let mut t = Topology::new();
+        let root = t.root;
+        let mut pos = 0usize;
+        parse_children(&mut t, root, &chars, &mut pos)?;
+        anyhow::ensure!(
+            pos == chars.len(),
+            "topology spec: trailing characters after position {pos}"
+        );
+        anyhow::ensure!(!t.ssds().is_empty(), "topology spec has no CXL-SSD endpoints");
+        Ok(t)
     }
 
     /// All endpoint SSDs.
@@ -165,5 +253,34 @@ mod tests {
         let p = t.path_from_root(ssd);
         assert_eq!(p[0], t.root);
         assert_eq!(*p.last().unwrap(), ssd);
+    }
+
+    #[test]
+    fn custom_spec_builds_mixed_depths_and_media() {
+        let t = Topology::parse_custom("(x, s(z, p), s(s(d)))").unwrap();
+        let ssds = t.ssds();
+        assert_eq!(ssds.len(), 4);
+        let depths: Vec<usize> = ssds.iter().map(|&s| t.switch_depth(s)).collect();
+        assert_eq!(depths, vec![0, 1, 1, 2]);
+        let media: Vec<Option<MediaKind>> = ssds.iter().map(|&s| t.nodes[s].media).collect();
+        assert_eq!(
+            media,
+            vec![
+                None,
+                Some(MediaKind::ZNand),
+                Some(MediaKind::Pmem),
+                Some(MediaKind::Dram)
+            ]
+        );
+    }
+
+    #[test]
+    fn custom_spec_rejects_garbage() {
+        assert!(Topology::parse_custom("").is_err());
+        assert!(Topology::parse_custom("(s(x)").is_err(), "unterminated");
+        assert!(Topology::parse_custom("(x)y").is_err(), "trailing");
+        assert!(Topology::parse_custom("(q)").is_err(), "unknown endpoint");
+        assert!(Topology::parse_custom("(s())").is_err(), "empty switch");
+        assert!(Topology::parse_custom("(s(s(s())))").is_err(), "no endpoints");
     }
 }

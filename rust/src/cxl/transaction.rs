@@ -70,6 +70,8 @@ pub struct TrafficStats {
     pub s2m_ndr: u64,
     pub s2m_bisnp: u64,
     pub s2m_bisnpdata: u64,
+    /// CXL.io sideband messages (reflector hit notifications).
+    pub m2s_io: u64,
     pub bytes_down: u64,
     pub bytes_up: u64,
 }
@@ -83,6 +85,11 @@ impl TrafficStats {
             M2S::RwDMemWr => self.m2s_wr += 1,
             M2S::BIRsp => self.m2s_birsp += 1,
         }
+    }
+
+    pub fn record_io(&mut self, bytes: usize) {
+        self.m2s_io += 1;
+        self.bytes_down += bytes as u64;
     }
 
     pub fn record_s2m(&mut self, op: S2M) {

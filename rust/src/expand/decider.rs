@@ -39,6 +39,22 @@ pub struct DeciderStats {
     pub oov_stops: u64,
     /// Prefetches dropped by SSD-channel backpressure.
     pub dropped: u64,
+    /// Pattern extensions skipped because another pool endpoint owns the
+    /// line — a device can only stage and push data it stores.
+    pub foreign_skips: u64,
+}
+
+impl DeciderStats {
+    /// Accumulate another decider's counters (pool-wide aggregation).
+    pub fn merge(&mut self, other: &DeciderStats) {
+        self.observations += other.observations;
+        self.inferences += other.inferences;
+        self.pushes += other.pushes;
+        self.behavior_changes += other.behavior_changes;
+        self.oov_stops += other.oov_stops;
+        self.dropped += other.dropped;
+        self.foreign_skips += other.foreign_skips;
+    }
 }
 
 /// SSD-side decider.
@@ -127,6 +143,8 @@ impl Decider {
     /// cadence and advances stream consumption, topping the push frontier
     /// back up to the runahead depth (`consumed` = hits since the last
     /// notification when notifications are sampled).
+    /// `owns` tells the decider which lines its own device stores under
+    /// the pool's interleave policy (always-true for a 1-device pool).
     pub fn on_host_hit(
         &mut self,
         consumed: usize,
@@ -134,13 +152,14 @@ impl Decider {
         ssd: &mut CxlSsd,
         fabric: &mut Fabric,
         dev: NodeId,
+        owns: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         self.timing.record(now, consumed as u64);
         self.steps_ahead -= consumed as i64;
         if !self.stream_mode {
             return Vec::new();
         }
-        self.extend_frontier(now, ssd, fabric, dev)
+        self.extend_frontier(now, ssd, fabric, dev, owns)
     }
 
     /// Push pattern-extension targets until the frontier is RUNAHEAD
@@ -151,6 +170,7 @@ impl Decider {
         ssd: &mut CxlSsd,
         fabric: &mut Fabric,
         dev: NodeId,
+        owns: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         let runahead = if self.stream_mode {
             crate::prefetch::ml::RUNAHEAD as i64
@@ -171,6 +191,14 @@ impl Decider {
                 break;
             }
             let tline = self.frontier_line as u64;
+            // A device can only stage and BISnpData-push lines it stores;
+            // pattern extensions that cross the interleave boundary are
+            // skipped (the owning endpoint's decider covers its own
+            // stream). The frontier still advances past them.
+            if !owns(tline) {
+                self.stats.foreign_skips += 1;
+                continue;
+            }
             if !self.dedup_push(tline) {
                 continue;
             }
@@ -203,6 +231,7 @@ impl Decider {
         ssd: &mut CxlSsd,
         fabric: &mut Fabric,
         dev: NodeId,
+        owns: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         self.stats.observations += 1;
         self.timing.record_arrival(now);
@@ -223,7 +252,7 @@ impl Decider {
             return Vec::new();
         }
         self.since_predict = 0;
-        self.predict_and_push(line, now, ssd, fabric, dev)
+        self.predict_and_push(line, now, ssd, fabric, dev, owns)
     }
 
     fn predict_and_push(
@@ -233,6 +262,7 @@ impl Decider {
         ssd: &mut CxlSsd,
         fabric: &mut Fabric,
         dev: NodeId,
+        owns: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         let d: Vec<u16> = self.deltas.iter().copied().collect();
         let p: Vec<u16> = self.pcs.iter().copied().collect();
@@ -281,7 +311,7 @@ impl Decider {
         self.frontier_line = line as i64;
         self.frontier_idx = 0;
         self.steps_ahead = 0;
-        self.extend_frontier(now, ssd, fabric, dev)
+        self.extend_frontier(now, ssd, fabric, dev, owns)
     }
 
     /// Decider metadata footprint: window tokens + timing buffer +
@@ -325,7 +355,8 @@ mod tests {
         let mut pushes = Vec::new();
         for i in 0..64u64 {
             let line = 1000 + i * 2; // stride 2
-            let out = d.on_memrd_pc(line, 0x42, i * 1_000_000, &mut ssd, &mut fabric, dev);
+            let out =
+                d.on_memrd_pc(line, 0x42, i * 1_000_000, &mut ssd, &mut fabric, dev, &|_| true);
             pushes.extend(out);
         }
         assert!(!pushes.is_empty());
@@ -344,7 +375,7 @@ mod tests {
         let gap = 2_000_000u64; // 2 us between misses
         let mut last = Vec::new();
         for i in 0..40u64 {
-            last = d.on_memrd_pc(5000 + i, 0x42, i * gap, &mut ssd, &mut fabric, dev);
+            last = d.on_memrd_pc(5000 + i, 0x42, i * gap, &mut ssd, &mut fabric, dev, &|_| true);
         }
         assert!(!last.is_empty());
         let now = 39 * gap;
@@ -359,10 +390,34 @@ mod tests {
     }
 
     #[test]
+    fn foreign_lines_are_never_staged_or_pushed() {
+        // An ownership predicate that rejects everything: the decider
+        // must not stage, push, or charge fabric traffic for lines its
+        // device does not store.
+        let (mut d, mut ssd, mut fabric, dev) = harness();
+        let mut out = Vec::new();
+        for i in 0..64u64 {
+            out.extend(d.on_memrd_pc(
+                2000 + i * 2,
+                0x42,
+                i * 1_000_000,
+                &mut ssd,
+                &mut fabric,
+                dev,
+                &|_| false,
+            ));
+        }
+        assert!(out.is_empty());
+        assert!(d.stats.foreign_skips > 0, "{:?}", d.stats);
+        assert_eq!(ssd.stats.staged_reads, 0, "nothing staged for foreign lines");
+        assert_eq!(fabric.traffic_for(dev).s2m_bisnpdata, 0, "no phantom pushes");
+    }
+
+    #[test]
     fn no_predictions_before_window_full() {
         let (mut d, mut ssd, mut fabric, dev) = harness();
         for i in 0..31u64 {
-            let out = d.on_memrd_pc(i, 1, i * 1000, &mut ssd, &mut fabric, dev);
+            let out = d.on_memrd_pc(i, 1, i * 1000, &mut ssd, &mut fabric, dev, &|_| true);
             assert!(out.is_empty());
         }
         assert_eq!(d.stats.inferences, 0);

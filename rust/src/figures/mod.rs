@@ -7,6 +7,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod sweep;
 pub mod table1;
 
 use crate::config::SimConfig;
@@ -106,45 +107,23 @@ pub fn emit(table: &Table, opts: &FigOpts, name: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Run every harness (CLI `figures all`).
+/// Run every harness serially (CLI `figures all`; pass `--jobs N` to the
+/// CLI — or call [`sweep::run_all`] — for the parallel sweep).
 pub fn run_all(opts: &FigOpts) -> anyhow::Result<()> {
-    fig1::run(opts)?;
-    fig2::run_2a(opts)?;
-    fig2::run_2b(opts)?;
-    fig2::run_2c(opts)?;
-    table1::run_1c(opts)?;
-    table1::run_1d(opts)?;
-    fig4::run_4a(opts)?;
-    fig4::run_4b(opts)?;
-    fig4::run_4c(opts)?;
-    fig4::run_4d(opts)?;
-    fig4::run_4e(opts)?;
-    fig5::run(opts)?;
-    fig6::run(opts)?;
-    fig7::run_7a(opts)?;
-    fig7::run_7b(opts)?;
-    Ok(())
+    sweep::run_all(opts, 1)
 }
 
-/// Dispatch one harness by name.
+/// Dispatch one harness by name ([`sweep::JOBS`] is the single source
+/// of truth; only aliases and `all` are special-cased here).
 pub fn run_one(name: &str, opts: &FigOpts) -> anyhow::Result<()> {
+    if name == "all" {
+        return run_all(opts);
+    }
+    if let Some(&(_, f)) = sweep::JOBS.iter().find(|&&(n, _)| n == name) {
+        return f(opts);
+    }
     match name {
-        "fig1" => fig1::run(opts),
-        "fig2a" => fig2::run_2a(opts),
-        "fig2b" => fig2::run_2b(opts),
-        "fig2c" => fig2::run_2c(opts),
-        "table1c" => table1::run_1c(opts),
-        "table1d" => table1::run_1d(opts),
-        "fig4a" => fig4::run_4a(opts),
-        "fig4b" => fig4::run_4b(opts),
-        "fig4c" => fig4::run_4c(opts),
-        "fig4d" => fig4::run_4d(opts),
-        "fig4e" => fig4::run_4e(opts),
-        "fig5" | "fig5a" | "fig5b" => fig5::run(opts),
-        "fig6" => fig6::run(opts),
-        "fig7a" => fig7::run_7a(opts),
-        "fig7b" => fig7::run_7b(opts),
-        "all" => run_all(opts),
+        "fig5a" | "fig5b" => fig5::run(opts),
         other => anyhow::bail!("unknown figure {other:?} (try fig1..fig7b, table1c, table1d, all)"),
     }
 }

@@ -1,0 +1,73 @@
+//! Parallel sweep engine for the figure suite.
+//!
+//! Each harness is an independent job: it builds its own `Runner`s (the
+//! simulator is `Rc`/`RefCell`-based, so nothing simulation-side is
+//! shared across threads) and writes its own CSV, keyed only by the
+//! deterministic seed in [`FigOpts`]. That makes the suite embarrassingly
+//! parallel: a scoped worker pool pulls jobs off a shared counter, and a
+//! parallel run's CSVs are byte-identical to a serial run's.
+
+use super::FigOpts;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One figure harness entry point.
+pub type FigFn = fn(&FigOpts) -> anyhow::Result<()>;
+
+/// Every harness behind `figures all`, in serial emission order.
+pub const JOBS: &[(&str, FigFn)] = &[
+    ("fig1", super::fig1::run as FigFn),
+    ("fig2a", super::fig2::run_2a),
+    ("fig2b", super::fig2::run_2b),
+    ("fig2c", super::fig2::run_2c),
+    ("table1c", super::table1::run_1c),
+    ("table1d", super::table1::run_1d),
+    ("fig4a", super::fig4::run_4a),
+    ("fig4b", super::fig4::run_4b),
+    ("fig4c", super::fig4::run_4c),
+    ("fig4d", super::fig4::run_4d),
+    ("fig4e", super::fig4::run_4e),
+    ("fig5", super::fig5::run),
+    ("fig6", super::fig6::run),
+    ("fig7a", super::fig7::run_7a),
+    ("fig7b", super::fig7::run_7b),
+];
+
+/// Run a list of harness jobs across `workers` threads (1 = serial, with
+/// figure output emitted in listed order). Fails if any job failed.
+pub fn run_jobs(jobs: &[(&str, FigFn)], opts: &FigOpts, workers: usize) -> anyhow::Result<()> {
+    let workers = workers.max(1).min(jobs.len().max(1));
+    if workers <= 1 {
+        for (name, f) in jobs {
+            f(opts).map_err(|e| anyhow::anyhow!("figure {name} failed: {e}"))?;
+        }
+        return Ok(());
+    }
+    let next = AtomicUsize::new(0);
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(&(name, f)) = jobs.get(i) else { break };
+                eprintln!("[sweep] {name} ...");
+                match f(opts) {
+                    Ok(()) => eprintln!("[sweep] {name} done"),
+                    Err(e) => failures.lock().unwrap().push(format!("{name}: {e}")),
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    anyhow::ensure!(
+        failures.is_empty(),
+        "parallel sweep failures: {}",
+        failures.join("; ")
+    );
+    Ok(())
+}
+
+/// `figures all [--jobs N]`: the full suite, N-way parallel.
+pub fn run_all(opts: &FigOpts, workers: usize) -> anyhow::Result<()> {
+    run_jobs(JOBS, opts, workers)
+}

@@ -6,15 +6,16 @@
 //!   enumerate  walk the CXL fabric: bus numbers, depths, DSLBIS, e2e latency
 //!   config     show the effective configuration for a preset/overrides
 
-use expand_cxl::config::{parse as cfgparse, presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
-use expand_cxl::cxl::configspace::ConfigSpace;
+use expand_cxl::config::{
+    parse as cfgparse, presets, Backing, InterleavePolicy, MediaKind, PrefetcherKind, SimConfig,
+    SsdConfig, TopologySpec,
+};
 use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
-use expand_cxl::expand::timeliness::setup_device;
 use expand_cxl::figures::{self, FigOpts};
 use expand_cxl::runtime::Runtime;
 use expand_cxl::sim::runner::simulate;
-use expand_cxl::ssd::CxlSsd;
+use expand_cxl::ssd::DevicePool;
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
 use expand_cxl::workloads::WorkloadId;
 
@@ -23,20 +24,23 @@ const COMMANDS: &[CommandHelp] = &[
         name: "run",
         summary: "simulate one workload under a chosen prefetcher",
         usage: "expand run <workload> [--prefetcher none|rule1|rule2|ml1|ml2|expand] \
-                [--levels N] [--media znand|pmem|dram] [--backing cxl|local] \
-                [--accesses N] [--seed S] [--preset NAME] [--config FILE] [--set sec.key=v]",
+                [--levels N] [--topology chain|tree:L,F,S|'(s(x,x),x)'] \
+                [--interleave line|page|capacity] [--media znand|pmem|dram] \
+                [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
+                [--config FILE] [--set sec.key=v]",
     },
     CommandHelp {
         name: "figures",
         summary: "regenerate paper figures/tables",
         usage: "expand figures <fig1|fig2a|fig2b|fig2c|fig4a|fig4b|fig4c|fig4d|fig4e|\
-                fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--accesses N] [--out DIR] \
-                [--no-artifacts]",
+                fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--jobs N] [--accesses N] \
+                [--out DIR] [--no-artifacts]",
     },
     CommandHelp {
         name: "enumerate",
-        summary: "PCIe-enumerate a CXL fabric and show timeliness setup",
-        usage: "expand enumerate [--levels N] [--fanout F] [--ssds K]",
+        summary: "PCIe-enumerate a CXL fabric and show per-device timeliness setup",
+        usage: "expand enumerate [--levels N] [--fanout F] [--ssds K] \
+                [--topology chain|tree:L,F,S|'(s(x,x),x)']",
     },
     CommandHelp {
         name: "config",
@@ -61,6 +65,12 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     }
     if let Some(l) = args.get("levels") {
         cfg.cxl.switch_levels = l.parse()?;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.cxl.topology = TopologySpec::parse(t)?;
+    }
+    if let Some(i) = args.get("interleave") {
+        cfg.cxl.interleave = InterleavePolicy::parse(i)?;
     }
     if let Some(m) = args.get("media") {
         let internal = cfg.ssd.internal_dram_bytes;
@@ -109,6 +119,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if !stats.debug.is_empty() {
         println!("  {}", stats.debug);
     }
+    if stats.per_device.len() > 1 {
+        print!("{}", stats.render_per_device());
+    }
     Ok(())
 }
 
@@ -123,21 +136,41 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     } else if let Some(dir) = args.get("artifacts") {
         opts.artifacts = Some(dir.to_string());
     }
-    figures::run_one(name, &opts)
+    let jobs = args.get_usize("jobs", 1)?;
+    if name == "all" {
+        figures::sweep::run_all(&opts, jobs)
+    } else {
+        if jobs > 1 {
+            eprintln!("note: --jobs parallelizes across harnesses; `figures {name}` is a single harness and runs serially");
+        }
+        figures::run_one(name, &opts)
+    }
 }
 
 fn cmd_enumerate(args: &Args) -> anyhow::Result<()> {
     let levels = args.get_usize("levels", 2)?;
     let fanout = args.get_usize("fanout", 2)?;
     let ssds = args.get_usize("ssds", 4)?;
-    let topo = Topology::tree(levels, fanout, ssds);
+    let mut cfg = SimConfig::default();
+    let topo = match args.get("topology") {
+        Some(spec) => {
+            cfg.cxl.topology = TopologySpec::parse(spec)?;
+            cfg.cxl.build_topology()?
+        }
+        None => Topology::tree(levels, fanout, ssds),
+    };
     let e = Enumeration::discover(&topo);
-    let cfg = SimConfig::default();
     let fabric = Fabric::new(topo.clone(), &cfg.cxl);
-    println!("CXL fabric: {levels} switch tiers, fanout {fanout}, {ssds} CXL-SSDs\n");
+    let pool = DevicePool::new(&fabric, &e, &cfg.ssd, cfg.cxl.interleave)?;
     println!(
-        "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12} {:>12}",
-        "node", "kind", "bus", "sec", "depth", "dslbis_ns", "e2e_ns"
+        "CXL fabric: {} nodes, {} CXL-SSDs, interleave={}\n",
+        topo.nodes.len(),
+        pool.len(),
+        cfg.cxl.interleave.name()
+    );
+    println!(
+        "{:<6} {:<12} {:<7} {:>4} {:>5} {:>6} {:>12} {:>12}",
+        "node", "kind", "media", "bus", "sec", "depth", "dslbis_ns", "e2e_ns"
     );
     for node in &topo.nodes {
         let info = e.info[&node.id];
@@ -146,24 +179,22 @@ fn cmd_enumerate(args: &Args) -> anyhow::Result<()> {
             NodeKind::Switch => "switch",
             NodeKind::CxlSsd => "cxl-ssd",
         };
-        if node.kind == NodeKind::CxlSsd {
-            let ssd = CxlSsd::new(&cfg.ssd);
-            let mut cs = ConfigSpace::endpoint(node.id as u16);
-            let t = setup_device(&fabric, &e, &ssd, node.id, &mut cs);
+        if let Some(ep) = pool.endpoints().iter().find(|ep| ep.node == node.id) {
             println!(
-                "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12.1} {:>12.1}",
+                "{:<6} {:<12} {:<7} {:>4} {:>5} {:>6} {:>12.1} {:>12.1}",
                 node.id,
                 kind,
+                ep.ssd.cfg().media.name(),
                 info.bus,
                 info.secondary,
-                t.switch_depth,
-                t.device_ps as f64 / 1000.0,
-                t.e2e_ps as f64 / 1000.0,
+                ep.timeliness.switch_depth,
+                ep.timeliness.device_ps as f64 / 1000.0,
+                ep.timeliness.e2e_ps as f64 / 1000.0,
             );
         } else {
             println!(
-                "{:<6} {:<12} {:>4} {:>5} {:>6} {:>12} {:>12}",
-                node.id, kind, info.bus, info.secondary, info.switch_depth, "-", "-"
+                "{:<6} {:<12} {:<7} {:>4} {:>5} {:>6} {:>12} {:>12}",
+                node.id, kind, "-", info.bus, info.secondary, info.switch_depth, "-", "-"
             );
         }
     }

@@ -3,6 +3,30 @@
 
 use crate::sim::time::{fmt_ps, Ps};
 
+/// Per-endpoint breakdown of one run over a multi-device CXL pool.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    /// Topology node id of the endpoint.
+    pub node: usize,
+    /// Backend media name ("znand" / "pmem" / "dram").
+    pub media: String,
+    /// Switches between the RC and this endpoint.
+    pub switch_depth: usize,
+    /// End-to-end latency published to the device at enumeration.
+    pub e2e_ps: Ps,
+    /// Demand line reads served by this endpoint.
+    pub demand_reads: u64,
+    /// Prefetch staging reads (decider pulls into internal DRAM).
+    pub staged_reads: u64,
+    /// Backend media page reads.
+    pub media_reads: u64,
+    /// Internal DRAM cache hit ratio at this endpoint.
+    pub internal_hit: f64,
+    /// Fabric bytes toward / from this endpoint.
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+}
+
 /// Everything a single simulation run reports.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -37,6 +61,8 @@ pub struct RunStats {
     pub hit_rate_series: Vec<(u64, f64)>,
     /// Prefetcher-internal diagnostics line.
     pub debug: String,
+    /// Per-endpoint breakdown (one row per CXL-SSD in the pool).
+    pub per_device: Vec<DeviceStats>,
 }
 
 impl RunStats {
@@ -86,6 +112,33 @@ impl RunStats {
             return 0.0;
         }
         baseline.exec_ps as f64 / self.exec_ps as f64
+    }
+
+    /// Multi-line per-device table (shown by the CLI for pools with more
+    /// than one endpoint; also useful from tests/examples).
+    pub fn render_per_device(&self) -> String {
+        let mut out = String::from("  per-device breakdown:\n");
+        out.push_str(&format!(
+            "  {:<6} {:<7} {:>6} {:>10} {:>10} {:>10} {:>10} {:>7} {:>12} {:>12}\n",
+            "node", "media", "depth", "e2e_ns", "reads", "staged", "media_rd", "hit%", "bytes_dn",
+            "bytes_up"
+        ));
+        for d in &self.per_device {
+            out.push_str(&format!(
+                "  {:<6} {:<7} {:>6} {:>10.1} {:>10} {:>10} {:>10} {:>7.1} {:>12} {:>12}\n",
+                d.node,
+                d.media,
+                d.switch_depth,
+                d.e2e_ps as f64 / 1000.0,
+                d.demand_reads,
+                d.staged_reads,
+                d.media_reads,
+                d.internal_hit * 100.0,
+                d.bytes_down,
+                d.bytes_up,
+            ));
+        }
+        out
     }
 
     /// One-line summary for the CLI.
@@ -204,6 +257,34 @@ mod tests {
         let slow = RunStats { exec_ps: 2_000, ..Default::default() };
         let fast = RunStats { exec_ps: 1_000, ..Default::default() };
         assert!((fast.speedup_over(&slow) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_device_breakdown_renders_one_row_per_endpoint() {
+        let s = RunStats {
+            per_device: vec![
+                DeviceStats {
+                    node: 2,
+                    media: "znand".into(),
+                    switch_depth: 1,
+                    e2e_ps: 500_000,
+                    demand_reads: 10,
+                    ..Default::default()
+                },
+                DeviceStats {
+                    node: 5,
+                    media: "pmem".into(),
+                    switch_depth: 3,
+                    e2e_ps: 900_000,
+                    demand_reads: 7,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let out = s.render_per_device();
+        assert!(out.contains("znand") && out.contains("pmem"));
+        assert_eq!(out.lines().count(), 4, "header x2 + one row per device:\n{out}");
     }
 
     #[test]

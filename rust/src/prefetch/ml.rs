@@ -169,11 +169,10 @@ mod tests {
 
     #[test]
     fn predicts_after_window_fills_and_issues_stride_chain() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -199,11 +198,10 @@ mod tests {
 
     #[test]
     fn hits_are_ignored() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };

@@ -13,10 +13,10 @@ pub mod synthetic;
 
 use crate::config::Backing;
 use crate::cxl::transaction::M2S;
-use crate::cxl::{Fabric, NodeId};
+use crate::cxl::Fabric;
 use crate::mem::DramModel;
 use crate::sim::time::Ps;
-use crate::ssd::CxlSsd;
+use crate::ssd::DevicePool;
 use crate::workloads::Access;
 
 /// A scheduled line fill.
@@ -30,28 +30,32 @@ pub struct PrefetchFill {
 }
 
 /// Memory-side environment a prefetcher uses to move data (costs are
-/// real: fabric queuing + device service + media staging).
+/// real: fabric queuing + device service + media staging). All device
+/// interaction goes through the pool, which routes each line address to
+/// its owning endpoint under the configured interleave policy.
 pub struct PrefetchEnv<'a> {
     pub fabric: &'a mut Fabric,
-    pub ssd: &'a mut CxlSsd,
-    pub ssd_node: NodeId,
+    pub pool: &'a mut DevicePool,
     pub dram: &'a mut DramModel,
     pub backing: Backing,
 }
 
 impl<'a> PrefetchEnv<'a> {
     /// Latency for a *host-issued* prefetch read (the baseline
-    /// prefetchers' only mechanism): a normal CXL.mem round trip, or a
-    /// local DRAM read under LocalDRAM backing. Returns `None` when the
-    /// device drops the prefetch under channel backpressure (bounded
-    /// prefetch queues — demand reads are never dropped).
+    /// prefetchers' only mechanism): a normal CXL.mem round trip to the
+    /// line's owning endpoint, or a local DRAM read under LocalDRAM
+    /// backing. Returns `None` when the device drops the prefetch under
+    /// channel backpressure (bounded prefetch queues — demand reads are
+    /// never dropped).
     pub fn host_fetch_latency(&mut self, line: u64, now: Ps) -> Option<Ps> {
         match self.backing {
             Backing::LocalDram => Some(self.dram.read(line, now)),
             Backing::CxlSsd => {
-                let at_dev = self.fabric.path_latency(self.ssd_node, 16);
-                let service = self.ssd.serve_prefetch_read(line, now + at_dev)?;
-                Some(self.fabric.read_roundtrip(self.ssd_node, now, M2S::ReqMemRd, service))
+                let idx = self.pool.route(line);
+                let node = self.pool.node_of(idx);
+                let at_dev = self.fabric.path_latency(node, 16);
+                let service = self.pool.ssd_mut(idx).serve_prefetch_read(line, now + at_dev)?;
+                Some(self.fabric.read_roundtrip(node, now, M2S::ReqMemRd, service))
             }
         }
     }
@@ -143,27 +147,26 @@ impl Prefetcher for NoPrefetch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CxlConfig, DramConfig, SsdConfig};
+    use crate::config::{CxlConfig, DramConfig, InterleavePolicy, SsdConfig};
+    use crate::cxl::enumeration::Enumeration;
     use crate::cxl::Topology;
 
-    pub(crate) fn test_env_parts() -> (Fabric, CxlSsd, DramModel, NodeId) {
+    pub(crate) fn test_env_parts() -> (Fabric, DevicePool, DramModel) {
         let topo = Topology::chain(1);
-        let node = topo.ssds()[0];
-        (
-            Fabric::new(topo, &CxlConfig::default()),
-            CxlSsd::new(&SsdConfig::default()),
-            DramModel::new(&DramConfig::default()),
-            node,
-        )
+        let enumeration = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &CxlConfig::default());
+        let pool =
+            DevicePool::new(&fabric, &enumeration, &SsdConfig::default(), InterleavePolicy::Page)
+                .unwrap();
+        (fabric, pool, DramModel::new(&DramConfig::default()))
     }
 
     #[test]
     fn noprefetch_is_silent() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::CxlSsd,
         };
@@ -175,11 +178,10 @@ mod tests {
 
     #[test]
     fn host_fetch_latency_cxl_exceeds_dram() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::CxlSsd,
         };
@@ -187,5 +189,30 @@ mod tests {
         env.backing = Backing::LocalDram;
         let dram = env.host_fetch_latency(456, 0).unwrap();
         assert!(cxl > 10 * dram, "cxl {cxl} vs dram {dram}");
+    }
+
+    #[test]
+    fn host_fetch_routes_to_owning_endpoint() {
+        let topo = Topology::tree(1, 2, 4);
+        let enumeration = Enumeration::discover(&topo);
+        let mut fabric = Fabric::new(topo, &CxlConfig::default());
+        let mut pool =
+            DevicePool::new(&fabric, &enumeration, &SsdConfig::default(), InterleavePolicy::Line)
+                .unwrap();
+        let mut dram = DramModel::new(&DramConfig::default());
+        let mut env = PrefetchEnv {
+            fabric: &mut fabric,
+            pool: &mut pool,
+            dram: &mut dram,
+            backing: Backing::CxlSsd,
+        };
+        // Lines 0..4 round-robin across the four endpoints.
+        for line in 0..4u64 {
+            env.host_fetch_latency(line, 0).unwrap();
+        }
+        for idx in 0..4 {
+            let node = env.pool.node_of(idx);
+            assert_eq!(env.fabric.traffic_for(node).m2s_req, 1, "endpoint {idx}");
+        }
     }
 }

@@ -145,11 +145,10 @@ mod tests {
 
     #[test]
     fn learns_constant_stride() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -171,11 +170,10 @@ mod tests {
 
     #[test]
     fn random_stream_disables_prefetching() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };

@@ -137,11 +137,10 @@ mod tests {
 
     #[test]
     fn learns_repeating_sequence() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -166,11 +165,10 @@ mod tests {
 
     #[test]
     fn streams_separate_regions() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };

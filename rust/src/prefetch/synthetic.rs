@@ -145,11 +145,10 @@ mod tests {
 
     #[test]
     fn zero_coverage_issues_nothing() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -163,11 +162,10 @@ mod tests {
 
     #[test]
     fn full_effectiveness_covers_all_future_lines_timely() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -184,11 +182,10 @@ mod tests {
 
     #[test]
     fn coverage_proportion_is_respected() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -207,11 +204,10 @@ mod tests {
 
     #[test]
     fn dedup_means_one_decision_per_line() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };
@@ -226,11 +222,10 @@ mod tests {
 
     #[test]
     fn low_accuracy_mostly_misses_targets() {
-        let (mut f, mut s, mut d, node) = test_env_parts();
+        let (mut f, mut s, mut d) = test_env_parts();
         let mut env = PrefetchEnv {
             fabric: &mut f,
-            ssd: &mut s,
-            ssd_node: node,
+            pool: &mut s,
             dram: &mut d,
             backing: Backing::LocalDram,
         };

@@ -2,6 +2,11 @@
 //! `python/compile/aot.py`) and serves predictions to the decider.
 //! Python never runs on this path — the artifacts are self-contained
 //! HLO with trained weights as constants.
+//!
+//! The real PJRT execution path needs the `xla` bindings, which are not
+//! in the offline crate set; it is gated behind the `pjrt` cargo feature.
+//! Without it the runtime still resolves the artifact manifest (shapes,
+//! parameter sizes) but serves predictions through a stub predictor.
 
 pub mod manifest;
 pub mod predictor;
@@ -12,20 +17,22 @@ pub use predictor::{AddressPredictor, HloPredictor, MockPredictor, Prediction, W
 use std::cell::RefCell;
 use std::rc::Rc;
 
-/// Process-wide runtime: one PJRT CPU client, lazily-compiled executables.
+/// Process-wide runtime: one PJRT CPU client (with the `pjrt` feature),
+/// lazily-compiled executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: String,
     cache: RefCell<std::collections::BTreeMap<String, Rc<RefCell<HloPredictor>>>>,
 }
 
 impl Runtime {
-    /// Create the PJRT CPU client against `artifacts_dir`.
+    /// Create the runtime against `artifacts_dir`.
     pub fn new(artifacts_dir: &str) -> anyhow::Result<Rc<Self>> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
         Ok(Rc::new(Runtime {
-            client,
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?,
             dir: artifacts_dir.to_string(),
             cache: RefCell::new(Default::default()),
         }))
@@ -41,7 +48,10 @@ impl Runtime {
         if let Some(p) = self.cache.borrow().get(model) {
             return Ok(p.clone());
         }
+        #[cfg(feature = "pjrt")]
         let p = Rc::new(RefCell::new(HloPredictor::load(&self.client, &self.dir, model)?));
+        #[cfg(not(feature = "pjrt"))]
+        let p = Rc::new(RefCell::new(HloPredictor::load_stub(&self.dir, model)?));
         self.cache.borrow_mut().insert(model.to_string(), p.clone());
         Ok(p)
     }

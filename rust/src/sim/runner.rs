@@ -8,11 +8,10 @@
 //! prefetcher observe the LLC-level stream.
 
 use crate::config::{Backing, PrefetcherKind, SimConfig};
-use crate::cxl::configspace::ConfigSpace;
 use crate::cxl::enumeration::Enumeration;
-use crate::cxl::transaction::M2S;
-use crate::cxl::{Fabric, NodeId, Topology};
-use crate::expand::timeliness::{setup_device, DeadlineModel};
+use crate::cxl::transaction::{m2s_bytes, M2S};
+use crate::cxl::Fabric;
+use crate::expand::timeliness::DeadlineModel;
 use crate::expand::ExpandPrefetcher;
 use crate::mem::{DramModel, Hierarchy, HitLevel};
 use crate::metrics::RunStats;
@@ -25,7 +24,7 @@ use crate::runtime::{MockPredictor, Runtime};
 use crate::sim::core::CoreModel;
 use crate::sim::engine::EventQueue;
 use crate::sim::time::Ps;
-use crate::ssd::CxlSsd;
+use crate::ssd::DevicePool;
 use crate::workloads::{Access, TraceSource};
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -37,15 +36,15 @@ pub struct Runner {
     hierarchy: Hierarchy,
     dram: DramModel,
     fabric: Fabric,
-    ssd: CxlSsd,
-    ssd_node: NodeId,
+    pool: DevicePool,
     prefetcher: Box<dyn Prefetcher>,
     events: EventQueue<PrefetchFill>,
     lookahead: VecDeque<Access>,
     /// Collect Fig 4d/4e time series.
     pub collect_series: bool,
-    /// Timeliness info published at enumeration (ExPAND path).
-    pub e2e_info: Option<crate::expand::timeliness::TimelinessInfo>,
+    /// Per-endpoint timeliness info published at enumeration, in pool
+    /// endpoint-index order.
+    pub e2e_info: Vec<crate::expand::timeliness::TimelinessInfo>,
 }
 
 impl Runner {
@@ -53,19 +52,16 @@ impl Runner {
     /// ML1/ML2/ExPAND; pass `None` to fall back to the mock predictor
     /// (unit tests / artifact-less smoke runs).
     pub fn new(cfg: &SimConfig, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
-        let topo = Topology::chain(cfg.cxl.switch_levels);
-        let ssd_node = topo.ssds()[0];
+        let topo = cfg.cxl.build_topology()?;
         let enumeration = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &cfg.cxl);
-        let ssd = CxlSsd::new(&cfg.ssd);
+        // One CxlSsd + config space + timeliness state per endpoint; the
+        // reflector's enumeration-time setup writes each device's
+        // end-to-end latency into its own config space.
+        let pool = DevicePool::new(&fabric, &enumeration, &cfg.ssd, cfg.cxl.interleave)?;
         let hierarchy = Hierarchy::new(&cfg.hierarchy, cfg.cpu.cores, cfg.cpu.cycle_ps());
         let core = CoreModel::new(&cfg.cpu);
         let dram = DramModel::new(&cfg.dram);
-
-        // Enumeration-time timeliness setup (reflector writes e2e into
-        // the device's config space).
-        let mut cs = ConfigSpace::endpoint(0xE7);
-        let info = setup_device(&fabric, &enumeration, &ssd, ssd_node, &mut cs);
 
         let predictor_for = |name: &str| -> anyhow::Result<
             std::rc::Rc<std::cell::RefCell<dyn crate::runtime::AddressPredictor>>,
@@ -92,13 +88,25 @@ impl Runner {
                 Box::new(MlPrefetcher::new(predictor_for("ml2")?, "ML2", cfg.expand.predict_stride))
             }
             PrefetcherKind::Expand => {
-                let dm = DeadlineModel::new(
-                    &cs,
-                    crate::sim::time::ns(cfg.expand.margin_ns),
-                    cfg.expand.timeliness_accuracy,
-                    cfg.seed,
-                );
-                Box::new(ExpandPrefetcher::new(predictor_for("expand")?, &cfg.expand, dm))
+                // One deadline model per endpoint, each reading back the
+                // e2e latency from its own device's config space. The
+                // first endpoint keeps the legacy seed so single-device
+                // runs reproduce pre-pool results bit-for-bit.
+                let margin = crate::sim::time::ns(cfg.expand.margin_ns);
+                let deadlines: Vec<DeadlineModel> = pool
+                    .endpoints()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, ep)| {
+                        DeadlineModel::new(
+                            &ep.config_space,
+                            margin,
+                            cfg.expand.timeliness_accuracy,
+                            cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        )
+                    })
+                    .collect();
+                Box::new(ExpandPrefetcher::new(predictor_for("expand")?, &cfg.expand, deadlines))
             }
             PrefetcherKind::Synthetic { accuracy, coverage } => Box::new(SyntheticPrefetcher::new(
                 *accuracy,
@@ -108,19 +116,19 @@ impl Runner {
             )),
         };
 
+        let e2e_info = pool.endpoints().iter().map(|ep| ep.timeliness.clone()).collect();
         Ok(Runner {
             cfg: cfg.clone(),
             core,
             hierarchy,
             dram,
             fabric,
-            ssd,
-            ssd_node,
+            pool,
             prefetcher,
             events: EventQueue::new(),
             lookahead: VecDeque::new(),
             collect_series: false,
-            e2e_info: Some(info),
+            e2e_info,
         })
     }
 
@@ -188,8 +196,7 @@ impl Runner {
                     let la = self.make_lookahead();
                     let mut env = PrefetchEnv {
                         fabric: &mut self.fabric,
-                        ssd: &mut self.ssd,
-                        ssd_node: self.ssd_node,
+                        pool: &mut self.pool,
                         dram: &mut self.dram,
                         backing: self.cfg.backing,
                     };
@@ -208,8 +215,7 @@ impl Runner {
                         let la = self.make_lookahead();
                         let mut env = PrefetchEnv {
                             fabric: &mut self.fabric,
-                            ssd: &mut self.ssd,
-                            ssd_node: self.ssd_node,
+                            pool: &mut self.pool,
                             dram: &mut self.dram,
                             backing: self.cfg.backing,
                         };
@@ -226,12 +232,16 @@ impl Runner {
                                 } else {
                                     M2S::ReqMemRd
                                 };
-                                let down = self.fabric.path_latency(
-                                    self.ssd_node,
-                                    crate::cxl::transaction::m2s_bytes(op),
-                                );
-                                let service = self.ssd.serve_read(a.line, now + down);
-                                self.fabric.read_roundtrip(self.ssd_node, now, op, service)
+                                // Route the miss to the endpoint that owns
+                                // this line under the interleave policy;
+                                // the round trip runs over that device's
+                                // virtual hierarchy.
+                                let idx = self.pool.route(a.line);
+                                let node = self.pool.node_of(idx);
+                                let down = self.fabric.path_latency(node, m2s_bytes(op));
+                                let service =
+                                    self.pool.ssd_mut(idx).serve_read(a.line, now + down);
+                                self.fabric.read_roundtrip(node, now, op, service)
                             }
                         };
                         debug_assert!(
@@ -246,8 +256,7 @@ impl Runner {
                         let la = self.make_lookahead();
                         let mut env = PrefetchEnv {
                             fabric: &mut self.fabric,
-                            ssd: &mut self.ssd,
-                            ssd_node: self.ssd_node,
+                            pool: &mut self.pool,
                             dram: &mut self.dram,
                             backing: self.cfg.backing,
                         };
@@ -284,7 +293,8 @@ impl Runner {
         stats.exec_ps = self.core.now;
         stats.stall_ps = self.core.stall_ps;
         stats.avg_access_ps = total_access_ps as f64 / n.max(1) as f64;
-        stats.ssd_internal_hit = self.ssd.internal_hit_ratio();
+        stats.ssd_internal_hit = self.pool.internal_hit_ratio();
+        stats.per_device = self.pool.device_stats(&self.fabric);
         let llc = &self.hierarchy.llc.stats;
         stats.prefetch_useful = llc.prefetch_useful + self.prefetcher.issue_stats().issued.min(stats.reflector_hits);
         stats.prefetch_wasted = llc.prefetch_wasted;
@@ -428,5 +438,73 @@ mod tests {
         );
         assert!(s.instructions >= s.accesses);
         assert!(s.exec_ps > 0);
+    }
+
+    #[test]
+    fn tree_pool_interleaves_and_orders_per_endpoint_latency() {
+        // Four CXL-SSDs at depths 0..3: distinct end-to-end latencies
+        // (strictly deeper => strictly slower), with the interleave
+        // policy spreading demand across every endpoint.
+        let mut cfg = smoke_cfg();
+        cfg.cxl.topology =
+            crate::config::TopologySpec::parse("(x,s(x),s(s(x)),s(s(s(x))))").unwrap();
+        let mut src = WorkloadId::Pr.source(9);
+        let mut r = Runner::new(&cfg, None).unwrap();
+        let s = r.run(&mut *src, cfg.accesses);
+
+        assert_eq!(s.per_device.len(), 4);
+        for w in s.per_device.windows(2) {
+            assert!(w[1].switch_depth > w[0].switch_depth);
+            assert!(
+                w[1].e2e_ps > w[0].e2e_ps,
+                "deeper endpoint must be strictly slower: {:?} vs {:?}",
+                w[1],
+                w[0]
+            );
+        }
+        for d in &s.per_device {
+            assert!(d.demand_reads > 0, "endpoint starved by interleaving: {d:?}");
+        }
+        // Per-device demand sums to the run's miss traffic exactly.
+        let total: u64 = s.per_device.iter().map(|d| d.demand_reads).sum();
+        assert_eq!(total, s.llc_misses);
+    }
+
+    #[test]
+    fn deeper_half_of_pool_slows_the_run() {
+        // Same 2-SSD pool, shallow vs deep second endpoint: the deep
+        // variant must cost wall-clock, proving per-endpoint path latency
+        // is actually applied per access (not a single global latency).
+        let run_spec = |spec: &str| {
+            let mut cfg = smoke_cfg();
+            cfg.cxl.topology = crate::config::TopologySpec::parse(spec).unwrap();
+            cfg.cxl.interleave = crate::config::InterleavePolicy::Line;
+            let mut src = WorkloadId::Tc.source(11);
+            simulate(&cfg, None, &mut *src).unwrap()
+        };
+        let shallow = run_spec("(x,x)");
+        let deep = run_spec("(x,s(s(s(x))))");
+        assert!(
+            deep.exec_ps > shallow.exec_ps,
+            "deep {} <= shallow {}",
+            deep.exec_ps,
+            shallow.exec_ps
+        );
+    }
+
+    #[test]
+    fn expand_runs_on_a_multi_device_pool() {
+        let mut cfg = smoke_cfg();
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.cxl.topology = crate::config::TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+        cfg.accesses = 60_000;
+        let mut src = Strided { line: 1 << 30 };
+        let s = simulate(&cfg, None, &mut src).unwrap();
+        assert_eq!(s.per_device.len(), 4);
+        assert!(s.prefetch_issued > 0, "per-device deciders pushed prefetches: {s:?}");
+        assert_eq!(
+            s.accesses,
+            s.l1_hits + s.l2_hits + s.llc_hits + s.llc_misses + s.reflector_hits
+        );
     }
 }

@@ -187,6 +187,12 @@ impl CxlSsd {
         self.cache.hit_ratio()
     }
 
+    /// Internal cache (hits, misses) counters — lets the pool aggregate
+    /// a properly weighted hit ratio across endpoints.
+    pub fn internal_counts(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
     /// Build the device's DOE mailbox: DSLBIS advertises the *typical*
     /// device access latency (controller + internal DRAM hit) — the value
     /// the reflector combines with VH latency for prefetch timeliness.

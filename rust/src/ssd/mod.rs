@@ -1,7 +1,11 @@
 //! CXL-SSD device model: controller + internal DRAM cache + backend
-//! storage-class media with per-channel queuing.
+//! storage-class media with per-channel queuing, plus the multi-device
+//! pool that instantiates one device per topology endpoint and routes
+//! interleaved addresses to the right one.
 
 pub mod controller;
 pub mod dram_cache;
+pub mod pool;
 
 pub use controller::CxlSsd;
+pub use pool::{endpoint_ssd_config, DevicePool, PoolEndpoint};

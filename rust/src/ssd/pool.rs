@@ -1,0 +1,313 @@
+//! Multi-device CXL pool: one [`CxlSsd`] + config space + enumeration-time
+//! timeliness state per endpoint of an arbitrary topology, plus the
+//! address-interleaving policy that routes every host physical address to
+//! exactly one endpoint.
+//!
+//! The paper's pool-scale results (Fig 6/7) assume the host reaches
+//! *several* CXL-SSDs through the switch fabric, each with its own
+//! end-to-end latency; the pool is what makes that plural. Routing is a
+//! pure function of the line address (line-, page- or capacity-weighted
+//! striping), so demand misses, prefetch staging and BISnpData pushes for
+//! a line all resolve against the same endpoint.
+
+use crate::config::{InterleavePolicy, MediaKind, SsdConfig};
+use crate::cxl::configspace::ConfigSpace;
+use crate::cxl::enumeration::Enumeration;
+use crate::cxl::{Fabric, NodeId};
+use crate::expand::timeliness::{setup_device, TimelinessInfo};
+use crate::metrics::DeviceStats;
+use crate::ssd::CxlSsd;
+
+/// One CXL-SSD endpoint as the host sees it after enumeration.
+pub struct PoolEndpoint {
+    pub node: NodeId,
+    pub ssd: CxlSsd,
+    /// The device's PCIe config space (carries the ExPAND e2e DVSEC).
+    pub config_space: ConfigSpace,
+    /// Enumeration-time timeliness setup for this endpoint.
+    pub timeliness: TimelinessInfo,
+    /// Capacity weight for capacity-proportional interleaving.
+    pub weight: u32,
+}
+
+/// Derive one endpoint's device config from the pool-wide base config:
+/// media timing comes from `media`, capacity scaling (internal DRAM,
+/// channels, page size) is inherited from the base so figure-level
+/// scaling applies uniformly across the pool.
+pub fn endpoint_ssd_config(base: &SsdConfig, media: MediaKind) -> SsdConfig {
+    let timing = SsdConfig::with_media(media);
+    let mut cfg = base.clone();
+    cfg.media = media;
+    cfg.media_read = timing.media_read;
+    cfg.media_write = timing.media_write;
+    cfg
+}
+
+/// The pure address-to-endpoint routing function, separated from the
+/// endpoint state so callers can hold `&Interleaver` and `&mut CxlSsd`
+/// for one endpoint at the same time (see [`DevicePool::parts_mut`]).
+pub struct Interleaver {
+    policy: InterleavePolicy,
+    /// Lines per interleave stripe (device page granularity).
+    page_lines: u64,
+    /// Capacity policy: endpoint index per weighted stripe slot.
+    stripes: Vec<u32>,
+    endpoints: usize,
+}
+
+impl Interleaver {
+    /// Route a line address to its owning endpoint (total and
+    /// deterministic: every address maps to exactly one endpoint).
+    pub fn route(&self, line: u64) -> usize {
+        let n = self.endpoints as u64;
+        match self.policy {
+            InterleavePolicy::Line => (line % n) as usize,
+            InterleavePolicy::Page => ((line / self.page_lines) % n) as usize,
+            InterleavePolicy::Capacity => {
+                let stripe = line / self.page_lines;
+                self.stripes[(stripe % self.stripes.len() as u64) as usize] as usize
+            }
+        }
+    }
+}
+
+/// The pool: every endpoint of the enumerated fabric plus the routing
+/// policy distributing the address space across them.
+pub struct DevicePool {
+    endpoints: Vec<PoolEndpoint>,
+    router: Interleaver,
+}
+
+impl DevicePool {
+    /// Enumerate + instantiate every CXL-SSD endpoint of `fabric`'s
+    /// topology. Runs the reflector's enumeration-time timeliness setup
+    /// (DSLBIS read, VH latency, config-space e2e write) per device.
+    pub fn new(
+        fabric: &Fabric,
+        enumeration: &Enumeration,
+        base: &SsdConfig,
+        policy: InterleavePolicy,
+    ) -> anyhow::Result<Self> {
+        let nodes = fabric.topo.ssds();
+        anyhow::ensure!(!nodes.is_empty(), "topology has no CXL-SSD endpoints");
+        let mut endpoints = Vec::with_capacity(nodes.len());
+        for node in nodes {
+            let media = fabric.topo.nodes[node].media.unwrap_or(base.media);
+            let ssd = CxlSsd::new(&endpoint_ssd_config(base, media));
+            let mut config_space = ConfigSpace::endpoint(node as u16);
+            let timeliness = setup_device(fabric, enumeration, &ssd, node, &mut config_space);
+            endpoints.push(PoolEndpoint {
+                node,
+                ssd,
+                config_space,
+                timeliness,
+                weight: media.capacity_weight(),
+            });
+        }
+        // Weighted stripe slots, laid out round-robin (repeatedly cycle
+        // the endpoints, emitting each while it has weight left) so that
+        // equal weights degenerate to exact page round-robin — Capacity
+        // over a homogeneous pool routes identically to Page.
+        let mut stripes = Vec::new();
+        let mut remaining: Vec<u32> = endpoints.iter().map(|ep| ep.weight.max(1)).collect();
+        while remaining.iter().any(|&r| r > 0) {
+            for (i, r) in remaining.iter_mut().enumerate() {
+                if *r > 0 {
+                    *r -= 1;
+                    stripes.push(i as u32);
+                }
+            }
+        }
+        let router = Interleaver {
+            policy,
+            page_lines: (base.page_bytes / 64).max(1) as u64,
+            stripes,
+            endpoints: endpoints.len(),
+        };
+        Ok(DevicePool { endpoints, router })
+    }
+
+    pub fn len(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.endpoints.is_empty()
+    }
+
+    pub fn policy(&self) -> InterleavePolicy {
+        self.router.policy
+    }
+
+    pub fn endpoints(&self) -> &[PoolEndpoint] {
+        &self.endpoints
+    }
+
+    pub fn node_of(&self, idx: usize) -> NodeId {
+        self.endpoints[idx].node
+    }
+
+    pub fn ssd_mut(&mut self, idx: usize) -> &mut CxlSsd {
+        &mut self.endpoints[idx].ssd
+    }
+
+    /// Split-borrow accessor: the routing view plus one endpoint's
+    /// device, usable simultaneously (the decider needs to stage on its
+    /// own device while checking which lines that device owns).
+    pub fn parts_mut(&mut self, idx: usize) -> (&Interleaver, NodeId, &mut CxlSsd) {
+        let node = self.endpoints[idx].node;
+        (&self.router, node, &mut self.endpoints[idx].ssd)
+    }
+
+    /// Route a line address to its owning endpoint.
+    pub fn route(&self, line: u64) -> usize {
+        self.router.route(line)
+    }
+
+    /// Pooled internal-DRAM hit ratio across all endpoints.
+    pub fn internal_hit_ratio(&self) -> f64 {
+        let (hits, misses) = self.endpoints.iter().fold((0u64, 0u64), |(h, m), ep| {
+            let (eh, em) = ep.ssd.internal_counts();
+            (h + eh, m + em)
+        });
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+
+    /// Per-device reporting rows (device service counters joined with the
+    /// fabric's per-endpoint traffic accounting).
+    pub fn device_stats(&self, fabric: &Fabric) -> Vec<DeviceStats> {
+        self.endpoints
+            .iter()
+            .map(|ep| {
+                let t = fabric.traffic_for(ep.node);
+                DeviceStats {
+                    node: ep.node,
+                    media: ep.ssd.cfg().media.name().to_string(),
+                    switch_depth: ep.timeliness.switch_depth,
+                    e2e_ps: ep.timeliness.e2e_ps,
+                    demand_reads: ep.ssd.stats.reads,
+                    staged_reads: ep.ssd.stats.staged_reads,
+                    media_reads: ep.ssd.stats.media_reads,
+                    internal_hit: ep.ssd.internal_hit_ratio(),
+                    bytes_down: t.bytes_down,
+                    bytes_up: t.bytes_up,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CxlConfig;
+    use crate::cxl::Topology;
+
+    fn pool_for(topo: Topology, policy: InterleavePolicy) -> DevicePool {
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &CxlConfig::default());
+        DevicePool::new(&fabric, &e, &SsdConfig::default(), policy).unwrap()
+    }
+
+    #[test]
+    fn single_endpoint_routes_everything_to_zero() {
+        let pool = pool_for(Topology::chain(2), InterleavePolicy::Line);
+        for line in [0u64, 1, 63, 64, 1 << 40] {
+            assert_eq!(pool.route(line), 0);
+        }
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn line_policy_round_robins_consecutive_lines() {
+        let pool = pool_for(Topology::tree(1, 2, 4), InterleavePolicy::Line);
+        let idx: Vec<usize> = (0..8).map(|l| pool.route(l)).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn page_policy_keeps_a_page_on_one_endpoint() {
+        let pool = pool_for(Topology::tree(1, 2, 4), InterleavePolicy::Page);
+        let page_lines = 4096 / 64;
+        for page in 0..8u64 {
+            let owner = pool.route(page * page_lines);
+            assert_eq!(owner, (page % 4) as usize);
+            for off in 1..page_lines {
+                assert_eq!(pool.route(page * page_lines + off), owner, "page {page}");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_policy_weights_by_media_density() {
+        // z(4) + p(2) + d(1): 4/7, 2/7, 1/7 of pages respectively.
+        let topo = Topology::parse_custom("(z,p,d)").unwrap();
+        let pool = pool_for(topo, InterleavePolicy::Capacity);
+        let page_lines = 4096 / 64;
+        let mut counts = [0u64; 3];
+        for page in 0..7_000u64 {
+            counts[pool.route(page * page_lines)] += 1;
+        }
+        assert_eq!(counts[0], 4_000);
+        assert_eq!(counts[1], 2_000);
+        assert_eq!(counts[2], 1_000);
+    }
+
+    #[test]
+    fn capacity_equals_page_for_homogeneous_pools() {
+        // Equal weights must reduce to exact page round-robin, as the
+        // InterleavePolicy::Capacity docs promise.
+        let page = pool_for(Topology::tree(1, 2, 4), InterleavePolicy::Page);
+        let cap = pool_for(Topology::tree(1, 2, 4), InterleavePolicy::Capacity);
+        for line in (0..20_000u64).step_by(17) {
+            assert_eq!(cap.route(line), page.route(line), "line {line}");
+        }
+    }
+
+    #[test]
+    fn endpoint_media_overrides_apply() {
+        let topo = Topology::parse_custom("(z,p,d,x)").unwrap();
+        let pool = pool_for(topo, InterleavePolicy::Page);
+        let media: Vec<&str> =
+            pool.endpoints().iter().map(|ep| ep.ssd.cfg().media.name()).collect();
+        // `x` inherits the base config's default media (Z-NAND).
+        assert_eq!(media, vec!["znand", "pmem", "dram", "znand"]);
+        // Media timing differs, capacity scaling is shared.
+        let reads: Vec<u64> =
+            pool.endpoints().iter().map(|ep| ep.ssd.cfg().media_read).collect();
+        assert!(reads[0] > reads[1] && reads[1] > reads[2]);
+        assert!(pool
+            .endpoints()
+            .iter()
+            .all(|ep| ep.ssd.cfg().internal_dram_bytes == SsdConfig::default().internal_dram_bytes));
+    }
+
+    #[test]
+    fn per_endpoint_e2e_reflects_depth() {
+        let topo = Topology::parse_custom("(x,s(x),s(s(x)),s(s(s(x))))").unwrap();
+        let pool = pool_for(topo, InterleavePolicy::Page);
+        assert_eq!(pool.len(), 4);
+        let e2e: Vec<u64> = pool.endpoints().iter().map(|ep| ep.timeliness.e2e_ps).collect();
+        for w in e2e.windows(2) {
+            assert!(w[1] > w[0], "deeper endpoint must have larger e2e: {e2e:?}");
+        }
+        // Each endpoint's config space carries its own e2e value.
+        for ep in pool.endpoints() {
+            assert_eq!(ep.config_space.read_e2e_latency(), ep.timeliness.e2e_ps);
+        }
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        let topo = Topology::new(); // RC only
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &CxlConfig::default());
+        assert!(
+            DevicePool::new(&fabric, &e, &SsdConfig::default(), InterleavePolicy::Page).is_err()
+        );
+    }
+}

@@ -38,3 +38,27 @@ smoke!(table1c_emits, "table1c", "table1c_workloads");
 fn unknown_figure_errors() {
     assert!(run_one("fig99", &opts("x")).is_err());
 }
+
+#[test]
+fn parallel_sweep_matches_serial_byte_for_byte() {
+    use expand_cxl::figures::sweep;
+    // A cheap subset of the suite, run serially and 3-way parallel with
+    // the same seed: the emitted CSVs must be byte-identical.
+    let subset: Vec<(&str, sweep::FigFn)> = sweep::JOBS
+        .iter()
+        .copied()
+        .filter(|&(name, _)| matches!(name, "fig2b" | "fig2c"))
+        .collect();
+    assert_eq!(subset.len(), 2, "expected harnesses present in sweep::JOBS");
+
+    let serial = opts("sweep-serial");
+    sweep::run_jobs(&subset, &serial, 1).expect("serial subset");
+    let parallel = opts("sweep-parallel");
+    sweep::run_jobs(&subset, &parallel, 3).expect("parallel subset");
+
+    for csv in ["fig2b_mpki", "fig2c_switch_layers"] {
+        let a = std::fs::read(format!("{}/{csv}.csv", serial.out_dir)).expect("serial csv");
+        let b = std::fs::read(format!("{}/{csv}.csv", parallel.out_dir)).expect("parallel csv");
+        assert_eq!(a, b, "{csv}: parallel sweep diverged from serial");
+    }
+}

@@ -156,3 +156,41 @@ fn deterministic_across_runs() {
     assert_eq!(a.exec_ps, b.exec_ps);
     assert_eq!(a.llc_misses, b.llc_misses);
 }
+
+#[test]
+fn heterogeneous_pool_runs_expand_end_to_end() {
+    use expand_cxl::config::TopologySpec;
+    // Four endpoints at mixed depths with mixed media, ExPAND driving
+    // per-device deciders; the run must stay internally consistent and
+    // report one breakdown row per endpoint.
+    let mut c = cfg();
+    c.prefetcher = PrefetcherKind::Expand;
+    c.cxl.topology = TopologySpec::parse("(z,s(p),s(s(d)),s(x))").unwrap();
+    let s = run(&c, WorkloadId::Pr);
+    assert_eq!(s.per_device.len(), 4);
+    let media: Vec<&str> = s.per_device.iter().map(|d| d.media.as_str()).collect();
+    assert_eq!(media, vec!["znand", "pmem", "dram", "znand"]);
+    assert_eq!(
+        s.accesses,
+        s.l1_hits + s.l2_hits + s.llc_hits + s.llc_misses + s.reflector_hits
+    );
+    // Per-device demand sums to total misses even with the reflector in
+    // the path (reflector hits never reach a device).
+    let reads: u64 = s.per_device.iter().map(|d| d.demand_reads).sum();
+    assert_eq!(reads, s.llc_misses);
+}
+
+#[test]
+fn pool_determinism_with_multiple_devices() {
+    use expand_cxl::config::{InterleavePolicy, TopologySpec};
+    let mut c = cfg();
+    c.cxl.topology = TopologySpec::Tree { levels: 2, fanout: 2, ssds: 4 };
+    c.cxl.interleave = InterleavePolicy::Capacity;
+    let a = run(&c, WorkloadId::Sssp);
+    let b = run(&c, WorkloadId::Sssp);
+    assert_eq!(a.exec_ps, b.exec_ps);
+    assert_eq!(
+        a.per_device.iter().map(|d| d.demand_reads).collect::<Vec<_>>(),
+        b.per_device.iter().map(|d| d.demand_reads).collect::<Vec<_>>()
+    );
+}

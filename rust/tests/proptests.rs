@@ -2,6 +2,7 @@
 //! offline crate set). Each property runs against many seeded random
 //! cases; failures print the offending seed for reproduction.
 
+use expand_cxl::config::{InterleavePolicy, SsdConfig, TopologySpec};
 use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
 use expand_cxl::expand::reflector::Reflector;
@@ -10,6 +11,7 @@ use expand_cxl::expand::tokenize;
 use expand_cxl::mem::cache::{AccessOutcome, Cache};
 use expand_cxl::sim::core::CoreModel;
 use expand_cxl::sim::engine::EventQueue;
+use expand_cxl::ssd::DevicePool;
 use expand_cxl::util::Rng;
 
 /// Run `f` over `n` seeded cases.
@@ -215,6 +217,78 @@ fn prop_path_latency_monotone_in_depth_and_size() {
         let small = fs.path_latency(shallow.ssds()[0], 16);
         let big = fs.path_latency(shallow.ssds()[0], 4096);
         assert!(big > small, "bigger payload must serialize longer");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Device pool: interleaved routing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_routing_is_total_deterministic_and_distributes() {
+    forall(25, |rng, seed| {
+        let levels = 1 + rng.below(3) as usize;
+        let fanout = 1 + rng.below(3) as usize;
+        let ssds = 1 + rng.below(6) as usize;
+        let topo = Topology::tree(levels, fanout, ssds);
+        let e = Enumeration::discover(&topo);
+        let fabric = Fabric::new(topo, &expand_cxl::config::CxlConfig::default());
+        for policy in
+            [InterleavePolicy::Line, InterleavePolicy::Page, InterleavePolicy::Capacity]
+        {
+            let pool = DevicePool::new(&fabric, &e, &SsdConfig::default(), policy).unwrap();
+            assert_eq!(pool.len(), ssds, "seed {seed}");
+            let mut counts = vec![0u64; pool.len()];
+            for _ in 0..2_000 {
+                let line = rng.next_u64() >> 20;
+                let idx = pool.route(line);
+                // Total: every address maps to exactly one endpoint...
+                assert!(idx < pool.len(), "seed {seed}: route out of range");
+                // ...and the mapping is a pure function of the address.
+                assert_eq!(idx, pool.route(line), "seed {seed}: nondeterministic route");
+                counts[idx] += 1;
+            }
+            // Conservation: per-endpoint counts sum to the total.
+            assert_eq!(counts.iter().sum::<u64>(), 2_000, "seed {seed}");
+            // Distribution: a multi-device pool actually spreads load.
+            if pool.len() > 1 {
+                assert!(
+                    counts.iter().filter(|&&c| c > 0).count() > 1,
+                    "seed {seed} {policy:?}: all traffic on one endpoint: {counts:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pool_roundtrip_traffic_sums_to_total_across_random_trees() {
+    use expand_cxl::config::presets;
+    use expand_cxl::sim::runner::simulate;
+    use expand_cxl::workloads::WorkloadId;
+    forall(5, |rng, seed| {
+        let mut cfg = presets::smoke();
+        cfg.accesses = 15_000;
+        cfg.seed = 0xA11CE ^ seed;
+        cfg.cxl.topology = TopologySpec::Tree {
+            levels: 1 + rng.below(2) as usize,
+            fanout: 1 + rng.below(2) as usize,
+            ssds: 2 + rng.below(4) as usize,
+        };
+        cfg.cxl.interleave = *rng.choice(&[
+            InterleavePolicy::Line,
+            InterleavePolicy::Page,
+            InterleavePolicy::Capacity,
+        ]);
+        let mut src = WorkloadId::Pr.source(cfg.seed);
+        let s = simulate(&cfg, None, &mut *src).unwrap();
+        // Every demand miss round-trips through exactly one endpoint, so
+        // per-device service counts sum to the run's miss total...
+        let reads: u64 = s.per_device.iter().map(|d| d.demand_reads).sum();
+        assert_eq!(reads, s.llc_misses, "seed {seed}: {:?}", s.per_device);
+        // ...and so does the per-device fabric request accounting.
+        assert!(s.per_device.iter().all(|d| d.bytes_down > 0 && d.bytes_up > 0),
+            "seed {seed}: endpoint saw no fabric traffic: {:?}", s.per_device);
     });
 }
 
