@@ -1,0 +1,182 @@
+//! Device-side BI directory (snoop filter).
+//!
+//! One instance per CXL-SSD endpoint. Tracks which of the device's lines
+//! the host may currently cache (LLC or reflector). The set-associative
+//! LRU organization mirrors real snoop-filter SRAM: when a grant lands in
+//! a full set, the LRU victim is displaced and the caller must issue a
+//! `BISnp` to invalidate that line host-side — the directory is only
+//! allowed to *over*-approximate (silent host drops of clean lines leave
+//! stale entries behind, which is safe), never to under-approximate (a
+//! host-cached line the directory forgot could go stale undetected).
+
+/// Directory statistics (per endpoint).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DirectoryStats {
+    /// Lines granted to the host (DRS responses + BISnpData pushes).
+    pub grants: u64,
+    /// Lines explicitly revoked (dirty writebacks, BISnp invalidations).
+    pub revokes: u64,
+    /// Grants that displaced a tracked line — each displaced line costs
+    /// a BISnp/BIRsp round trip to the host.
+    pub capacity_evictions: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    tag: u64,
+    last_use: u64,
+    valid: bool,
+}
+
+/// Set-associative LRU snoop filter over line addresses.
+#[derive(Debug, Clone)]
+pub struct BiDirectory {
+    sets: usize,
+    ways: usize,
+    entries: Vec<Entry>,
+    stamp: u64,
+    pub stats: DirectoryStats,
+}
+
+impl BiDirectory {
+    pub fn new(total_entries: usize, ways: usize) -> Self {
+        let total = total_entries.max(1);
+        let ways = ways.clamp(1, total);
+        let sets = (total / ways).max(1);
+        BiDirectory {
+            sets,
+            ways,
+            entries: vec![Entry::default(); sets * ways],
+            stamp: 0,
+            stats: DirectoryStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        // Same index mix as the host caches: strided patterns spread
+        // across sets even for power-of-two strides.
+        let h = line.wrapping_mul(0xA24B_AED4_963E_E407) >> 21;
+        (h % self.sets as u64) as usize
+    }
+
+    #[inline]
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.ways..(set + 1) * self.ways
+    }
+
+    /// Is the host possibly caching `line`?
+    pub fn contains(&self, line: u64) -> bool {
+        let range = self.slot_range(self.set_of(line));
+        self.entries[range].iter().any(|e| e.valid && e.tag == line)
+    }
+
+    /// Record that the host received a copy of `line` (DRS response or
+    /// BISnpData push arrival). Returns a displaced line that must now be
+    /// back-invalidated host-side, if the set was full.
+    pub fn grant(&mut self, line: u64) -> Option<u64> {
+        self.stamp += 1;
+        self.stats.grants += 1;
+        let range = self.slot_range(self.set_of(line));
+        let stamp = self.stamp;
+        for e in &mut self.entries[range.clone()] {
+            if e.valid && e.tag == line {
+                e.last_use = stamp;
+                return None;
+            }
+        }
+        let mut victim = range.start;
+        let mut best = u64::MAX;
+        for i in range {
+            let e = &self.entries[i];
+            if !e.valid {
+                victim = i;
+                break;
+            }
+            if e.last_use < best {
+                best = e.last_use;
+                victim = i;
+            }
+        }
+        let displaced = if self.entries[victim].valid {
+            self.stats.capacity_evictions += 1;
+            Some(self.entries[victim].tag)
+        } else {
+            None
+        };
+        self.entries[victim] = Entry { tag: line, last_use: stamp, valid: true };
+        displaced
+    }
+
+    /// The host gave the line up (dirty writeback) or was invalidated
+    /// (BISnp). Returns whether the line was tracked.
+    pub fn revoke(&mut self, line: u64) -> bool {
+        let range = self.slot_range(self.set_of(line));
+        for e in &mut self.entries[range] {
+            if e.valid && e.tag == line {
+                e.valid = false;
+                self.stats.revokes += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Currently-tracked line count.
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_then_contains_then_revoke() {
+        let mut d = BiDirectory::new(64, 4);
+        assert!(!d.contains(7));
+        assert_eq!(d.grant(7), None);
+        assert!(d.contains(7));
+        assert!(d.revoke(7));
+        assert!(!d.contains(7));
+        assert!(!d.revoke(7));
+        assert_eq!(d.stats.grants, 1);
+        assert_eq!(d.stats.revokes, 1);
+    }
+
+    #[test]
+    fn regrant_refreshes_without_eviction() {
+        let mut d = BiDirectory::new(64, 4);
+        d.grant(9);
+        assert_eq!(d.grant(9), None);
+        assert_eq!(d.occupancy(), 1);
+        assert_eq!(d.stats.capacity_evictions, 0);
+    }
+
+    #[test]
+    fn full_set_displaces_lru_victim() {
+        let mut d = BiDirectory::new(2, 2); // one set, two ways
+        assert_eq!(d.sets, 1);
+        d.grant(1);
+        d.grant(2);
+        d.grant(1); // refresh: 2 becomes LRU
+        let displaced = d.grant(3);
+        assert_eq!(displaced, Some(2));
+        assert!(d.contains(1) && d.contains(3) && !d.contains(2));
+        assert_eq!(d.stats.capacity_evictions, 1);
+    }
+
+    #[test]
+    fn occupancy_bounded_by_capacity() {
+        let mut d = BiDirectory::new(16, 4);
+        for line in 0..1000 {
+            d.grant(line);
+        }
+        assert!(d.occupancy() <= d.capacity());
+    }
+}

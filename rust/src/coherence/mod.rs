@@ -1,0 +1,33 @@
+//! Back-invalidation coherence subsystem (CXL 3.0 BI flows).
+//!
+//! CXL.mem gives the *device* a way to revoke host-cached copies of
+//! device-owned lines: the endpoint sends `S2M BISnp`, the host drops
+//! (or writes back) the line from its hierarchy and acks with
+//! `M2S BIRsp`. For that to work the device must know which of its lines
+//! the host may be caching — the per-endpoint [`directory::BiDirectory`]
+//! (a snoop filter) tracks exactly that, populated by DRS read responses
+//! and BISnpData pushes, trimmed by dirty writebacks and BISnp
+//! invalidations, and bounded in capacity (a full set back-invalidates
+//! its victim, the classic snoop-filter eviction storm of at-scale CXL
+//! memory studies).
+//!
+//! The matching host-side obligations live in the runner's write path:
+//! stores mark LLC lines dirty, dirty LLC evictions round-trip
+//! `RwDMemWr`/`NdrCmp` to the owning endpoint, stores invalidate any
+//! reflector copy, and pushed lines that were superseded in flight are
+//! dropped on arrival (stale-push protection) — a stale pushed line must
+//! never be consumed.
+//!
+//! [`shadow::ShadowMemory`] is the subsystem's correctness oracle: a
+//! debug-mode auditor that tracks, per line, where the latest written
+//! version lives (device, host hierarchy, reflector, in-flight fills)
+//! and flags any demand read that observes an older value. Enable it
+//! with `[coherence] audit = true`, `--audit`, or build the whole test
+//! suite with `--features audit` to run every simulation under the
+//! oracle.
+
+pub mod directory;
+pub mod shadow;
+
+pub use directory::{BiDirectory, DirectoryStats};
+pub use shadow::{AuditStats, ShadowMemory};

@@ -1,0 +1,270 @@
+//! Shadow-memory consistency auditor — the coherence subsystem's
+//! correctness oracle.
+//!
+//! Tracks a monotonically increasing *version* per line: every store
+//! (host write or device-side update) bumps it, and every holder of a
+//! copy (the owning device, the host hierarchy at LLC granularity, the
+//! reflector buffer, in-flight fills) is mirrored with the version it
+//! holds. The runner reports each data movement; the auditor asserts
+//! that every demand read observes the latest version. Any mismatch is a
+//! consistency violation — e.g. a stale BISnpData push consumed from the
+//! reflector, or a dirty line lost without a writeback.
+//!
+//! The auditor deliberately only mutates its location maps in response
+//! to *explicit* runner callbacks: if the product code forgets an
+//! invalidation, the mirrors diverge and the next read of the line is
+//! flagged, which is exactly the point.
+
+use std::collections::HashMap;
+
+/// Auditor counters, reported through `RunStats::audit`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AuditStats {
+    /// Demand reads version-checked (hits, reflector hits, memory reads).
+    pub reads_checked: u64,
+    /// Host stores applied.
+    pub writes_applied: u64,
+    /// Device-side updates applied.
+    pub device_updates: u64,
+    /// Reads that observed a value older than the latest write.
+    pub violations: u64,
+    /// Subset of violations: reflector hits serving a stale pushed line.
+    pub stale_consumptions: u64,
+}
+
+/// The shadow memory. Versions default to 0 (initial state, consistent
+/// everywhere by construction).
+#[derive(Debug, Default)]
+pub struct ShadowMemory {
+    /// Latest committed version per line (global order of stores).
+    latest: HashMap<u64, u64>,
+    /// Version held at the owning device (or local DRAM).
+    device: HashMap<u64, u64>,
+    /// Version held in the host hierarchy (LLC granularity; inclusive).
+    host: HashMap<u64, u64>,
+    /// Version held in the reflector buffer.
+    reflector: HashMap<u64, u64>,
+    /// Versions captured by in-flight fills, keyed by (line, issue
+    /// time) so overlapping fills for the same line cannot clobber
+    /// each other's captured payloads.
+    pending: HashMap<(u64, u64), u64>,
+    pub stats: AuditStats,
+}
+
+impl ShadowMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn get(m: &HashMap<u64, u64>, line: u64) -> u64 {
+        m.get(&line).copied().unwrap_or(0)
+    }
+
+    fn latest_of(&self, line: u64) -> u64 {
+        Self::get(&self.latest, line)
+    }
+
+    fn violation(&mut self, line: u64, held: u64, what: &str) {
+        self.stats.violations += 1;
+        eprintln!(
+            "shadow-memory violation: {what} of line {line:#x} observed v{held}, latest is v{}",
+            self.latest_of(line)
+        );
+    }
+
+    /// A store retired into the host hierarchy (line dirty in LLC).
+    pub fn host_write(&mut self, line: u64) {
+        let v = self.latest_of(line) + 1;
+        self.latest.insert(line, v);
+        self.host.insert(line, v);
+        self.stats.writes_applied += 1;
+    }
+
+    /// A device-side update committed at the owning endpoint (the runner
+    /// must have back-invalidated any host copy first).
+    pub fn device_write(&mut self, line: u64) {
+        let v = self.latest_of(line) + 1;
+        self.latest.insert(line, v);
+        self.device.insert(line, v);
+        self.stats.device_updates += 1;
+    }
+
+    /// Demand access served from the host hierarchy (L1/L2/LLC hit).
+    pub fn host_read_cached(&mut self, line: u64) {
+        self.stats.reads_checked += 1;
+        let held = Self::get(&self.host, line);
+        if held != self.latest_of(line) {
+            self.violation(line, held, "cached read");
+        }
+    }
+
+    /// Demand miss served by the backing memory (device or local DRAM).
+    pub fn memory_read(&mut self, line: u64) {
+        self.stats.reads_checked += 1;
+        let held = Self::get(&self.device, line);
+        if held != self.latest_of(line) {
+            self.violation(line, held, "memory read");
+        }
+        self.host.insert(line, held);
+    }
+
+    /// Demand miss served by the reflector (pushed line consumed).
+    pub fn reflector_consume(&mut self, line: u64) {
+        self.stats.reads_checked += 1;
+        let held = self.reflector.remove(&line).unwrap_or(0);
+        if held != self.latest_of(line) {
+            self.stats.stale_consumptions += 1;
+            self.violation(line, held, "reflector consume");
+        }
+        self.host.insert(line, held);
+    }
+
+    /// A fill (push or host prefetch) was issued at `issued_at`: its
+    /// payload carries the device's version as of that instant.
+    pub fn fill_issue(&mut self, line: u64, issued_at: u64) {
+        self.pending.insert((line, issued_at), Self::get(&self.device, line));
+    }
+
+    fn pending_take(&mut self, line: u64, issued_at: u64) -> u64 {
+        self.pending
+            .remove(&(line, issued_at))
+            .unwrap_or_else(|| Self::get(&self.device, line))
+    }
+
+    /// The fill landed in the reflector buffer.
+    pub fn fill_arrive_reflector(&mut self, line: u64, issued_at: u64) {
+        let v = self.pending_take(line, issued_at);
+        self.reflector.insert(line, v);
+    }
+
+    /// The fill landed in the LLC.
+    pub fn fill_arrive_llc(&mut self, line: u64, issued_at: u64) {
+        let v = self.pending_take(line, issued_at);
+        self.host.insert(line, v);
+    }
+
+    /// The fill was dropped on arrival (stale, duplicate, or resident).
+    pub fn fill_dropped(&mut self, line: u64, issued_at: u64) {
+        self.pending.remove(&(line, issued_at));
+    }
+
+    /// Dirty LLC eviction: host version committed back to the device.
+    pub fn writeback(&mut self, line: u64) {
+        let v = Self::get(&self.host, line);
+        self.device.insert(line, v);
+        self.host.remove(&line);
+    }
+
+    /// Clean LLC eviction: host silently drops its copy.
+    pub fn host_evict(&mut self, line: u64) {
+        self.host.remove(&line);
+    }
+
+    /// BISnp invalidation: host drops the line from hierarchy + reflector
+    /// (any dirty copy was written back separately, before this call).
+    pub fn host_drop(&mut self, line: u64) {
+        self.host.remove(&line);
+        self.reflector.remove(&line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_lines_are_consistent_everywhere() {
+        let mut s = ShadowMemory::new();
+        s.host_read_cached(1);
+        s.memory_read(2);
+        s.reflector_consume(3);
+        assert_eq!(s.stats.violations, 0);
+        assert_eq!(s.stats.reads_checked, 3);
+    }
+
+    #[test]
+    fn write_then_cached_read_is_clean() {
+        let mut s = ShadowMemory::new();
+        s.memory_read(5); // fill
+        s.host_write(5);
+        s.host_read_cached(5);
+        assert_eq!(s.stats.violations, 0);
+    }
+
+    #[test]
+    fn lost_dirty_copy_is_flagged_on_memory_read() {
+        let mut s = ShadowMemory::new();
+        s.host_write(5);
+        s.host_evict(5); // clean-evicted a dirty line: writeback forgotten
+        s.memory_read(5);
+        assert_eq!(s.stats.violations, 1);
+    }
+
+    #[test]
+    fn writeback_makes_device_consistent() {
+        let mut s = ShadowMemory::new();
+        s.host_write(5);
+        s.writeback(5);
+        s.memory_read(5);
+        assert_eq!(s.stats.violations, 0);
+    }
+
+    #[test]
+    fn stale_push_consumption_is_flagged() {
+        let mut s = ShadowMemory::new();
+        s.fill_issue(9, 100); // push captures v0
+        s.device_write(9); // device updates to v1 while push is in flight
+        s.fill_arrive_reflector(9, 100); // runner (buggily) inserts anyway
+        s.reflector_consume(9);
+        assert_eq!(s.stats.violations, 1);
+        assert_eq!(s.stats.stale_consumptions, 1);
+    }
+
+    #[test]
+    fn dropped_stale_push_is_clean() {
+        let mut s = ShadowMemory::new();
+        s.fill_issue(9, 100);
+        s.device_write(9);
+        s.fill_dropped(9, 100); // stale-push protection drops the arrival
+        s.memory_read(9); // demand refetches the new value
+        assert_eq!(s.stats.violations, 0);
+    }
+
+    #[test]
+    fn overlapping_fills_keep_distinct_captured_versions() {
+        // Fill A captures v0, the device then updates, fill B captures
+        // v1: A's arrival must still be judged against its own (stale)
+        // payload, not B's.
+        let mut s = ShadowMemory::new();
+        s.fill_issue(9, 100); // A: v0
+        s.device_write(9); // v1
+        s.fill_issue(9, 200); // B: v1
+        s.fill_arrive_reflector(9, 100); // A lands (buggily) first
+        s.reflector_consume(9);
+        assert_eq!(s.stats.stale_consumptions, 1, "A's v0 payload is stale");
+        s.fill_arrive_reflector(9, 200); // B lands with the fresh payload
+        s.reflector_consume(9);
+        assert_eq!(s.stats.violations, 1, "B's v1 payload is current");
+    }
+
+    #[test]
+    fn device_update_without_invalidation_is_flagged() {
+        let mut s = ShadowMemory::new();
+        s.memory_read(4); // host caches v0
+        s.device_write(4); // runner forgot the BISnp
+        s.host_read_cached(4);
+        assert_eq!(s.stats.violations, 1);
+    }
+
+    #[test]
+    fn device_update_with_invalidation_is_clean() {
+        let mut s = ShadowMemory::new();
+        s.memory_read(4);
+        s.host_drop(4); // BISnp invalidated the host copy
+        s.device_write(4);
+        s.memory_read(4); // re-fetch observes the new value
+        assert_eq!(s.stats.violations, 0);
+        assert_eq!(s.stats.device_updates, 1);
+    }
+}

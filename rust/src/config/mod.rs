@@ -428,6 +428,9 @@ pub struct ExpandConfig {
     pub online_tuning: bool,
     /// Safety margin subtracted from the prefetch issue deadline.
     pub margin_ns: f64,
+    /// Report every Nth reflector hit to the owning decider over CXL.io
+    /// (1 = every hit; larger strides bound notification traffic).
+    pub hit_notify_stride: usize,
 }
 
 impl Default for ExpandConfig {
@@ -440,6 +443,38 @@ impl Default for ExpandConfig {
             timeliness_accuracy: 1.0,
             online_tuning: true,
             margin_ns: 500.0,
+            hit_notify_stride: 4,
+        }
+    }
+}
+
+/// Back-invalidation coherence knobs (`[coherence]`).
+#[derive(Debug, Clone)]
+pub struct CoherenceConfig {
+    /// BI-directory (snoop filter) entries per endpoint. Sized to cover
+    /// the host LLC by default; shrinking it forces capacity evictions
+    /// and the BISnp traffic they carry.
+    pub dir_entries: usize,
+    /// Directory associativity.
+    pub dir_ways: usize,
+    /// Inject a device-side update to a recently-demanded line every N
+    /// host accesses (0 = off) — exercises BISnp invalidation and
+    /// stale-push protection under load.
+    pub device_update_every: usize,
+    /// Run the shadow-memory consistency auditor alongside the
+    /// simulation (also forced on crate-wide by `--features audit`).
+    pub audit: bool,
+}
+
+impl Default for CoherenceConfig {
+    fn default() -> Self {
+        CoherenceConfig {
+            // 1M entries x 8 B tag SRAM ~ 8 MB: covers the 30 MB LLC's
+            // 491K lines plus the reflector with headroom.
+            dir_entries: 1 << 20,
+            dir_ways: 16,
+            device_update_every: 0,
+            audit: cfg!(feature = "audit"),
         }
     }
 }
@@ -462,6 +497,7 @@ pub struct SimConfig {
     pub cxl: CxlConfig,
     pub ssd: SsdConfig,
     pub expand: ExpandConfig,
+    pub coherence: CoherenceConfig,
     pub prefetcher: PrefetcherKind,
     pub backing: Backing,
     /// Accesses to simulate per run (trace length).
@@ -481,6 +517,7 @@ impl Default for SimConfig {
             cxl: CxlConfig::default(),
             ssd: SsdConfig::default(),
             expand: ExpandConfig::default(),
+            coherence: CoherenceConfig::default(),
             prefetcher: PrefetcherKind::None,
             backing: Backing::CxlSsd,
             accesses: 2_000_000,
@@ -532,6 +569,11 @@ impl SimConfig {
                 self.expand.online_tuning = v.parse().map_err(|_| bad())?
             }
             ("expand", "margin_ns") => self.expand.margin_ns = num!(),
+            ("expand", "hit_notify_stride") => self.expand.hit_notify_stride = num!(),
+            ("coherence", "dir_entries") => self.coherence.dir_entries = num!(),
+            ("coherence", "dir_ways") => self.coherence.dir_ways = num!(),
+            ("coherence", "device_update_every") => self.coherence.device_update_every = num!(),
+            ("coherence", "audit") => self.coherence.audit = v.parse().map_err(|_| bad())?,
             ("sim", "accesses") => self.accesses = num!(),
             ("sim", "seed") => self.seed = num!(),
             ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
@@ -557,7 +599,9 @@ impl SimConfig {
              [cxl] {} GT/s x{} flit={}B switch={}ns/hop link={}ns levels={} fanout={} \
              topo={} il={}\n\
              [ssd] media={} read={}ns write={}ns ch={} idram={}MB ctrl={}ns\n\
-             [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={}\n\
+             [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={} \
+             notify_stride={}\n\
+             [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
             self.cpu.mshrs,
@@ -575,7 +619,9 @@ impl SimConfig {
             self.ssd.channels, self.ssd.internal_dram_bytes >> 20, self.ssd.controller_ns,
             self.expand.reflector_bytes >> 10, self.expand.window, self.expand.predict_stride,
             self.expand.timing_entries, self.expand.timeliness_accuracy,
-            self.expand.online_tuning,
+            self.expand.online_tuning, self.expand.hit_notify_stride,
+            self.coherence.dir_entries, self.coherence.dir_ways,
+            self.coherence.device_update_every, self.coherence.audit,
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
         )
     }
@@ -648,6 +694,24 @@ mod tests {
         assert_eq!(ssds.len(), 1);
         assert_eq!(topo.switch_depth(ssds[0]), c.cxl.switch_levels);
         assert_eq!(c.cxl.interleave, InterleavePolicy::Page);
+    }
+
+    #[test]
+    fn expand_and_coherence_keys_apply() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.expand.hit_notify_stride, 4, "paper default");
+        c.apply("expand", "hit_notify_stride", "2").unwrap();
+        c.apply("coherence", "dir_entries", "1024").unwrap();
+        c.apply("coherence", "dir_ways", "4").unwrap();
+        c.apply("coherence", "device_update_every", "500").unwrap();
+        c.apply("coherence", "audit", "true").unwrap();
+        assert_eq!(c.expand.hit_notify_stride, 2);
+        assert_eq!(c.coherence.dir_entries, 1024);
+        assert_eq!(c.coherence.dir_ways, 4);
+        assert_eq!(c.coherence.device_update_every, 500);
+        assert!(c.coherence.audit);
+        assert!(c.apply("coherence", "audit", "maybe").is_err());
+        assert!(c.render().contains("dir_entries=1024"));
     }
 
     #[test]

@@ -135,6 +135,36 @@ impl Fabric {
         at_host - now
     }
 
+    /// Dirty-eviction writeback round trip: M2S `RwDMemWr` (header +
+    /// 64 B payload) down, device commit `service`, S2M `NdrCmp` up.
+    /// Returns total latency (completion at RC minus `now`); callers
+    /// typically run it off the critical path but the link occupancy and
+    /// per-endpoint traffic are real either way.
+    pub fn write_roundtrip(&mut self, dev: NodeId, now: Ps, service: Ps) -> Ps {
+        if let Some(t) = self.traffic.get_mut(&dev) {
+            t.record_m2s(M2S::RwDMemWr);
+            t.record_s2m(S2M::NdrCmp);
+        }
+        let at_dev = self.traverse(dev, now, m2s_bytes(M2S::RwDMemWr), Dir::Down);
+        let done_dev = at_dev + service;
+        let at_host = self.traverse(dev, done_dev, s2m_bytes(S2M::NdrCmp), Dir::Up);
+        at_host - now
+    }
+
+    /// Device-initiated back-invalidation round trip: S2M `BISnp` up
+    /// (no payload), host invalidates, M2S `BIRsp` ack down. Coherence
+    /// traffic rides the demand lane — a snoop cannot be deferred behind
+    /// speculative pushes.
+    pub fn bi_invalidate(&mut self, dev: NodeId, now: Ps) -> Ps {
+        if let Some(t) = self.traffic.get_mut(&dev) {
+            t.record_s2m(S2M::BISnp);
+            t.record_m2s(M2S::BIRsp);
+        }
+        let at_host = self.traverse(dev, now, s2m_bytes(S2M::BISnp), Dir::Up);
+        let at_dev = self.traverse(dev, at_host, m2s_bytes(M2S::BIRsp), Dir::Down);
+        at_dev - now
+    }
+
     /// Upward push (decider -> reflector) via BISnpData: one-way S2M with
     /// payload, plus the host's BIRsp ack (not on the critical path).
     pub fn bisnp_push(&mut self, dev: NodeId, now: Ps) -> Ps {
@@ -244,6 +274,40 @@ mod tests {
         assert_eq!(f.traffic_for(ssds[1]).m2s_io, 1);
         assert_eq!(f.traffic_for(ssds[1]).bytes_down, 16);
         assert_eq!(f.traffic_for(ssds[0]).m2s_io, 0);
+    }
+
+    #[test]
+    fn write_roundtrip_records_memwr_and_ndr() {
+        let (mut f, ssd) = fabric(1);
+        let service = 500_000;
+        let wr = f.write_roundtrip(ssd, 0, service);
+        // Both directions + service: strictly more than one-way + service.
+        assert!(wr > service + f.path_latency(ssd, 16), "wr {wr}");
+        let t = f.traffic[&ssd];
+        assert_eq!(t.m2s_wr, 1);
+        assert_eq!(t.s2m_ndr, 1);
+        // Payload accounted downward: header + 64B line.
+        assert_eq!(t.bytes_down, 80);
+        assert_eq!(t.bytes_up, 16);
+    }
+
+    #[test]
+    fn bi_invalidate_records_bisnp_and_birsp() {
+        let (mut f, ssd) = fabric(2);
+        let rt = f.bi_invalidate(ssd, 0);
+        assert!(rt > f.path_latency(ssd, 16), "round trip {rt} exceeds one-way");
+        let t = f.traffic[&ssd];
+        assert_eq!(t.s2m_bisnp, 1);
+        assert_eq!(t.m2s_birsp, 1);
+        assert_eq!(t.bytes_up, 16);
+        assert_eq!(t.bytes_down, 16);
+    }
+
+    #[test]
+    fn deeper_endpoint_pays_more_for_bi_invalidate() {
+        let (mut f1, s1) = fabric(1);
+        let (mut f3, s3) = fabric(3);
+        assert!(f3.bi_invalidate(s3, 0) > f1.bi_invalidate(s1, 0));
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct DeciderStats {
     /// Pattern extensions skipped because another pool endpoint owns the
     /// line — a device can only stage and push data it stores.
     pub foreign_skips: u64,
+    /// Pattern extensions skipped because the BI directory says the host
+    /// already caches the line — pushing it would be wasted reflector
+    /// churn at best and a stale-data hazard at worst.
+    pub host_filtered: u64,
 }
 
 impl DeciderStats {
@@ -54,6 +58,7 @@ impl DeciderStats {
         self.oov_stops += other.oov_stops;
         self.dropped += other.dropped;
         self.foreign_skips += other.foreign_skips;
+        self.host_filtered += other.host_filtered;
     }
 }
 
@@ -144,7 +149,10 @@ impl Decider {
     /// back up to the runahead depth (`consumed` = hits since the last
     /// notification when notifications are sampled).
     /// `owns` tells the decider which lines its own device stores under
-    /// the pool's interleave policy (always-true for a 1-device pool).
+    /// the pool's interleave policy (always-true for a 1-device pool);
+    /// `host_has` is the device's BI-directory view of what the host
+    /// already caches (such lines are never pushed).
+    #[allow(clippy::too_many_arguments)]
     pub fn on_host_hit(
         &mut self,
         consumed: usize,
@@ -153,13 +161,14 @@ impl Decider {
         fabric: &mut Fabric,
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
+        host_has: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         self.timing.record(now, consumed as u64);
         self.steps_ahead -= consumed as i64;
         if !self.stream_mode {
             return Vec::new();
         }
-        self.extend_frontier(now, ssd, fabric, dev, owns)
+        self.extend_frontier(now, ssd, fabric, dev, owns, host_has)
     }
 
     /// Push pattern-extension targets until the frontier is RUNAHEAD
@@ -171,6 +180,7 @@ impl Decider {
         fabric: &mut Fabric,
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
+        host_has: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         let runahead = if self.stream_mode {
             crate::prefetch::ml::RUNAHEAD as i64
@@ -199,6 +209,14 @@ impl Decider {
                 self.stats.foreign_skips += 1;
                 continue;
             }
+            // The BI directory says the host already caches this line
+            // (LLC or reflector): a push would be redundant — and, if
+            // the host copy is dirty, a stale-data hazard. Skip without
+            // marking it pushed, so a later host drop re-enables it.
+            if host_has(tline) {
+                self.stats.host_filtered += 1;
+                continue;
+            }
             if !self.dedup_push(tline) {
                 continue;
             }
@@ -223,6 +241,7 @@ impl Decider {
 
     /// A MemRdPC observation (LLC miss reached the device at ~`now`).
     /// May produce BISnpData pushes.
+    #[allow(clippy::too_many_arguments)]
     pub fn on_memrd_pc(
         &mut self,
         line: u64,
@@ -232,6 +251,7 @@ impl Decider {
         fabric: &mut Fabric,
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
+        host_has: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         self.stats.observations += 1;
         self.timing.record_arrival(now);
@@ -252,9 +272,10 @@ impl Decider {
             return Vec::new();
         }
         self.since_predict = 0;
-        self.predict_and_push(line, now, ssd, fabric, dev, owns)
+        self.predict_and_push(line, now, ssd, fabric, dev, owns, host_has)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn predict_and_push(
         &mut self,
         line: u64,
@@ -263,6 +284,7 @@ impl Decider {
         fabric: &mut Fabric,
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
+        host_has: &dyn Fn(u64) -> bool,
     ) -> Vec<DeciderPush> {
         let d: Vec<u16> = self.deltas.iter().copied().collect();
         let p: Vec<u16> = self.pcs.iter().copied().collect();
@@ -311,7 +333,7 @@ impl Decider {
         self.frontier_line = line as i64;
         self.frontier_idx = 0;
         self.steps_ahead = 0;
-        self.extend_frontier(now, ssd, fabric, dev, owns)
+        self.extend_frontier(now, ssd, fabric, dev, owns, host_has)
     }
 
     /// Decider metadata footprint: window tokens + timing buffer +
@@ -355,8 +377,16 @@ mod tests {
         let mut pushes = Vec::new();
         for i in 0..64u64 {
             let line = 1000 + i * 2; // stride 2
-            let out =
-                d.on_memrd_pc(line, 0x42, i * 1_000_000, &mut ssd, &mut fabric, dev, &|_| true);
+            let out = d.on_memrd_pc(
+                line,
+                0x42,
+                i * 1_000_000,
+                &mut ssd,
+                &mut fabric,
+                dev,
+                &|_| true,
+                &|_| false,
+            );
             pushes.extend(out);
         }
         assert!(!pushes.is_empty());
@@ -375,7 +405,16 @@ mod tests {
         let gap = 2_000_000u64; // 2 us between misses
         let mut last = Vec::new();
         for i in 0..40u64 {
-            last = d.on_memrd_pc(5000 + i, 0x42, i * gap, &mut ssd, &mut fabric, dev, &|_| true);
+            last = d.on_memrd_pc(
+                5000 + i,
+                0x42,
+                i * gap,
+                &mut ssd,
+                &mut fabric,
+                dev,
+                &|_| true,
+                &|_| false,
+            );
         }
         assert!(!last.is_empty());
         let now = 39 * gap;
@@ -405,6 +444,7 @@ mod tests {
                 &mut fabric,
                 dev,
                 &|_| false,
+                &|_| false,
             ));
         }
         assert!(out.is_empty());
@@ -414,10 +454,37 @@ mod tests {
     }
 
     #[test]
+    fn host_cached_lines_are_filtered_not_pushed() {
+        // A BI directory that claims the host caches everything: the
+        // decider must not stage or push a single line — pushing data
+        // the host already holds is reflector churn and a staleness
+        // hazard.
+        let (mut d, mut ssd, mut fabric, dev) = harness();
+        let mut out = Vec::new();
+        for i in 0..64u64 {
+            out.extend(d.on_memrd_pc(
+                3000 + i * 2,
+                0x42,
+                i * 1_000_000,
+                &mut ssd,
+                &mut fabric,
+                dev,
+                &|_| true,
+                &|_| true,
+            ));
+        }
+        assert!(out.is_empty());
+        assert!(d.stats.host_filtered > 0, "{:?}", d.stats);
+        assert_eq!(ssd.stats.staged_reads, 0, "nothing staged for host-held lines");
+        assert_eq!(fabric.traffic_for(dev).s2m_bisnpdata, 0, "no redundant pushes");
+    }
+
+    #[test]
     fn no_predictions_before_window_full() {
         let (mut d, mut ssd, mut fabric, dev) = harness();
         for i in 0..31u64 {
-            let out = d.on_memrd_pc(i, 1, i * 1000, &mut ssd, &mut fabric, dev, &|_| true);
+            let out =
+                d.on_memrd_pc(i, 1, i * 1000, &mut ssd, &mut fabric, dev, &|_| true, &|_| false);
             assert!(out.is_empty());
         }
         assert_eq!(d.stats.inferences, 0);

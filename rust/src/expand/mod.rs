@@ -70,7 +70,7 @@ impl ExpandPrefetcher {
         ExpandPrefetcher {
             reflector,
             deciders,
-            hit_notify_stride: 4,
+            hit_notify_stride: cfg.hit_notify_stride.max(1),
             hits_seen: vec![0; endpoints],
             stats: PrefetchIssueStats::default(),
         }
@@ -111,7 +111,7 @@ impl Prefetcher for ExpandPrefetcher {
             self.hits_seen[idx] += 1;
             if self.hits_seen[idx] % self.hit_notify_stride == 0 {
                 let delay = env.fabric.io_notify(node, now);
-                let (router, _, ssd) = env.pool.parts_mut(idx);
+                let (router, _, ssd, dir) = env.pool.parts_mut(idx);
                 let pushes = self.deciders[idx].on_host_hit(
                     self.hit_notify_stride,
                     now + delay,
@@ -119,6 +119,7 @@ impl Prefetcher for ExpandPrefetcher {
                     env.fabric,
                     node,
                     &|l| router.route(l) == idx,
+                    &|l| dir.contains(l),
                 );
                 self.stats.issued += pushes.len() as u64;
                 return pushes
@@ -126,6 +127,7 @@ impl Prefetcher for ExpandPrefetcher {
                     .map(|p| PrefetchFill {
                         line: p.line,
                         arrives_at: p.arrives_at,
+                        issued_at: now,
                         to_reflector: true,
                     })
                     .collect();
@@ -135,9 +137,10 @@ impl Prefetcher for ExpandPrefetcher {
         // LLC miss: the reflector piggybacks the PC via MemRdPC; the
         // owning device's decider observes it after the downward
         // traversal of *its* virtual hierarchy. The decider may only
-        // stage/push lines its device owns under the interleave policy.
+        // stage/push lines its device owns under the interleave policy,
+        // and never lines its BI directory says the host already caches.
         let down = env.fabric.path_latency(node, 24);
-        let (router, _, ssd) = env.pool.parts_mut(idx);
+        let (router, _, ssd, dir) = env.pool.parts_mut(idx);
         let pushes = self.deciders[idx].on_memrd_pc(
             a.line,
             a.pc,
@@ -146,12 +149,18 @@ impl Prefetcher for ExpandPrefetcher {
             env.fabric,
             node,
             &|l| router.route(l) == idx,
+            &|l| dir.contains(l),
         );
         self.stats.issued += pushes.len() as u64;
         self.stats.inferences = self.deciders.iter().map(|d| d.stats.inferences).sum();
         pushes
             .into_iter()
-            .map(|p| PrefetchFill { line: p.line, arrives_at: p.arrives_at, to_reflector: true })
+            .map(|p| PrefetchFill {
+                line: p.line,
+                arrives_at: p.arrives_at,
+                issued_at: now,
+                to_reflector: true,
+            })
             .collect()
     }
 
@@ -161,6 +170,10 @@ impl Prefetcher for ExpandPrefetcher {
 
     fn on_reflector_fill(&mut self, line: u64, _now: Ps) {
         self.reflector.insert(line);
+    }
+
+    fn reflector_invalidate(&mut self, line: u64) -> bool {
+        self.reflector.invalidate(line)
     }
 
     fn name(&self) -> String {
@@ -192,10 +205,11 @@ impl Prefetcher for ExpandPrefetcher {
         }
         let r = &self.reflector.stats;
         format!(
-            "deciders[{}]: obs={} inf={} pushes={} dropped={} foreign={} oov={} chg={} | reflector: ins={} hit={} miss={} evict-unused={}",
+            "deciders[{}]: obs={} inf={} pushes={} dropped={} foreign={} hostfilt={} oov={} \
+             chg={} | reflector: ins={} hit={} miss={} evict-unused={} invalidated={}",
             self.deciders.len(), d.observations, d.inferences, d.pushes, d.dropped,
-            d.foreign_skips, d.oov_stops, d.behavior_changes, r.inserts, r.hits, r.misses,
-            r.dropped_unused
+            d.foreign_skips, d.host_filtered, d.oov_stops, d.behavior_changes, r.inserts,
+            r.hits, r.misses, r.dropped_unused, r.invalidated
         )
     }
 }
@@ -203,7 +217,7 @@ impl Prefetcher for ExpandPrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Backing, CxlConfig, InterleavePolicy, SsdConfig};
+    use crate::config::{Backing, CoherenceConfig, CxlConfig, InterleavePolicy, SsdConfig};
     use crate::cxl::configspace::ConfigSpace;
     use crate::cxl::enumeration::Enumeration;
     use crate::cxl::{Fabric, Topology};
@@ -214,8 +228,14 @@ mod tests {
     fn pool_parts(topo: Topology, policy: InterleavePolicy) -> (Fabric, DevicePool, DramModel) {
         let enumeration = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &CxlConfig::default());
-        let pool =
-            DevicePool::new(&fabric, &enumeration, &SsdConfig::default(), policy).unwrap();
+        let pool = DevicePool::new(
+            &fabric,
+            &enumeration,
+            &SsdConfig::default(),
+            policy,
+            &CoherenceConfig::default(),
+        )
+        .unwrap();
         (fabric, pool, DramModel::new(&crate::config::DramConfig::default()))
     }
 
@@ -347,6 +367,38 @@ mod tests {
                 "endpoint {idx} notified from its own hit stream"
             );
         }
+    }
+
+    #[test]
+    fn hit_notify_stride_is_configurable() {
+        // Halving the stride doubles the CXL.io notification traffic
+        // over the same hit stream (ISSUE: the stride was hardcoded).
+        let io_count = |stride: usize| {
+            let (mut fabric, mut pool, mut dram) =
+                pool_parts(Topology::chain(1), InterleavePolicy::Page);
+            let mut cs = ConfigSpace::endpoint(1);
+            cs.write_e2e_latency(400_000);
+            let dm = DeadlineModel::new(&cs, 50_000, 1.0, 3);
+            let pred =
+                Rc::new(RefCell::new(MockPredictor::new(MockPredictor::default_shape())));
+            let cfg = ExpandConfig { hit_notify_stride: stride, ..ExpandConfig::default() };
+            let mut p = ExpandPrefetcher::new(pred, &cfg, vec![dm]);
+            let mut env = PrefetchEnv {
+                fabric: &mut fabric,
+                pool: &mut pool,
+                dram: &mut dram,
+                backing: Backing::CxlSsd,
+            };
+            for i in 0..64u64 {
+                let a = Access { pc: 0x9, line: i, write: false, inst_gap: 5, dependent: false };
+                p.on_llc_access(&a, true, i * 1_000_000, &[], &mut env);
+            }
+            let node = env.pool.node_of(0);
+            env.fabric.traffic_for(node).m2s_io
+        };
+        assert_eq!(io_count(4), 16, "default stride: every 4th hit");
+        assert_eq!(io_count(2), 32, "stride 2: every other hit");
+        assert_eq!(io_count(1), 64, "stride 1: every hit");
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct ReflectorStats {
     pub misses: u64,
     /// Lines dropped by FIFO replacement before being used.
     pub dropped_unused: u64,
+    /// Lines removed by coherence invalidation (host store or BISnp) —
+    /// a stale pushed line must never be consumed.
+    pub invalidated: u64,
 }
 
 /// The RC-side prefetch buffer.
@@ -84,6 +87,19 @@ impl Reflector {
         }
     }
 
+    /// Coherence invalidation: drop the line without serving it (the
+    /// host stored to it, or the owning device sent a BISnp). Returns
+    /// whether a copy was present.
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        if let Some(idx) = self.buf.iter().position(|&(l, _)| l == line) {
+            self.buf.remove(idx);
+            self.stats.invalidated += 1;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Probe without consuming (tests/invariants).
     pub fn contains(&self, line: u64) -> bool {
         self.buf.iter().any(|&(l, _)| l == line)
@@ -128,6 +144,17 @@ mod tests {
         assert!(!r.contains(1));
         assert!(r.contains(2) && r.contains(3));
         assert_eq!(r.stats.dropped_unused, 1);
+    }
+
+    #[test]
+    fn invalidate_drops_without_serving() {
+        let mut r = Reflector::new(1024, 40_000);
+        r.insert(9);
+        assert!(r.invalidate(9));
+        assert!(!r.contains(9));
+        assert_eq!(r.check(9), None, "invalidated line must not be consumed");
+        assert_eq!(r.stats.invalidated, 1);
+        assert!(!r.invalidate(9));
     }
 
     #[test]

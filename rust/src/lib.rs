@@ -16,6 +16,7 @@
 //! * L1 (`python/compile/kernels/mm_attention.py`) — fused
 //!   multi-modality attention Pallas kernel inside the L2 graph.
 
+pub mod coherence;
 pub mod config;
 pub mod cxl;
 pub mod expand;

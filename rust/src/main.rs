@@ -27,7 +27,8 @@ const COMMANDS: &[CommandHelp] = &[
                 [--levels N] [--topology chain|tree:L,F,S|'(s(x,x),x)'] \
                 [--interleave line|page|capacity] [--media znand|pmem|dram] \
                 [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
-                [--config FILE] [--set sec.key=v]",
+                [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
+                [--hit-notify-stride N] [--dir-entries N] [--device-update-every N]",
     },
     CommandHelp {
         name: "figures",
@@ -86,6 +87,14 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     }
     cfg.accesses = args.get_usize("accesses", cfg.accesses)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.expand.hit_notify_stride =
+        args.get_usize("hit-notify-stride", cfg.expand.hit_notify_stride)?;
+    cfg.coherence.dir_entries = args.get_usize("dir-entries", cfg.coherence.dir_entries)?;
+    cfg.coherence.device_update_every =
+        args.get_usize("device-update-every", cfg.coherence.device_update_every)?;
+    if args.flag("audit") {
+        cfg.coherence.audit = true;
+    }
     Ok(cfg)
 }
 
@@ -113,11 +122,23 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         None
     };
     eprintln!("{}", cfg.render());
-    let mut src = id.source(cfg.seed);
+    let mut src: Box<dyn expand_cxl::workloads::TraceSource> = id.source(cfg.seed);
+    let write_boost = args.get_f64("write-boost", 0.0)?;
+    if write_boost > 0.0 {
+        src = Box::new(expand_cxl::workloads::mixed::WriteHeavy::new(
+            src,
+            write_boost,
+            cfg.seed ^ 0x5707,
+        ));
+    }
     let stats = simulate(&cfg, runtime.as_ref(), &mut *src)?;
     println!("{}", stats.summary());
     if !stats.debug.is_empty() {
         println!("  {}", stats.debug);
+    }
+    let coherence = stats.coherence_summary();
+    if !coherence.is_empty() {
+        println!("  {coherence}");
     }
     if stats.per_device.len() > 1 {
         print!("{}", stats.render_per_device());
@@ -161,7 +182,7 @@ fn cmd_enumerate(args: &Args) -> anyhow::Result<()> {
     };
     let e = Enumeration::discover(&topo);
     let fabric = Fabric::new(topo.clone(), &cfg.cxl);
-    let pool = DevicePool::new(&fabric, &e, &cfg.ssd, cfg.cxl.interleave)?;
+    let pool = DevicePool::new(&fabric, &e, &cfg.ssd, cfg.cxl.interleave, &cfg.coherence)?;
     println!(
         "CXL fabric: {} nodes, {} CXL-SSDs, interleave={}\n",
         topo.nodes.len(),

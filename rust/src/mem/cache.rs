@@ -15,6 +15,14 @@ pub enum AccessOutcome {
     Miss,
 }
 
+/// A line displaced by a fill. `dirty` lines carry modified data the
+/// caller must write back to the owning memory (CXL.mem `RwDMemWr`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    pub line: u64,
+    pub dirty: bool,
+}
+
 #[derive(Debug, Clone, Copy, Default)]
 struct Line {
     tag: u64,
@@ -22,6 +30,8 @@ struct Line {
     valid: bool,
     /// Filled by prefetch and not yet demanded.
     prefetch_pending: bool,
+    /// Modified since fill (write-back policy).
+    dirty: bool,
 }
 
 /// Cache statistics (demand + prefetch bookkeeping).
@@ -141,8 +151,8 @@ impl Cache {
     }
 
     /// Fill a line (demand fill or prefetch fill). Returns the evicted
-    /// line address, if any.
-    pub fn fill(&mut self, line: u64, is_prefetch: bool) -> Option<u64> {
+    /// line, if any, with its dirty bit (the caller owns the writeback).
+    pub fn fill(&mut self, line: u64, is_prefetch: bool) -> Option<Evicted> {
         self.stamp += 1;
         let set = self.set_of(line);
         let range = self.slot_range(set);
@@ -175,7 +185,7 @@ impl Cache {
             } else if is_prefetch {
                 self.stats.prefetch_evictions_of_demand += 1;
             }
-            Some(v.tag)
+            Some(Evicted { line: v.tag, dirty: v.dirty })
         } else {
             None
         };
@@ -187,17 +197,43 @@ impl Cache {
             last_use: self.stamp,
             valid: true,
             prefetch_pending: is_prefetch,
+            dirty: false,
         };
         evicted
     }
 
-    /// Back-invalidation (CXL.mem BISnp): drop the line if present.
+    /// Mark a resident line modified (store hit / write-allocate).
+    /// Returns false when the line is not present.
+    pub fn mark_dirty(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        for l in &mut self.lines[range] {
+            if l.valid && l.tag == line {
+                l.dirty = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is the line present and modified?
+    pub fn is_dirty(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        self.lines[self.slot_range(set)]
+            .iter()
+            .any(|l| l.valid && l.tag == line && l.dirty)
+    }
+
+    /// Back-invalidation (CXL.mem BISnp): drop the line if present. Any
+    /// dirty data is discarded — callers that need it written back must
+    /// do so before invalidating (BIRspDirty flow).
     pub fn invalidate(&mut self, line: u64) -> bool {
         let set = self.set_of(line);
         let range = self.slot_range(set);
         for l in &mut self.lines[range] {
             if l.valid && l.tag == line {
                 l.valid = false;
+                l.dirty = false;
                 if l.prefetch_pending {
                     self.stats.prefetch_wasted += 1;
                 }
@@ -211,6 +247,11 @@ impl Cache {
     /// Number of currently-valid lines (for occupancy checks).
     pub fn occupancy(&self) -> usize {
         self.lines.iter().filter(|l| l.valid).count()
+    }
+
+    /// Every currently-valid line address (invariant checks / audits).
+    pub fn valid_lines(&self) -> Vec<u64> {
+        self.lines.iter().filter(|l| l.valid).map(|l| l.tag).collect()
     }
 }
 
@@ -244,7 +285,7 @@ mod tests {
         c.fill(2, false);
         c.access(1); // 2 is now LRU
         let evicted = c.fill(3, false);
-        assert_eq!(evicted, Some(2));
+        assert_eq!(evicted, Some(Evicted { line: 2, dirty: false }));
         assert!(c.probe(1));
         assert!(c.probe(3));
         assert!(!c.probe(2));
@@ -276,6 +317,44 @@ mod tests {
         assert!(!c.probe(5));
         assert!(!c.invalidate(5));
         assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn dirty_bit_follows_the_line_to_eviction() {
+        let mut c = Cache::new(2 * 64, 2, 64); // 1 set, 2 ways
+        c.fill(1, false);
+        assert!(!c.is_dirty(1));
+        assert!(c.mark_dirty(1));
+        assert!(c.is_dirty(1));
+        assert!(!c.mark_dirty(99), "absent line cannot be dirtied");
+        c.fill(2, false);
+        c.access(2); // 1 becomes LRU
+        let ev = c.fill(3, false);
+        assert_eq!(ev, Some(Evicted { line: 1, dirty: true }));
+        // Refill of the same address starts clean.
+        c.fill(1, false);
+        assert!(!c.is_dirty(1));
+    }
+
+    #[test]
+    fn invalidate_clears_dirty_state() {
+        let mut c = Cache::new(4096, 2, 64);
+        c.fill(8, false);
+        c.mark_dirty(8);
+        assert!(c.invalidate(8));
+        c.fill(8, false);
+        assert!(!c.is_dirty(8));
+    }
+
+    #[test]
+    fn valid_lines_enumerates_residents() {
+        let mut c = Cache::new(4096, 2, 64);
+        for l in [3u64, 5, 9] {
+            c.fill(l, false);
+        }
+        let mut lines = c.valid_lines();
+        lines.sort_unstable();
+        assert_eq!(lines, vec![3, 5, 9]);
     }
 
     #[test]

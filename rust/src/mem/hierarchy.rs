@@ -4,7 +4,7 @@
 //! CXL.mem BISnp.
 
 use crate::config::HierarchyConfig;
-use crate::mem::cache::{AccessOutcome, Cache};
+use crate::mem::cache::{AccessOutcome, Cache, Evicted};
 use crate::sim::time::Ps;
 
 /// Where a demand access was served.
@@ -52,11 +52,22 @@ impl Hierarchy {
         }
     }
 
+    /// Demand read from `core` (see [`Hierarchy::access_rw`]).
+    pub fn access(&mut self, core: usize, line: u64) -> LookupResult {
+        self.access_rw(core, line, false)
+    }
+
     /// Demand access from `core`. Fills upper levels on LLC (or lower)
     /// hit; on `Memory` the caller must call [`Hierarchy::fill_demand`]
-    /// once the memory fill completes.
-    pub fn access(&mut self, core: usize, line: u64) -> LookupResult {
+    /// once the memory fill completes. Stores (`write`) that hit mark
+    /// the line dirty at the LLC (write-back; the inclusive LLC is the
+    /// coherence point, so dirtiness is tracked there regardless of
+    /// which private level served the store).
+    pub fn access_rw(&mut self, core: usize, line: u64, write: bool) -> LookupResult {
         if self.l1d[core].access(line) != AccessOutcome::Miss {
+            if write {
+                self.llc.mark_dirty(line);
+            }
             return LookupResult {
                 level: HitLevel::L1,
                 latency: self.lat_l1,
@@ -65,6 +76,9 @@ impl Hierarchy {
         }
         if self.l2[core].access(line) != AccessOutcome::Miss {
             self.l1d[core].fill(line, false);
+            if write {
+                self.llc.mark_dirty(line);
+            }
             return LookupResult {
                 level: HitLevel::L2,
                 latency: self.lat_l1 + self.lat_l2,
@@ -75,6 +89,9 @@ impl Hierarchy {
             AccessOutcome::Hit { first_touch_of_prefetch } => {
                 self.l2[core].fill(line, false);
                 self.l1d[core].fill(line, false);
+                if write {
+                    self.llc.mark_dirty(line);
+                }
                 LookupResult {
                     level: HitLevel::Llc,
                     latency: self.lat_l1 + self.lat_l2 + self.lat_llc,
@@ -89,19 +106,48 @@ impl Hierarchy {
         }
     }
 
-    /// Fill after a memory read (demand miss path).
-    pub fn fill_demand(&mut self, core: usize, line: u64) {
-        self.llc.fill(line, false);
+    /// Enforce inclusion: an LLC victim may not linger in any private
+    /// level (its dirtiness already lives in the LLC entry).
+    fn private_invalidate(&mut self, line: u64) {
+        for c in &mut self.l1d {
+            c.invalidate(line);
+        }
+        for c in &mut self.l2 {
+            c.invalidate(line);
+        }
+    }
+
+    /// Fill after a memory read (demand miss path); `write` marks the
+    /// line dirty (write-allocate RFO). Returns the LLC victim, if any —
+    /// a dirty victim must be written back by the caller.
+    pub fn fill_demand(&mut self, core: usize, line: u64, write: bool) -> Option<Evicted> {
+        let ev = self.llc.fill(line, false);
+        if write {
+            self.llc.mark_dirty(line);
+        }
+        if let Some(e) = ev {
+            self.private_invalidate(e.line);
+        }
         self.l2[core].fill(line, false);
         self.l1d[core].fill(line, false);
+        ev
     }
 
     /// Prefetch fill into the LLC only (the paper's prefetch target).
-    pub fn fill_prefetch(&mut self, line: u64) {
-        self.llc.fill(line, true);
+    /// Returns the LLC victim, if any (same writeback contract as
+    /// [`Hierarchy::fill_demand`] — prefetch fills can displace dirty
+    /// lines too).
+    pub fn fill_prefetch(&mut self, line: u64) -> Option<Evicted> {
+        let ev = self.llc.fill(line, true);
+        if let Some(e) = ev {
+            self.private_invalidate(e.line);
+        }
+        ev
     }
 
     /// Back-invalidation (BISnp): drop from every level (inclusive model).
+    /// Dirty data is discarded — the caller handles the BIRspDirty
+    /// writeback before invalidating (see the runner's coherence path).
     pub fn back_invalidate(&mut self, line: u64) -> bool {
         let mut any = self.llc.invalidate(line);
         for c in &mut self.l1d {
@@ -116,6 +162,16 @@ impl Hierarchy {
     /// Probe the LLC without side effects.
     pub fn llc_contains(&self, line: u64) -> bool {
         self.llc.probe(line)
+    }
+
+    /// Is the line resident and modified at the LLC?
+    pub fn llc_dirty(&self, line: u64) -> bool {
+        self.llc.is_dirty(line)
+    }
+
+    /// Every line currently resident in the LLC (invariant checks).
+    pub fn llc_lines(&self) -> Vec<u64> {
+        self.llc.valid_lines()
     }
 
     pub fn lat_llc(&self) -> Ps {
@@ -140,7 +196,7 @@ mod tests {
         let mut h = small();
         let r = h.access(0, 42);
         assert_eq!(r.level, HitLevel::Memory);
-        h.fill_demand(0, 42);
+        h.fill_demand(0, 42, false);
         assert_eq!(h.access(0, 42).level, HitLevel::L1);
     }
 
@@ -148,7 +204,7 @@ mod tests {
     fn cross_core_llc_sharing() {
         let mut h = small();
         assert_eq!(h.access(0, 7).level, HitLevel::Memory);
-        h.fill_demand(0, 7);
+        h.fill_demand(0, 7, false);
         // Other core misses privates but hits shared LLC.
         assert_eq!(h.access(1, 7).level, HitLevel::Llc);
     }
@@ -167,16 +223,52 @@ mod tests {
     fn back_invalidate_removes_everywhere() {
         let mut h = small();
         h.access(0, 5);
-        h.fill_demand(0, 5);
+        h.fill_demand(0, 5, false);
         assert!(h.back_invalidate(5));
         assert_eq!(h.access(0, 5).level, HitLevel::Memory);
+    }
+
+    #[test]
+    fn store_hit_dirties_llc_at_any_level() {
+        let mut h = small();
+        h.access(0, 11);
+        h.fill_demand(0, 11, false);
+        assert!(!h.llc_dirty(11));
+        // Store hits in L1 (the line was just filled everywhere).
+        assert_eq!(h.access_rw(0, 11, true).level, HitLevel::L1);
+        assert!(h.llc_dirty(11), "dirtiness tracked at the LLC coherence point");
+    }
+
+    #[test]
+    fn write_allocate_fill_is_dirty() {
+        let mut h = small();
+        assert_eq!(h.access_rw(0, 21, true).level, HitLevel::Memory);
+        h.fill_demand(0, 21, true);
+        assert!(h.llc_dirty(21));
+    }
+
+    #[test]
+    fn llc_eviction_back_invalidates_privates() {
+        // Inclusive model: once a line leaves the LLC it may not be
+        // served from L1/L2.
+        let mut h = small();
+        h.access(0, 1);
+        h.fill_demand(0, 1, false);
+        assert_eq!(h.access(0, 1).level, HitLevel::L1);
+        // Thrash the LLC until line 1 is evicted.
+        let mut line = 1000u64;
+        while h.llc_contains(1) {
+            h.fill_prefetch(line);
+            line += 1;
+        }
+        assert_eq!(h.access(0, 1).level, HitLevel::Memory, "no stale private copy");
     }
 
     #[test]
     fn latencies_are_ordered() {
         let mut h = small();
         h.access(0, 1);
-        h.fill_demand(0, 1);
+        h.fill_demand(0, 1, false);
         let l1 = h.access(0, 1).latency;
         h.access(1, 1); // LLC path for core 1 (first time): fills privates
         let l2m = h.access(1, 2).latency; // memory

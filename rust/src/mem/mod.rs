@@ -5,6 +5,6 @@ pub mod cache;
 pub mod dram;
 pub mod hierarchy;
 
-pub use cache::{AccessOutcome, Cache, CacheStats};
+pub use cache::{AccessOutcome, Cache, CacheStats, Evicted};
 pub use dram::DramModel;
 pub use hierarchy::{Hierarchy, HitLevel, LookupResult};

@@ -1,6 +1,7 @@
 //! Run statistics + report formatting shared by the CLI, figure
 //! harnesses and benches.
 
+use crate::coherence::AuditStats;
 use crate::sim::time::{fmt_ps, Ps};
 
 /// Per-endpoint breakdown of one run over a multi-device CXL pool.
@@ -25,6 +26,36 @@ pub struct DeviceStats {
     /// Fabric bytes toward / from this endpoint.
     pub bytes_down: u64,
     pub bytes_up: u64,
+    /// M2S `RwDMemWr` received (dirty writebacks + device commits).
+    pub mem_writes: u64,
+    /// S2M `BISnp` back-invalidations issued by this endpoint.
+    pub bisnp: u64,
+    /// M2S `BIRsp` acks received from the host.
+    pub birsp: u64,
+    /// Dirty LLC writebacks this endpoint absorbed.
+    pub writebacks: u64,
+    /// BISnpData pushes dropped on arrival because the payload was
+    /// superseded (host store or device update in flight). A subset of
+    /// `pushes_arrived`.
+    pub stale_pushes: u64,
+    /// BISnpData pushes that arrived at the host from this endpoint
+    /// (including the stale ones that were then dropped).
+    pub pushes_arrived: u64,
+    /// BI-directory occupancy at end of run.
+    pub dir_occupancy: usize,
+    /// BI-directory capacity evictions (each cost a BISnp round trip).
+    pub dir_evictions: u64,
+}
+
+impl DeviceStats {
+    /// Fraction of arrived pushes dropped as stale (stale ⊆ arrived).
+    pub fn stale_push_rate(&self) -> f64 {
+        if self.pushes_arrived == 0 {
+            0.0
+        } else {
+            self.stale_pushes as f64 / self.pushes_arrived as f64
+        }
+    }
 }
 
 /// Everything a single simulation run reports.
@@ -45,6 +76,23 @@ pub struct RunStats {
     pub llc_misses: u64,
     /// LLC misses served by the ExPAND reflector buffer.
     pub reflector_hits: u64,
+    /// Demand loads (read accesses) replayed.
+    pub demand_reads: u64,
+    /// Demand stores (write accesses) replayed.
+    pub demand_writes: u64,
+    /// Dirty LLC evictions written back over the fabric (RwDMemWr).
+    pub dirty_writebacks: u64,
+    /// BISnp invalidations the host received (directory evictions +
+    /// device-side updates).
+    pub bi_snoops: u64,
+    /// Pushed/prefetched fills dropped on arrival as stale.
+    pub stale_pushes: u64,
+    /// Device-side updates applied during the run.
+    pub device_updates: u64,
+    /// Reflector entries invalidated by host stores.
+    pub reflector_write_invalidations: u64,
+    /// Shadow-memory auditor counters (audit mode only).
+    pub audit: Option<AuditStats>,
     pub prefetch_issued: u64,
     pub prefetch_useful: u64,
     pub prefetch_wasted: u64,
@@ -114,26 +162,83 @@ impl RunStats {
         baseline.exec_ps as f64 / self.exec_ps as f64
     }
 
+    /// Fraction of demand accesses that were stores.
+    pub fn write_ratio(&self) -> f64 {
+        let total = self.demand_reads + self.demand_writes;
+        if total == 0 {
+            0.0
+        } else {
+            self.demand_writes as f64 / total as f64
+        }
+    }
+
+    /// Pool-wide stale-push rate (stale drops / arrived pushes; stale
+    /// arrivals are included in the arrival count).
+    pub fn stale_push_rate(&self) -> f64 {
+        let arrived: u64 = self.per_device.iter().map(|d| d.pushes_arrived).sum();
+        if arrived == 0 {
+            0.0
+        } else {
+            self.stale_pushes as f64 / arrived as f64
+        }
+    }
+
+    /// One-line coherence/write-path summary (CLI; empty when the run
+    /// had no write or BI activity at all and no auditor attached — an
+    /// audited run always reports, so "violations=0" is visible even
+    /// for read-only traces).
+    pub fn coherence_summary(&self) -> String {
+        let quiet =
+            self.demand_writes == 0 && self.bi_snoops == 0 && self.device_updates == 0;
+        if quiet && self.audit.is_none() {
+            return String::new();
+        }
+        let mut s = format!(
+            "writes={} ({:.1}%) writebacks={} bisnp={} stale-pushes={} ({:.2}%) dev-updates={}",
+            self.demand_writes,
+            self.write_ratio() * 100.0,
+            self.dirty_writebacks,
+            self.bi_snoops,
+            self.stale_pushes,
+            self.stale_push_rate() * 100.0,
+            self.device_updates,
+        );
+        if let Some(a) = &self.audit {
+            s.push_str(&format!(
+                " | audit: checked={} violations={} stale-consumed={}",
+                a.reads_checked, a.violations, a.stale_consumptions
+            ));
+        }
+        s
+    }
+
     /// Multi-line per-device table (shown by the CLI for pools with more
     /// than one endpoint; also useful from tests/examples).
     pub fn render_per_device(&self) -> String {
         let mut out = String::from("  per-device breakdown:\n");
         out.push_str(&format!(
-            "  {:<6} {:<7} {:>6} {:>10} {:>10} {:>10} {:>10} {:>7} {:>12} {:>12}\n",
-            "node", "media", "depth", "e2e_ns", "reads", "staged", "media_rd", "hit%", "bytes_dn",
-            "bytes_up"
+            "  {:<6} {:<7} {:>6} {:>10} {:>10} {:>8} {:>8} {:>10} {:>7} {:>8} {:>7} {:>7} \
+             {:>7} {:>12} {:>12}\n",
+            "node", "media", "depth", "e2e_ns", "reads", "writes", "staged", "media_rd", "hit%",
+            "bisnp", "birsp", "stale", "stale%", "bytes_dn", "bytes_up"
         ));
         for d in &self.per_device {
             out.push_str(&format!(
-                "  {:<6} {:<7} {:>6} {:>10.1} {:>10} {:>10} {:>10} {:>7.1} {:>12} {:>12}\n",
+                "  {:<6} {:<7} {:>6} {:>10.1} {:>10} {:>8} {:>8} {:>10} {:>7.1} {:>8} {:>7} \
+                 {:>7} {:>7.2} {:>12} {:>12}\n",
                 d.node,
                 d.media,
                 d.switch_depth,
                 d.e2e_ps as f64 / 1000.0,
                 d.demand_reads,
+                d.mem_writes,
                 d.staged_reads,
                 d.media_reads,
                 d.internal_hit * 100.0,
+                d.bisnp,
+                d.birsp,
+                d.stale_pushes,
+                d.stale_push_rate() * 100.0,
                 d.bytes_down,
                 d.bytes_up,
             ));
@@ -145,7 +250,7 @@ impl RunStats {
     pub fn summary(&self) -> String {
         format!(
             "{:<14} {:<10} exec={:<12} ipc-inv={:.2} LLC-hit={:>5.1}% refl={:<6} \
-             MPKI={:>6.2} pf(acc={:.0}%, cov={:.0}%, issued={})",
+             MPKI={:>6.2} rw={}/{} ({:.1}%wr) pf(acc={:.0}%, cov={:.0}%, issued={})",
             self.workload,
             self.prefetcher,
             fmt_ps(self.exec_ps),
@@ -153,6 +258,9 @@ impl RunStats {
             self.llc_hit_ratio() * 100.0,
             self.reflector_hits,
             self.mpki(),
+            self.demand_reads,
+            self.demand_writes,
+            self.write_ratio() * 100.0,
             self.prefetch_accuracy() * 100.0,
             self.prefetch_coverage() * 100.0,
             self.prefetch_issued,
@@ -285,6 +393,54 @@ mod tests {
         let out = s.render_per_device();
         assert!(out.contains("znand") && out.contains("pmem"));
         assert_eq!(out.lines().count(), 4, "header x2 + one row per device:\n{out}");
+    }
+
+    #[test]
+    fn write_ratio_and_stale_push_rate() {
+        // 4 pushes reached the host, 1 of them was dropped stale.
+        let s = RunStats {
+            demand_reads: 90,
+            demand_writes: 10,
+            stale_pushes: 1,
+            per_device: vec![DeviceStats {
+                pushes_arrived: 4,
+                stale_pushes: 1,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert!((s.write_ratio() - 0.1).abs() < 1e-12);
+        assert!((s.stale_push_rate() - 0.25).abs() < 1e-12);
+        assert!((s.per_device[0].stale_push_rate() - 0.25).abs() < 1e-12);
+        assert!(s.coherence_summary().contains("writes=10"));
+        // A pure-read, BI-free, unaudited run stays silent...
+        assert!(RunStats::default().coherence_summary().is_empty());
+        // ...but an audited one always reports its verdict.
+        let audited = RunStats {
+            audit: Some(crate::coherence::AuditStats { reads_checked: 5, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(audited.coherence_summary().contains("violations=0"));
+    }
+
+    #[test]
+    fn per_device_breakdown_reports_bi_traffic() {
+        let s = RunStats {
+            per_device: vec![DeviceStats {
+                node: 2,
+                media: "znand".into(),
+                bisnp: 7,
+                birsp: 7,
+                mem_writes: 11,
+                stale_pushes: 3,
+                pushes_arrived: 9,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let out = s.render_per_device();
+        assert!(out.contains("bisnp") && out.contains("stale%"));
+        assert!(out.contains(" 7 ") && out.contains(" 11 "), "{out}");
     }
 
     #[test]

@@ -134,7 +134,12 @@ impl Prefetcher for MlPrefetcher {
         for line in extend_targets(a.line, &pattern, HOST_RUNAHEAD) {
             let Some(lat) = env.host_fetch_latency(line, now) else { continue };
             self.stats.issued += 1;
-            fills.push(PrefetchFill { line, arrives_at: now + lat, to_reflector: false });
+            fills.push(PrefetchFill {
+                line,
+                arrives_at: now + lat,
+                issued_at: now,
+                to_reflector: false,
+            });
         }
         fills
     }

@@ -25,6 +25,11 @@ pub struct PrefetchFill {
     pub line: u64,
     /// Absolute arrival time at the host.
     pub arrives_at: Ps,
+    /// When the payload was captured at its source. A store (host or
+    /// device-side) to the line after this instant makes the in-flight
+    /// payload stale; the runner drops such fills on arrival instead of
+    /// installing data that would violate coherence.
+    pub issued_at: Ps,
     /// Insert into the ExPAND reflector buffer instead of the LLC.
     pub to_reflector: bool,
 }
@@ -98,6 +103,13 @@ pub trait Prefetcher {
     /// are applied by the runner).
     fn on_reflector_fill(&mut self, _line: u64, _now: Ps) {}
 
+    /// Coherence invalidation of any reflector-buffered copy (host store
+    /// or device BISnp). Returns whether a copy was dropped. Only ExPAND
+    /// holds host-side buffered data, so the default is a no-op.
+    fn reflector_invalidate(&mut self, _line: u64) -> bool {
+        false
+    }
+
     fn name(&self) -> String;
 
     /// Metadata/model storage (Table 1d "Memory overhead").
@@ -155,9 +167,14 @@ mod tests {
         let topo = Topology::chain(1);
         let enumeration = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &CxlConfig::default());
-        let pool =
-            DevicePool::new(&fabric, &enumeration, &SsdConfig::default(), InterleavePolicy::Page)
-                .unwrap();
+        let pool = DevicePool::new(
+            &fabric,
+            &enumeration,
+            &SsdConfig::default(),
+            InterleavePolicy::Page,
+            &crate::config::CoherenceConfig::default(),
+        )
+        .unwrap();
         (fabric, pool, DramModel::new(&DramConfig::default()))
     }
 
@@ -196,9 +213,14 @@ mod tests {
         let topo = Topology::tree(1, 2, 4);
         let enumeration = Enumeration::discover(&topo);
         let mut fabric = Fabric::new(topo, &CxlConfig::default());
-        let mut pool =
-            DevicePool::new(&fabric, &enumeration, &SsdConfig::default(), InterleavePolicy::Line)
-                .unwrap();
+        let mut pool = DevicePool::new(
+            &fabric,
+            &enumeration,
+            &SsdConfig::default(),
+            InterleavePolicy::Line,
+            &crate::config::CoherenceConfig::default(),
+        )
+        .unwrap();
         let mut dram = DramModel::new(&DramConfig::default());
         let mut env = PrefetchEnv {
             fabric: &mut fabric,

@@ -114,7 +114,12 @@ impl Prefetcher for BestOffset {
             let target = a.line.wrapping_add((self.best * k as i64) as u64);
             let Some(lat) = env.host_fetch_latency(target, now) else { continue };
             self.stats.issued += 1;
-            fills.push(PrefetchFill { line: target, arrives_at: now + lat, to_reflector: false });
+            fills.push(PrefetchFill {
+                line: target,
+                arrives_at: now + lat,
+                issued_at: now,
+                to_reflector: false,
+            });
         }
         fills
     }

@@ -102,6 +102,7 @@ impl Prefetcher for TemporalIsb {
                     fills.push(PrefetchFill {
                         line: next,
                         arrives_at: now + lat,
+                        issued_at: now,
                         to_reflector: false,
                     });
                     cur = next;

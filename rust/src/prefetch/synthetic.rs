@@ -104,7 +104,12 @@ impl Prefetcher for SyntheticPrefetcher {
                 now + lat + self.rng.below(4 * lat.max(1))
             };
             self.stats.issued += 1;
-            fills.push(PrefetchFill { line: target, arrives_at: arrives, to_reflector: false });
+            fills.push(PrefetchFill {
+                line: target,
+                arrives_at: arrives,
+                issued_at: now,
+                to_reflector: false,
+            });
         }
         fills
     }

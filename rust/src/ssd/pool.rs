@@ -10,7 +10,8 @@
 //! striping), so demand misses, prefetch staging and BISnpData pushes for
 //! a line all resolve against the same endpoint.
 
-use crate::config::{InterleavePolicy, MediaKind, SsdConfig};
+use crate::coherence::BiDirectory;
+use crate::config::{CoherenceConfig, InterleavePolicy, MediaKind, SsdConfig};
 use crate::cxl::configspace::ConfigSpace;
 use crate::cxl::enumeration::Enumeration;
 use crate::cxl::{Fabric, NodeId};
@@ -28,6 +29,9 @@ pub struct PoolEndpoint {
     pub timeliness: TimelinessInfo,
     /// Capacity weight for capacity-proportional interleaving.
     pub weight: u32,
+    /// Device-side BI directory (snoop filter): which of this device's
+    /// lines the host may be caching.
+    pub directory: BiDirectory,
 }
 
 /// Derive one endpoint's device config from the pool-wide base config:
@@ -87,6 +91,7 @@ impl DevicePool {
         enumeration: &Enumeration,
         base: &SsdConfig,
         policy: InterleavePolicy,
+        coherence: &CoherenceConfig,
     ) -> anyhow::Result<Self> {
         let nodes = fabric.topo.ssds();
         anyhow::ensure!(!nodes.is_empty(), "topology has no CXL-SSD endpoints");
@@ -102,6 +107,7 @@ impl DevicePool {
                 config_space,
                 timeliness,
                 weight: media.capacity_weight(),
+                directory: BiDirectory::new(coherence.dir_entries, coherence.dir_ways),
             });
         }
         // Weighted stripe slots, laid out round-robin (repeatedly cycle
@@ -151,12 +157,30 @@ impl DevicePool {
         &mut self.endpoints[idx].ssd
     }
 
-    /// Split-borrow accessor: the routing view plus one endpoint's
-    /// device, usable simultaneously (the decider needs to stage on its
-    /// own device while checking which lines that device owns).
-    pub fn parts_mut(&mut self, idx: usize) -> (&Interleaver, NodeId, &mut CxlSsd) {
-        let node = self.endpoints[idx].node;
-        (&self.router, node, &mut self.endpoints[idx].ssd)
+    /// Split-borrow accessor: the routing view, one endpoint's device,
+    /// and that endpoint's BI directory, usable simultaneously (the
+    /// decider stages on its own device while checking which lines the
+    /// device owns and which the host already caches).
+    pub fn parts_mut(&mut self, idx: usize) -> (&Interleaver, NodeId, &mut CxlSsd, &BiDirectory) {
+        let ep = &mut self.endpoints[idx];
+        (&self.router, ep.node, &mut ep.ssd, &ep.directory)
+    }
+
+    /// One endpoint's BI directory (read-only view).
+    pub fn directory(&self, idx: usize) -> &BiDirectory {
+        &self.endpoints[idx].directory
+    }
+
+    /// Record in endpoint `idx`'s directory that the host received a
+    /// copy of `line`. Returns a displaced line the caller must
+    /// back-invalidate host-side (BISnp).
+    pub fn grant(&mut self, idx: usize, line: u64) -> Option<u64> {
+        self.endpoints[idx].directory.grant(line)
+    }
+
+    /// The host gave up (wrote back) or was snooped out of `line`.
+    pub fn revoke(&mut self, idx: usize, line: u64) -> bool {
+        self.endpoints[idx].directory.revoke(line)
     }
 
     /// Route a line address to its owning endpoint.
@@ -195,6 +219,14 @@ impl DevicePool {
                     internal_hit: ep.ssd.internal_hit_ratio(),
                     bytes_down: t.bytes_down,
                     bytes_up: t.bytes_up,
+                    mem_writes: t.m2s_wr,
+                    bisnp: t.s2m_bisnp,
+                    birsp: t.m2s_birsp,
+                    dir_occupancy: ep.directory.occupancy(),
+                    dir_evictions: ep.directory.stats.capacity_evictions,
+                    // Host-side counters (writebacks, stale pushes,
+                    // arrived pushes) are patched in by the runner.
+                    ..Default::default()
                 }
             })
             .collect()
@@ -204,13 +236,14 @@ impl DevicePool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::CxlConfig;
+    use crate::config::{CoherenceConfig, CxlConfig};
     use crate::cxl::Topology;
 
     fn pool_for(topo: Topology, policy: InterleavePolicy) -> DevicePool {
         let e = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &CxlConfig::default());
-        DevicePool::new(&fabric, &e, &SsdConfig::default(), policy).unwrap()
+        DevicePool::new(&fabric, &e, &SsdConfig::default(), policy, &CoherenceConfig::default())
+            .unwrap()
     }
 
     #[test]
@@ -306,8 +339,26 @@ mod tests {
         let topo = Topology::new(); // RC only
         let e = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &CxlConfig::default());
-        assert!(
-            DevicePool::new(&fabric, &e, &SsdConfig::default(), InterleavePolicy::Page).is_err()
-        );
+        assert!(DevicePool::new(
+            &fabric,
+            &e,
+            &SsdConfig::default(),
+            InterleavePolicy::Page,
+            &CoherenceConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn per_endpoint_directories_are_independent() {
+        let mut pool = pool_for(Topology::tree(1, 2, 4), InterleavePolicy::Line);
+        // Grant line 0 to endpoint 0's directory only.
+        assert_eq!(pool.grant(0, 0), None);
+        assert!(pool.directory(0).contains(0));
+        for idx in 1..4 {
+            assert!(!pool.directory(idx).contains(0), "endpoint {idx}");
+        }
+        assert!(pool.revoke(0, 0));
+        assert!(!pool.directory(0).contains(0));
     }
 }

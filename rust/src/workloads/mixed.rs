@@ -6,8 +6,11 @@
 //!   prefetcher accuracy).
 //! * [`PhaseTrace`] — one core alternating between two workloads every
 //!   `period` accesses (Fig 4e's SSSP<->TC behavior-change scenario).
+//! * [`WriteHeavy`] — wraps any source and raises its store ratio to a
+//!   target fraction (write-path / coherence scenarios).
 
 use super::{Access, TraceSource, WorkloadId};
+use crate::util::Rng;
 
 /// An access tagged with its issuing core.
 #[derive(Debug, Clone, Copy)]
@@ -103,9 +106,72 @@ impl TraceSource for PhaseTrace {
     }
 }
 
+/// Wrap any trace and promote a deterministic, seed-stable fraction of
+/// its reads to writes, so the total store ratio approaches `fraction`.
+/// SPEC's natural write ratios sit at ~5–12%; coherence stress scenarios
+/// want 20–50% without giving up the wrapped workload's address
+/// structure.
+pub struct WriteHeavy {
+    inner: Box<dyn TraceSource>,
+    fraction: f64,
+    rng: Rng,
+}
+
+impl WriteHeavy {
+    pub fn new(inner: Box<dyn TraceSource>, fraction: f64, seed: u64) -> Self {
+        WriteHeavy {
+            inner,
+            fraction: fraction.clamp(0.0, 1.0),
+            rng: Rng::new(seed ^ 0x3217_11E4_57),
+        }
+    }
+}
+
+impl TraceSource for WriteHeavy {
+    fn next_access(&mut self) -> Access {
+        let mut a = self.inner.next_access();
+        if !a.write && self.rng.chance(self.fraction) {
+            a.write = true;
+        }
+        a
+    }
+
+    fn name(&self) -> String {
+        format!("write-heavy[{} @{:.0}%]", self.inner.name(), self.fraction * 100.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn write_heavy_raises_store_ratio_deterministically() {
+        let mk = || {
+            let inner = MixedTrace::new(&[WorkloadId::Pr, WorkloadId::Tc], 1);
+            WriteHeavy::new(Box::new(inner), 0.3, 7)
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut writes = 0u32;
+        for _ in 0..10_000 {
+            let x = a.next_access();
+            assert_eq!(x, b.next_access(), "seed-stable");
+            writes += x.write as u32;
+        }
+        let ratio = writes as f64 / 10_000.0;
+        assert!(ratio > 0.25 && ratio < 0.45, "write ratio {ratio}");
+        assert!(a.name().contains("write-heavy"));
+    }
+
+    #[test]
+    fn write_heavy_zero_fraction_is_transparent() {
+        let mut w = WriteHeavy::new(Box::new(MixedTrace::new(&[WorkloadId::Cc], 3)), 0.0, 9);
+        let mut plain = MixedTrace::new(&[WorkloadId::Cc], 3);
+        for _ in 0..1000 {
+            assert_eq!(w.next_access(), plain.next_access());
+        }
+    }
 
     #[test]
     fn mixed_round_robins_cores() {

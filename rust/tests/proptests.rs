@@ -236,7 +236,14 @@ fn prop_pool_routing_is_total_deterministic_and_distributes() {
         for policy in
             [InterleavePolicy::Line, InterleavePolicy::Page, InterleavePolicy::Capacity]
         {
-            let pool = DevicePool::new(&fabric, &e, &SsdConfig::default(), policy).unwrap();
+            let pool = DevicePool::new(
+                &fabric,
+                &e,
+                &SsdConfig::default(),
+                policy,
+                &expand_cxl::config::CoherenceConfig::default(),
+            )
+            .unwrap();
             assert_eq!(pool.len(), ssds, "seed {seed}");
             let mut counts = vec![0u64; pool.len()];
             for _ in 0..2_000 {
@@ -289,6 +296,76 @@ fn prop_pool_roundtrip_traffic_sums_to_total_across_random_trees() {
         // ...and so does the per-device fabric request accounting.
         assert!(s.per_device.iter().all(|d| d.bytes_down > 0 && d.bytes_up > 0),
             "seed {seed}: endpoint saw no fabric traffic: {:?}", s.per_device);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BI directory / coherence invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bi_directory_invariant_under_random_traffic() {
+    // The coherence subsystem's structural invariant: no line may be
+    // simultaneously valid in the host LLC and absent from its owning
+    // endpoint's BI directory — across random topologies, interleave
+    // policies and read/write sequences, with a deliberately tiny
+    // directory so capacity evictions (and their BISnp flows) fire
+    // constantly. The shadow-memory auditor rides along and must see
+    // zero violations.
+    use expand_cxl::config::{presets, InterleavePolicy, TopologySpec};
+    use expand_cxl::sim::runner::Runner;
+    use expand_cxl::workloads::{Access, TraceSource};
+
+    struct RandTrace {
+        rng: Rng,
+        working_set: u64,
+    }
+
+    impl TraceSource for RandTrace {
+        fn next_access(&mut self) -> Access {
+            Access {
+                pc: 0x10 + self.rng.below(8),
+                line: self.rng.below(self.working_set),
+                write: self.rng.chance(0.2),
+                inst_gap: 10 + self.rng.below(40) as u32,
+                dependent: self.rng.chance(0.1),
+            }
+        }
+
+        fn name(&self) -> String {
+            "random".into()
+        }
+    }
+
+    forall(6, |rng, seed| {
+        let mut cfg = presets::smoke();
+        cfg.seed = 0xC0DE ^ seed;
+        cfg.coherence.audit = true;
+        cfg.coherence.dir_entries = 512; // tiny: force capacity evictions
+        cfg.coherence.dir_ways = 4;
+        cfg.cxl.topology = TopologySpec::Tree {
+            levels: 1 + rng.below(2) as usize,
+            fanout: 1 + rng.below(2) as usize,
+            ssds: 1 + rng.below(5) as usize,
+        };
+        cfg.cxl.interleave = *rng.choice(&[
+            InterleavePolicy::Line,
+            InterleavePolicy::Page,
+            InterleavePolicy::Capacity,
+        ]);
+        let mut r = Runner::new(&cfg, None).unwrap();
+        let mut src = RandTrace { rng: Rng::new(cfg.seed), working_set: 200_000 };
+        let s = r.run(&mut src, 20_000);
+
+        assert!(r.bi_invariant_holds(), "seed {seed}: LLC line untracked by its directory");
+        let audit = s.audit.unwrap();
+        assert_eq!(audit.violations, 0, "seed {seed}: {audit:?}");
+        assert_eq!(audit.stale_consumptions, 0, "seed {seed}");
+        assert!(
+            s.bi_snoops > 0,
+            "seed {seed}: a 512-entry directory under 20k accesses must evict"
+        );
+        assert!(s.demand_writes > 0 && s.dirty_writebacks > 0, "seed {seed}: {s:?}");
     });
 }
 
