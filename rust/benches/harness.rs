@@ -1,6 +1,8 @@
 //! Minimal criterion-style bench harness (criterion is not in the
 //! offline crate set): warmup + timed iterations, mean/min/stddev
-//! reporting, and substring filtering via `cargo bench -- <filter>`.
+//! reporting, substring filtering via `cargo bench -- <filter>`, and an
+//! end-to-end throughput mode whose results serialize to a tracked JSON
+//! baseline (`BENCH_PR3.json`) with a regression check for CI.
 
 use std::time::Instant;
 
@@ -10,18 +12,23 @@ pub struct Bench {
 }
 
 impl Bench {
-    pub fn from_args() -> Self {
-        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    pub fn with_filter(filter: Option<String>) -> Self {
         Bench { filter, results: Vec::new() }
+    }
+
+    /// Does `name` pass the CLI substring filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(flt) => name.contains(flt.as_str()),
+            None => true,
+        }
     }
 
     /// Run `f` repeatedly; prints mean/min/std. `iters` counts timed
     /// runs (after one warmup).
     pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
-        if let Some(flt) = &self.filter {
-            if !name.contains(flt.as_str()) {
-                return;
-            }
+        if !self.enabled(name) {
+            return;
         }
         f(); // warmup
         let mut samples = Vec::with_capacity(iters);
@@ -47,11 +54,135 @@ impl Bench {
 
     /// Report a throughput-style metric computed by the caller.
     pub fn report(&self, name: &str, value: f64, unit: &str) {
-        if let Some(flt) = &self.filter {
-            if !name.contains(flt.as_str()) {
-                return;
-            }
+        if !self.enabled(name) {
+            return;
         }
         println!("metric {:<37} {:>14.1} {unit}", name, value);
     }
+}
+
+/// One end-to-end simulator-throughput measurement (accesses/sec over
+/// full `Runner` construction + trace replay).
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    pub name: String,
+    pub accesses: u64,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// accesses / mean_s — the tracked headline number.
+    pub mean_accesses_per_sec: f64,
+    /// accesses / min_s — best observed iteration.
+    pub best_accesses_per_sec: f64,
+}
+
+/// Measure `f` (one full simulation of `accesses` accesses) `iters`
+/// times after one warmup.
+pub fn measure_throughput<F: FnMut()>(
+    name: &str,
+    accesses: u64,
+    iters: usize,
+    mut f: F,
+) -> Throughput {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min_s = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let t = Throughput {
+        name: name.to_string(),
+        accesses,
+        iters,
+        mean_s,
+        min_s,
+        mean_accesses_per_sec: accesses as f64 / mean_s.max(1e-12),
+        best_accesses_per_sec: accesses as f64 / min_s.max(1e-12),
+    };
+    println!(
+        "throughput {:<33} mean {:>12.0} acc/s   best {:>12.0} acc/s   ({} x {} accesses)",
+        t.name, t.mean_accesses_per_sec, t.best_accesses_per_sec, iters, accesses
+    );
+    t
+}
+
+/// Serialize throughput results to the tracked JSON shape. Scenario
+/// order is preserved; numbers are written with enough precision to
+/// round-trip through the in-repo JSON parser.
+pub fn bench_json(suite: &str, results: &[Throughput]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"expand-cxl-bench/v1\",\n");
+    out.push_str(&format!("  \"suite\": {suite:?},\n"));
+    out.push_str("  \"scenarios\": [\n");
+    for (i, t) in results.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": {:?},\n", t.name));
+        out.push_str(&format!("      \"accesses\": {},\n", t.accesses));
+        out.push_str(&format!("      \"iters\": {},\n", t.iters));
+        out.push_str(&format!("      \"mean_s\": {:.6},\n", t.mean_s));
+        out.push_str(&format!("      \"min_s\": {:.6},\n", t.min_s));
+        out.push_str(&format!(
+            "      \"mean_accesses_per_sec\": {:.1},\n",
+            t.mean_accesses_per_sec
+        ));
+        out.push_str(&format!(
+            "      \"best_accesses_per_sec\": {:.1}\n",
+            t.best_accesses_per_sec
+        ));
+        out.push_str(if i + 1 == results.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Compare fresh results against a committed baseline JSON: every
+/// scenario present in both must retain at least `1 - max_regress` of
+/// the baseline's `mean_accesses_per_sec`. Returns the list of
+/// regression messages (empty = pass).
+pub fn check_against_baseline(
+    baseline_text: &str,
+    results: &[Throughput],
+    max_regress: f64,
+) -> Result<Vec<String>, String> {
+    let doc = expand_cxl::util::json::parse(baseline_text)
+        .map_err(|e| format!("baseline parse error: {e}"))?;
+    let scenarios = doc
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| "baseline has no scenarios array".to_string())?;
+    let mut failures = Vec::new();
+    // Every baseline scenario must have been re-measured — a renamed or
+    // deleted scenario must not make the gate pass vacuously.
+    for s in scenarios {
+        let Some(name) = s.get("name").and_then(|n| n.as_str()) else { continue };
+        if !results.iter().any(|t| t.name == name) {
+            failures.push(format!("{name}: in baseline but not measured by this run"));
+        }
+    }
+    for t in results {
+        let Some(base) = scenarios.iter().find(|s| {
+            s.get("name").and_then(|n| n.as_str()) == Some(t.name.as_str())
+        }) else {
+            continue; // new scenario: nothing to regress against
+        };
+        let Some(base_aps) = base.get("mean_accesses_per_sec").and_then(|v| v.as_f64()) else {
+            continue;
+        };
+        let floor = base_aps * (1.0 - max_regress);
+        if t.mean_accesses_per_sec < floor {
+            failures.push(format!(
+                "{}: {:.0} acc/s < floor {:.0} acc/s (baseline {:.0}, max regression {:.0}%)",
+                t.name,
+                t.mean_accesses_per_sec,
+                floor,
+                base_aps,
+                max_regress * 100.0
+            ));
+        }
+    }
+    Ok(failures)
 }

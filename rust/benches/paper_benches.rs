@@ -1,21 +1,31 @@
-//! Paper benches: one end-to-end bench per table/figure family plus the
-//! micro-benches used by the §Perf optimization log in EXPERIMENTS.md.
+//! Paper benches: one end-to-end bench per table/figure family, the
+//! micro-benches used by the §Perf optimization log, and the
+//! `runner_throughput` group — four end-to-end simulator-throughput
+//! scenarios whose results serialize to `BENCH_PR3.json` at the repo
+//! root (the tracked bench baseline; CI fails on >20% regression).
 //!
-//! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Each bench
-//! executes the same code path as the corresponding figure harness on a
-//! reduced access budget and reports wall-clock, plus simulator
-//! throughput metrics.
+//! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Flags
+//! after the filter:
+//!   --json-out PATH      write throughput results as JSON (default
+//!                        ../BENCH_PR3.json when the group runs)
+//!   --check PATH         compare against a baseline JSON and exit
+//!                        non-zero on regression
+//!   --max-regress F      allowed fractional regression (default 0.20)
+//! Each bench executes the same code path as the corresponding figure
+//! harness on a reduced access budget and reports wall-clock plus
+//! simulator throughput (accesses/sec).
 
 mod harness;
 
 use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
+use expand_cxl::config::{InterleavePolicy, TopologySpec};
 use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
 use expand_cxl::sim::runner::simulate;
 use expand_cxl::util::Rng;
 use expand_cxl::workloads::apexmap::ApexMap;
-use expand_cxl::workloads::mixed::MixedTrace;
+use expand_cxl::workloads::mixed::{MixedTrace, WriteHeavy};
 use expand_cxl::workloads::WorkloadId;
-use harness::Bench;
+use harness::{bench_json, check_against_baseline, measure_throughput, Bench, Throughput};
 
 const ACCESSES: usize = 60_000;
 
@@ -30,8 +40,104 @@ fn run(c: &SimConfig, id: WorkloadId, rt: Option<&std::rc::Rc<Runtime>>) {
     simulate(c, rt, &mut *src).unwrap();
 }
 
+/// Bench CLI: `[filter] [--json-out P] [--check P] [--max-regress F]`.
+struct BenchArgs {
+    filter: Option<String>,
+    json_out: Option<String>,
+    check: Option<String>,
+    max_regress: f64,
+}
+
+fn parse_args() -> BenchArgs {
+    let mut out = BenchArgs {
+        filter: None,
+        json_out: None,
+        check: None,
+        max_regress: 0.20,
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].clone();
+        let take_value = |i: &mut usize| -> Option<String> {
+            if let Some((_, v)) = args[*i].split_once('=') {
+                return Some(v.to_string());
+            }
+            *i += 1;
+            args.get(*i).cloned()
+        };
+        if a.starts_with("--json-out") {
+            out.json_out = take_value(&mut i);
+        } else if a.starts_with("--check") {
+            out.check = take_value(&mut i);
+        } else if a.starts_with("--max-regress") {
+            out.max_regress = take_value(&mut i)
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.20);
+        } else if a == "--bench" || a.starts_with('-') {
+            // cargo-injected or unknown flag: ignore.
+        } else if out.filter.is_none() {
+            out.filter = Some(a.clone());
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The `runner_throughput` group: four end-to-end scenarios covering the
+/// hot paths the allocation-free refactor targets — single-SSD chain
+/// (ExPAND push path), a deep tree pool (per-endpoint routing +
+/// deciders), a write-heavy 4-SSD pool (coherence/write path), and an
+/// audited chain run (shadow-memory oracle riding along).
+fn runner_throughput(b: &Bench) -> Vec<Throughput> {
+    const THROUGHPUT_ITERS: usize = 5;
+    let mut results = Vec::new();
+    let mut scenario = |name: &str, c: SimConfig, write_boost: f64| {
+        let full = format!("runner_throughput_{name}");
+        if !b.enabled(&full) {
+            return;
+        }
+        results.push(measure_throughput(&full, c.accesses as u64, THROUGHPUT_ITERS, || {
+            if write_boost > 0.0 {
+                let inner = WorkloadId::Pr.source(c.seed);
+                let mut src = WriteHeavy::new(inner, write_boost, c.seed);
+                simulate(&c, None, &mut src).unwrap();
+            } else {
+                run(&c, WorkloadId::Pr, None);
+            }
+        }));
+    };
+
+    // 1. Single CXL-SSD behind one switch (the seed chain), ExPAND.
+    let mut c1 = cfg();
+    c1.prefetcher = PrefetcherKind::Expand;
+    scenario("chain_1ssd_expand", c1, 0.0);
+
+    // 2. tree:2,2,4 — four endpoints behind two switch tiers.
+    let mut c2 = cfg();
+    c2.prefetcher = PrefetcherKind::Expand;
+    c2.cxl.topology = TopologySpec::Tree { levels: 2, fanout: 2, ssds: 4 };
+    scenario("tree_2_2_4_expand", c2, 0.0);
+
+    // 3. Write-heavy 4-SSD pool, line-interleaved (coherence path hot).
+    let mut c3 = cfg();
+    c3.prefetcher = PrefetcherKind::Expand;
+    c3.cxl.topology = TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+    c3.cxl.interleave = InterleavePolicy::Line;
+    scenario("write_heavy_4ssd", c3, 0.3);
+
+    // 4. Audited chain run: every read version-checked by the oracle.
+    let mut c4 = cfg();
+    c4.prefetcher = PrefetcherKind::Expand;
+    c4.coherence.audit = true;
+    scenario("audit_chain_expand", c4, 0.2);
+
+    results
+}
+
 fn main() {
-    let mut b = Bench::from_args();
+    let opts = parse_args();
+    let mut b = Bench::with_filter(opts.filter.clone());
     let rt = if Runtime::artifacts_available("artifacts") {
         Some(Runtime::new("artifacts").unwrap())
     } else {
@@ -119,8 +225,72 @@ fn main() {
         }
     });
 
+    // --- End-to-end: runner_throughput group (tracked baseline) ---------
+    let throughput = runner_throughput(&b);
+    if throughput.is_empty() {
+        if opts.check.is_some() {
+            // An explicit regression gate must never pass vacuously
+            // (e.g. a typo'd filter selecting zero scenarios).
+            eprintln!("baseline check failed: filter selected no runner_throughput scenarios");
+            std::process::exit(1);
+        }
+    } else {
+        let json = bench_json("runner_throughput", &throughput);
+        // Write where asked; without --json-out, only seed the default
+        // repo-root baseline if it does not exist yet — never silently
+        // clobber the tracked reference numbers (and their pre-PR
+        // annotations) from a casual `cargo bench`.
+        let default_path = "../BENCH_PR3.json";
+        match &opts.json_out {
+            Some(path) => match std::fs::write(path, &json) {
+                Ok(()) => println!("wrote {path}"),
+                Err(e) => eprintln!("warning: could not write {path}: {e}"),
+            },
+            None if !std::path::Path::new(default_path).exists() => {
+                match std::fs::write(default_path, &json) {
+                    Ok(()) => println!("wrote {default_path}"),
+                    Err(e) => eprintln!("warning: could not write {default_path}: {e}"),
+                }
+            }
+            None => {
+                println!("{json}");
+                println!(
+                    "note: {default_path} exists; pass --json-out {default_path} to overwrite \
+                     the tracked baseline"
+                );
+            }
+        }
+        if let Some(baseline_path) = &opts.check {
+            match std::fs::read_to_string(baseline_path) {
+                Ok(text) => match check_against_baseline(&text, &throughput, opts.max_regress) {
+                    Ok(failures) if failures.is_empty() => {
+                        println!(
+                            "baseline check OK ({} scenarios, max regression {:.0}%)",
+                            throughput.len(),
+                            opts.max_regress * 100.0
+                        );
+                    }
+                    Ok(failures) => {
+                        for f in &failures {
+                            eprintln!("REGRESSION: {f}");
+                        }
+                        std::process::exit(1);
+                    }
+                    Err(e) => {
+                        eprintln!("baseline check failed: {e}");
+                        std::process::exit(1);
+                    }
+                },
+                Err(e) => {
+                    eprintln!("baseline check failed: cannot read {baseline_path}: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
     // --- Micro: simulator core throughput (events/s) ---------------------
-    {
+    if b.enabled("micro_sim_throughput_noprefetch") {
         let mut c = cfg();
         c.accesses = 200_000;
         let t0 = std::time::Instant::now();
@@ -132,6 +302,10 @@ fn main() {
     // --- Micro: predictor inference latency ------------------------------
     if let Some(rt) = &rt {
         for model in ["expand", "ml1", "ml2"] {
+            let name = format!("micro_inference_{model}");
+            if !b.enabled(&name) {
+                continue;
+            }
             let p = rt.predictor(model).unwrap();
             let shape = p.borrow().shape();
             let win = WindowInput {
@@ -145,13 +319,13 @@ fn main() {
                 p.borrow_mut().predict(std::slice::from_ref(&win)).unwrap();
             }
             let per = t0.elapsed().as_secs_f64() / iters as f64;
-            b.report(
-                &format!("micro_inference_{model}"),
-                per * 1e6,
-                "us/prediction",
-            );
+            b.report(&name, per * 1e6, "us/prediction");
         }
     }
 
-    println!("\n{} benches completed", b.results.len());
+    println!(
+        "\n{} benches + {} throughput scenarios completed",
+        b.results.len(),
+        throughput.len()
+    );
 }

@@ -35,6 +35,11 @@ pub struct BiDirectory {
     ways: usize,
     entries: Vec<Entry>,
     stamp: u64,
+    /// Tracked-line count, maintained incrementally so
+    /// [`BiDirectory::occupancy`] is O(1) (it sits on the per-run
+    /// device-stats path, where a full-array walk over the 1M-entry
+    /// default directory is measurable).
+    live: usize,
     pub stats: DirectoryStats,
 }
 
@@ -48,6 +53,7 @@ impl BiDirectory {
             ways,
             entries: vec![Entry::default(); sets * ways],
             stamp: 0,
+            live: 0,
             stats: DirectoryStats::default(),
         }
     }
@@ -106,6 +112,7 @@ impl BiDirectory {
             self.stats.capacity_evictions += 1;
             Some(self.entries[victim].tag)
         } else {
+            self.live += 1;
             None
         };
         self.entries[victim] = Entry { tag: line, last_use: stamp, valid: true };
@@ -119,6 +126,7 @@ impl BiDirectory {
         for e in &mut self.entries[range] {
             if e.valid && e.tag == line {
                 e.valid = false;
+                self.live -= 1;
                 self.stats.revokes += 1;
                 return true;
             }
@@ -126,9 +134,9 @@ impl BiDirectory {
         false
     }
 
-    /// Currently-tracked line count.
+    /// Currently-tracked line count (O(1) counter read).
     pub fn occupancy(&self) -> usize {
-        self.entries.iter().filter(|e| e.valid).count()
+        self.live
     }
 }
 
@@ -178,5 +186,22 @@ mod tests {
             d.grant(line);
         }
         assert!(d.occupancy() <= d.capacity());
+    }
+
+    #[test]
+    fn occupancy_counter_tracks_grant_displace_revoke() {
+        let mut d = BiDirectory::new(2, 2); // one set, two ways
+        assert_eq!(d.occupancy(), 0);
+        d.grant(1);
+        assert_eq!(d.occupancy(), 1);
+        d.grant(1); // refresh, not a new entry
+        assert_eq!(d.occupancy(), 1);
+        d.grant(2);
+        assert_eq!(d.occupancy(), 2);
+        // Capacity displacement: one out, one in.
+        assert!(d.grant(3).is_some());
+        assert_eq!(d.occupancy(), 2);
+        assert!(d.revoke(3));
+        assert_eq!(d.occupancy(), 1);
     }
 }

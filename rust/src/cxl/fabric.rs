@@ -5,19 +5,25 @@
 //! matter (paper § "Latency Variation with CXL Switch Topology"): each
 //! switch level adds processing + serialization delay in both directions,
 //! and links are serially-reusable resources (queuing under load).
+//!
+//! Hot-path layout: node ids are dense indices into the topology's node
+//! array, so all per-node state — RC-to-node paths, hop/switch counts,
+//! link next-free times, per-endpoint traffic counters — lives in flat
+//! `Vec`s indexed by node id. Paths are computed once at construction;
+//! a traversal walks the cached path slice without allocating (the seed
+//! rebuilt the path `Vec` and consulted `BTreeMap`s on every message).
 
 use super::flit::serialize_ps;
 use super::topology::{NodeId, NodeKind, Topology};
 use super::transaction::{m2s_bytes, s2m_bytes, M2S, S2M, TrafficStats};
 use crate::config::CxlConfig;
 use crate::sim::time::{ns, Ps};
-use std::collections::BTreeMap;
 
 /// Direction of a traversal (affects which port queue is used).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Dir {
-    Down,
-    Up,
+    Down = 0,
+    Up = 1,
 }
 
 /// Arbitration lane: demand traffic preempts prefetch-class traffic.
@@ -36,16 +42,40 @@ enum Lane {
 pub struct Fabric {
     pub topo: Topology,
     cfg: CxlConfig,
-    /// Per (child-node, direction) demand-lane next-free time. The link
-    /// between a node and its parent is keyed by the child id.
-    link_free: BTreeMap<(NodeId, u8), Ps>,
-    pub traffic: BTreeMap<NodeId, TrafficStats>,
+    /// RC-to-node path (inclusive both ends), indexed by node id —
+    /// computed once so traversals never rebuild it.
+    paths: Vec<Vec<NodeId>>,
+    /// Links on the RC-to-node path, indexed by node id.
+    hops: Vec<u64>,
+    /// Switches on the RC-to-node path, indexed by node id.
+    switches: Vec<u64>,
+    /// Whether a node is a switch (store-and-forward on crossing into it).
+    is_switch: Vec<bool>,
+    /// Per (child-node, direction) demand-lane next-free time, dense by
+    /// child node id. The link between a node and its parent is keyed by
+    /// the child id.
+    link_free: Vec<[Ps; 2]>,
+    /// Per-node traffic counters (only endpoints are ever recorded).
+    traffic: Vec<TrafficStats>,
 }
 
 impl Fabric {
     pub fn new(topo: Topology, cfg: &CxlConfig) -> Self {
-        let traffic = topo.ssds().into_iter().map(|s| (s, TrafficStats::default())).collect();
-        Fabric { topo, cfg: cfg.clone(), link_free: BTreeMap::new(), traffic }
+        let n = topo.nodes.len();
+        let paths: Vec<Vec<NodeId>> = (0..n).map(|i| topo.path_from_root(i)).collect();
+        let hops = paths.iter().map(|p| (p.len() - 1) as u64).collect();
+        let switches = (0..n).map(|i| topo.switch_depth(i) as u64).collect();
+        let is_switch = topo.nodes.iter().map(|nd| nd.kind == NodeKind::Switch).collect();
+        Fabric {
+            topo,
+            cfg: cfg.clone(),
+            paths,
+            hops,
+            switches,
+            is_switch,
+            link_free: vec![[0; 2]; n],
+            traffic: vec![TrafficStats::default(); n],
+        }
     }
 
     pub fn cfg(&self) -> &CxlConfig {
@@ -56,16 +86,10 @@ impl Fabric {
     /// `dev` (or back — symmetric): per-hop link latency + serialization,
     /// plus per-switch processing, plus RC processing.
     pub fn path_latency(&self, dev: NodeId, bytes: usize) -> Ps {
-        let path = self.topo.path_from_root(dev);
-        let hops = (path.len() - 1) as u64; // links on the path
-        let switches = path
-            .iter()
-            .filter(|&&n| self.topo.nodes[n].kind == NodeKind::Switch)
-            .count() as u64;
         let ser = serialize_ps(&self.cfg, bytes);
         ns(self.cfg.rc_latency_ns)
-            + hops * (ns(self.cfg.link_latency_ns) + ser)
-            + switches * ns(self.cfg.switch_latency_ns)
+            + self.hops[dev] * (ns(self.cfg.link_latency_ns) + ser)
+            + self.switches[dev] * ns(self.cfg.switch_latency_ns)
     }
 
     /// Queued traversal at absolute time `now`: walks the path charging
@@ -75,25 +99,29 @@ impl Fabric {
     }
 
     fn traverse_lane(&mut self, dev: NodeId, now: Ps, bytes: usize, dir: Dir, lane: Lane) -> Ps {
-        let path = self.topo.path_from_root(dev);
         let ser = serialize_ps(&self.cfg, bytes);
+        let link_lat = ns(self.cfg.link_latency_ns);
+        let switch_lat = ns(self.cfg.switch_latency_ns);
         let mut t = now + ns(self.cfg.rc_latency_ns);
         // Walk link by link: link i connects path[i] and path[i+1], keyed
-        // by the child (path[i+1]).
-        let links: Vec<NodeId> = path[1..].to_vec();
-        let ordered: Vec<NodeId> = match dir {
-            Dir::Down => links,
-            Dir::Up => links.into_iter().rev().collect(),
-        };
-        for child in ordered {
-            let key = (child, dir as u8);
-            let hi = self.link_free.get(&key).copied().unwrap_or(0);
+        // by the child (path[i+1]); Up iterates the same links deepest
+        // child first. The path slice is borrowed from the precomputed
+        // table — no per-traversal allocation.
+        let path = &self.paths[dev];
+        let links = path.len() - 1;
+        let d = dir as usize;
+        for k in 0..links {
+            let child = match dir {
+                Dir::Down => path[k + 1],
+                Dir::Up => path[links - k],
+            };
+            let hi = self.link_free[child][d];
             let start = match lane {
                 // Demand ignores prefetch-lane traffic (priority) and
                 // reserves the link while serializing.
                 Lane::Demand => {
                     let s = t.max(hi);
-                    self.link_free.insert(key, s + ser);
+                    self.link_free[child][d] = s + ser;
                     s
                 }
                 // Prefetch-class traffic yields to demand reservations
@@ -104,13 +132,9 @@ impl Fabric {
                 // are due earlier (see EXPERIMENTS.md §Perf).
                 Lane::Prefetch => t.max(hi),
             };
-            let done = start + ns(self.cfg.link_latency_ns) + ser;
+            let done = start + link_lat + ser;
             // Switch store-and-forward after crossing into a switch.
-            t = if self.topo.nodes[child].kind == NodeKind::Switch {
-                done + ns(self.cfg.switch_latency_ns)
-            } else {
-                done
-            };
+            t = if self.is_switch[child] { done + switch_lat } else { done };
         }
         t
     }
@@ -125,7 +149,7 @@ impl Fabric {
         req: M2S,
         service: Ps,
     ) -> Ps {
-        if let Some(t) = self.traffic.get_mut(&dev) {
+        if let Some(t) = self.traffic.get_mut(dev) {
             t.record_m2s(req);
             t.record_s2m(S2M::DrsMemData);
         }
@@ -141,7 +165,7 @@ impl Fabric {
     /// typically run it off the critical path but the link occupancy and
     /// per-endpoint traffic are real either way.
     pub fn write_roundtrip(&mut self, dev: NodeId, now: Ps, service: Ps) -> Ps {
-        if let Some(t) = self.traffic.get_mut(&dev) {
+        if let Some(t) = self.traffic.get_mut(dev) {
             t.record_m2s(M2S::RwDMemWr);
             t.record_s2m(S2M::NdrCmp);
         }
@@ -156,7 +180,7 @@ impl Fabric {
     /// traffic rides the demand lane — a snoop cannot be deferred behind
     /// speculative pushes.
     pub fn bi_invalidate(&mut self, dev: NodeId, now: Ps) -> Ps {
-        if let Some(t) = self.traffic.get_mut(&dev) {
+        if let Some(t) = self.traffic.get_mut(dev) {
             t.record_s2m(S2M::BISnp);
             t.record_m2s(M2S::BIRsp);
         }
@@ -168,7 +192,7 @@ impl Fabric {
     /// Upward push (decider -> reflector) via BISnpData: one-way S2M with
     /// payload, plus the host's BIRsp ack (not on the critical path).
     pub fn bisnp_push(&mut self, dev: NodeId, now: Ps) -> Ps {
-        if let Some(t) = self.traffic.get_mut(&dev) {
+        if let Some(t) = self.traffic.get_mut(dev) {
             t.record_s2m(S2M::BISnpData);
             t.record_m2s(M2S::BIRsp);
         }
@@ -179,16 +203,17 @@ impl Fabric {
 
     /// One-way host -> device notification (CXL.io hit notify, small).
     pub fn io_notify(&mut self, dev: NodeId, now: Ps) -> Ps {
-        if let Some(t) = self.traffic.get_mut(&dev) {
+        if let Some(t) = self.traffic.get_mut(dev) {
             t.record_io(16);
         }
         let at_dev = self.traverse_lane(dev, now, 16, Dir::Down, Lane::Prefetch);
         at_dev - now
     }
 
-    /// Per-endpoint traffic counters (zero record for non-endpoints).
+    /// Per-endpoint traffic counters (zero record for non-endpoints and
+    /// out-of-range ids).
     pub fn traffic_for(&self, dev: NodeId) -> TrafficStats {
-        self.traffic.get(&dev).copied().unwrap_or_default()
+        self.traffic.get(dev).copied().unwrap_or_default()
     }
 }
 
@@ -226,6 +251,19 @@ mod tests {
     }
 
     #[test]
+    fn cached_path_tables_match_topology_walk() {
+        // The dense per-node tables must agree with the (allocating)
+        // topology walk they replaced.
+        let topo = Topology::parse_custom("(x, s(z, p), s(s(d)))").unwrap();
+        let f = Fabric::new(topo.clone(), &CxlConfig::default());
+        for node in 0..topo.nodes.len() {
+            assert_eq!(f.paths[node], topo.path_from_root(node), "node {node}");
+            assert_eq!(f.hops[node] as usize, topo.path_from_root(node).len() - 1);
+            assert_eq!(f.switches[node] as usize, topo.switch_depth(node));
+        }
+    }
+
+    #[test]
     fn roundtrip_includes_service_and_both_directions() {
         let (mut f, ssd) = fabric(1);
         let service = 1_000_000; // 1 us
@@ -233,7 +271,7 @@ mod tests {
         let one_way = f.path_latency(ssd, 16);
         assert!(rt > service + one_way, "rt {rt}");
         // Traffic recorded.
-        let t = f.traffic[&ssd];
+        let t = f.traffic_for(ssd);
         assert_eq!(t.m2s_req, 1);
         assert_eq!(t.s2m_drs, 1);
     }
@@ -283,7 +321,7 @@ mod tests {
         let wr = f.write_roundtrip(ssd, 0, service);
         // Both directions + service: strictly more than one-way + service.
         assert!(wr > service + f.path_latency(ssd, 16), "wr {wr}");
-        let t = f.traffic[&ssd];
+        let t = f.traffic_for(ssd);
         assert_eq!(t.m2s_wr, 1);
         assert_eq!(t.s2m_ndr, 1);
         // Payload accounted downward: header + 64B line.
@@ -296,7 +334,7 @@ mod tests {
         let (mut f, ssd) = fabric(2);
         let rt = f.bi_invalidate(ssd, 0);
         assert!(rt > f.path_latency(ssd, 16), "round trip {rt} exceeds one-way");
-        let t = f.traffic[&ssd];
+        let t = f.traffic_for(ssd);
         assert_eq!(t.s2m_bisnp, 1);
         assert_eq!(t.m2s_birsp, 1);
         assert_eq!(t.bytes_up, 16);
@@ -319,6 +357,6 @@ mod tests {
             f2.read_roundtrip(ssd2, 0, M2S::ReqMemRd, 0)
         };
         assert!(push < rt, "one-way {push} < roundtrip {rt}");
-        assert_eq!(f.traffic[&ssd].s2m_bisnpdata, 1);
+        assert_eq!(f.traffic_for(ssd).s2m_bisnpdata, 1);
     }
 }

@@ -7,6 +7,12 @@
 //! and the config-space end-to-end latency, stages predicted lines from
 //! backend media into internal DRAM, and pushes them host-ward with
 //! BISnpData at the computed issue time.
+//!
+//! Hot-path notes: pushes are appended to a caller-provided buffer (the
+//! prefetcher owns one reusable scratch `Vec`), the push-dedup window is
+//! an indexed ring ([`LineSet`] + bounded `VecDeque`) instead of a
+//! `BTreeSet`, and the predictor's window input buffers are reused
+//! across inferences — a steady-state observation allocates nothing.
 
 use super::classifier::BehaviorClassifier;
 use super::timeliness::DeadlineModel;
@@ -16,6 +22,7 @@ use crate::cxl::{Fabric, NodeId};
 use crate::runtime::{AddressPredictor, WindowInput};
 use crate::sim::time::Ps;
 use crate::ssd::CxlSsd;
+use crate::util::LineSet;
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -62,6 +69,9 @@ impl DeciderStats {
     }
 }
 
+/// Push-dedup window depth (recently pushed lines).
+const DEDUP_WINDOW: usize = 512;
+
 /// SSD-side decider.
 pub struct Decider {
     predictor: Rc<RefCell<dyn AddressPredictor>>,
@@ -78,9 +88,13 @@ pub struct Decider {
     online_tuning: bool,
     /// Hint decays over the next few windows after a change event.
     hint_level: f32,
-    /// Recently pushed lines (dedup across overlapping runahead).
-    pushed: std::collections::BTreeSet<u64>,
+    /// Recently pushed lines (dedup across overlapping runahead):
+    /// indexed membership + FIFO ring, both O(1).
+    pushed: LineSet,
     pushed_fifo: VecDeque<u64>,
+    /// Reusable predictor input (token buffers cleared and refilled per
+    /// inference instead of reallocated).
+    win: WindowInput,
     /// Streaming state: the last predicted delta pattern, the frontier
     /// line it has been extended to, and how many extended targets are
     /// still unconsumed. Host hit notifications (CXL.io) advance
@@ -121,8 +135,13 @@ impl Decider {
             deadline,
             online_tuning,
             hint_level: 0.0,
-            pushed: std::collections::BTreeSet::new(),
-            pushed_fifo: VecDeque::with_capacity(512),
+            pushed: LineSet::with_capacity(DEDUP_WINDOW),
+            pushed_fifo: VecDeque::with_capacity(DEDUP_WINDOW + 1),
+            win: WindowInput {
+                deltas: Vec::with_capacity(window),
+                pcs: Vec::with_capacity(window),
+                hint: 0.0,
+            },
             last_pattern: Vec::new(),
             frontier_line: 0,
             frontier_idx: 0,
@@ -137,9 +156,9 @@ impl Decider {
             return false;
         }
         self.pushed_fifo.push_back(line);
-        if self.pushed_fifo.len() > 512 {
+        if self.pushed_fifo.len() > DEDUP_WINDOW {
             let old = self.pushed_fifo.pop_front().unwrap();
-            self.pushed.remove(&old);
+            self.pushed.remove(old);
         }
         true
     }
@@ -147,7 +166,8 @@ impl Decider {
     /// Reflector-reported host-side hit (CXL.io): updates request
     /// cadence and advances stream consumption, topping the push frontier
     /// back up to the runahead depth (`consumed` = hits since the last
-    /// notification when notifications are sampled).
+    /// notification when notifications are sampled). New pushes are
+    /// appended to `out`.
     /// `owns` tells the decider which lines its own device stores under
     /// the pool's interleave policy (always-true for a 1-device pool);
     /// `host_has` is the device's BI-directory view of what the host
@@ -162,17 +182,19 @@ impl Decider {
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
         host_has: &dyn Fn(u64) -> bool,
-    ) -> Vec<DeciderPush> {
+        out: &mut Vec<DeciderPush>,
+    ) {
         self.timing.record(now, consumed as u64);
         self.steps_ahead -= consumed as i64;
         if !self.stream_mode {
-            return Vec::new();
+            return;
         }
-        self.extend_frontier(now, ssd, fabric, dev, owns, host_has)
+        self.extend_frontier(now, ssd, fabric, dev, owns, host_has, out);
     }
 
     /// Push pattern-extension targets until the frontier is RUNAHEAD
-    /// steps ahead of consumption again.
+    /// steps ahead of consumption again, appending to `out`.
+    #[allow(clippy::too_many_arguments)]
     fn extend_frontier(
         &mut self,
         now: Ps,
@@ -181,17 +203,18 @@ impl Decider {
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
         host_has: &dyn Fn(u64) -> bool,
-    ) -> Vec<DeciderPush> {
+        out: &mut Vec<DeciderPush>,
+    ) {
         let runahead = if self.stream_mode {
             crate::prefetch::ml::RUNAHEAD as i64
         } else {
             8
         };
-        let mut pushes = Vec::new();
         if self.last_pattern.is_empty() {
-            return pushes;
+            return;
         }
-        while self.steps_ahead < runahead && pushes.len() < 2 * runahead as usize {
+        let mut emitted = 0usize;
+        while self.steps_ahead < runahead && emitted < 2 * runahead as usize {
             let d = self.last_pattern[self.frontier_idx % self.last_pattern.len()];
             self.frontier_idx += 1;
             self.frontier_line += d;
@@ -234,13 +257,13 @@ impl Decider {
             let push_at = ready.max(deadline);
             let push_lat = fabric.bisnp_push(dev, push_at);
             self.stats.pushes += 1;
-            pushes.push(DeciderPush { line: tline, arrives_at: push_at + push_lat });
+            emitted += 1;
+            out.push(DeciderPush { line: tline, arrives_at: push_at + push_lat });
         }
-        pushes
     }
 
     /// A MemRdPC observation (LLC miss reached the device at ~`now`).
-    /// May produce BISnpData pushes.
+    /// May append BISnpData pushes to `out`.
     #[allow(clippy::too_many_arguments)]
     pub fn on_memrd_pc(
         &mut self,
@@ -252,7 +275,8 @@ impl Decider {
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
         host_has: &dyn Fn(u64) -> bool,
-    ) -> Vec<DeciderPush> {
+        out: &mut Vec<DeciderPush>,
+    ) {
         self.stats.observations += 1;
         self.timing.record_arrival(now);
         let delta = match self.last_line {
@@ -269,10 +293,10 @@ impl Decider {
 
         self.since_predict += 1;
         if self.deltas.len() < self.window || self.since_predict < self.stride {
-            return Vec::new();
+            return;
         }
         self.since_predict = 0;
-        self.predict_and_push(line, now, ssd, fabric, dev, owns, host_has)
+        self.predict_and_push(line, now, ssd, fabric, dev, owns, host_has, out);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -285,39 +309,41 @@ impl Decider {
         dev: NodeId,
         owns: &dyn Fn(u64) -> bool,
         host_has: &dyn Fn(u64) -> bool,
-    ) -> Vec<DeciderPush> {
-        let d: Vec<u16> = self.deltas.iter().copied().collect();
-        let p: Vec<u16> = self.pcs.iter().copied().collect();
-        let feats = super::classifier::features(&d, &p);
+        out: &mut Vec<DeciderPush>,
+    ) {
+        let d: &[u16] = self.deltas.make_contiguous();
+        let p: &[u16] = self.pcs.make_contiguous();
+        let feats = super::classifier::features(d, p);
         self.stream_mode = feats.dominant_delta_share > 0.6 || feats.periodicity > 0.8;
         if self.online_tuning {
-            let (_, changed) = self.classifier.observe(&d, &p);
+            let (_, changed) = self.classifier.observe(d, p);
             if changed {
                 self.stats.behavior_changes += 1;
                 self.hint_level = 1.0;
             }
         }
-        let win = WindowInput {
-            deltas: d.iter().map(|&x| i32::from(x)).collect(),
-            pcs: p.iter().map(|&x| i32::from(x)).collect(),
-            hint: self.hint_level,
-        };
+        // Refill the reusable predictor input in place.
+        self.win.deltas.clear();
+        self.win.deltas.extend(d.iter().map(|&x| i32::from(x)));
+        self.win.pcs.clear();
+        self.win.pcs.extend(p.iter().map(|&x| i32::from(x)));
+        self.win.hint = self.hint_level;
         // Hint decays geometrically across prediction rounds.
         self.hint_level *= 0.5;
 
-        let preds = match self.predictor.borrow_mut().predict(&[win]) {
+        let preds = match self.predictor.borrow_mut().predict(std::slice::from_ref(&self.win)) {
             Ok(x) => x,
-            Err(_) => return Vec::new(),
+            Err(_) => return,
         };
         self.stats.inferences += 1;
 
         // Decode the predicted delta pattern, then extend it cyclically
         // for runahead lead time (the paper's predictor emits an
         // open-ended address sequence; K tokens parameterize its cycle).
-        let mut pattern = Vec::new();
+        self.last_pattern.clear();
         for &tok in &preds[0].tokens {
             match detokenize_delta(tok) {
-                Some(d) if d != 0 => pattern.push(d),
+                Some(d) if d != 0 => self.last_pattern.push(d),
                 _ => {
                     self.stats.oov_stops += 1;
                     break;
@@ -329,11 +355,10 @@ impl Decider {
         // (the 1.5 GB buffer dwarfs the reflector); the BISnpData *push*
         // is delayed to the timeliness deadline so the 16 KB reflector is
         // not contaminated too early.
-        self.last_pattern = pattern;
         self.frontier_line = line as i64;
         self.frontier_idx = 0;
         self.steps_ahead = 0;
-        self.extend_frontier(now, ssd, fabric, dev, owns, host_has)
+        self.extend_frontier(now, ssd, fabric, dev, owns, host_has, out);
     }
 
     /// Decider metadata footprint: window tokens + timing buffer +
@@ -377,7 +402,7 @@ mod tests {
         let mut pushes = Vec::new();
         for i in 0..64u64 {
             let line = 1000 + i * 2; // stride 2
-            let out = d.on_memrd_pc(
+            d.on_memrd_pc(
                 line,
                 0x42,
                 i * 1_000_000,
@@ -386,8 +411,8 @@ mod tests {
                 dev,
                 &|_| true,
                 &|_| false,
+                &mut pushes,
             );
-            pushes.extend(out);
         }
         assert!(!pushes.is_empty());
         assert!(d.stats.inferences > 0);
@@ -405,7 +430,8 @@ mod tests {
         let gap = 2_000_000u64; // 2 us between misses
         let mut last = Vec::new();
         for i in 0..40u64 {
-            last = d.on_memrd_pc(
+            last.clear();
+            d.on_memrd_pc(
                 5000 + i,
                 0x42,
                 i * gap,
@@ -414,6 +440,7 @@ mod tests {
                 dev,
                 &|_| true,
                 &|_| false,
+                &mut last,
             );
         }
         assert!(!last.is_empty());
@@ -436,7 +463,7 @@ mod tests {
         let (mut d, mut ssd, mut fabric, dev) = harness();
         let mut out = Vec::new();
         for i in 0..64u64 {
-            out.extend(d.on_memrd_pc(
+            d.on_memrd_pc(
                 2000 + i * 2,
                 0x42,
                 i * 1_000_000,
@@ -445,7 +472,8 @@ mod tests {
                 dev,
                 &|_| false,
                 &|_| false,
-            ));
+                &mut out,
+            );
         }
         assert!(out.is_empty());
         assert!(d.stats.foreign_skips > 0, "{:?}", d.stats);
@@ -462,7 +490,7 @@ mod tests {
         let (mut d, mut ssd, mut fabric, dev) = harness();
         let mut out = Vec::new();
         for i in 0..64u64 {
-            out.extend(d.on_memrd_pc(
+            d.on_memrd_pc(
                 3000 + i * 2,
                 0x42,
                 i * 1_000_000,
@@ -471,7 +499,8 @@ mod tests {
                 dev,
                 &|_| true,
                 &|_| true,
-            ));
+                &mut out,
+            );
         }
         assert!(out.is_empty());
         assert!(d.stats.host_filtered > 0, "{:?}", d.stats);
@@ -483,8 +512,18 @@ mod tests {
     fn no_predictions_before_window_full() {
         let (mut d, mut ssd, mut fabric, dev) = harness();
         for i in 0..31u64 {
-            let out =
-                d.on_memrd_pc(i, 1, i * 1000, &mut ssd, &mut fabric, dev, &|_| true, &|_| false);
+            let mut out = Vec::new();
+            d.on_memrd_pc(
+                i,
+                1,
+                i * 1000,
+                &mut ssd,
+                &mut fabric,
+                dev,
+                &|_| true,
+                &|_| false,
+                &mut out,
+            );
             assert!(out.is_empty());
         }
         assert_eq!(d.stats.inferences, 0);

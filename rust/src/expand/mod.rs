@@ -40,6 +40,10 @@ pub struct ExpandPrefetcher {
     /// interleave pattern (a global counter under line interleave would
     /// notify one endpoint forever and starve the rest).
     hits_seen: Vec<usize>,
+    /// Reusable decider-push scratch (cleared per observation; the
+    /// pushes are mapped into the runner's fill buffer without an
+    /// intermediate allocation).
+    push_scratch: Vec<decider::DeciderPush>,
     stats: PrefetchIssueStats,
 }
 
@@ -72,6 +76,7 @@ impl ExpandPrefetcher {
             deciders,
             hit_notify_stride: cfg.hit_notify_stride.max(1),
             hits_seen: vec![0; endpoints],
+            push_scratch: Vec::with_capacity(2 * crate::prefetch::ml::RUNAHEAD),
             stats: PrefetchIssueStats::default(),
         }
     }
@@ -90,7 +95,8 @@ impl Prefetcher for ExpandPrefetcher {
         now: Ps,
         _lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
+        out: &mut Vec<PrefetchFill>,
+    ) {
         // Every observation concerns exactly one endpoint: the one that
         // owns the line under the pool's interleave policy. A count
         // mismatch would silently train deciders on the wrong device's
@@ -112,7 +118,8 @@ impl Prefetcher for ExpandPrefetcher {
             if self.hits_seen[idx] % self.hit_notify_stride == 0 {
                 let delay = env.fabric.io_notify(node, now);
                 let (router, _, ssd, dir) = env.pool.parts_mut(idx);
-                let pushes = self.deciders[idx].on_host_hit(
+                self.push_scratch.clear();
+                self.deciders[idx].on_host_hit(
                     self.hit_notify_stride,
                     now + delay,
                     ssd,
@@ -120,19 +127,17 @@ impl Prefetcher for ExpandPrefetcher {
                     node,
                     &|l| router.route(l) == idx,
                     &|l| dir.contains(l),
+                    &mut self.push_scratch,
                 );
-                self.stats.issued += pushes.len() as u64;
-                return pushes
-                    .into_iter()
-                    .map(|p| PrefetchFill {
-                        line: p.line,
-                        arrives_at: p.arrives_at,
-                        issued_at: now,
-                        to_reflector: true,
-                    })
-                    .collect();
+                self.stats.issued += self.push_scratch.len() as u64;
+                out.extend(self.push_scratch.iter().map(|p| PrefetchFill {
+                    line: p.line,
+                    arrives_at: p.arrives_at,
+                    issued_at: now,
+                    to_reflector: true,
+                }));
             }
-            return Vec::new();
+            return;
         }
         // LLC miss: the reflector piggybacks the PC via MemRdPC; the
         // owning device's decider observes it after the downward
@@ -141,7 +146,8 @@ impl Prefetcher for ExpandPrefetcher {
         // and never lines its BI directory says the host already caches.
         let down = env.fabric.path_latency(node, 24);
         let (router, _, ssd, dir) = env.pool.parts_mut(idx);
-        let pushes = self.deciders[idx].on_memrd_pc(
+        self.push_scratch.clear();
+        self.deciders[idx].on_memrd_pc(
             a.line,
             a.pc,
             now + down,
@@ -150,18 +156,16 @@ impl Prefetcher for ExpandPrefetcher {
             node,
             &|l| router.route(l) == idx,
             &|l| dir.contains(l),
+            &mut self.push_scratch,
         );
-        self.stats.issued += pushes.len() as u64;
+        self.stats.issued += self.push_scratch.len() as u64;
         self.stats.inferences = self.deciders.iter().map(|d| d.stats.inferences).sum();
-        pushes
-            .into_iter()
-            .map(|p| PrefetchFill {
-                line: p.line,
-                arrives_at: p.arrives_at,
-                issued_at: now,
-                to_reflector: true,
-            })
-            .collect()
+        out.extend(self.push_scratch.iter().map(|p| PrefetchFill {
+            line: p.line,
+            arrives_at: p.arrives_at,
+            issued_at: now,
+            to_reflector: true,
+        }));
     }
 
     fn reflector_check(&mut self, line: u64, _now: Ps) -> Option<Ps> {
@@ -270,7 +274,7 @@ mod tests {
                 inst_gap: 5,
                 dependent: false,
             };
-            fills.extend(p.on_llc_access(&a, false, i * 3_000_000, &[], &mut env));
+            p.on_llc_access(&a, false, i * 3_000_000, &[], &mut env, &mut fills);
         }
         assert!(!fills.is_empty());
         assert!(fills.iter().all(|f| f.to_reflector), "ExPAND fills the reflector");
@@ -295,6 +299,7 @@ mod tests {
             dram: &mut dram,
             backing: Backing::CxlSsd,
         };
+        let mut fills = Vec::new();
         for i in 0..400u64 {
             let a = Access {
                 pc: 0x77,
@@ -303,7 +308,7 @@ mod tests {
                 inst_gap: 5,
                 dependent: false,
             };
-            p.on_llc_access(&a, false, i * 3_000_000, &[], &mut env);
+            p.on_llc_access(&a, false, i * 3_000_000, &[], &mut env, &mut fills);
         }
         let obs: Vec<u64> = p.deciders().iter().map(|d| d.stats.observations).collect();
         assert_eq!(obs.len(), 4);
@@ -330,7 +335,7 @@ mod tests {
             backing: Backing::CxlSsd,
         };
         let a = Access { pc: 1, line: 5, write: false, inst_gap: 1, dependent: false };
-        p.on_llc_access(&a, false, 0, &[], &mut env);
+        p.on_llc_access(&a, false, 0, &[], &mut env, &mut Vec::new());
     }
 
     #[test]
@@ -352,9 +357,10 @@ mod tests {
             dram: &mut dram,
             backing: Backing::CxlSsd,
         };
+        let mut fills = Vec::new();
         for i in 0..64u64 {
             let a = Access { pc: 0x9, line: i, write: false, inst_gap: 5, dependent: false };
-            p.on_llc_access(&a, true, i * 1_000_000, &[], &mut env);
+            p.on_llc_access(&a, true, i * 1_000_000, &[], &mut env, &mut fills);
         }
         // 16 hits per endpoint, stride 4 => every decider got notified
         // (timing.record marks an observation-free cadence update; the
@@ -389,9 +395,10 @@ mod tests {
                 dram: &mut dram,
                 backing: Backing::CxlSsd,
             };
+            let mut fills = Vec::new();
             for i in 0..64u64 {
                 let a = Access { pc: 0x9, line: i, write: false, inst_gap: 5, dependent: false };
-                p.on_llc_access(&a, true, i * 1_000_000, &[], &mut env);
+                p.on_llc_access(&a, true, i * 1_000_000, &[], &mut env, &mut fills);
             }
             let node = env.pool.node_of(0);
             env.fabric.traffic_for(node).m2s_io

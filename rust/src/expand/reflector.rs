@@ -8,9 +8,19 @@
 //! pool — and the line is promoted into the LLC. The reflector also
 //! piggybacks PCs on outgoing misses (MemRdPC) and reports host-side
 //! hits to the decider over CXL.io.
+//!
+//! Hot-path layout: this buffer is probed on *every* LLC miss and
+//! invalidated on every store, so membership must not be a linear scan
+//! of a `VecDeque` (the seed's layout). Entries live in a fixed slab
+//! threaded onto an intrusive FIFO list (insertion order, O(1) unlink
+//! from the middle when a hit consumes or a store invalidates a line),
+//! with a [`LineMap`] index from line address to slot for O(1)
+//! membership. Semantics are identical to the scanning implementation —
+//! the differential proptest in `tests/proptests.rs` drives both over
+//! random operation streams.
 
 use crate::sim::time::Ps;
-use std::collections::VecDeque;
+use crate::util::LineMap;
 
 /// Reflector statistics.
 #[derive(Debug, Clone, Copy, Default)]
@@ -18,18 +28,31 @@ pub struct ReflectorStats {
     pub inserts: u64,
     pub hits: u64,
     pub misses: u64,
-    /// Lines dropped by FIFO replacement before being used.
+    /// Lines dropped by FIFO replacement before being used (a hit
+    /// consumes its line, so every replacement victim is unused).
     pub dropped_unused: u64,
     /// Lines removed by coherence invalidation (host store or BISnp) —
     /// a stale pushed line must never be consumed.
     pub invalidated: u64,
 }
 
+/// Sentinel slot id for list ends / free slots.
+const NIL: u32 = u32::MAX;
+
 /// The RC-side prefetch buffer.
 #[derive(Debug, Clone)]
 pub struct Reflector {
-    /// FIFO of (line, used) — 16 KB / 64 B = 256 entries by default.
-    buf: VecDeque<(u64, bool)>,
+    /// Line address per slot (slab; 16 KB / 64 B = 256 slots by default).
+    lines: Vec<u64>,
+    /// Intrusive FIFO links per slot (`head` oldest, `tail` newest).
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    head: u32,
+    tail: u32,
+    /// Unused slot stack.
+    free: Vec<u32>,
+    /// line -> slot index for O(1) membership.
+    index: LineMap<u32>,
     capacity: usize,
     /// RC-side service latency for a buffer hit.
     hit_latency: Ps,
@@ -38,9 +61,16 @@ pub struct Reflector {
 
 impl Reflector {
     pub fn new(capacity_bytes: usize, hit_latency: Ps) -> Self {
+        let capacity = (capacity_bytes / 64).max(1);
         Reflector {
-            buf: VecDeque::new(),
-            capacity: (capacity_bytes / 64).max(1),
+            lines: vec![0; capacity],
+            prev: vec![NIL; capacity],
+            next: vec![NIL; capacity],
+            head: NIL,
+            tail: NIL,
+            free: (0..capacity as u32).rev().collect(),
+            index: LineMap::with_capacity(capacity),
+            capacity,
             hit_latency,
             stats: ReflectorStats::default(),
         }
@@ -51,34 +81,68 @@ impl Reflector {
     }
 
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.index.is_empty()
+    }
+
+    /// Detach `slot` from the FIFO list (O(1), middle removals included).
+    fn unlink(&mut self, slot: u32) {
+        let (p, n) = (self.prev[slot as usize], self.next[slot as usize]);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.prev[slot as usize] = NIL;
+        self.next[slot as usize] = NIL;
+    }
+
+    /// Remove the tracked `line`, returning its freed slot.
+    fn evict(&mut self, line: u64) -> Option<u32> {
+        let slot = self.index.remove(line)?;
+        self.unlink(slot);
+        self.free.push(slot);
+        Some(slot)
     }
 
     /// Insert a pushed line (BISnpData payload). FIFO-evicts when full.
     pub fn insert(&mut self, line: u64) {
-        if self.buf.iter().any(|&(l, _)| l == line) {
+        if self.index.contains(line) {
             return;
         }
-        if self.buf.len() == self.capacity {
-            if let Some((_, used)) = self.buf.pop_front() {
-                if !used {
-                    self.stats.dropped_unused += 1;
-                }
-            }
+        if self.index.len() == self.capacity {
+            // FIFO replacement: drop the oldest entry (necessarily
+            // unused — a used line would have been consumed by `check`).
+            let oldest = self.lines[self.head as usize];
+            self.evict(oldest);
+            self.stats.dropped_unused += 1;
         }
-        self.buf.push_back((line, false));
+        let slot = self.free.pop().expect("reflector slab out of slots");
+        self.lines[slot as usize] = line;
+        self.prev[slot as usize] = self.tail;
+        self.next[slot as usize] = NIL;
+        if self.tail == NIL {
+            self.head = slot;
+        } else {
+            self.next[self.tail as usize] = slot;
+        }
+        self.tail = slot;
+        self.index.insert(line, slot);
         self.stats.inserts += 1;
     }
 
     /// LLC-miss path check. On hit, the line is consumed (promoted into
     /// the LLC by the caller) and the RC service latency returned.
     pub fn check(&mut self, line: u64) -> Option<Ps> {
-        if let Some(idx) = self.buf.iter().position(|&(l, _)| l == line) {
-            self.buf.remove(idx);
+        if self.evict(line).is_some() {
             self.stats.hits += 1;
             Some(self.hit_latency)
         } else {
@@ -91,8 +155,7 @@ impl Reflector {
     /// host stored to it, or the owning device sent a BISnp). Returns
     /// whether a copy was present.
     pub fn invalidate(&mut self, line: u64) -> bool {
-        if let Some(idx) = self.buf.iter().position(|&(l, _)| l == line) {
-            self.buf.remove(idx);
+        if self.evict(line).is_some() {
             self.stats.invalidated += 1;
             true
         } else {
@@ -102,7 +165,7 @@ impl Reflector {
 
     /// Probe without consuming (tests/invariants).
     pub fn contains(&self, line: u64) -> bool {
-        self.buf.iter().any(|&(l, _)| l == line)
+        self.index.contains(line)
     }
 
     pub fn hit_ratio(&self) -> f64 {
@@ -147,6 +210,24 @@ mod tests {
     }
 
     #[test]
+    fn fifo_order_survives_middle_removals() {
+        // Consuming/invalidating from the middle must not disturb the
+        // insertion order of the remaining entries.
+        let mut r = Reflector::new(3 * 64, 40_000); // 3 lines
+        r.insert(1);
+        r.insert(2);
+        r.insert(3);
+        assert!(r.check(2).is_some()); // middle unlink
+        r.insert(4); // at capacity again: 1,3,4
+        r.insert(5); // evicts 1 (oldest)
+        assert!(!r.contains(1));
+        assert!(r.contains(3) && r.contains(4) && r.contains(5));
+        r.insert(6); // evicts 3
+        assert!(!r.contains(3));
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
     fn invalidate_drops_without_serving() {
         let mut r = Reflector::new(1024, 40_000);
         r.insert(9);
@@ -164,5 +245,18 @@ mod tests {
         r.insert(5);
         assert_eq!(r.len(), 1);
         assert_eq!(r.stats.inserts, 1);
+    }
+
+    #[test]
+    fn single_slot_reflector_cycles() {
+        let mut r = Reflector::new(64, 40_000); // 1 line
+        r.insert(1);
+        r.insert(2); // evicts 1
+        assert!(!r.contains(1) && r.contains(2));
+        assert_eq!(r.check(2), Some(40_000));
+        assert!(r.is_empty());
+        r.insert(3);
+        assert!(r.contains(3));
+        assert_eq!(r.stats.dropped_unused, 1);
     }
 }

@@ -13,6 +13,7 @@ pub mod table1;
 use crate::config::SimConfig;
 use crate::metrics::{RunStats, Table};
 use crate::workloads::{TraceSource, WorkloadId};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Shared harness options.
 #[derive(Debug, Clone)]
@@ -56,12 +57,23 @@ impl FigOpts {
     }
 }
 
-/// Base configuration for figure runs: the Table-1 platform with the
-/// cache/SSD capacity scaling of DESIGN.md §3 (working sets are scaled
-/// ~1000x from the paper, so the LLC and SSD-internal DRAM scale too —
-/// preserving the WS >> LLC and WS >> internal-DRAM regimes that drive
-/// every figure).
-pub fn figure_config(opts: &FigOpts) -> SimConfig {
+/// Process-wide cache of immutable base configs, keyed by the `FigOpts`
+/// fields that feed [`figure_config`]. Sweep workers on every thread
+/// share one `Arc<SimConfig>` per distinct option set instead of each
+/// rebuilding (and the runner then deep-cloning) the base per cell.
+type BaseKey = (usize, u64, Option<String>);
+static BASE_CACHE: OnceLock<Mutex<Vec<(BaseKey, Arc<SimConfig>)>>> = OnceLock::new();
+
+/// Shared immutable base config for figure runs (see [`figure_config`]
+/// for the shape). Cached per option set and shared across sweep
+/// worker threads.
+pub fn figure_base(opts: &FigOpts) -> Arc<SimConfig> {
+    let key: BaseKey = (opts.accesses, opts.seed, opts.artifacts.clone());
+    let cache = BASE_CACHE.get_or_init(|| Mutex::new(Vec::new()));
+    let mut held = cache.lock().unwrap();
+    if let Some((_, cfg)) = held.iter().find(|(k, _)| *k == key) {
+        return Arc::clone(cfg);
+    }
     let mut c = SimConfig::default();
     c.hierarchy.llc.size_bytes = 4 << 20;
     c.hierarchy.l2.size_bytes = 512 << 10;
@@ -71,7 +83,19 @@ pub fn figure_config(opts: &FigOpts) -> SimConfig {
     if let Some(dir) = &opts.artifacts {
         c.artifacts_dir = dir.clone();
     }
-    c
+    let cfg = Arc::new(c);
+    held.push((key, Arc::clone(&cfg)));
+    cfg
+}
+
+/// Base configuration for figure runs: the Table-1 platform with the
+/// cache/SSD capacity scaling of DESIGN.md §3 (working sets are scaled
+/// ~1000x from the paper, so the LLC and SSD-internal DRAM scale too —
+/// preserving the WS >> LLC and WS >> internal-DRAM regimes that drive
+/// every figure). Clones the shared base — use [`figure_base`] when the
+/// config will not be mutated.
+pub fn figure_config(opts: &FigOpts) -> SimConfig {
+    (*figure_base(opts)).clone()
 }
 
 /// Run one workload under a mutated figure config.
@@ -84,7 +108,7 @@ pub fn run_sim(
     let mut cfg = figure_config(opts);
     mutate(&mut cfg);
     let mut src = id.source(cfg.seed);
-    crate::sim::runner::simulate(&cfg, runtime, &mut *src)
+    crate::sim::runner::simulate_arc(Arc::new(cfg), runtime, &mut *src)
 }
 
 /// Run an arbitrary trace source under a mutated figure config.
@@ -96,7 +120,7 @@ pub fn run_sim_source(
 ) -> anyhow::Result<RunStats> {
     let mut cfg = figure_config(opts);
     mutate(&mut cfg);
-    crate::sim::runner::simulate(&cfg, runtime, source)
+    crate::sim::runner::simulate_arc(Arc::new(cfg), runtime, source)
 }
 
 /// Print + persist a harness result.

@@ -36,6 +36,10 @@ pub const JOBS: &[(&str, FigFn)] = &[
 /// Run a list of harness jobs across `workers` threads (1 = serial, with
 /// figure output emitted in listed order). Fails if any job failed.
 pub fn run_jobs(jobs: &[(&str, FigFn)], opts: &FigOpts, workers: usize) -> anyhow::Result<()> {
+    // Warm the shared immutable base config before spawning, so every
+    // worker thread reuses one `Arc<SimConfig>` (only mutable sim state
+    // is built per cell).
+    let _ = super::figure_base(opts);
     let workers = workers.max(1).min(jobs.len().max(1));
     if workers <= 1 {
         for (name, f) in jobs {

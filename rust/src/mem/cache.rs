@@ -6,6 +6,14 @@
 //! prefetch) and *coverage* (fraction of demand requests served by
 //! prefetched data), the two effectiveness parameters of the paper's
 //! "Prefetching Impact" analysis.
+//!
+//! Hot-path layout: tags live in their own flat array (structure of
+//! arrays), so the per-access probe is a branch-light row-major scan of
+//! one cache-resident tag row; LRU stamps and state bits are only
+//! touched on the slot that matched. Validity is generational — a line
+//! is valid iff its generation equals the cache's live generation —
+//! which makes [`Cache::invalidate_all`] an O(1) bump instead of a
+//! whole-array walk, and [`Cache::occupancy`] a counter read.
 
 /// Result of a demand access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,17 +29,6 @@ pub enum AccessOutcome {
 pub struct Evicted {
     pub line: u64,
     pub dirty: bool,
-}
-
-#[derive(Debug, Clone, Copy, Default)]
-struct Line {
-    tag: u64,
-    last_use: u64,
-    valid: bool,
-    /// Filled by prefetch and not yet demanded.
-    prefetch_pending: bool,
-    /// Modified since fill (write-back policy).
-    dirty: bool,
 }
 
 /// Cache statistics (demand + prefetch bookkeeping).
@@ -70,13 +67,32 @@ impl CacheStats {
     }
 }
 
+/// Per-line state bit: filled by prefetch and not yet demanded.
+const FLAG_PREFETCH: u8 = 1;
+/// Per-line state bit: modified since fill (write-back policy).
+const FLAG_DIRTY: u8 = 2;
+
 /// A set-associative, LRU, write-allocate cache over line addresses.
 #[derive(Debug, Clone)]
 pub struct Cache {
     sets: usize,
     ways: usize,
-    lines: Vec<Line>, // sets * ways, row-major per set
+    /// Tag per slot (sets * ways, row-major per set) — the only array
+    /// the probe loop reads.
+    tags: Vec<u64>,
+    /// LRU stamp per slot.
+    last_use: Vec<u64>,
+    /// Validity generation per slot: valid iff equal to `live_gen`
+    /// (0 is never a live generation, so it doubles as "invalid").
+    gen: Vec<u64>,
+    /// FLAG_PREFETCH | FLAG_DIRTY per slot.
+    flags: Vec<u8>,
+    /// Current live generation (starts at 1; bumped by
+    /// [`Cache::invalidate_all`]).
+    live_gen: u64,
     stamp: u64,
+    /// Valid-line count, maintained incrementally (O(1) occupancy).
+    live: usize,
     pub stats: CacheStats,
 }
 
@@ -89,8 +105,13 @@ impl Cache {
         Cache {
             sets,
             ways,
-            lines: vec![Line::default(); sets * ways],
+            tags: vec![0; sets * ways],
+            last_use: vec![0; sets * ways],
+            gen: vec![0; sets * ways],
+            flags: vec![0; sets * ways],
+            live_gen: 1,
             stamp: 0,
+            live: 0,
             stats: CacheStats::default(),
         }
     }
@@ -115,17 +136,29 @@ impl Cache {
         (h % self.sets as u64) as usize
     }
 
+    /// Row-major probe of one set: slot index of `line` if resident.
+    /// Tag equality and generation check fold into one comparison pair
+    /// over the flat tag row — no per-way struct loads.
     #[inline]
-    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
-        set * self.ways..(set + 1) * self.ways
+    fn find(&self, set: usize, line: u64) -> Option<usize> {
+        let base = set * self.ways;
+        let gen = self.live_gen;
+        for i in base..base + self.ways {
+            if self.tags[i] == line && self.gen[i] == gen {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    #[inline]
+    fn valid(&self, i: usize) -> bool {
+        self.gen[i] == self.live_gen
     }
 
     /// Look up without updating state (used by invariants/tests).
     pub fn probe(&self, line: u64) -> bool {
-        let set = self.set_of(line);
-        self.lines[self.slot_range(set)]
-            .iter()
-            .any(|l| l.valid && l.tag == line)
+        self.find(self.set_of(line), line).is_some()
     }
 
     /// Demand access: updates LRU + prefetch bookkeeping. Does NOT fill on
@@ -133,18 +166,15 @@ impl Cache {
     pub fn access(&mut self, line: u64) -> AccessOutcome {
         self.stamp += 1;
         let set = self.set_of(line);
-        let range = self.slot_range(set);
-        for l in &mut self.lines[range] {
-            if l.valid && l.tag == line {
-                l.last_use = self.stamp;
-                let first = l.prefetch_pending;
-                if first {
-                    l.prefetch_pending = false;
-                    self.stats.prefetch_useful += 1;
-                }
-                self.stats.demand_hits += 1;
-                return AccessOutcome::Hit { first_touch_of_prefetch: first };
+        if let Some(i) = self.find(set, line) {
+            self.last_use[i] = self.stamp;
+            let first = self.flags[i] & FLAG_PREFETCH != 0;
+            if first {
+                self.flags[i] &= !FLAG_PREFETCH;
+                self.stats.prefetch_useful += 1;
             }
+            self.stats.demand_hits += 1;
+            return AccessOutcome::Hit { first_touch_of_prefetch: first };
         }
         self.stats.demand_misses += 1;
         AccessOutcome::Miss
@@ -155,103 +185,110 @@ impl Cache {
     pub fn fill(&mut self, line: u64, is_prefetch: bool) -> Option<Evicted> {
         self.stamp += 1;
         let set = self.set_of(line);
-        let range = self.slot_range(set);
         // Already present (e.g. racing prefetch + demand): refresh.
-        let stamp = self.stamp;
-        for l in &mut self.lines[range.clone()] {
-            if l.valid && l.tag == line {
-                l.last_use = stamp;
-                return None;
-            }
+        if let Some(i) = self.find(set, line) {
+            self.last_use[i] = self.stamp;
+            return None;
         }
         // Choose victim: invalid first, else LRU.
-        let mut victim = range.start;
+        let base = set * self.ways;
+        let mut victim = base;
         let mut best = u64::MAX;
-        for i in range {
-            let l = &self.lines[i];
-            if !l.valid {
+        for i in base..base + self.ways {
+            if !self.valid(i) {
                 victim = i;
                 break;
             }
-            if l.last_use < best {
-                best = l.last_use;
+            if self.last_use[i] < best {
+                best = self.last_use[i];
                 victim = i;
             }
         }
-        let v = self.lines[victim];
-        let evicted = if v.valid {
-            if v.prefetch_pending {
+        let evicted = if self.valid(victim) {
+            if self.flags[victim] & FLAG_PREFETCH != 0 {
                 self.stats.prefetch_wasted += 1;
             } else if is_prefetch {
                 self.stats.prefetch_evictions_of_demand += 1;
             }
-            Some(Evicted { line: v.tag, dirty: v.dirty })
+            Some(Evicted {
+                line: self.tags[victim],
+                dirty: self.flags[victim] & FLAG_DIRTY != 0,
+            })
         } else {
+            self.live += 1;
             None
         };
         if is_prefetch {
             self.stats.prefetch_fills += 1;
         }
-        self.lines[victim] = Line {
-            tag: line,
-            last_use: self.stamp,
-            valid: true,
-            prefetch_pending: is_prefetch,
-            dirty: false,
-        };
+        self.tags[victim] = line;
+        self.last_use[victim] = self.stamp;
+        self.gen[victim] = self.live_gen;
+        self.flags[victim] = if is_prefetch { FLAG_PREFETCH } else { 0 };
         evicted
     }
 
     /// Mark a resident line modified (store hit / write-allocate).
     /// Returns false when the line is not present.
     pub fn mark_dirty(&mut self, line: u64) -> bool {
-        let set = self.set_of(line);
-        let range = self.slot_range(set);
-        for l in &mut self.lines[range] {
-            if l.valid && l.tag == line {
-                l.dirty = true;
-                return true;
-            }
+        if let Some(i) = self.find(self.set_of(line), line) {
+            self.flags[i] |= FLAG_DIRTY;
+            return true;
         }
         false
     }
 
     /// Is the line present and modified?
     pub fn is_dirty(&self, line: u64) -> bool {
-        let set = self.set_of(line);
-        self.lines[self.slot_range(set)]
-            .iter()
-            .any(|l| l.valid && l.tag == line && l.dirty)
+        match self.find(self.set_of(line), line) {
+            Some(i) => self.flags[i] & FLAG_DIRTY != 0,
+            None => false,
+        }
     }
 
     /// Back-invalidation (CXL.mem BISnp): drop the line if present. Any
     /// dirty data is discarded — callers that need it written back must
     /// do so before invalidating (BIRspDirty flow).
     pub fn invalidate(&mut self, line: u64) -> bool {
-        let set = self.set_of(line);
-        let range = self.slot_range(set);
-        for l in &mut self.lines[range] {
-            if l.valid && l.tag == line {
-                l.valid = false;
-                l.dirty = false;
-                if l.prefetch_pending {
-                    self.stats.prefetch_wasted += 1;
-                }
-                self.stats.invalidations += 1;
-                return true;
+        if let Some(i) = self.find(self.set_of(line), line) {
+            if self.flags[i] & FLAG_PREFETCH != 0 {
+                self.stats.prefetch_wasted += 1;
             }
+            self.gen[i] = 0;
+            self.flags[i] = 0;
+            self.live -= 1;
+            self.stats.invalidations += 1;
+            return true;
         }
         false
     }
 
-    /// Number of currently-valid lines (for occupancy checks).
+    /// Generation-based bulk invalidation: drop every resident line in
+    /// O(1) by bumping the live generation (no set walking). Per-line
+    /// statistics (invalidation counts, wasted-prefetch attribution) are
+    /// intentionally not updated — this models a whole-cache reset
+    /// (e.g. a flush between trace segments), not per-line BISnp flows.
+    pub fn invalidate_all(&mut self) {
+        self.live_gen += 1;
+        self.live = 0;
+    }
+
+    /// Number of currently-valid lines — an O(1) counter read, not an
+    /// array walk (this sits on the per-run device-stats path).
     pub fn occupancy(&self) -> usize {
-        self.lines.iter().filter(|l| l.valid).count()
+        self.live
     }
 
     /// Every currently-valid line address (invariant checks / audits).
-    pub fn valid_lines(&self) -> Vec<u64> {
-        self.lines.iter().filter(|l| l.valid).map(|l| l.tag).collect()
+    /// Allocation-free: borrows the tag array instead of building a
+    /// fresh `Vec` per call (ISSUE 3 satellite — this is called from
+    /// the audit/directory sync path).
+    pub fn valid_lines(&self) -> impl Iterator<Item = u64> + '_ {
+        let gen = self.live_gen;
+        self.tags
+            .iter()
+            .zip(self.gen.iter())
+            .filter_map(move |(&tag, &g)| (g == gen).then_some(tag))
     }
 }
 
@@ -352,7 +389,7 @@ mod tests {
         for l in [3u64, 5, 9] {
             c.fill(l, false);
         }
-        let mut lines = c.valid_lines();
+        let mut lines: Vec<u64> = c.valid_lines().collect();
         lines.sort_unstable();
         assert_eq!(lines, vec![3, 5, 9]);
     }
@@ -364,5 +401,42 @@ mod tests {
             c.fill(i, false);
         }
         assert_eq!(c.occupancy(), 8);
+    }
+
+    #[test]
+    fn bulk_invalidate_is_total_and_reusable() {
+        let mut c = Cache::new(8 * 64, 2, 64);
+        for i in 0..8u64 {
+            c.fill(i, false);
+        }
+        c.mark_dirty(3);
+        assert_eq!(c.occupancy(), 8);
+        c.invalidate_all();
+        assert_eq!(c.occupancy(), 0);
+        for i in 0..8u64 {
+            assert!(!c.probe(i), "line {i} must be gone");
+        }
+        assert!(!c.is_dirty(3));
+        assert_eq!(c.valid_lines().count(), 0);
+        // The cache keeps working after the generation bump, and a
+        // refill of a previously-resident address starts clean.
+        c.fill(3, false);
+        assert!(c.probe(3));
+        assert!(!c.is_dirty(3));
+        assert_eq!(c.occupancy(), 1);
+    }
+
+    #[test]
+    fn occupancy_counter_tracks_invalidate_and_refill() {
+        let mut c = Cache::new(4 * 64, 2, 64);
+        c.fill(1, false);
+        c.fill(2, false);
+        assert_eq!(c.occupancy(), 2);
+        c.invalidate(1);
+        assert_eq!(c.occupancy(), 1);
+        c.fill(1, false); // reuses the invalid slot
+        assert_eq!(c.occupancy(), 2);
+        c.fill(1, false); // refresh, not a new line
+        assert_eq!(c.occupancy(), 2);
     }
 }

@@ -107,13 +107,19 @@ impl Hierarchy {
     }
 
     /// Enforce inclusion: an LLC victim may not linger in any private
-    /// level (its dirtiness already lives in the LLC entry).
+    /// level (its dirtiness already lives in the LLC entry). Empty
+    /// private caches are skipped via their O(1) occupancy counter, so
+    /// the common many-core case probes only caches that hold data.
     fn private_invalidate(&mut self, line: u64) {
         for c in &mut self.l1d {
-            c.invalidate(line);
+            if c.occupancy() > 0 {
+                c.invalidate(line);
+            }
         }
         for c in &mut self.l2 {
-            c.invalidate(line);
+            if c.occupancy() > 0 {
+                c.invalidate(line);
+            }
         }
     }
 
@@ -170,7 +176,8 @@ impl Hierarchy {
     }
 
     /// Every line currently resident in the LLC (invariant checks).
-    pub fn llc_lines(&self) -> Vec<u64> {
+    /// Borrows the LLC's tag array — no per-call allocation.
+    pub fn llc_lines(&self) -> impl Iterator<Item = u64> + '_ {
         self.llc.valid_lines()
     }
 

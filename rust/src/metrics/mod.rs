@@ -101,6 +101,10 @@ pub struct RunStats {
     pub inference_wall_ps: Ps,
     /// Mean end-to-end latency per demand access.
     pub avg_access_ps: f64,
+    /// Host wall-clock seconds the runner spent replaying the trace
+    /// (simulator performance accounting — not simulated time, and the
+    /// one nondeterministic field; figure CSVs never serialize it).
+    pub wall_s: f64,
     /// SSD internal DRAM cache hit ratio.
     pub ssd_internal_hit: f64,
     /// Sampled (access index, inter-LLC-access gap) series (Fig 4d).
@@ -151,6 +155,17 @@ impl RunStats {
             0.0
         } else {
             self.prefetch_useful as f64 / denom as f64
+        }
+    }
+
+    /// Simulator throughput: demand accesses replayed per host
+    /// wall-clock second (the bench suite's primary metric; also
+    /// reported in the CLI run summary).
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.accesses as f64 / self.wall_s
         }
     }
 
@@ -250,7 +265,8 @@ impl RunStats {
     pub fn summary(&self) -> String {
         format!(
             "{:<14} {:<10} exec={:<12} ipc-inv={:.2} LLC-hit={:>5.1}% refl={:<6} \
-             MPKI={:>6.2} rw={}/{} ({:.1}%wr) pf(acc={:.0}%, cov={:.0}%, issued={})",
+             MPKI={:>6.2} rw={}/{} ({:.1}%wr) pf(acc={:.0}%, cov={:.0}%, issued={}) \
+             sim-thr={:.2}M acc/s",
             self.workload,
             self.prefetcher,
             fmt_ps(self.exec_ps),
@@ -264,6 +280,7 @@ impl RunStats {
             self.prefetch_accuracy() * 100.0,
             self.prefetch_coverage() * 100.0,
             self.prefetch_issued,
+            self.throughput() / 1e6,
         )
     }
 }
@@ -365,6 +382,14 @@ mod tests {
         let slow = RunStats { exec_ps: 2_000, ..Default::default() };
         let fast = RunStats { exec_ps: 1_000, ..Default::default() };
         assert!((fast.speedup_over(&slow) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_is_accesses_per_wall_second() {
+        let s = RunStats { accesses: 50_000, wall_s: 0.5, ..Default::default() };
+        assert!((s.throughput() - 100_000.0).abs() < 1e-9);
+        assert_eq!(RunStats::default().throughput(), 0.0, "no wall time, no rate");
+        assert!(s.summary().contains("sim-thr="));
     }
 
     #[test]

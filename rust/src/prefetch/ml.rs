@@ -12,6 +12,7 @@ use crate::runtime::{AddressPredictor, WindowInput};
 use crate::sim::time::Ps;
 use crate::workloads::Access;
 use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::rc::Rc;
 
 /// Expander-side prefetch runahead: the model predicts the next-K delta
@@ -26,21 +27,22 @@ pub const RUNAHEAD: usize = 48;
 pub const HOST_RUNAHEAD: usize = 16;
 
 /// Extend a predicted delta pattern cyclically into absolute target
+/// lines, stopping on non-positive cumulative addresses. Allocation-
+/// free: the hot path iterates this directly; [`extend_targets`] is the
+/// collecting convenience wrapper.
+pub fn extend_iter(base: u64, deltas: &[i64], depth: usize) -> impl Iterator<Item = u64> + '_ {
+    let mut cur = base as i64;
+    let steps = if deltas.is_empty() { 0 } else { depth };
+    (0..steps).map_while(move |k| {
+        cur += deltas[k % deltas.len()];
+        (cur > 0).then_some(cur as u64)
+    })
+}
+
+/// Extend a predicted delta pattern cyclically into absolute target
 /// lines. Stops on non-positive cumulative addresses.
 pub fn extend_targets(base: u64, deltas: &[i64], depth: usize) -> Vec<u64> {
-    if deltas.is_empty() {
-        return Vec::new();
-    }
-    let mut out = Vec::with_capacity(depth);
-    let mut cur = base as i64;
-    for k in 0..depth {
-        cur += deltas[k % deltas.len()];
-        if cur <= 0 {
-            break;
-        }
-        out.push(cur as u64);
-    }
-    out
+    extend_iter(base, deltas, depth).collect()
 }
 
 /// Host-side ML prefetcher wrapping an [`AddressPredictor`].
@@ -49,10 +51,16 @@ pub struct MlPrefetcher {
     label: String,
     window: usize,
     stride: usize,
-    deltas: Vec<i32>,
-    pcs: Vec<i32>,
+    /// Sliding token window (ring buffers — the seed shifted a `Vec`
+    /// with `remove(0)` on every observation).
+    deltas: VecDeque<i32>,
+    pcs: VecDeque<i32>,
     last_line: Option<u64>,
     since_predict: usize,
+    /// Reusable predictor input and decoded-pattern buffers (refilled
+    /// per inference instead of reallocated).
+    win: WindowInput,
+    pattern: Vec<i64>,
     stats: PrefetchIssueStats,
 }
 
@@ -68,10 +76,16 @@ impl MlPrefetcher {
             label: label.to_string(),
             window,
             stride: stride.max(1),
-            deltas: Vec::new(),
-            pcs: Vec::new(),
+            deltas: VecDeque::with_capacity(window + 1),
+            pcs: VecDeque::with_capacity(window + 1),
             last_line: None,
             since_predict: 0,
+            win: WindowInput {
+                deltas: Vec::with_capacity(window),
+                pcs: Vec::with_capacity(window),
+                hint: 0.0, // baselines have no behavior-change classifier
+            },
+            pattern: Vec::new(),
             stats: PrefetchIssueStats::default(),
         }
     }
@@ -82,11 +96,11 @@ impl MlPrefetcher {
             None => 0,
         };
         self.last_line = Some(a.line);
-        self.deltas.push(i32::from(tokenize_delta(delta)));
-        self.pcs.push(i32::from(hash_pc(a.pc)));
+        self.deltas.push_back(i32::from(tokenize_delta(delta)));
+        self.pcs.push_back(i32::from(hash_pc(a.pc)));
         if self.deltas.len() > self.window {
-            self.deltas.remove(0);
-            self.pcs.remove(0);
+            self.deltas.pop_front();
+            self.pcs.pop_front();
         }
     }
 }
@@ -99,49 +113,47 @@ impl Prefetcher for MlPrefetcher {
         now: Ps,
         _lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
+        out: &mut Vec<PrefetchFill>,
+    ) {
         // Host-side predictors only see the miss stream (no CXL.io hit
         // feedback channel — that is an ExPAND mechanism).
         if hit {
-            return Vec::new();
+            return;
         }
         self.push_observation(a);
         self.since_predict += 1;
         if self.deltas.len() < self.window || self.since_predict < self.stride {
-            return Vec::new();
+            return;
         }
         self.since_predict = 0;
-        let win = WindowInput {
-            deltas: self.deltas.clone(),
-            pcs: self.pcs.clone(),
-            hint: 0.0, // baselines have no behavior-change classifier
-        };
-        let preds = match self.predictor.borrow_mut().predict(&[win]) {
+        self.win.deltas.clear();
+        self.win.deltas.extend(self.deltas.iter().copied());
+        self.win.pcs.clear();
+        self.win.pcs.extend(self.pcs.iter().copied());
+        let preds = match self.predictor.borrow_mut().predict(std::slice::from_ref(&self.win)) {
             Ok(p) => p,
-            Err(_) => return Vec::new(),
+            Err(_) => return,
         };
         self.stats.inferences += 1;
         // Decode the predicted delta pattern (stop at OOV/zero), then
         // extend it cyclically for runahead depth.
-        let mut pattern = Vec::new();
+        self.pattern.clear();
         for &tok in &preds[0].tokens {
             match detokenize_delta(tok) {
-                Some(d) if d != 0 => pattern.push(d),
+                Some(d) if d != 0 => self.pattern.push(d),
                 _ => break,
             }
         }
-        let mut fills = Vec::new();
-        for line in extend_targets(a.line, &pattern, HOST_RUNAHEAD) {
+        for line in extend_iter(a.line, &self.pattern, HOST_RUNAHEAD) {
             let Some(lat) = env.host_fetch_latency(line, now) else { continue };
             self.stats.issued += 1;
-            fills.push(PrefetchFill {
+            out.push(PrefetchFill {
                 line,
                 arrives_at: now + lat,
                 issued_at: now,
                 to_reflector: false,
             });
         }
-        fills
     }
 
     fn name(&self) -> String {
@@ -185,8 +197,7 @@ mod tests {
         let mut ml = MlPrefetcher::new(pred, "ML-test", 4);
         let mut got = Vec::new();
         for i in 0..64u64 {
-            let fills = ml.on_llc_access(&access(i * 3), false, i * 1000, &[], &mut env);
-            got.extend(fills);
+            ml.on_llc_access(&access(i * 3), false, i * 1000, &[], &mut env, &mut got);
         }
         assert!(!got.is_empty());
         // Mock continues stride 3: chains 3,6,9,12 past the trigger line.
@@ -212,8 +223,17 @@ mod tests {
         };
         let pred = Rc::new(RefCell::new(MockPredictor::new(MockPredictor::default_shape())));
         let mut ml = MlPrefetcher::new(pred, "ML-test", 1);
+        let mut fills = Vec::new();
         for i in 0..100u64 {
-            assert!(ml.on_llc_access(&access(i), true, 0, &[], &mut env).is_empty());
+            ml.on_llc_access(&access(i), true, 0, &[], &mut env, &mut fills);
+            assert!(fills.is_empty());
         }
+    }
+
+    #[test]
+    fn extend_targets_cycles_and_stops_at_zero() {
+        assert_eq!(extend_targets(100, &[2, 3], 4), vec![102, 105, 107, 110]);
+        assert_eq!(extend_targets(2, &[-5], 4), Vec::<u64>::new());
+        assert!(extend_targets(10, &[], 4).is_empty());
     }
 }

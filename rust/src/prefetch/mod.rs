@@ -77,7 +77,9 @@ pub struct PrefetchIssueStats {
 /// The prefetcher interface.
 pub trait Prefetcher {
     /// Observe one LLC-level access (`hit` = served by LLC or above-LLC
-    /// reflector). Returns fills to schedule.
+    /// reflector). Fills to schedule are *appended* to `out` — the
+    /// runner owns one reusable scratch buffer and clears it between
+    /// accesses, so the common no-fill case allocates nothing.
     fn on_llc_access(
         &mut self,
         a: &Access,
@@ -85,7 +87,8 @@ pub trait Prefetcher {
         now: Ps,
         lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill>;
+        out: &mut Vec<PrefetchFill>,
+    );
 
     /// How many future accesses the runner should expose in `lookahead`
     /// (only the oracle-backed synthetic prefetcher uses this).
@@ -139,8 +142,8 @@ impl Prefetcher for NoPrefetch {
         _now: Ps,
         _lookahead: &[Access],
         _env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
-        Vec::new()
+        _out: &mut Vec<PrefetchFill>,
+    ) {
     }
 
     fn name(&self) -> String {
@@ -189,7 +192,9 @@ mod tests {
         };
         let a = Access { pc: 1, line: 2, write: false, inst_gap: 1, dependent: false };
         let mut p = NoPrefetch;
-        assert!(p.on_llc_access(&a, false, 0, &[], &mut env).is_empty());
+        let mut fills = Vec::new();
+        p.on_llc_access(&a, false, 0, &[], &mut env, &mut fills);
+        assert!(fills.is_empty());
         assert_eq!(p.storage_bytes(), 0);
     }
 

@@ -91,7 +91,8 @@ impl Prefetcher for BestOffset {
         now: Ps,
         _lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
+        out: &mut Vec<PrefetchFill>,
+    ) {
         // Score candidates against the RR table on every LLC access.
         for (i, &d) in OFFSETS.iter().enumerate() {
             if self.rr_contains(a.line.wrapping_sub(d as u64)) {
@@ -107,21 +108,19 @@ impl Prefetcher for BestOffset {
         // Prefetch on misses and on first-touch of prefetched lines
         // (miss-triggered, like the hardware).
         if hit || self.best == 0 {
-            return Vec::new();
+            return;
         }
-        let mut fills = Vec::with_capacity(self.degree);
         for k in 1..=self.degree {
             let target = a.line.wrapping_add((self.best * k as i64) as u64);
             let Some(lat) = env.host_fetch_latency(target, now) else { continue };
             self.stats.issued += 1;
-            fills.push(PrefetchFill {
+            out.push(PrefetchFill {
                 line: target,
                 arrives_at: now + lat,
                 issued_at: now,
                 to_reflector: false,
             });
         }
-        fills
     }
 
     fn name(&self) -> String {
@@ -158,13 +157,11 @@ mod tests {
             backing: Backing::LocalDram,
         };
         let mut bo = BestOffset::new();
-        let mut issued_targets = Vec::new();
+        let mut fills = Vec::new();
         for i in 0..2000u64 {
-            let fills = bo.on_llc_access(&access(i * 4), false, i * 1000, &[], &mut env);
-            for fl in fills {
-                issued_targets.push(fl.line);
-            }
+            bo.on_llc_access(&access(i * 4), false, i * 1000, &[], &mut env, &mut fills);
         }
+        let issued_targets: Vec<u64> = fills.iter().map(|fl| fl.line).collect();
         // After a scoring round, offset 4 dominates: prefetches land on
         // the stride.
         assert!(!issued_targets.is_empty());
@@ -185,9 +182,12 @@ mod tests {
         let mut bo = BestOffset::new();
         let mut rng = crate::util::Rng::new(1);
         let mut issued = 0;
+        let mut fills = Vec::new();
         for i in 0..4000 {
             let line = rng.next_u64() >> 20;
-            issued += bo.on_llc_access(&access(line), false, i * 1000, &[], &mut env).len();
+            fills.clear();
+            bo.on_llc_access(&access(line), false, i * 1000, &[], &mut env, &mut fills);
+            issued += fills.len();
         }
         // First round starts with best=1 (cold); after scoring, random
         // traffic should keep it mostly off.

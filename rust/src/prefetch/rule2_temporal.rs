@@ -79,9 +79,10 @@ impl Prefetcher for TemporalIsb {
         now: Ps,
         _lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
+        out: &mut Vec<PrefetchFill>,
+    ) {
         if hit {
-            return Vec::new();
+            return;
         }
         let region = a.line >> REGION_SHIFT;
         let si = self.stream_slot(region);
@@ -92,14 +93,13 @@ impl Prefetcher for TemporalIsb {
         self.last_in_stream[si] = (region, a.line);
 
         // Chase the correlation chain from this miss.
-        let mut fills = Vec::new();
         let mut cur = a.line;
         for _ in 0..DEGREE {
             match self.lookup(cur) {
                 Some(next) if next != cur => {
                     let Some(lat) = env.host_fetch_latency(next, now) else { break };
                     self.stats.issued += 1;
-                    fills.push(PrefetchFill {
+                    out.push(PrefetchFill {
                         line: next,
                         arrives_at: now + lat,
                         issued_at: now,
@@ -110,7 +110,6 @@ impl Prefetcher for TemporalIsb {
                 _ => break,
             }
         }
-        fills
     }
 
     fn name(&self) -> String {
@@ -149,10 +148,18 @@ mod tests {
         // Irregular but repeating miss sequence within one region.
         let seq = [5u64, 90, 33, 150, 7, 61];
         let mut predicted = 0;
+        let mut fills = Vec::new();
         for round in 0..50 {
             for (i, &l) in seq.iter().enumerate() {
-                let fills =
-                    isb.on_llc_access(&access(l), false, (round * 10 + i) as Ps * 1000, &[], &mut env);
+                fills.clear();
+                isb.on_llc_access(
+                    &access(l),
+                    false,
+                    (round * 10 + i) as Ps * 1000,
+                    &[],
+                    &mut env,
+                    &mut fills,
+                );
                 if round > 0 {
                     let expect = seq[(i + 1) % seq.len()];
                     if fills.iter().any(|f| f.line == expect) {
@@ -178,11 +185,12 @@ mod tests {
         let r2 = 1u64 << REGION_SHIFT;
         // Interleave two independent sequences in different regions; each
         // should learn its own successor, not the interleaved one.
+        let mut fills = Vec::new();
         for _ in 0..30 {
-            isb.on_llc_access(&access(r1 + 1), false, 0, &[], &mut env);
-            isb.on_llc_access(&access(r2 + 7), false, 0, &[], &mut env);
-            isb.on_llc_access(&access(r1 + 2), false, 0, &[], &mut env);
-            isb.on_llc_access(&access(r2 + 9), false, 0, &[], &mut env);
+            isb.on_llc_access(&access(r1 + 1), false, 0, &[], &mut env, &mut fills);
+            isb.on_llc_access(&access(r2 + 7), false, 0, &[], &mut env, &mut fills);
+            isb.on_llc_access(&access(r1 + 2), false, 0, &[], &mut env, &mut fills);
+            isb.on_llc_access(&access(r2 + 9), false, 0, &[], &mut env, &mut fills);
         }
         assert_eq!(isb.lookup(r1 + 1), Some(r1 + 2));
         assert_eq!(isb.lookup(r2 + 7), Some(r2 + 9));

@@ -18,9 +18,9 @@
 use super::{PrefetchEnv, PrefetchFill, PrefetchIssueStats, Prefetcher};
 use crate::sim::time::Ps;
 use crate::util::rng::splitmix64;
-use crate::util::Rng;
+use crate::util::{LineSet, Rng};
 use crate::workloads::Access;
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::VecDeque;
 
 const LOOKAHEAD: usize = 24;
 const DEDUP_WINDOW: usize = 4096;
@@ -33,8 +33,10 @@ pub struct SyntheticPrefetcher {
     seed: u64,
     rng: Rng,
     stats: PrefetchIssueStats,
-    /// Recently-considered lines (dedup across overlapping lookaheads).
-    seen: BTreeSet<u64>,
+    /// Recently-considered lines (dedup across overlapping lookaheads):
+    /// indexed membership + FIFO ring, both O(1) and allocation-free in
+    /// steady state.
+    seen: LineSet,
     seen_fifo: VecDeque<u64>,
 }
 
@@ -47,8 +49,8 @@ impl SyntheticPrefetcher {
             seed,
             rng: Rng::new(seed ^ 0x5EED),
             stats: PrefetchIssueStats::default(),
-            seen: BTreeSet::new(),
-            seen_fifo: VecDeque::with_capacity(DEDUP_WINDOW),
+            seen: LineSet::with_capacity(DEDUP_WINDOW),
+            seen_fifo: VecDeque::with_capacity(DEDUP_WINDOW + 1),
         }
     }
 
@@ -66,7 +68,7 @@ impl SyntheticPrefetcher {
         self.seen_fifo.push_back(line);
         if self.seen_fifo.len() > DEDUP_WINDOW {
             let old = self.seen_fifo.pop_front().unwrap();
-            self.seen.remove(&old);
+            self.seen.remove(old);
         }
         true
     }
@@ -80,8 +82,8 @@ impl Prefetcher for SyntheticPrefetcher {
         now: Ps,
         lookahead: &[Access],
         env: &mut PrefetchEnv,
-    ) -> Vec<PrefetchFill> {
-        let mut fills = Vec::new();
+        out: &mut Vec<PrefetchFill>,
+    ) {
         for fut in lookahead.iter().take(LOOKAHEAD).filter(|f| f.line != a.line) {
             if !self.remember(fut.line) {
                 continue; // already considered under an earlier trigger
@@ -104,14 +106,13 @@ impl Prefetcher for SyntheticPrefetcher {
                 now + lat + self.rng.below(4 * lat.max(1))
             };
             self.stats.issued += 1;
-            fills.push(PrefetchFill {
+            out.push(PrefetchFill {
                 line: target,
                 arrives_at: arrives,
                 issued_at: now,
                 to_reflector: false,
             });
         }
-        fills
     }
 
     fn wants_lookahead(&self) -> usize {
@@ -158,10 +159,10 @@ mod tests {
             backing: Backing::LocalDram,
         };
         let mut p = SyntheticPrefetcher::new(1.0, 0.0, 1.0, 1);
+        let mut fills = Vec::new();
         for i in 0..100u64 {
-            assert!(p
-                .on_llc_access(&access(i * 100), false, 0, &lookahead(i * 100), &mut env)
-                .is_empty());
+            p.on_llc_access(&access(i * 100), false, 0, &lookahead(i * 100), &mut env, &mut fills);
+            assert!(fills.is_empty());
         }
     }
 
@@ -177,7 +178,8 @@ mod tests {
         let mut p = SyntheticPrefetcher::new(1.0, 1.0, 1.0, 1);
         let la = lookahead(1000);
         let now = 5_000;
-        let fills = p.on_llc_access(&access(1000), false, now, &la, &mut env);
+        let mut fills = Vec::new();
+        p.on_llc_access(&access(1000), false, now, &la, &mut env, &mut fills);
         assert_eq!(fills.len(), 24, "every future line covered");
         for f in &fills {
             assert!(la.iter().any(|x| x.line == f.line));
@@ -197,11 +199,14 @@ mod tests {
         let mut p = SyntheticPrefetcher::new(1.0, 0.4, 1.0, 3);
         let mut issued = 0usize;
         let mut considered = 0usize;
+        let mut fills = Vec::new();
         for i in 0..400u64 {
             let base = i * 1000;
             let la = lookahead(base);
             considered += la.len();
-            issued += p.on_llc_access(&access(base), false, 0, &la, &mut env).len();
+            fills.clear();
+            p.on_llc_access(&access(base), false, 0, &la, &mut env, &mut fills);
+            issued += fills.len();
         }
         let rate = issued as f64 / considered as f64;
         assert!((rate - 0.4).abs() < 0.05, "coverage rate {rate}");
@@ -219,8 +224,12 @@ mod tests {
         let mut p = SyntheticPrefetcher::new(1.0, 0.5, 1.0, 9);
         // Same lookahead presented twice: second pass issues nothing.
         let la = lookahead(777);
-        let first = p.on_llc_access(&access(777), false, 0, &la, &mut env).len();
-        let second = p.on_llc_access(&access(777), false, 0, &la, &mut env).len();
+        let mut fills = Vec::new();
+        p.on_llc_access(&access(777), false, 0, &la, &mut env, &mut fills);
+        let first = fills.len();
+        fills.clear();
+        p.on_llc_access(&access(777), false, 0, &la, &mut env, &mut fills);
+        let second = fills.len();
         assert!(first > 0);
         assert_eq!(second, 0);
     }
@@ -237,10 +246,13 @@ mod tests {
         let mut p = SyntheticPrefetcher::new(0.1, 1.0, 1.0, 7);
         let mut right = 0;
         let mut total = 0;
+        let mut fills = Vec::new();
         for i in 0..200u64 {
             let base = i * 1_000;
             let la = lookahead(base);
-            for f in p.on_llc_access(&access(base), false, 0, &la, &mut env) {
+            fills.clear();
+            p.on_llc_access(&access(base), false, 0, &la, &mut env, &mut fills);
+            for f in &fills {
                 total += 1;
                 if la.iter().any(|x| x.line == f.line) {
                     right += 1;

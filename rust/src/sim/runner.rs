@@ -36,14 +36,18 @@ use crate::sim::core::CoreModel;
 use crate::sim::engine::EventQueue;
 use crate::sim::time::Ps;
 use crate::ssd::DevicePool;
-use crate::util::Rng;
+use crate::util::{LineMap, Rng};
 use crate::workloads::{Access, TraceSource};
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Everything needed to simulate one configuration.
 pub struct Runner {
-    pub cfg: SimConfig,
+    /// Shared, immutable configuration: builders that run many cells
+    /// (figure sweeps, benches) hand the same `Arc` to every runner
+    /// instead of deep-cloning the config per cell.
+    pub cfg: Arc<SimConfig>,
     core: CoreModel,
     hierarchy: Hierarchy,
     dram: DramModel,
@@ -54,19 +58,20 @@ pub struct Runner {
     lookahead: VecDeque<Access>,
     /// Collect Fig 4d/4e time series.
     pub collect_series: bool,
-    /// Per-endpoint timeliness info published at enumeration, in pool
-    /// endpoint-index order.
-    pub e2e_info: Vec<crate::expand::timeliness::TimelinessInfo>,
     /// Shadow-memory consistency auditor (audit mode; persists across
     /// `run` calls so multi-segment scenarios stay checked end to end).
     auditor: Option<ShadowMemory>,
     /// Most recent store (host write or device update) per line — an
     /// in-flight fill issued before this instant carries stale data and
-    /// is dropped on arrival. Grows with the run's written working set
-    /// (one 16 B entry per distinct stored line), which is bounded by
-    /// the trace length; entries are never pruned because a fill's
-    /// flight time has no upper bound under deadline scheduling.
-    invalid_after: HashMap<u64, Ps>,
+    /// is dropped on arrival. An open-addressing line table (no SipHash,
+    /// no per-insert heap traffic). Grows with the run's written working
+    /// set (one slot per distinct stored line), which is bounded by the
+    /// trace length; entries are never pruned because a fill's flight
+    /// time has no upper bound under deadline scheduling.
+    invalid_after: LineMap<Ps>,
+    /// Reusable per-access fill buffer (cleared each access; prefetchers
+    /// append into it, so the common no-fill access allocates nothing).
+    fill_scratch: Vec<PrefetchFill>,
     /// Per-endpoint coherence counters (cumulative since construction).
     stale_pushes: Vec<u64>,
     pushes_arrived: Vec<u64>,
@@ -86,6 +91,13 @@ impl Runner {
     /// ML1/ML2/ExPAND; pass `None` to fall back to the mock predictor
     /// (unit tests / artifact-less smoke runs).
     pub fn new(cfg: &SimConfig, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
+        Self::from_arc(Arc::new(cfg.clone()), runtime)
+    }
+
+    /// Build a runner around a shared config. This is the allocation-
+    /// conscious entry point: the config is *not* cloned, so sweeps and
+    /// benches constructing many runners share one immutable instance.
+    pub fn from_arc(cfg: Arc<SimConfig>, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
         let topo = cfg.cxl.build_topology()?;
         let enumeration = Enumeration::discover(&topo);
         let fabric = Fabric::new(topo, &cfg.cxl);
@@ -151,10 +163,11 @@ impl Runner {
             )),
         };
 
-        let e2e_info = pool.endpoints().iter().map(|ep| ep.timeliness.clone()).collect();
         let endpoints = pool.len();
+        let auditor = cfg.coherence.audit.then(ShadowMemory::new);
+        let update_rng = Rng::new(cfg.seed ^ 0xB15_BADC0DE);
         Ok(Runner {
-            cfg: cfg.clone(),
+            cfg,
             core,
             hierarchy,
             dram,
@@ -164,9 +177,9 @@ impl Runner {
             events: EventQueue::new(),
             lookahead: VecDeque::new(),
             collect_series: false,
-            e2e_info,
-            auditor: cfg.coherence.audit.then(ShadowMemory::new),
-            invalid_after: HashMap::new(),
+            auditor,
+            invalid_after: LineMap::new(),
+            fill_scratch: Vec::with_capacity(64),
             stale_pushes: vec![0; endpoints],
             pushes_arrived: vec![0; endpoints],
             bi_snoops: vec![0; endpoints],
@@ -174,9 +187,18 @@ impl Runner {
             device_updates: 0,
             reflector_write_invalidations: 0,
             recent_lines: VecDeque::with_capacity(64),
-            update_rng: Rng::new(cfg.seed ^ 0xB15_BADC0DE),
+            update_rng,
             accesses_seen: 0,
         })
+    }
+
+    /// Per-endpoint timeliness info published at enumeration, in pool
+    /// endpoint-index order — borrowed from the pool (the seed kept a
+    /// per-runner cloned copy).
+    pub fn e2e_info(
+        &self,
+    ) -> impl Iterator<Item = &crate::expand::timeliness::TimelinessInfo> + '_ {
+        self.pool.endpoints().iter().map(|ep| &ep.timeliness)
     }
 
     #[inline]
@@ -306,8 +328,8 @@ impl Runner {
             let stale = self.hierarchy.llc_dirty(fill.line)
                 || self
                     .invalid_after
-                    .get(&fill.line)
-                    .is_some_and(|&w| w >= fill.issued_at);
+                    .get(fill.line)
+                    .is_some_and(|w| w >= fill.issued_at);
             let idx = if self.cxl_backed() { self.pool.route(fill.line) } else { 0 };
             if fill.to_reflector && self.cxl_backed() {
                 self.pushes_arrived[idx] += 1;
@@ -365,6 +387,7 @@ impl Runner {
 
     /// Replay `n` accesses from `source`; returns the run statistics.
     pub fn run(&mut self, source: &mut dyn TraceSource, n: usize) -> RunStats {
+        let wall_start = std::time::Instant::now();
         let mut stats = RunStats {
             workload: source.name(),
             prefetcher: self.prefetcher.name(),
@@ -409,7 +432,7 @@ impl Runner {
 
             let lk = self.hierarchy.access_rw(0, a.line, a.write);
             let now = self.core.now;
-            let mut fills = Vec::new();
+            self.fill_scratch.clear();
             let mut access_latency = lk.latency as f64;
             if a.write {
                 stats.demand_writes += 1;
@@ -449,14 +472,22 @@ impl Runner {
                         // useful prefetch tracked by cache stats
                     }
                     if observe {
-                        let la = self.make_lookahead();
+                        let backing = self.cfg.backing;
+                        let la = self.lookahead.make_contiguous();
                         let mut env = PrefetchEnv {
                             fabric: &mut self.fabric,
                             pool: &mut self.pool,
                             dram: &mut self.dram,
-                            backing: self.cfg.backing,
+                            backing,
                         };
-                        fills = self.prefetcher.on_llc_access(&a, true, now, &la, &mut env);
+                        self.prefetcher.on_llc_access(
+                            &a,
+                            true,
+                            now,
+                            la,
+                            &mut env,
+                            &mut self.fill_scratch,
+                        );
                     }
                     win_hits += 1;
                     win_total += 1;
@@ -479,14 +510,22 @@ impl Runner {
                             self.host_write(a.line, now);
                         }
                         if observe {
-                            let la = self.make_lookahead();
+                            let backing = self.cfg.backing;
+                            let la = self.lookahead.make_contiguous();
                             let mut env = PrefetchEnv {
                                 fabric: &mut self.fabric,
                                 pool: &mut self.pool,
                                 dram: &mut self.dram,
-                                backing: self.cfg.backing,
+                                backing,
                             };
-                            fills = self.prefetcher.on_llc_access(&a, true, now, &la, &mut env);
+                            self.prefetcher.on_llc_access(
+                                &a,
+                                true,
+                                now,
+                                la,
+                                &mut env,
+                                &mut self.fill_scratch,
+                            );
                         }
                         win_hits += 1;
                         win_total += 1;
@@ -542,21 +581,32 @@ impl Runner {
                             self.host_write(a.line, now);
                         }
                         if observe {
-                            let la = self.make_lookahead();
+                            let backing = self.cfg.backing;
+                            let la = self.lookahead.make_contiguous();
                             let mut env = PrefetchEnv {
                                 fabric: &mut self.fabric,
                                 pool: &mut self.pool,
                                 dram: &mut self.dram,
-                                backing: self.cfg.backing,
+                                backing,
                             };
-                            fills = self.prefetcher.on_llc_access(&a, false, now, &la, &mut env);
+                            self.prefetcher.on_llc_access(
+                                &a,
+                                false,
+                                now,
+                                la,
+                                &mut env,
+                                &mut self.fill_scratch,
+                            );
                         }
                         win_total += 1;
                     }
                 }
             }
 
-            for f in fills {
+            // Drain the scratch buffer without giving up its allocation
+            // (take/restore keeps the borrow checker out of the loop).
+            let fills = std::mem::take(&mut self.fill_scratch);
+            for &f in &fills {
                 // A payload captured while the host holds the line dirty
                 // is stale by construction (the device copy lags the
                 // store), and the arrival-time checks cannot catch it if
@@ -572,6 +622,7 @@ impl Runner {
                 }
                 self.events.push(f.arrives_at, f);
             }
+            self.fill_scratch = fills;
             total_access_ps += access_latency as u128;
 
             // Series sampling.
@@ -592,6 +643,7 @@ impl Runner {
         }
 
         stats.accesses = n as u64;
+        stats.wall_s = wall_start.elapsed().as_secs_f64();
         stats.instructions = self.core.insts;
         stats.exec_ps = self.core.now;
         stats.stall_ps = self.core.stall_ps;
@@ -637,7 +689,7 @@ impl Runner {
         if !self.cxl_backed() {
             return true;
         }
-        self.hierarchy.llc_lines().iter().all(|&line| {
+        self.hierarchy.llc_lines().all(|line| {
             let idx = self.pool.route(line);
             self.pool.directory(idx).contains(line)
         })
@@ -653,16 +705,6 @@ impl Runner {
         self.auditor.as_ref().map(|a| a.stats)
     }
 
-    fn make_lookahead(&self) -> Vec<Access> {
-        // Only the synthetic prefetcher asks for lookahead; avoid the
-        // copy otherwise.
-        if self.prefetcher.wants_lookahead() == 0 {
-            Vec::new()
-        } else {
-            self.lookahead.iter().copied().collect()
-        }
-    }
-
     /// Reflector hit statistics (ExPAND runs).
     pub fn prefetcher_name(&self) -> String {
         self.prefetcher.name()
@@ -675,8 +717,19 @@ pub fn simulate(
     runtime: Option<&Rc<Runtime>>,
     source: &mut dyn TraceSource,
 ) -> anyhow::Result<RunStats> {
-    let mut r = Runner::new(cfg, runtime)?;
-    Ok(r.run(source, cfg.accesses))
+    simulate_arc(Arc::new(cfg.clone()), runtime, source)
+}
+
+/// Build + run around a shared config (no deep clone — the sweep and
+/// bench paths construct one `Arc` per cell and hand it over).
+pub fn simulate_arc(
+    cfg: Arc<SimConfig>,
+    runtime: Option<&Rc<Runtime>>,
+    source: &mut dyn TraceSource,
+) -> anyhow::Result<RunStats> {
+    let accesses = cfg.accesses;
+    let mut r = Runner::from_arc(cfg, runtime)?;
+    Ok(r.run(source, accesses))
 }
 
 #[cfg(test)]

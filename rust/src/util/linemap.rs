@@ -1,0 +1,333 @@
+//! Indexed line-state tables: open-addressing hash containers keyed by
+//! cache-line address, built for the simulator's per-access hot path.
+//!
+//! `HashMap`/`BTreeSet` on that path cost a SipHash invocation plus heap
+//! traffic per operation. [`LineMap`] replaces them with one flat slot
+//! array, a multiply-shift hash and a linear probe: no allocation per
+//! operation (the table grows geometrically, amortized across millions
+//! of accesses), no pointer chasing, and fully deterministic iteration-
+//! free semantics, so swapping it in cannot change simulation results —
+//! the differential proptests in `tests/proptests.rs` hold it against a
+//! `HashMap` reference over random operation streams.
+
+/// Slot states for tombstone-based deletion.
+const EMPTY: u8 = 0;
+const FULL: u8 = 1;
+const TOMB: u8 = 2;
+
+/// Fibonacci-hashing constant (same family as the cache index mixers).
+const HASH_K: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Open-addressing map from line address to a small `Copy` value.
+///
+/// Linear probing with tombstones; capacity is always a power of two and
+/// the load factor (occupied + tombstones) is kept under 7/8, so probes
+/// terminate and stay short. Semantically identical to
+/// `HashMap<u64, V>` for `insert`/`get`/`remove`/`contains`.
+#[derive(Debug, Clone)]
+pub struct LineMap<V: Copy + Default> {
+    keys: Vec<u64>,
+    vals: Vec<V>,
+    state: Vec<u8>,
+    /// Capacity - 1 (capacity is a power of two).
+    mask: usize,
+    /// FULL slots.
+    len: usize,
+    /// TOMB slots (reclaimed on rehash).
+    tombs: usize,
+}
+
+impl<V: Copy + Default> Default for LineMap<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V: Copy + Default> LineMap<V> {
+    pub fn new() -> Self {
+        Self::with_capacity(16)
+    }
+
+    /// A table that can hold at least `n` entries before growing.
+    pub fn with_capacity(n: usize) -> Self {
+        let cap = (n.max(8) * 2).next_power_of_two();
+        LineMap {
+            keys: vec![0; cap],
+            vals: vec![V::default(); cap],
+            state: vec![EMPTY; cap],
+            mask: cap - 1,
+            len: 0,
+            tombs: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn slot_of(&self, key: u64) -> usize {
+        (key.wrapping_mul(HASH_K) >> 17) as usize & self.mask
+    }
+
+    /// Value stored for `key`, if any (values are small and `Copy`, so
+    /// this returns by value — no borrow held across caller logic).
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<V> {
+        let mut i = self.slot_of(key);
+        loop {
+            match self.state[i] {
+                EMPTY => return None,
+                FULL if self.keys[i] == key => return Some(self.vals[i]),
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Insert or overwrite; returns the previous value if the key was
+    /// present (the `HashMap::insert` contract).
+    pub fn insert(&mut self, key: u64, val: V) -> Option<V> {
+        // Keep occupied + tombstones under 7/8 of capacity so probes
+        // always terminate at an EMPTY slot.
+        if (self.len + self.tombs + 1) * 8 > (self.mask + 1) * 7 {
+            self.grow();
+        }
+        let mut i = self.slot_of(key);
+        let mut first_tomb: Option<usize> = None;
+        loop {
+            match self.state[i] {
+                EMPTY => {
+                    let slot = match first_tomb {
+                        Some(t) => {
+                            self.tombs -= 1;
+                            t
+                        }
+                        None => i,
+                    };
+                    self.keys[slot] = key;
+                    self.vals[slot] = val;
+                    self.state[slot] = FULL;
+                    self.len += 1;
+                    return None;
+                }
+                FULL if self.keys[i] == key => {
+                    let old = self.vals[i];
+                    self.vals[i] = val;
+                    return Some(old);
+                }
+                TOMB => {
+                    if first_tomb.is_none() {
+                        first_tomb = Some(i);
+                    }
+                    i = (i + 1) & self.mask;
+                }
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    /// Remove `key`, returning its value if it was present.
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let mut i = self.slot_of(key);
+        loop {
+            match self.state[i] {
+                EMPTY => return None,
+                FULL if self.keys[i] == key => {
+                    self.state[i] = TOMB;
+                    self.len -= 1;
+                    self.tombs += 1;
+                    return Some(self.vals[i]);
+                }
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    /// Drop every entry, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.state.fill(EMPTY);
+        self.len = 0;
+        self.tombs = 0;
+    }
+
+    /// Rehash into a bigger table (or the same size, if the load was
+    /// mostly tombstones) — the only allocating operation, amortized.
+    fn grow(&mut self) {
+        let target = if self.len * 8 > (self.mask + 1) * 4 {
+            (self.mask + 1) * 2
+        } else {
+            self.mask + 1
+        };
+        let mut next = LineMap::<V> {
+            keys: vec![0; target],
+            vals: vec![V::default(); target],
+            state: vec![EMPTY; target],
+            mask: target - 1,
+            len: 0,
+            tombs: 0,
+        };
+        for i in 0..self.keys.len() {
+            if self.state[i] == FULL {
+                next.insert_fresh(self.keys[i], self.vals[i]);
+            }
+        }
+        *self = next;
+    }
+
+    /// Insert a key known to be absent into a table known to have room
+    /// and no tombstones (rehash path only).
+    fn insert_fresh(&mut self, key: u64, val: V) {
+        let mut i = self.slot_of(key);
+        while self.state[i] == FULL {
+            i = (i + 1) & self.mask;
+        }
+        self.keys[i] = key;
+        self.vals[i] = val;
+        self.state[i] = FULL;
+        self.len += 1;
+    }
+}
+
+/// Membership-only view: an open-addressing line set (replacement for
+/// `BTreeSet<u64>`/`HashSet<u64>` on dedup paths).
+#[derive(Debug, Clone, Default)]
+pub struct LineSet {
+    map: LineMap<()>,
+}
+
+impl LineSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        LineSet { map: LineMap::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains(key)
+    }
+
+    /// Returns true if the key was newly inserted (the `HashSet`
+    /// contract).
+    pub fn insert(&mut self, key: u64) -> bool {
+        self.map.insert(key, ()).is_none()
+    }
+
+    /// Returns true if the key was present.
+    pub fn remove(&mut self, key: u64) -> bool {
+        self.map.remove(key).is_some()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_overwrite_remove() {
+        let mut m = LineMap::<u64>::new();
+        assert_eq!(m.get(7), None);
+        assert_eq!(m.insert(7, 100), None);
+        assert_eq!(m.get(7), Some(100));
+        assert_eq!(m.insert(7, 200), Some(100));
+        assert_eq!(m.get(7), Some(200));
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(7), Some(200));
+        assert_eq!(m.remove(7), None);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn line_zero_and_max_are_ordinary_keys() {
+        let mut m = LineMap::<u32>::new();
+        m.insert(0, 1);
+        m.insert(u64::MAX, 2);
+        assert_eq!(m.get(0), Some(1));
+        assert_eq!(m.get(u64::MAX), Some(2));
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = LineMap::<u64>::with_capacity(8);
+        for k in 0..10_000u64 {
+            m.insert(k * 3, k);
+        }
+        assert_eq!(m.len(), 10_000);
+        for k in 0..10_000u64 {
+            assert_eq!(m.get(k * 3), Some(k), "key {k}");
+        }
+        assert_eq!(m.get(1), None);
+    }
+
+    #[test]
+    fn tombstones_do_not_break_probe_chains() {
+        // Colliding keys (same low bits after hashing is unlikely to
+        // collide deterministically, so just hammer insert/remove).
+        let mut m = LineMap::<u64>::with_capacity(8);
+        for round in 0..50u64 {
+            for k in 0..12u64 {
+                m.insert(k, round);
+            }
+            for k in 0..6u64 {
+                assert_eq!(m.remove(k), Some(round));
+            }
+            for k in 6..12u64 {
+                assert_eq!(m.get(k), Some(round), "round {round} key {k}");
+            }
+            for k in 0..6u64 {
+                assert_eq!(m.get(k), None);
+            }
+            for k in 0..6u64 {
+                m.insert(k, round);
+            }
+        }
+        assert_eq!(m.len(), 12);
+    }
+
+    #[test]
+    fn clear_keeps_working() {
+        let mut m = LineMap::<u8>::new();
+        for k in 0..100 {
+            m.insert(k, 1);
+        }
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.get(5), None);
+        m.insert(5, 9);
+        assert_eq!(m.get(5), Some(9));
+    }
+
+    #[test]
+    fn set_semantics() {
+        let mut s = LineSet::new();
+        assert!(s.insert(42));
+        assert!(!s.insert(42));
+        assert!(s.contains(42));
+        assert!(s.remove(42));
+        assert!(!s.remove(42));
+        assert!(!s.contains(42));
+    }
+}

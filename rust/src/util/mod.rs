@@ -2,7 +2,9 @@
 
 pub mod cli;
 pub mod json;
+pub mod linemap;
 pub mod rng;
 pub mod stats;
 
+pub use linemap::{LineMap, LineSet};
 pub use rng::Rng;
