@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = base_cfg();
     cfg.backing = Backing::LocalDram;
     let mut src = id.source(cfg.seed);
-    let local = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    let local = simulate(&std::sync::Arc::new(cfg), runtime.as_ref(), &mut *src)?;
     println!("{:<10} exec={:>10.2}ms  (baseline)", "LocalDRAM", local.exec_ps as f64 / 1e9);
 
     for media in [MediaKind::ZNand, MediaKind::Pmem, MediaKind::Dram] {
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         cfg.ssd.internal_dram_bytes = internal;
         cfg.prefetcher = PrefetcherKind::Expand;
         let mut src = id.source(cfg.seed);
-        let s = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+        let s = simulate(&std::sync::Arc::new(cfg), runtime.as_ref(), &mut *src)?;
         println!(
             "{:<10} exec={:>10.2}ms  vs LocalDRAM {:>6.2}x  LLC-hit {:>5.1}%  ssd-internal-hit {:>5.1}%",
             format!("ExPAND-{}", media.name().chars().next().unwrap().to_uppercase()),

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = figure_config(&opts);
     cfg.prefetcher = PrefetcherKind::None;
     let mut src = MixedTrace::new(&mix, cfg.seed);
-    let base = simulate(&cfg, runtime.as_ref(), &mut src)?;
+    let base = simulate(&std::sync::Arc::new(cfg), runtime.as_ref(), &mut src)?;
     println!("{}", base.summary());
 
     for kind in [
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = figure_config(&opts);
         cfg.prefetcher = kind;
         let mut src = MixedTrace::new(&mix, cfg.seed);
-        let s = simulate(&cfg, runtime.as_ref(), &mut src)?;
+        let s = simulate(&std::sync::Arc::new(cfg), runtime.as_ref(), &mut src)?;
         println!("{}   speedup {:.2}x", s.summary(), s.speedup_over(&base));
     }
     Ok(())

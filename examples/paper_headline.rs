@@ -13,6 +13,7 @@ use expand_cxl::runtime::Runtime;
 use expand_cxl::sim::runner::simulate;
 use expand_cxl::util::stats::geomean;
 use expand_cxl::workloads::WorkloadId;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let opts = FigOpts { accesses: 400_000, ..Default::default() };
@@ -31,10 +32,12 @@ fn main() -> anyhow::Result<()> {
     for id in WorkloadId::ALL {
         let mut cfg = figure_config(&opts);
         cfg.prefetcher = PrefetcherKind::None;
-        let mut src = id.source(cfg.seed);
-        let base = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+        let cfg_base = Arc::new(cfg.clone());
+        let mut src = id.source(cfg_base.seed);
+        let base = simulate(&cfg_base, runtime.as_ref(), &mut *src)?;
 
         cfg.prefetcher = PrefetcherKind::Expand;
+        let cfg = Arc::new(cfg);
         let mut src = id.source(cfg.seed);
         let ex = simulate(&cfg, runtime.as_ref(), &mut *src)?;
 

@@ -8,6 +8,7 @@ use expand_cxl::config::{PrefetcherKind, SimConfig};
 use expand_cxl::runtime::Runtime;
 use expand_cxl::sim::runner::simulate;
 use expand_cxl::workloads::WorkloadId;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // A scaled configuration: 4 MB LLC against a ~30 MB working set.
@@ -23,14 +24,17 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
-    // Baseline: CXL-SSD without prefetching.
+    // Baseline: CXL-SSD without prefetching. Each variant is its own
+    // immutable shared config (`simulate` takes `&Arc<SimConfig>`).
     cfg.prefetcher = PrefetcherKind::None;
-    let mut src = WorkloadId::Tc.source(cfg.seed);
-    let base = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    let cfg_base = Arc::new(cfg.clone());
+    let mut src = WorkloadId::Tc.source(cfg_base.seed);
+    let base = simulate(&cfg_base, runtime.as_ref(), &mut *src)?;
     println!("{}", base.summary());
 
     // ExPAND: expander-driven prefetching.
     cfg.prefetcher = PrefetcherKind::Expand;
+    let cfg = Arc::new(cfg);
     let mut src = WorkloadId::Tc.source(cfg.seed);
     let ex = simulate(&cfg, runtime.as_ref(), &mut *src)?;
     println!("{}", ex.summary());

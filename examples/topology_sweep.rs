@@ -56,7 +56,9 @@ fn main() -> anyhow::Result<()> {
             // attached (timeliness model ignores switch latency).
             cfg.expand.timeliness_accuracy = if aware { 1.0 } else { 0.0 };
             let mut src = WorkloadId::Tc.source(cfg.seed);
-            Ok(simulate(&cfg, runtime.as_ref(), &mut *src)?.exec_ps as f64 / 1e9)
+            Ok(simulate(&std::sync::Arc::new(cfg), runtime.as_ref(), &mut *src)?.exec_ps
+                as f64
+                / 1e9)
         };
         println!("{:>6} {:>14.2} {:>14.2}", levels, run(true)?, run(false)?);
     }

@@ -109,34 +109,94 @@ pub fn measure_throughput<F: FnMut()>(
     t
 }
 
+/// Describe the measuring machine — emitted into every bench JSON so
+/// tracked baselines carry their provenance automatically (the PR 3
+/// baseline had to hand-record this and lost it on regeneration).
+pub fn machine_description() -> String {
+    format!(
+        "{}-{}, {} cores, {} build",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+        expand_cxl::util::default_parallelism(),
+        if cfg!(debug_assertions) { "debug" } else { "release" },
+    )
+}
+
 /// Serialize throughput results to the tracked JSON shape. Scenario
-/// order is preserved; numbers are written with enough precision to
-/// round-trip through the in-repo JSON parser.
-pub fn bench_json(suite: &str, results: &[Throughput]) -> String {
-    let mut out = String::new();
-    out.push_str("{\n");
-    out.push_str("  \"schema\": \"expand-cxl-bench/v1\",\n");
-    out.push_str(&format!("  \"suite\": {suite:?},\n"));
-    out.push_str("  \"scenarios\": [\n");
-    for (i, t) in results.iter().enumerate() {
-        out.push_str("    {\n");
-        out.push_str(&format!("      \"name\": {:?},\n", t.name));
-        out.push_str(&format!("      \"accesses\": {},\n", t.accesses));
-        out.push_str(&format!("      \"iters\": {},\n", t.iters));
-        out.push_str(&format!("      \"mean_s\": {:.6},\n", t.mean_s));
-        out.push_str(&format!("      \"min_s\": {:.6},\n", t.min_s));
-        out.push_str(&format!(
-            "      \"mean_accesses_per_sec\": {:.1},\n",
-            t.mean_accesses_per_sec
-        ));
-        out.push_str(&format!(
-            "      \"best_accesses_per_sec\": {:.1}\n",
-            t.best_accesses_per_sec
-        ));
-        out.push_str(if i + 1 == results.len() { "    }\n" } else { "    },\n" });
+/// order is preserved; numbers round-trip through the in-repo JSON
+/// parser. `prior` is the previous contents of the tracked file (or the
+/// committed baseline): every top-level field the harness does not own
+/// — `note`, pre-PR reference numbers, operator remarks — and every
+/// unrecognized per-scenario field (matched by scenario name) is
+/// carried over instead of being dropped on rewrite.
+pub fn bench_json(suite: &str, results: &[Throughput], prior: Option<&str>) -> String {
+    use expand_cxl::util::json::{self, Json};
+    use std::collections::BTreeMap;
+
+    let prior = prior.and_then(|t| json::parse(t).ok());
+    const OWNED: &[&str] = &["schema", "suite", "machine", "scenarios"];
+    const SCEN_OWNED: &[&str] = &[
+        "name",
+        "accesses",
+        "iters",
+        "mean_s",
+        "min_s",
+        "mean_accesses_per_sec",
+        "best_accesses_per_sec",
+    ];
+
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    if let Some(Json::Obj(m)) = &prior {
+        for (k, v) in m {
+            if !OWNED.contains(&k.as_str()) {
+                root.insert(k.clone(), v.clone());
+            }
+        }
     }
-    out.push_str("  ]\n}\n");
-    out
+    root.insert("schema".into(), Json::Str("expand-cxl-bench/v1".into()));
+    root.insert("suite".into(), Json::Str(suite.into()));
+    root.insert("machine".into(), Json::Str(machine_description()));
+
+    let empty: Vec<Json> = Vec::new();
+    let prior_scenarios: &[Json] = prior
+        .as_ref()
+        .and_then(|p| p.get("scenarios"))
+        .and_then(|s| s.as_arr())
+        .unwrap_or(&empty);
+    let round1 = |x: f64| (x * 10.0).round() / 10.0;
+    let round6 = |x: f64| (x * 1e6).round() / 1e6;
+    let scenarios: Vec<Json> = results
+        .iter()
+        .map(|t| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            let prior_row = prior_scenarios
+                .iter()
+                .find(|s| s.get("name").and_then(|n| n.as_str()) == Some(t.name.as_str()));
+            if let Some(Json::Obj(pm)) = prior_row {
+                for (k, v) in pm {
+                    if !SCEN_OWNED.contains(&k.as_str()) {
+                        m.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            m.insert("name".into(), Json::Str(t.name.clone()));
+            m.insert("accesses".into(), Json::Num(t.accesses as f64));
+            m.insert("iters".into(), Json::Num(t.iters as f64));
+            m.insert("mean_s".into(), Json::Num(round6(t.mean_s)));
+            m.insert("min_s".into(), Json::Num(round6(t.min_s)));
+            m.insert(
+                "mean_accesses_per_sec".into(),
+                Json::Num(round1(t.mean_accesses_per_sec)),
+            );
+            m.insert(
+                "best_accesses_per_sec".into(),
+                Json::Num(round1(t.best_accesses_per_sec)),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("scenarios".into(), Json::Arr(scenarios));
+    json::render(&Json::Obj(root))
 }
 
 /// Compare fresh results against a committed baseline JSON: every

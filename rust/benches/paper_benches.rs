@@ -1,26 +1,33 @@
 //! Paper benches: one end-to-end bench per table/figure family, the
-//! micro-benches used by the §Perf optimization log, and the
-//! `runner_throughput` group — four end-to-end simulator-throughput
-//! scenarios whose results serialize to `BENCH_PR3.json` at the repo
-//! root (the tracked bench baseline; CI fails on >20% regression).
+//! micro-benches used by the §Perf optimization log, and two tracked
+//! throughput groups — `runner_throughput` (four single-host scenarios,
+//! `BENCH_PR3.json`) and `multi_host_scaling` (the epoch-quantized
+//! multi-host engine at 1 vs 4 worker threads, `BENCH_PR4.json`). CI
+//! fails on >20% regression against either committed baseline.
 //!
 //! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Flags
 //! after the filter:
-//!   --json-out PATH      write throughput results as JSON (default
-//!                        ../BENCH_PR3.json when the group runs)
-//!   --check PATH         compare against a baseline JSON and exit
-//!                        non-zero on regression
+//!   --json-out PATH      write runner_throughput results as JSON
+//!                        (default ../BENCH_PR3.json when seeding)
+//!   --check PATH         gate runner_throughput against a baseline
+//!   --mh-json-out PATH   write multi_host_scaling results as JSON
+//!                        (default ../BENCH_PR4.json when seeding)
+//!   --mh-check PATH      gate multi_host_scaling against a baseline
 //!   --max-regress F      allowed fractional regression (default 0.20)
-//! Each bench executes the same code path as the corresponding figure
-//! harness on a reduced access budget and reports wall-clock plus
-//! simulator throughput (accesses/sec).
+//! Baseline rewrites preserve hand-recorded annotations (`note`,
+//! pre-PR reference numbers) and stamp the measuring `machine`
+//! automatically. Each bench executes the same code path as the
+//! corresponding figure harness on a reduced access budget and reports
+//! wall-clock plus simulator throughput (accesses/sec).
 
 mod harness;
 
 use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
 use expand_cxl::config::{InterleavePolicy, TopologySpec};
 use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
+use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
 use expand_cxl::sim::runner::simulate;
+use expand_cxl::util::json::{self, Json};
 use expand_cxl::util::Rng;
 use expand_cxl::workloads::apexmap::ApexMap;
 use expand_cxl::workloads::mixed::{MixedTrace, WriteHeavy};
@@ -37,14 +44,19 @@ fn cfg() -> SimConfig {
 
 fn run(c: &SimConfig, id: WorkloadId, rt: Option<&std::rc::Rc<Runtime>>) {
     let mut src = id.source(c.seed);
-    simulate(c, rt, &mut *src).unwrap();
+    simulate(&std::sync::Arc::new(c.clone()), rt, &mut *src).unwrap();
 }
 
-/// Bench CLI: `[filter] [--json-out P] [--check P] [--max-regress F]`.
+/// Bench CLI: `[filter] [--json-out P] [--check P] [--mh-json-out P]
+/// [--mh-check P] [--max-regress F]`. The `mh-` pair addresses the
+/// `multi_host_scaling` group's tracked file (BENCH_PR4.json); the
+/// plain pair addresses `runner_throughput` (BENCH_PR3.json).
 struct BenchArgs {
     filter: Option<String>,
     json_out: Option<String>,
     check: Option<String>,
+    mh_json_out: Option<String>,
+    mh_check: Option<String>,
     max_regress: f64,
 }
 
@@ -53,6 +65,8 @@ fn parse_args() -> BenchArgs {
         filter: None,
         json_out: None,
         check: None,
+        mh_json_out: None,
+        mh_check: None,
         max_regress: 0.20,
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -68,6 +82,10 @@ fn parse_args() -> BenchArgs {
         };
         if a.starts_with("--json-out") {
             out.json_out = take_value(&mut i);
+        } else if a.starts_with("--mh-json-out") {
+            out.mh_json_out = take_value(&mut i);
+        } else if a.starts_with("--mh-check") {
+            out.mh_check = take_value(&mut i);
         } else if a.starts_with("--check") {
             out.check = take_value(&mut i);
         } else if a.starts_with("--max-regress") {
@@ -84,6 +102,93 @@ fn parse_args() -> BenchArgs {
     out
 }
 
+/// Write one bench group's JSON (annotations preserved, `machine`
+/// auto-emitted) and gate it against a committed baseline. Returns
+/// `false` on a regression or an unusable baseline.
+fn publish_group(
+    suite: &str,
+    results: &[Throughput],
+    json_out: Option<&String>,
+    check: Option<&String>,
+    default_path: &str,
+    max_regress: f64,
+    annotate: impl FnOnce(&mut Json),
+) -> bool {
+    if results.is_empty() {
+        if check.is_some() {
+            // An explicit regression gate must never pass vacuously
+            // (e.g. a typo'd filter selecting zero scenarios).
+            eprintln!("baseline check failed: filter selected no {suite} scenarios");
+            return false;
+        }
+        return true;
+    }
+    // Annotation source, in preference order: the destination file
+    // itself, the committed default baseline, the --check baseline.
+    let prior_text = [json_out.map(String::as_str), Some(default_path), check.map(String::as_str)]
+        .into_iter()
+        .flatten()
+        .find(|p| std::path::Path::new(p).exists())
+        .and_then(|p| std::fs::read_to_string(p).ok());
+    let text = bench_json(suite, results, prior_text.as_deref());
+    let rendered = match json::parse(&text) {
+        Ok(mut doc) => {
+            annotate(&mut doc);
+            json::render(&doc)
+        }
+        Err(_) => text,
+    };
+    match json_out {
+        Some(path) => match std::fs::write(path, &rendered) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        },
+        // Without an explicit destination, only seed the tracked
+        // repo-root baseline if it does not exist yet — never silently
+        // clobber committed reference numbers from a casual run.
+        None if !std::path::Path::new(default_path).exists() => {
+            match std::fs::write(default_path, &rendered) {
+                Ok(()) => println!("wrote {default_path}"),
+                Err(e) => eprintln!("warning: could not write {default_path}: {e}"),
+            }
+        }
+        None => {
+            println!("{rendered}");
+            println!(
+                "note: {default_path} exists; pass --json-out {default_path} (or \
+                 --mh-json-out for the multi-host group) to overwrite the tracked baseline"
+            );
+        }
+    }
+    let Some(baseline_path) = check else { return true };
+    match std::fs::read_to_string(baseline_path) {
+        Ok(text) => match check_against_baseline(&text, results, max_regress) {
+            Ok(failures) if failures.is_empty() => {
+                println!(
+                    "baseline check OK ({} scenarios, max regression {:.0}%)",
+                    results.len(),
+                    max_regress * 100.0
+                );
+                true
+            }
+            Ok(failures) => {
+                for f in &failures {
+                    eprintln!("REGRESSION: {f}");
+                }
+                false
+            }
+            Err(e) => {
+                eprintln!("baseline check failed: {e}");
+                false
+            }
+        },
+        Err(e) => {
+            eprintln!("baseline check failed: cannot read {baseline_path}: {e}");
+            false
+        }
+    }
+}
+
 /// The `runner_throughput` group: four end-to-end scenarios covering the
 /// hot paths the allocation-free refactor targets — single-SSD chain
 /// (ExPAND push path), a deep tree pool (per-endpoint routing +
@@ -97,13 +202,15 @@ fn runner_throughput(b: &Bench) -> Vec<Throughput> {
         if !b.enabled(&full) {
             return;
         }
+        let c = std::sync::Arc::new(c);
         results.push(measure_throughput(&full, c.accesses as u64, THROUGHPUT_ITERS, || {
             if write_boost > 0.0 {
                 let inner = WorkloadId::Pr.source(c.seed);
                 let mut src = WriteHeavy::new(inner, write_boost, c.seed);
                 simulate(&c, None, &mut src).unwrap();
             } else {
-                run(&c, WorkloadId::Pr, None);
+                let mut src = WorkloadId::Pr.source(c.seed);
+                simulate(&c, None, &mut *src).unwrap();
             }
         }));
     };
@@ -135,6 +242,60 @@ fn runner_throughput(b: &Bench) -> Vec<Throughput> {
     results
 }
 
+/// The `multi_host_scaling` group (tracked in `BENCH_PR4.json`): the
+/// epoch-quantized multi-host engine on a 4-host / 4-SSD shared pool.
+/// The pair of scenarios measures aggregate accesses/sec with the same
+/// 4 host streams executed on 1 worker thread (the sequential
+/// reference) and on 4 worker threads; their ratio is the engine's
+/// scaling headline (bit-identical results either way — only wall
+/// clock differs). Returns the scenarios plus the measured speedup.
+fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
+    const ITERS: usize = 3;
+    const HOSTS: usize = 4;
+    let mut results = Vec::new();
+    let base = {
+        let mut c = cfg();
+        c.accesses = 40_000;
+        c.prefetcher = PrefetcherKind::Expand;
+        c.cxl.topology = TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+        std::sync::Arc::new(c)
+    };
+    let mut thr = |name: &str, threads: usize| -> Option<f64> {
+        let full = format!("multi_host_scaling_{name}");
+        if !b.enabled(&full) {
+            return None;
+        }
+        let opts = MultiHostOpts {
+            hosts: HOSTS,
+            threads,
+            epoch_accesses: 4096,
+            artifacts: None,
+        };
+        let total = (base.accesses * HOSTS) as u64;
+        let t = measure_throughput(&full, total, ITERS, || {
+            let s = run_multi_host_workload(&base, &opts, WorkloadId::Pr).unwrap();
+            assert!(s.bi_invariant, "shared BI-directory invariant violated in bench");
+        });
+        let aps = t.mean_accesses_per_sec;
+        results.push(t);
+        Some(aps)
+    };
+    let serial = thr("hosts4_threads1", 1);
+    let parallel = thr("hosts4_threads4", HOSTS);
+    let speedup = match (serial, parallel) {
+        (Some(a), Some(p)) if a > 0.0 => Some(p / a),
+        _ => None,
+    };
+    if let Some(s) = speedup {
+        println!(
+            "multi-host scaling: threads4/threads1 = {s:.2}x on {} cores \
+             (target >=3x with >=4 cores)",
+            expand_cxl::util::default_parallelism()
+        );
+    }
+    (results, speedup)
+}
+
 fn main() {
     let opts = parse_args();
     let mut b = Bench::with_filter(opts.filter.clone());
@@ -152,7 +313,7 @@ fn main() {
                 let mut c = cfg();
                 c.backing = backing;
                 let mut src = ApexMap::with_default_mem(Rng::new(1), alpha, l);
-                simulate(&c, None, &mut src).unwrap();
+                simulate(&std::sync::Arc::new(c), None, &mut src).unwrap();
             }
         }
     });
@@ -200,7 +361,7 @@ fn main() {
         let mut c = cfg();
         c.prefetcher = PrefetcherKind::Expand;
         let mut src = MixedTrace::new(&[WorkloadId::Cc, WorkloadId::Tc], c.seed);
-        simulate(&c, rt.as_ref(), &mut src).unwrap();
+        simulate(&std::sync::Arc::new(c), rt.as_ref(), &mut src).unwrap();
     });
 
     // --- Fig 5: ExPAND vs LocalDRAM -------------------------------------
@@ -227,66 +388,42 @@ fn main() {
 
     // --- End-to-end: runner_throughput group (tracked baseline) ---------
     let throughput = runner_throughput(&b);
-    if throughput.is_empty() {
-        if opts.check.is_some() {
-            // An explicit regression gate must never pass vacuously
-            // (e.g. a typo'd filter selecting zero scenarios).
-            eprintln!("baseline check failed: filter selected no runner_throughput scenarios");
-            std::process::exit(1);
-        }
-    } else {
-        let json = bench_json("runner_throughput", &throughput);
-        // Write where asked; without --json-out, only seed the default
-        // repo-root baseline if it does not exist yet — never silently
-        // clobber the tracked reference numbers (and their pre-PR
-        // annotations) from a casual `cargo bench`.
-        let default_path = "../BENCH_PR3.json";
-        match &opts.json_out {
-            Some(path) => match std::fs::write(path, &json) {
-                Ok(()) => println!("wrote {path}"),
-                Err(e) => eprintln!("warning: could not write {path}: {e}"),
-            },
-            None if !std::path::Path::new(default_path).exists() => {
-                match std::fs::write(default_path, &json) {
-                    Ok(()) => println!("wrote {default_path}"),
-                    Err(e) => eprintln!("warning: could not write {default_path}: {e}"),
-                }
-            }
-            None => {
-                println!("{json}");
-                println!(
-                    "note: {default_path} exists; pass --json-out {default_path} to overwrite \
-                     the tracked baseline"
+    let ok_rt = publish_group(
+        "runner_throughput",
+        &throughput,
+        opts.json_out.as_ref(),
+        opts.check.as_ref(),
+        "../BENCH_PR3.json",
+        opts.max_regress,
+        |_| {},
+    );
+
+    // --- End-to-end: multi_host_scaling group (tracked baseline) --------
+    let (mh, speedup) = multi_host_scaling(&b);
+    let ok_mh = publish_group(
+        "multi_host_scaling",
+        &mh,
+        opts.mh_json_out.as_ref(),
+        opts.mh_check.as_ref(),
+        "../BENCH_PR4.json",
+        opts.max_regress,
+        |doc| {
+            // The scaling headline rides as a top-level field so the
+            // tracked file documents it next to the raw scenarios.
+            if let (Json::Obj(m), Some(s)) = (doc, speedup) {
+                m.insert(
+                    "speedup_hosts4_threads4_vs_threads1".to_string(),
+                    Json::Num((s * 100.0).round() / 100.0),
+                );
+                m.insert(
+                    "measured_cores".to_string(),
+                    Json::Num(expand_cxl::util::default_parallelism() as f64),
                 );
             }
-        }
-        if let Some(baseline_path) = &opts.check {
-            match std::fs::read_to_string(baseline_path) {
-                Ok(text) => match check_against_baseline(&text, &throughput, opts.max_regress) {
-                    Ok(failures) if failures.is_empty() => {
-                        println!(
-                            "baseline check OK ({} scenarios, max regression {:.0}%)",
-                            throughput.len(),
-                            opts.max_regress * 100.0
-                        );
-                    }
-                    Ok(failures) => {
-                        for f in &failures {
-                            eprintln!("REGRESSION: {f}");
-                        }
-                        std::process::exit(1);
-                    }
-                    Err(e) => {
-                        eprintln!("baseline check failed: {e}");
-                        std::process::exit(1);
-                    }
-                },
-                Err(e) => {
-                    eprintln!("baseline check failed: cannot read {baseline_path}: {e}");
-                    std::process::exit(1);
-                }
-            }
-        }
+        },
+    );
+    if !ok_rt || !ok_mh {
+        std::process::exit(1);
     }
 
     // --- Micro: simulator core throughput (events/s) ---------------------
@@ -326,6 +463,6 @@ fn main() {
     println!(
         "\n{} benches + {} throughput scenarios completed",
         b.results.len(),
-        throughput.len()
+        throughput.len() + mh.len()
     );
 }

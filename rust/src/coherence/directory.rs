@@ -8,6 +8,15 @@
 //! allowed to *over*-approximate (silent host drops of clean lines leave
 //! stale entries behind, which is safe), never to under-approximate (a
 //! host-cached line the directory forgot could go stale undetected).
+//!
+//! Multi-host pools (CXL 3.0 shared memory): each entry carries a
+//! *sharer bitmask* — one bit per host that may cache the line — instead
+//! of implying a single host. [`BiDirectory::grant_for`] sets one host's
+//! bit, [`BiDirectory::revoke_for`] clears it (the entry frees only when
+//! the mask empties), and a capacity eviction returns the displaced
+//! line's full mask so the caller can BISnp *every* sharer. The
+//! single-host API ([`BiDirectory::grant`]/[`BiDirectory::revoke`]) is
+//! the host-0 specialization and behaves exactly as before.
 
 /// Directory statistics (per endpoint).
 #[derive(Debug, Clone, Copy, Default)]
@@ -26,6 +35,8 @@ struct Entry {
     tag: u64,
     last_use: u64,
     valid: bool,
+    /// Sharer bitmask: bit `h` set means host `h` may cache the line.
+    hosts: u64,
 }
 
 /// Set-associative LRU snoop filter over line addresses.
@@ -83,8 +94,17 @@ impl BiDirectory {
 
     /// Record that the host received a copy of `line` (DRS response or
     /// BISnpData push arrival). Returns a displaced line that must now be
-    /// back-invalidated host-side, if the set was full.
+    /// back-invalidated host-side, if the set was full. Single-host
+    /// specialization of [`BiDirectory::grant_for`] (host 0).
     pub fn grant(&mut self, line: u64) -> Option<u64> {
+        self.grant_for(line, 0).map(|(victim, _)| victim)
+    }
+
+    /// Record that host `host` received a copy of `line`. Returns the
+    /// displaced `(line, sharer_mask)` if the grant evicted a tracked
+    /// entry — the caller must BISnp every host in the mask.
+    pub fn grant_for(&mut self, line: u64, host: usize) -> Option<(u64, u64)> {
+        debug_assert!(host < 64, "sharer bitmask holds at most 64 hosts");
         self.stamp += 1;
         self.stats.grants += 1;
         let range = self.slot_range(self.set_of(line));
@@ -92,6 +112,7 @@ impl BiDirectory {
         for e in &mut self.entries[range.clone()] {
             if e.valid && e.tag == line {
                 e.last_use = stamp;
+                e.hosts |= 1 << host;
                 return None;
             }
         }
@@ -110,28 +131,71 @@ impl BiDirectory {
         }
         let displaced = if self.entries[victim].valid {
             self.stats.capacity_evictions += 1;
-            Some(self.entries[victim].tag)
+            Some((self.entries[victim].tag, self.entries[victim].hosts))
         } else {
             self.live += 1;
             None
         };
-        self.entries[victim] = Entry { tag: line, last_use: stamp, valid: true };
+        self.entries[victim] =
+            Entry { tag: line, last_use: stamp, valid: true, hosts: 1 << host };
         displaced
     }
 
     /// The host gave the line up (dirty writeback) or was invalidated
-    /// (BISnp). Returns whether the line was tracked.
+    /// (BISnp): the whole entry is dropped regardless of sharers.
+    /// Returns whether the line was tracked. Equivalent to
+    /// [`BiDirectory::revoke_for`] in single-host (host-0) use, where the
+    /// mask never holds more than one bit.
     pub fn revoke(&mut self, line: u64) -> bool {
         let range = self.slot_range(self.set_of(line));
         for e in &mut self.entries[range] {
             if e.valid && e.tag == line {
                 e.valid = false;
+                e.hosts = 0;
                 self.live -= 1;
                 self.stats.revokes += 1;
                 return true;
             }
         }
         false
+    }
+
+    /// Host `host` gave up its copy of `line`. Clears that host's sharer
+    /// bit; the entry frees only once no sharer remains. Returns whether
+    /// the host's bit was set.
+    pub fn revoke_for(&mut self, line: u64, host: usize) -> bool {
+        let range = self.slot_range(self.set_of(line));
+        for e in &mut self.entries[range] {
+            if e.valid && e.tag == line {
+                let bit = 1u64 << host;
+                if e.hosts & bit == 0 {
+                    return false;
+                }
+                e.hosts &= !bit;
+                if e.hosts == 0 {
+                    e.valid = false;
+                    self.live -= 1;
+                }
+                self.stats.revokes += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Sharer bitmask for `line` (0 when untracked).
+    pub fn sharers(&self, line: u64) -> u64 {
+        let range = self.slot_range(self.set_of(line));
+        self.entries[range]
+            .iter()
+            .find(|e| e.valid && e.tag == line)
+            .map(|e| e.hosts)
+            .unwrap_or(0)
+    }
+
+    /// Is host `host` possibly caching `line`?
+    pub fn contains_host(&self, line: u64, host: usize) -> bool {
+        self.sharers(line) & (1 << host) != 0
     }
 
     /// Currently-tracked line count (O(1) counter read).
@@ -186,6 +250,57 @@ mod tests {
             d.grant(line);
         }
         assert!(d.occupancy() <= d.capacity());
+    }
+
+    #[test]
+    fn multi_host_grants_accumulate_sharer_mask() {
+        let mut d = BiDirectory::new(64, 4);
+        assert_eq!(d.grant_for(7, 0), None);
+        assert_eq!(d.grant_for(7, 2), None);
+        assert_eq!(d.grant_for(7, 5), None);
+        assert_eq!(d.sharers(7), 0b100101);
+        assert!(d.contains_host(7, 0) && d.contains_host(7, 2) && d.contains_host(7, 5));
+        assert!(!d.contains_host(7, 1));
+        assert_eq!(d.occupancy(), 1, "one entry regardless of sharer count");
+    }
+
+    #[test]
+    fn revoke_for_frees_entry_only_when_mask_empties() {
+        let mut d = BiDirectory::new(64, 4);
+        d.grant_for(9, 0);
+        d.grant_for(9, 1);
+        assert!(d.revoke_for(9, 0));
+        assert!(d.contains(9), "host 1 still shares the line");
+        assert_eq!(d.sharers(9), 0b10);
+        assert!(!d.revoke_for(9, 0), "host 0 already gone");
+        assert!(d.revoke_for(9, 1));
+        assert!(!d.contains(9));
+        assert_eq!(d.occupancy(), 0);
+    }
+
+    #[test]
+    fn displacement_returns_full_sharer_mask() {
+        let mut d = BiDirectory::new(2, 2); // one set, two ways
+        d.grant_for(1, 0);
+        d.grant_for(1, 3);
+        d.grant_for(2, 1);
+        d.grant_for(1, 0); // refresh: 2 becomes LRU
+        let displaced = d.grant_for(3, 2);
+        assert_eq!(displaced, Some((2, 0b10)), "victim carries its sharers");
+        // Set is {1, 3} with 1 the LRU: displacing it must return every
+        // sharer accumulated across hosts 0 and 3.
+        let displaced = d.grant_for(4, 1);
+        assert_eq!(displaced, Some((1, 0b1001)), "all of line 1's sharers returned");
+    }
+
+    #[test]
+    fn full_revoke_clears_all_sharers() {
+        let mut d = BiDirectory::new(64, 4);
+        d.grant_for(5, 0);
+        d.grant_for(5, 1);
+        assert!(d.revoke(5));
+        assert_eq!(d.sharers(5), 0);
+        assert_eq!(d.occupancy(), 0);
     }
 
     #[test]

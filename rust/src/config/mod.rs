@@ -506,6 +506,13 @@ pub struct SimConfig {
     pub seed: u64,
     /// Directory holding AOT artifacts (HLO text + manifest).
     pub artifacts_dir: String,
+    /// Host shards sharing the CXL pool (1 = classic single-host run;
+    /// >1 engages the epoch-quantized multi-host engine).
+    pub hosts: usize,
+    /// Demand accesses per host per epoch quantum (multi-host engine).
+    pub epoch_accesses: usize,
+    /// Multi-host worker threads (0 = all available cores).
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -523,6 +530,9 @@ impl Default for SimConfig {
             accesses: 2_000_000,
             seed: 0xE7A5D,
             artifacts_dir: "artifacts".to_string(),
+            hosts: 1,
+            epoch_accesses: 8192,
+            threads: 0,
         }
     }
 }
@@ -576,6 +586,9 @@ impl SimConfig {
             ("coherence", "audit") => self.coherence.audit = v.parse().map_err(|_| bad())?,
             ("sim", "accesses") => self.accesses = num!(),
             ("sim", "seed") => self.seed = num!(),
+            ("sim", "hosts") => self.hosts = num!(),
+            ("sim", "epoch_accesses") => self.epoch_accesses = num!(),
+            ("sim", "threads") => self.threads = num!(),
             ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
             ("sim", "prefetcher") => self.prefetcher = PrefetcherKind::parse(v)?,
             ("sim", "backing") => {
@@ -602,7 +615,8 @@ impl SimConfig {
              [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={} \
              notify_stride={}\n\
              [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
-             [sim] prefetcher={} backing={:?} accesses={} seed={:#x}",
+             [sim] prefetcher={} backing={:?} accesses={} seed={:#x} hosts={} \
+             epoch_accesses={} threads={}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
             self.cpu.mshrs,
             self.hierarchy.l1d.size_bytes >> 10, self.hierarchy.l1d.ways,
@@ -623,6 +637,7 @@ impl SimConfig {
             self.coherence.dir_entries, self.coherence.dir_ways,
             self.coherence.device_update_every, self.coherence.audit,
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
+            self.hosts, self.epoch_accesses, self.threads,
         )
     }
 }
@@ -712,6 +727,22 @@ mod tests {
         assert!(c.coherence.audit);
         assert!(c.apply("coherence", "audit", "maybe").is_err());
         assert!(c.render().contains("dir_entries=1024"));
+    }
+
+    #[test]
+    fn multi_host_keys_apply_and_render() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.hosts, 1, "single-host by default");
+        assert_eq!(c.threads, 0, "auto thread count by default");
+        c.apply("sim", "hosts", "4").unwrap();
+        c.apply("sim", "epoch_accesses", "2048").unwrap();
+        c.apply("sim", "threads", "2").unwrap();
+        assert_eq!(c.hosts, 4);
+        assert_eq!(c.epoch_accesses, 2048);
+        assert_eq!(c.threads, 2);
+        assert!(c.render().contains("hosts=4"));
+        assert!(c.render().contains("epoch_accesses=2048"));
+        assert!(c.apply("sim", "hosts", "abc").is_err());
     }
 
     #[test]

@@ -211,7 +211,11 @@ impl Fabric {
     }
 
     /// Per-endpoint traffic counters (zero record for non-endpoints and
-    /// out-of-range ids).
+    /// out-of-range ids). The multi-host engine snapshots each shard
+    /// fabric's endpoint rows at epoch boundaries and merges the deltas
+    /// into pool-wide totals at the barrier (`TrafficStats::merge` /
+    /// `delta_since`) — the fabric itself never sees cross-thread
+    /// mutation.
     pub fn traffic_for(&self, dev: NodeId) -> TrafficStats {
         self.traffic.get(dev).copied().unwrap_or_default()
     }

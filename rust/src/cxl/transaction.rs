@@ -101,6 +101,47 @@ impl TrafficStats {
             S2M::BISnpData => self.s2m_bisnpdata += 1,
         }
     }
+
+    /// Accumulate another record into this one (the multi-host engine
+    /// merges per-shard endpoint traffic into the pool-wide totals at
+    /// each epoch barrier).
+    pub fn merge(&mut self, o: &TrafficStats) {
+        self.m2s_req += o.m2s_req;
+        self.m2s_rdpc += o.m2s_rdpc;
+        self.m2s_wr += o.m2s_wr;
+        self.m2s_birsp += o.m2s_birsp;
+        self.s2m_drs += o.s2m_drs;
+        self.s2m_ndr += o.s2m_ndr;
+        self.s2m_bisnp += o.s2m_bisnp;
+        self.s2m_bisnpdata += o.s2m_bisnpdata;
+        self.m2s_io += o.m2s_io;
+        self.bytes_down += o.bytes_down;
+        self.bytes_up += o.bytes_up;
+    }
+
+    /// Counters accrued since `prev` (one epoch's worth of traffic; all
+    /// counters are monotone, so plain subtraction is exact).
+    pub fn delta_since(&self, prev: &TrafficStats) -> TrafficStats {
+        TrafficStats {
+            m2s_req: self.m2s_req - prev.m2s_req,
+            m2s_rdpc: self.m2s_rdpc - prev.m2s_rdpc,
+            m2s_wr: self.m2s_wr - prev.m2s_wr,
+            m2s_birsp: self.m2s_birsp - prev.m2s_birsp,
+            s2m_drs: self.s2m_drs - prev.s2m_drs,
+            s2m_ndr: self.s2m_ndr - prev.s2m_ndr,
+            s2m_bisnp: self.s2m_bisnp - prev.s2m_bisnp,
+            s2m_bisnpdata: self.s2m_bisnpdata - prev.s2m_bisnpdata,
+            m2s_io: self.m2s_io - prev.m2s_io,
+            bytes_down: self.bytes_down - prev.bytes_down,
+            bytes_up: self.bytes_up - prev.bytes_up,
+        }
+    }
+
+    /// Total request-class messages (demand reads + writes) — the unit
+    /// the epoch contention model charges queuing against.
+    pub fn requests(&self) -> u64 {
+        self.m2s_req + self.m2s_rdpc + self.m2s_wr
+    }
 }
 
 #[cfg(test)]

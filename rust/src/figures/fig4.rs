@@ -105,6 +105,7 @@ pub fn run_4d(opts: &FigOpts) -> anyhow::Result<()> {
     let rt = opts.runtime();
     let mut cfg = super::figure_config(opts);
     cfg.prefetcher = PrefetcherKind::Expand;
+    let cfg = std::sync::Arc::new(cfg);
     let mut runner = Runner::new(&cfg, rt.as_ref().map(|r| r as _))?;
     runner.collect_series = true;
     let mut src = WorkloadId::Tc.source(cfg.seed);
@@ -140,6 +141,7 @@ pub fn run_4e(opts: &FigOpts) -> anyhow::Result<()> {
         let mut cfg = super::figure_config(opts);
         cfg.prefetcher = PrefetcherKind::Expand;
         cfg.expand.online_tuning = tuning;
+        let cfg = std::sync::Arc::new(cfg);
         let mut runner = Runner::new(&cfg, rt.as_ref().map(|r| r as _))?;
         runner.collect_series = true;
         let mut src = PhaseTrace::new(WorkloadId::Sssp, WorkloadId::Tc, period, cfg.seed);

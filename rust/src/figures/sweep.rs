@@ -71,7 +71,10 @@ pub fn run_jobs(jobs: &[(&str, FigFn)], opts: &FigOpts, workers: usize) -> anyho
     Ok(())
 }
 
-/// `figures all [--jobs N]`: the full suite, N-way parallel.
+/// `figures all [--jobs N]`: the full suite, N-way parallel. `0` means
+/// "all available cores" (the CLI's default — parallel runs emit
+/// byte-identical CSVs, so there is no reason to default to serial).
 pub fn run_all(opts: &FigOpts, workers: usize) -> anyhow::Result<()> {
+    let workers = if workers == 0 { crate::util::default_parallelism() } else { workers };
     run_jobs(JOBS, opts, workers)
 }

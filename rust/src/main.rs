@@ -14,10 +14,13 @@ use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
 use expand_cxl::figures::{self, FigOpts};
 use expand_cxl::runtime::Runtime;
+use expand_cxl::sim::parallel::{host_seed, run_multi_host, MultiHostOpts};
 use expand_cxl::sim::runner::simulate;
 use expand_cxl::ssd::DevicePool;
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
+use expand_cxl::util::default_parallelism;
 use expand_cxl::workloads::WorkloadId;
+use std::sync::Arc;
 
 const COMMANDS: &[CommandHelp] = &[
     CommandHelp {
@@ -28,14 +31,18 @@ const COMMANDS: &[CommandHelp] = &[
                 [--interleave line|page|capacity] [--media znand|pmem|dram] \
                 [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
                 [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
-                [--hit-notify-stride N] [--dir-entries N] [--device-update-every N]",
+                [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
+                [--hosts N] [--threads N] [--epoch N]   (hosts>1 runs the \
+                deterministic epoch-quantized multi-host engine: N host shards \
+                share the pool, --threads workers (default: all cores), --epoch \
+                accesses per host per barrier quantum)",
     },
     CommandHelp {
         name: "figures",
         summary: "regenerate paper figures/tables",
         usage: "expand figures <fig1|fig2a|fig2b|fig2c|fig4a|fig4b|fig4c|fig4d|fig4e|\
-                fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--jobs N] [--accesses N] \
-                [--out DIR] [--no-artifacts]",
+                fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--jobs N (default: all \
+                cores)] [--accesses N] [--out DIR] [--no-artifacts]",
     },
     CommandHelp {
         name: "enumerate",
@@ -87,6 +94,9 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     }
     cfg.accesses = args.get_usize("accesses", cfg.accesses)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.hosts = args.get_usize("hosts", cfg.hosts)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.epoch_accesses = args.get_usize("epoch", cfg.epoch_accesses)?;
     cfg.expand.hit_notify_stride =
         args.get_usize("hit-notify-stride", cfg.expand.hit_notify_stride)?;
     cfg.coherence.dir_entries = args.get_usize("dir-entries", cfg.coherence.dir_entries)?;
@@ -104,26 +114,60 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("run: missing <workload> (try: expand run tc)"))?;
     let id = WorkloadId::parse(workload)?;
-    let cfg = build_config(args)?;
+    let cfg = Arc::new(build_config(args)?);
     let needs_artifacts = matches!(
         cfg.prefetcher,
         PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
     );
+    if needs_artifacts && !Runtime::artifacts_available(&cfg.artifacts_dir) {
+        eprintln!(
+            "warning: artifacts not found in {:?}; using the mock predictor \
+             (run `make artifacts`)",
+            cfg.artifacts_dir
+        );
+    }
+    eprintln!("{}", cfg.render());
+    let write_boost = args.get_f64("write-boost", 0.0)?;
+
+    if cfg.hosts > 1 {
+        // Epoch-quantized multi-host engine: N shards, one shared pool,
+        // bit-identical results for any --threads value.
+        let opts = MultiHostOpts::from_config(&cfg);
+        let seed = cfg.seed;
+        let stats = run_multi_host(&cfg, &opts, move |h| {
+            let mut src: Box<dyn expand_cxl::workloads::TraceSource> =
+                id.source(host_seed(seed, h));
+            if write_boost > 0.0 {
+                src = Box::new(expand_cxl::workloads::mixed::WriteHeavy::new(
+                    src,
+                    write_boost,
+                    host_seed(seed, h) ^ 0x5707,
+                ));
+            }
+            src
+        })?;
+        for (h, s) in stats.per_host.iter().enumerate() {
+            println!("host{h}: {}", s.summary());
+        }
+        println!("{}", stats.summary());
+        println!("aggregate: {}", stats.aggregate.summary());
+        let coherence = stats.aggregate.coherence_summary();
+        if !coherence.is_empty() {
+            println!("  {coherence}");
+        }
+        if stats.aggregate.per_device.len() > 1 {
+            print!("{}", stats.aggregate.render_per_device());
+        }
+        anyhow::ensure!(stats.bi_invariant, "shared BI-directory invariant violated");
+        return Ok(());
+    }
+
     let runtime = if needs_artifacts && Runtime::artifacts_available(&cfg.artifacts_dir) {
         Some(Runtime::new(&cfg.artifacts_dir)?)
     } else {
-        if needs_artifacts {
-            eprintln!(
-                "warning: artifacts not found in {:?}; using the mock predictor \
-                 (run `make artifacts`)",
-                cfg.artifacts_dir
-            );
-        }
         None
     };
-    eprintln!("{}", cfg.render());
     let mut src: Box<dyn expand_cxl::workloads::TraceSource> = id.source(cfg.seed);
-    let write_boost = args.get_f64("write-boost", 0.0)?;
     if write_boost > 0.0 {
         src = Box::new(expand_cxl::workloads::mixed::WriteHeavy::new(
             src,
@@ -157,11 +201,13 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     } else if let Some(dir) = args.get("artifacts") {
         opts.artifacts = Some(dir.to_string());
     }
-    let jobs = args.get_usize("jobs", 1)?;
+    // Default to every available core — the sweep is embarrassingly
+    // parallel and byte-identical at any job count.
+    let jobs = args.get_usize("jobs", default_parallelism())?;
     if name == "all" {
         figures::sweep::run_all(&opts, jobs)
     } else {
-        if jobs > 1 {
+        if args.get("jobs").is_some() && jobs > 1 {
             eprintln!("note: --jobs parallelizes across harnesses; `figures {name}` is a single harness and runs serially");
         }
         figures::run_one(name, &opts)

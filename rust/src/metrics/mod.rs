@@ -2,6 +2,7 @@
 //! harnesses and benches.
 
 use crate::coherence::AuditStats;
+use crate::cxl::transaction::TrafficStats;
 use crate::sim::time::{fmt_ps, Ps};
 
 /// Per-endpoint breakdown of one run over a multi-device CXL pool.
@@ -55,6 +56,32 @@ impl DeviceStats {
         } else {
             self.stale_pushes as f64 / self.pushes_arrived as f64
         }
+    }
+
+    /// Fold another host's row for the same endpoint into this one
+    /// (multi-host aggregation). Identity fields (node, media, depth,
+    /// e2e) must already agree; counters sum, the internal hit ratio is
+    /// re-weighted by each row's media-level lookups.
+    pub fn absorb(&mut self, o: &DeviceStats) {
+        debug_assert_eq!(self.node, o.node, "absorb() across different endpoints");
+        let (a, b) = (self.demand_reads + self.staged_reads, o.demand_reads + o.staged_reads);
+        if a + b > 0 {
+            self.internal_hit =
+                (self.internal_hit * a as f64 + o.internal_hit * b as f64) / (a + b) as f64;
+        }
+        self.demand_reads += o.demand_reads;
+        self.staged_reads += o.staged_reads;
+        self.media_reads += o.media_reads;
+        self.bytes_down += o.bytes_down;
+        self.bytes_up += o.bytes_up;
+        self.mem_writes += o.mem_writes;
+        self.bisnp += o.bisnp;
+        self.birsp += o.birsp;
+        self.writebacks += o.writebacks;
+        self.stale_pushes += o.stale_pushes;
+        self.pushes_arrived += o.pushes_arrived;
+        self.dir_occupancy += o.dir_occupancy;
+        self.dir_evictions += o.dir_evictions;
     }
 }
 
@@ -261,6 +288,75 @@ impl RunStats {
         out
     }
 
+    /// Pool-wide aggregate of several hosts' runs over one shared CXL
+    /// pool (the multi-host engine's headline row). Counters sum;
+    /// simulated time is the slowest host's (hosts run concurrently);
+    /// per-device rows fold element-wise (every host sees the same
+    /// endpoint list). Series and debug text are per-host artifacts and
+    /// stay empty. `wall_s` is left 0 for the engine to set to its own
+    /// wall clock, so `throughput()` reports *aggregate* accesses/sec.
+    pub fn aggregate(per_host: &[RunStats]) -> RunStats {
+        let Some(first) = per_host.first() else { return RunStats::default() };
+        let mut agg = RunStats {
+            workload: format!("{}x{}", first.workload, per_host.len()),
+            prefetcher: first.prefetcher.clone(),
+            ..Default::default()
+        };
+        let mut weighted_access_ps = 0.0f64;
+        for s in per_host {
+            agg.accesses += s.accesses;
+            agg.instructions += s.instructions;
+            agg.exec_ps = agg.exec_ps.max(s.exec_ps);
+            agg.stall_ps += s.stall_ps;
+            agg.l1_hits += s.l1_hits;
+            agg.l2_hits += s.l2_hits;
+            agg.llc_hits += s.llc_hits;
+            agg.llc_misses += s.llc_misses;
+            agg.reflector_hits += s.reflector_hits;
+            agg.demand_reads += s.demand_reads;
+            agg.demand_writes += s.demand_writes;
+            agg.dirty_writebacks += s.dirty_writebacks;
+            agg.bi_snoops += s.bi_snoops;
+            agg.stale_pushes += s.stale_pushes;
+            agg.device_updates += s.device_updates;
+            agg.reflector_write_invalidations += s.reflector_write_invalidations;
+            agg.prefetch_issued += s.prefetch_issued;
+            agg.prefetch_useful += s.prefetch_useful;
+            agg.prefetch_wasted += s.prefetch_wasted;
+            agg.inferences += s.inferences;
+            agg.inference_wall_ps += s.inference_wall_ps;
+            weighted_access_ps += s.avg_access_ps * s.accesses as f64;
+            if let Some(a) = &s.audit {
+                let t = agg.audit.get_or_insert_with(AuditStats::default);
+                t.reads_checked += a.reads_checked;
+                t.writes_applied += a.writes_applied;
+                t.device_updates += a.device_updates;
+                t.violations += a.violations;
+                t.stale_consumptions += a.stale_consumptions;
+            }
+            if agg.per_device.is_empty() {
+                agg.per_device = s.per_device.clone();
+            } else {
+                for (d, o) in agg.per_device.iter_mut().zip(s.per_device.iter()) {
+                    d.absorb(o);
+                }
+            }
+        }
+        if agg.accesses > 0 {
+            agg.avg_access_ps = weighted_access_ps / agg.accesses as f64;
+        }
+        // Pool-wide internal-DRAM hit ratio, weighted by media lookups.
+        let (num, den) = per_host.iter().fold((0.0f64, 0u64), |(n, d), s| {
+            let lookups: u64 =
+                s.per_device.iter().map(|dev| dev.demand_reads + dev.staged_reads).sum();
+            (n + s.ssd_internal_hit * lookups as f64, d + lookups)
+        });
+        if den > 0 {
+            agg.ssd_internal_hit = num / den as f64;
+        }
+        agg
+    }
+
     /// One-line summary for the CLI.
     pub fn summary(&self) -> String {
         format!(
@@ -281,6 +377,102 @@ impl RunStats {
             self.prefetch_coverage() * 100.0,
             self.prefetch_issued,
             self.throughput() / 1e6,
+        )
+    }
+}
+
+/// Everything a multi-host engine run reports: one [`RunStats`] per
+/// host shard plus the pool-wide aggregate and engine-level counters
+/// (see `crate::sim::parallel`).
+#[derive(Debug, Clone, Default)]
+pub struct MultiHostStats {
+    /// One row per host shard, host-index order.
+    pub per_host: Vec<RunStats>,
+    /// Pool-wide aggregate ([`RunStats::aggregate`]) with `wall_s` set
+    /// to the engine wall clock, so `aggregate.throughput()` is the
+    /// headline aggregate accesses/sec.
+    pub aggregate: RunStats,
+    pub hosts: usize,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Epoch barriers executed.
+    pub epochs: u64,
+    /// Accesses per host per epoch (the quantum).
+    pub epoch_accesses: usize,
+    /// BISnp invalidations delivered across hosts at epoch barriers
+    /// (other hosts' stores/updates + shared-directory displacements).
+    pub cross_snoops: u64,
+    /// Shared multi-sharer directory capacity evictions.
+    pub shared_dir_evictions: u64,
+    /// Pool-wide per-endpoint fabric traffic, epoch-batch-merged from
+    /// every shard's deltas at the barriers (pool endpoint index order;
+    /// totals agree with the summed per-host `per_device` rows).
+    pub pool_traffic: Vec<TrafficStats>,
+    /// Engine wall-clock seconds (all hosts, all epochs, merges).
+    pub wall_s: f64,
+    /// Every host-LLC-resident line was tracked (with that host's bit)
+    /// in the shared directory at end of run.
+    pub bi_invariant: bool,
+}
+
+impl MultiHostStats {
+    /// Aggregate simulator throughput: total accesses replayed across
+    /// all hosts per engine wall-clock second.
+    pub fn aggregate_throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.aggregate.accesses as f64 / self.wall_s
+        }
+    }
+
+    /// Deterministic fingerprint for thread-count-invariance checks:
+    /// the full per-host and aggregate stats with the host wall-clock
+    /// fields (the only nondeterministic ones) zeroed.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let scrub = |s: &RunStats| {
+            let mut c = s.clone();
+            c.wall_s = 0.0;
+            c.inference_wall_ps = 0;
+            c
+        };
+        for (h, s) in self.per_host.iter().enumerate() {
+            let _ = writeln!(out, "host{h}: {:?}", scrub(s));
+        }
+        let _ = writeln!(out, "aggregate: {:?}", scrub(&self.aggregate));
+        let _ = writeln!(
+            out,
+            "hosts={} epochs={} epoch_accesses={} cross_snoops={} shared_dir_evictions={} \
+             bi_invariant={}",
+            self.hosts,
+            self.epochs,
+            self.epoch_accesses,
+            self.cross_snoops,
+            self.shared_dir_evictions,
+            self.bi_invariant
+        );
+        let _ = writeln!(out, "pool_traffic: {:?}", self.pool_traffic);
+        out
+    }
+
+    /// One-line engine summary for the CLI.
+    pub fn summary(&self) -> String {
+        let pool_reqs: u64 = self.pool_traffic.iter().map(|t| t.requests()).sum();
+        format!(
+            "multi-host: {} hosts x {} accesses on {} threads | epochs={} (quantum {}) | \
+             cross-snoops={} shared-dir-evictions={} pool-reqs={} | \
+             aggregate sim-thr={:.2}M acc/s",
+            self.hosts,
+            self.per_host.first().map(|s| s.accesses).unwrap_or(0),
+            self.threads,
+            self.epochs,
+            self.epoch_accesses,
+            self.cross_snoops,
+            self.shared_dir_evictions,
+            pool_reqs,
+            self.aggregate_throughput() / 1e6,
         )
     }
 }
@@ -466,6 +658,65 @@ mod tests {
         let out = s.render_per_device();
         assert!(out.contains("bisnp") && out.contains("stale%"));
         assert!(out.contains(" 7 ") && out.contains(" 11 "), "{out}");
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_folds_devices() {
+        let host = |exec: u64, misses: u64, reads: u64| RunStats {
+            workload: "pr".into(),
+            prefetcher: "ExPAND".into(),
+            accesses: 100,
+            instructions: 200,
+            exec_ps: exec,
+            llc_misses: misses,
+            demand_reads: 100,
+            bi_snoops: 3,
+            avg_access_ps: 50.0,
+            per_device: vec![DeviceStats {
+                node: 2,
+                media: "znand".into(),
+                demand_reads: reads,
+                bytes_down: 10,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let agg = RunStats::aggregate(&[host(1_000, 40, 40), host(3_000, 60, 60)]);
+        assert_eq!(agg.accesses, 200);
+        assert_eq!(agg.llc_misses, 100);
+        assert_eq!(agg.bi_snoops, 6);
+        assert_eq!(agg.exec_ps, 3_000, "aggregate sim time = slowest host");
+        assert_eq!(agg.per_device.len(), 1, "same endpoint folds into one row");
+        assert_eq!(agg.per_device[0].demand_reads, 100);
+        assert_eq!(agg.per_device[0].bytes_down, 20);
+        assert!((agg.avg_access_ps - 50.0).abs() < 1e-9);
+        assert_eq!(agg.workload, "prx2");
+        assert!(RunStats::aggregate(&[]).accesses == 0, "empty aggregate is empty");
+    }
+
+    #[test]
+    fn multi_host_stats_summary_and_fingerprint_scrub_wall_clock() {
+        let mut a = MultiHostStats {
+            per_host: vec![RunStats { accesses: 10, wall_s: 1.0, ..Default::default() }],
+            aggregate: RunStats { accesses: 10, wall_s: 2.0, ..Default::default() },
+            hosts: 1,
+            threads: 2,
+            epochs: 5,
+            epoch_accesses: 2,
+            cross_snoops: 7,
+            wall_s: 2.0,
+            bi_invariant: true,
+            ..Default::default()
+        };
+        assert!((a.aggregate_throughput() - 5.0).abs() < 1e-9);
+        assert!(a.summary().contains("cross-snoops=7"), "{}", a.summary());
+        let f1 = a.fingerprint();
+        // Wall clock must not affect the determinism fingerprint.
+        a.per_host[0].wall_s = 9.0;
+        a.wall_s = 0.5;
+        a.aggregate.wall_s = 0.25;
+        assert_eq!(f1, a.fingerprint());
+        assert!(f1.contains("cross_snoops=7"));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 pub mod core;
 pub mod engine;
+pub mod parallel;
 pub mod runner;
 pub mod time;
 

@@ -1,0 +1,590 @@
+//! Deterministic multi-host parallel engine: epoch-quantized shards
+//! over a shared CXL pool.
+//!
+//! The paper's latency model assumes CXL-SSD pools are *shared*
+//! infrastructure behind multi-tiered switching; at-scale measurements
+//! (arXiv:2409.14317) show the interesting regimes appear precisely
+//! under multi-client contention. This engine simulates N host shards —
+//! each a full [`Runner`]: its own LLC hierarchy, access stream, core
+//! clock and per-endpoint ExPAND decider state — running concurrently
+//! against one logical device pool.
+//!
+//! ## Epoch quantization
+//!
+//! Time is cut into epochs of `[sim] epoch_accesses` demand accesses
+//! per host. *Within* an epoch a shard touches only shard-local state
+//! plus the read-only `Arc<SimConfig>`/topology, so shards execute on
+//! scoped threads with zero synchronization. Every cross-host effect is
+//! buffered into the shard's [`EffectLog`]:
+//!
+//! * **grants/revokes** — which lines the host installed or gave up,
+//!   in program order (feeds the shared multi-sharer BI directory);
+//! * **stores & device updates** — which lines changed, so every other
+//!   sharer gets a real BISnp at the next boundary;
+//! * **per-endpoint traffic and device occupancy** — epoch-batched
+//!   fabric accounting and the input to the contention model.
+//!
+//! At the epoch barrier one thread replays all logs **in host-index
+//! order** into the shared state: the multi-sharer directory (per-line
+//! host bitmask, [`BiDirectory::grant_for`]) collects sharers and emits
+//! cross-host BISnp lists; aggregate device occupancy produces a
+//! per-host, per-endpoint queuing penalty (an M/D/1-style `ρ/(1-ρ)`
+//! term from *other* hosts' load) charged on every device access of the
+//! next epoch. Shards then consume their snoop inbox and continue.
+//!
+//! ## Determinism
+//!
+//! Thread assignment only decides *where* a shard executes, never what
+//! it observes: logs are merged in host-index order, inboxes are
+//! consumed at epoch starts, and the contention arithmetic is a pure
+//! function of the merged logs. `--threads 1` and `--threads N`
+//! therefore produce bit-identical per-host and aggregate [`RunStats`]
+//! (coherence counters included) — asserted by the determinism
+//! proptests and cheap enough to re-check anywhere.
+
+use crate::coherence::BiDirectory;
+use crate::config::{Backing, PrefetcherKind, SimConfig};
+use crate::cxl::transaction::TrafficStats;
+use crate::metrics::{MultiHostStats, RunStats};
+use crate::runtime::Runtime;
+use crate::sim::runner::{EffectLog, HostEffect, RunCursor, Runner};
+use crate::sim::time::Ps;
+use crate::ssd::{pool_interleaver, Interleaver};
+use crate::workloads::TraceSource;
+use std::sync::{Barrier, Mutex};
+
+/// Multi-host engine options (normally sourced from `[sim]` config via
+/// [`MultiHostOpts::from_config`], overridable from the CLI).
+#[derive(Debug, Clone)]
+pub struct MultiHostOpts {
+    /// Host shards sharing the pool (1..=64).
+    pub hosts: usize,
+    /// Worker threads (0 = all available cores; capped at `hosts`).
+    pub threads: usize,
+    /// Demand accesses per host per epoch.
+    pub epoch_accesses: usize,
+    /// Artifacts directory for compiled predictors; each shard builds
+    /// its own `Runtime` so predictor state never couples shards.
+    pub artifacts: Option<String>,
+}
+
+impl MultiHostOpts {
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        MultiHostOpts {
+            hosts: cfg.hosts.max(1),
+            threads: cfg.threads,
+            epoch_accesses: cfg.epoch_accesses,
+            artifacts: Some(cfg.artifacts_dir.clone()),
+        }
+    }
+}
+
+/// Per-host trace seed: host 0 keeps the base seed (a 1-host engine run
+/// replays the exact single-host stream), later hosts get decorrelated
+/// streams over the same address space so lines really are shared.
+pub fn host_seed(base: u64, host: usize) -> u64 {
+    base ^ (host as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Shared pool state, mutated only at epoch barriers by the merge
+/// leader (host-index order — the determinism anchor).
+struct Shared {
+    /// One multi-sharer BI directory per endpoint: per-line host
+    /// bitmask, capacity `dir_entries * hosts` (each host brings its own
+    /// tracking segment, as a pooled device directory would).
+    dirs: Vec<BiDirectory>,
+    /// Pool-wide per-endpoint traffic (epoch-batched merge of every
+    /// shard's fabric deltas).
+    traffic: Vec<TrafficStats>,
+    /// Address-to-endpoint routing (identical to every shard pool's).
+    router: Interleaver,
+    /// BISnp invalidations delivered across hosts.
+    cross_snoops: u64,
+    /// Barriers executed.
+    epochs: u64,
+}
+
+impl Shared {
+    /// Queue a BISnp for every host in `mask`.
+    fn deliver_snoops(&mut self, line: u64, mask: u64, inboxes: &[Mutex<Vec<u64>>]) {
+        let mut m = mask;
+        while m != 0 {
+            let g = m.trailing_zeros() as usize;
+            m &= m - 1;
+            if let Some(slot) = inboxes.get(g) {
+                slot.lock().unwrap().push(line);
+                self.cross_snoops += 1;
+            }
+        }
+    }
+
+    /// The barrier merge: drain every host's epoch log in host-index
+    /// order, update the shared directory/traffic, emit cross-host
+    /// snoops, and compute next-epoch contention. Deterministic by
+    /// construction — no wall-clock, no thread identity.
+    fn merge_epoch(
+        &mut self,
+        hosts: usize,
+        logs: &[Mutex<Option<EffectLog>>],
+        inboxes: &[Mutex<Vec<u64>>],
+        contention: &[Mutex<Vec<Ps>>],
+    ) {
+        let endpoints = self.dirs.len();
+        let taken: Vec<Option<EffectLog>> =
+            logs.iter().map(|slot| slot.lock().unwrap().take()).collect();
+
+        // Aggregate device occupancy for the contention model.
+        let mut span: Ps = 1;
+        let mut busy_tot: Vec<u128> = vec![0; endpoints];
+        let mut reqs_tot: Vec<u64> = vec![0; endpoints];
+        for log in taken.iter().flatten() {
+            span = span.max(log.sim_advance);
+            for ep in 0..endpoints {
+                busy_tot[ep] += log.dev_busy[ep] as u128;
+                reqs_tot[ep] += log.dev_reqs[ep];
+            }
+        }
+
+        // Replay coherence-visible ops, host 0 first.
+        for (h, log) in taken.iter().enumerate() {
+            let Some(log) = log else { continue };
+            for op in &log.ops {
+                match *op {
+                    HostEffect::Grant { ep, line } => {
+                        if let Some((victim, mask)) = self.dirs[ep as usize].grant_for(line, h) {
+                            // Shared-directory capacity eviction: every
+                            // sharer of the victim is snooped (the
+                            // multi-sharer generalization of the
+                            // single-host BISnp flow).
+                            self.deliver_snoops(victim, mask, inboxes);
+                        }
+                    }
+                    HostEffect::Revoke { ep, line } => {
+                        self.dirs[ep as usize].revoke_for(line, h);
+                    }
+                    HostEffect::Write { line } | HostEffect::DeviceUpdate { line } => {
+                        // The writer keeps its copy (it owns the newest
+                        // data); every *other* sharer is invalidated.
+                        let ep = self.router.route(line);
+                        let mask = self.dirs[ep].sharers(line) & !(1u64 << h);
+                        if mask != 0 {
+                            let mut m = mask;
+                            while m != 0 {
+                                let g = m.trailing_zeros() as usize;
+                                m &= m - 1;
+                                self.dirs[ep].revoke_for(line, g);
+                            }
+                            self.deliver_snoops(line, mask, inboxes);
+                        }
+                    }
+                }
+            }
+            for (total, delta) in self.traffic.iter_mut().zip(&log.traffic) {
+                total.merge(delta);
+            }
+        }
+
+        // Next-epoch contention: the queuing penalty host `h` pays at
+        // endpoint `ep` grows with the *other* hosts' occupancy of that
+        // device over the epoch span — an M/D/1-flavored rho/(1-rho)
+        // times the pool-mean service time. Pure integer/f64 arithmetic
+        // over merged logs: identical for any thread count.
+        for h in 0..hosts {
+            let mut extra: Vec<Ps> = vec![0; endpoints];
+            if let Some(log) = &taken[h] {
+                for ep in 0..endpoints {
+                    let other = busy_tot[ep].saturating_sub(log.dev_busy[ep] as u128);
+                    if other == 0 || reqs_tot[ep] == 0 {
+                        continue;
+                    }
+                    let rho = ((other as f64) / (span as f64)).min(0.95);
+                    let mean_service = (busy_tot[ep] / reqs_tot[ep] as u128) as f64;
+                    extra[ep] = ((rho / (1.0 - rho)) * mean_service) as Ps;
+                }
+            }
+            *contention[h].lock().unwrap() = extra;
+        }
+        self.epochs += 1;
+    }
+}
+
+/// One host shard owned by a worker thread.
+struct Shard {
+    host: usize,
+    runner: Runner,
+    source: Box<dyn TraceSource>,
+    stats: RunStats,
+    cur: RunCursor,
+}
+
+/// Run `opts.hosts` shards of `cfg` against one shared pool and return
+/// per-host plus aggregate statistics. `make_source` builds host `h`'s
+/// trace source (use [`host_seed`] to decorrelate streams); it runs on
+/// worker threads, hence `Sync`.
+pub fn run_multi_host<F>(
+    cfg: &std::sync::Arc<SimConfig>,
+    opts: &MultiHostOpts,
+    make_source: F,
+) -> anyhow::Result<MultiHostStats>
+where
+    F: Fn(usize) -> Box<dyn TraceSource> + Sync,
+{
+    let hosts = opts.hosts;
+    anyhow::ensure!(hosts >= 1, "multi-host engine needs at least one host");
+    anyhow::ensure!(hosts <= 64, "sharer bitmask caps the pool at 64 hosts, got {hosts}");
+    let threads = if opts.threads == 0 {
+        crate::util::default_parallelism()
+    } else {
+        opts.threads
+    }
+    .clamp(1, hosts);
+    let epoch = opts.epoch_accesses.max(1);
+    let total = cfg.accesses;
+    let epochs = total.div_ceil(epoch).max(1);
+
+    let topo = cfg.cxl.build_topology()?;
+    let endpoints = topo.ssds().len();
+    anyhow::ensure!(endpoints >= 1, "topology has no CXL-SSD endpoints");
+    let router = pool_interleaver(&topo, &cfg.ssd, cfg.cxl.interleave);
+    let shared = Mutex::new(Shared {
+        dirs: (0..endpoints)
+            .map(|_| {
+                BiDirectory::new(
+                    cfg.coherence.dir_entries.saturating_mul(hosts),
+                    cfg.coherence.dir_ways,
+                )
+            })
+            .collect(),
+        traffic: vec![TrafficStats::default(); endpoints],
+        router,
+        cross_snoops: 0,
+        epochs: 0,
+    });
+
+    let logs: Vec<Mutex<Option<EffectLog>>> = (0..hosts).map(|_| Mutex::new(None)).collect();
+    let inboxes: Vec<Mutex<Vec<u64>>> = (0..hosts).map(|_| Mutex::new(Vec::new())).collect();
+    let contention: Vec<Mutex<Vec<Ps>>> =
+        (0..hosts).map(|_| Mutex::new(vec![0; endpoints])).collect();
+    let barrier = Barrier::new(threads);
+    let results: Mutex<Vec<(usize, RunStats, bool)>> = Mutex::new(Vec::new());
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    let needs_artifacts = matches!(
+        cfg.prefetcher,
+        PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
+    );
+    // Under LocalDRAM backing there is no device pool and shards log no
+    // grants — the shared-directory coverage invariant is vacuous.
+    let cxl_backed = matches!(cfg.backing, Backing::CxlSsd);
+    let wall_start = std::time::Instant::now();
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let cfg = std::sync::Arc::clone(cfg);
+            let (shared, logs, inboxes, contention, barrier, results, errors, make_source) = (
+                &shared,
+                &logs,
+                &inboxes,
+                &contention,
+                &barrier,
+                &results,
+                &errors,
+                &make_source,
+            );
+            let artifacts = opts.artifacts.clone();
+            scope.spawn(move || {
+                // Build this worker's shards (round-robin assignment —
+                // irrelevant to results, only to load balance).
+                let mut shards: Vec<Shard> = Vec::new();
+                let mut failed = false;
+                for host in (t..hosts).step_by(threads) {
+                    // One Runtime per shard: predictor state must never
+                    // couple shards, or thread assignment would leak
+                    // into results. A load failure is a hard error, like
+                    // the single-host CLI path — never a silent fall
+                    // back to the mock predictor.
+                    let rt = match artifacts.as_deref() {
+                        Some(dir) if needs_artifacts && Runtime::artifacts_available(dir) => {
+                            match Runtime::new(dir) {
+                                Ok(rt) => Some(rt),
+                                Err(e) => {
+                                    errors
+                                        .lock()
+                                        .unwrap()
+                                        .push(format!("host {host}: runtime: {e}"));
+                                    failed = true;
+                                    continue;
+                                }
+                            }
+                        }
+                        _ => None,
+                    };
+                    match Runner::from_arc(std::sync::Arc::clone(&cfg), rt.as_ref()) {
+                        Ok(mut runner) => {
+                            runner.enable_effect_log();
+                            let source = make_source(host);
+                            let (stats, cur) = runner.begin_run(&*source);
+                            shards.push(Shard { host, runner, source, stats, cur });
+                        }
+                        Err(e) => {
+                            errors.lock().unwrap().push(format!("host {host}: {e}"));
+                            failed = true;
+                        }
+                    }
+                }
+                // A worker that failed to build must still hit every
+                // barrier or the others deadlock; it just runs no shards.
+                if failed {
+                    shards.clear();
+                }
+
+                for e in 0..epochs {
+                    let n = if (e + 1) * epoch <= total { epoch } else { total - e * epoch };
+                    if !shards.is_empty() {
+                        // A panicking worker that never reaches the
+                        // barrier would deadlock every other thread:
+                        // catch it, surface it as an engine error, and
+                        // keep hitting the barriers shard-less.
+                        let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || {
+                                for sh in &mut shards {
+                                    // Apply the previous barrier's
+                                    // cross-host effects before the
+                                    // epoch's own accesses.
+                                    let pending = std::mem::take(
+                                        &mut *inboxes[sh.host].lock().unwrap(),
+                                    );
+                                    for line in pending {
+                                        sh.runner.apply_remote_snoop(line);
+                                    }
+                                    let extra = contention[sh.host].lock().unwrap().clone();
+                                    sh.runner.set_contention(&extra);
+                                    if n > 0 {
+                                        sh.runner.run_segment(
+                                            &mut *sh.source,
+                                            n,
+                                            &mut sh.stats,
+                                            &mut sh.cur,
+                                        );
+                                    }
+                                    *logs[sh.host].lock().unwrap() =
+                                        Some(sh.runner.take_effects());
+                                }
+                            },
+                        ));
+                        if let Err(p) = body {
+                            let msg = p
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                                .unwrap_or_else(|| "unknown panic".to_string());
+                            errors
+                                .lock()
+                                .unwrap()
+                                .push(format!("worker {t} panicked in epoch {e}: {msg}"));
+                            shards.clear();
+                        }
+                    }
+                    if barrier.wait().is_leader() {
+                        shared.lock().unwrap().merge_epoch(hosts, logs, inboxes, contention);
+                    }
+                    barrier.wait();
+                }
+
+                // Final inbox drain (snoops minted at the last merge),
+                // then finalize and check the shared-directory coverage
+                // invariant: every LLC-resident line carries this
+                // host's sharer bit.
+                for sh in &mut shards {
+                    let pending = std::mem::take(&mut *inboxes[sh.host].lock().unwrap());
+                    for line in pending {
+                        sh.runner.apply_remote_snoop(line);
+                    }
+                    sh.runner.finalize(&mut sh.stats, &sh.cur);
+                    // The drain itself moved traffic (BISnp/BIRsp, dirty
+                    // writebacks) after the last barrier merge: fold the
+                    // residual delta into the pool totals. Sums commute,
+                    // so cross-thread arrival order cannot change the
+                    // result.
+                    let residual = sh.runner.take_effects();
+                    let invariant = {
+                        let mut s = shared.lock().unwrap();
+                        for (total, delta) in s.traffic.iter_mut().zip(&residual.traffic) {
+                            total.merge(delta);
+                        }
+                        !cxl_backed
+                            || sh
+                                .runner
+                                .llc_lines()
+                                .all(|l| s.dirs[s.router.route(l)].contains_host(l, sh.host))
+                    };
+                    results.lock().unwrap().push((
+                        sh.host,
+                        std::mem::take(&mut sh.stats),
+                        invariant,
+                    ));
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    anyhow::ensure!(errors.is_empty(), "multi-host engine failures: {}", errors.join("; "));
+    let mut rows = results.into_inner().unwrap();
+    rows.sort_by_key(|(h, _, _)| *h);
+    anyhow::ensure!(
+        rows.len() == hosts,
+        "engine lost shards: {} of {hosts} reported",
+        rows.len()
+    );
+
+    let shared = shared.into_inner().unwrap();
+    let bi_invariant = rows.iter().all(|(_, _, inv)| *inv);
+    let per_host: Vec<RunStats> = rows.into_iter().map(|(_, s, _)| s).collect();
+    let mut aggregate = RunStats::aggregate(&per_host);
+    aggregate.wall_s = wall_start.elapsed().as_secs_f64();
+    // The shared directory is the pool's ground truth for occupancy and
+    // displacement cost; overwrite the summed per-host views.
+    for (ep, d) in aggregate.per_device.iter_mut().enumerate() {
+        d.dir_occupancy = shared.dirs[ep].occupancy();
+        d.dir_evictions = shared.dirs[ep].stats.capacity_evictions;
+    }
+    let shared_dir_evictions: u64 =
+        shared.dirs.iter().map(|d| d.stats.capacity_evictions).sum();
+
+    Ok(MultiHostStats {
+        wall_s: aggregate.wall_s,
+        per_host,
+        aggregate,
+        hosts,
+        threads,
+        epochs: shared.epochs,
+        epoch_accesses: epoch,
+        cross_snoops: shared.cross_snoops,
+        shared_dir_evictions,
+        pool_traffic: shared.traffic,
+        bi_invariant,
+    })
+}
+
+/// Convenience for benches/tests: run the configured workload id on
+/// every host with [`host_seed`]-decorrelated streams.
+pub fn run_multi_host_workload(
+    cfg: &std::sync::Arc<SimConfig>,
+    opts: &MultiHostOpts,
+    id: crate::workloads::WorkloadId,
+) -> anyhow::Result<MultiHostStats> {
+    let seed = cfg.seed;
+    run_multi_host(cfg, opts, |h| id.source(host_seed(seed, h)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workloads::WorkloadId;
+    use std::sync::Arc;
+
+    fn engine_cfg() -> SimConfig {
+        let mut c = presets::smoke();
+        c.accesses = 12_000;
+        c.prefetcher = PrefetcherKind::Expand;
+        c
+    }
+
+    fn opts(hosts: usize, threads: usize, epoch: usize) -> MultiHostOpts {
+        MultiHostOpts { hosts, threads, epoch_accesses: epoch, artifacts: None }
+    }
+
+    #[test]
+    fn one_host_engine_matches_host_count_invariants() {
+        let cfg = Arc::new(engine_cfg());
+        let s = run_multi_host_workload(&cfg, &opts(1, 1, 4096), WorkloadId::Pr).unwrap();
+        assert_eq!(s.per_host.len(), 1);
+        assert_eq!(s.aggregate.accesses, 12_000);
+        assert_eq!(s.epochs, 3, "12k accesses / 4k quantum");
+        assert!(s.bi_invariant, "shared directory must cover the LLC");
+        assert_eq!(
+            s.per_host[0].accesses,
+            s.per_host[0].l1_hits
+                + s.per_host[0].l2_hits
+                + s.per_host[0].llc_hits
+                + s.per_host[0].llc_misses
+                + s.per_host[0].reflector_hits
+        );
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let cfg = Arc::new(engine_cfg());
+        let a = run_multi_host_workload(&cfg, &opts(4, 1, 2048), WorkloadId::Pr).unwrap();
+        let b = run_multi_host_workload(&cfg, &opts(4, 4, 2048), WorkloadId::Pr).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "threads must not leak into results");
+        assert!(a.bi_invariant && b.bi_invariant);
+    }
+
+    #[test]
+    fn hosts_contend_and_share() {
+        // Two hosts over the same address space must interact: cross
+        // snoops flow (write sharing) and the aggregate device load is
+        // the sum of both hosts'.
+        let mut c = engine_cfg();
+        c.cxl.topology = crate::config::TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+        let cfg = Arc::new(c);
+        let seed = cfg.seed;
+        let s = run_multi_host(&cfg, &opts(2, 2, 2048), |h| {
+            let inner = WorkloadId::Pr.source(host_seed(seed, h));
+            Box::new(crate::workloads::mixed::WriteHeavy::new(
+                inner,
+                0.2,
+                host_seed(seed, h),
+            ))
+        })
+        .unwrap();
+        assert_eq!(s.per_host.len(), 2);
+        assert!(s.cross_snoops > 0, "write sharing must snoop the other host: {}", s.summary());
+        assert!(s.aggregate.demand_writes > 0);
+        let dev_reads: u64 = s.aggregate.per_device.iter().map(|d| d.demand_reads).sum();
+        let host_misses: u64 = s.per_host.iter().map(|h| h.llc_misses).sum();
+        assert_eq!(dev_reads, host_misses, "pool rows must aggregate both hosts");
+        // The epoch-batched pool traffic merge must agree exactly with
+        // the end-state sum of the per-host fabric rows.
+        assert_eq!(s.pool_traffic.len(), s.aggregate.per_device.len());
+        for (t, d) in s.pool_traffic.iter().zip(s.aggregate.per_device.iter()) {
+            assert_eq!(t.bytes_down, d.bytes_down, "epoch-merged bytes_down");
+            assert_eq!(t.bytes_up, d.bytes_up, "epoch-merged bytes_up");
+            assert_eq!(t.s2m_bisnp, d.bisnp, "epoch-merged BISnp count");
+            assert_eq!(t.m2s_wr, d.mem_writes, "epoch-merged MemWr count");
+        }
+        assert!(s.bi_invariant);
+    }
+
+    #[test]
+    fn local_dram_backing_runs_multi_host() {
+        // No device pool, no grants: the shared-directory invariant is
+        // vacuous and the engine must not reject the flag combination.
+        let mut c = engine_cfg();
+        c.backing = Backing::LocalDram;
+        c.prefetcher = PrefetcherKind::None;
+        let cfg = Arc::new(c);
+        let s = run_multi_host_workload(&cfg, &opts(2, 2, 4096), WorkloadId::Pr).unwrap();
+        assert!(s.bi_invariant, "invariant is vacuous under LocalDRAM");
+        assert_eq!(s.aggregate.accesses, 24_000);
+        assert_eq!(s.cross_snoops, 0, "no pool, no cross-host snoops");
+    }
+
+    #[test]
+    fn more_hosts_mean_more_pool_pressure() {
+        // The contention model must actually bite: with the pool shared
+        // 4 ways, a host's mean access latency exceeds its solo run.
+        let cfg = Arc::new(engine_cfg());
+        let solo = run_multi_host_workload(&cfg, &opts(1, 1, 2048), WorkloadId::Pr).unwrap();
+        let four = run_multi_host_workload(&cfg, &opts(4, 2, 2048), WorkloadId::Pr).unwrap();
+        assert!(
+            four.per_host[0].avg_access_ps > solo.per_host[0].avg_access_ps,
+            "shared-pool host must be slower than solo: {} vs {}",
+            four.per_host[0].avg_access_ps,
+            solo.per_host[0].avg_access_ps
+        );
+    }
+}

@@ -19,7 +19,7 @@
 use crate::coherence::ShadowMemory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};
 use crate::cxl::enumeration::Enumeration;
-use crate::cxl::transaction::{m2s_bytes, M2S};
+use crate::cxl::transaction::{m2s_bytes, TrafficStats, M2S};
 use crate::cxl::Fabric;
 use crate::expand::timeliness::DeadlineModel;
 use crate::expand::ExpandPrefetcher;
@@ -41,6 +41,68 @@ use crate::workloads::{Access, TraceSource};
 use std::collections::VecDeque;
 use std::rc::Rc;
 use std::sync::Arc;
+
+/// One cross-host-visible event in a shard's epoch, in program order.
+/// Order matters: a line can be granted, evicted and re-granted within
+/// one epoch, and the shared directory replay must see that sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostEffect {
+    /// This host installed `line` (LLC or reflector) from endpoint `ep`.
+    Grant { ep: u32, line: u64 },
+    /// This host gave `line` up (writeback, clean evict, snoop, local
+    /// directory displacement) at endpoint `ep`.
+    Revoke { ep: u32, line: u64 },
+    /// This host stored to `line` — every other sharer must be snooped.
+    Write { line: u64 },
+    /// This shard injected a device-side update to `line` — every other
+    /// sharer must be snooped (the shard already snooped itself).
+    DeviceUpdate { line: u64 },
+}
+
+/// Cross-host effects one shard produced during an epoch, buffered for
+/// the multi-host engine's barrier merge (see `crate::sim::parallel`).
+/// Endpoint indices are pool-endpoint indices (identical across shards —
+/// every shard enumerates the same topology).
+#[derive(Debug, Clone, Default)]
+pub struct EffectLog {
+    /// Ordered coherence-visible events of the epoch.
+    pub ops: Vec<HostEffect>,
+    /// Demand requests this host sent to each endpoint this epoch.
+    pub dev_reqs: Vec<u64>,
+    /// Device service time this host occupied at each endpoint.
+    pub dev_busy: Vec<Ps>,
+    /// Per-endpoint fabric traffic accrued this epoch (merged into the
+    /// pool-wide totals at the barrier).
+    pub traffic: Vec<TrafficStats>,
+    /// Simulated time this shard advanced during the epoch.
+    pub sim_advance: Ps,
+}
+
+impl EffectLog {
+    fn sized(endpoints: usize) -> Self {
+        EffectLog {
+            dev_reqs: vec![0; endpoints],
+            dev_busy: vec![0; endpoints],
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-run accumulator that survives epoch segmentation: the multi-host
+/// engine replays each host's trace in epoch-sized segments via
+/// [`Runner::run_segment`], and these running sums must span all of
+/// them. [`Runner::run`] drives one segment covering the whole trace.
+#[derive(Debug, Clone, Default)]
+pub struct RunCursor {
+    total_access_ps: u128,
+    last_llc_access: Ps,
+    win_hits: u64,
+    win_total: u64,
+    /// Accesses replayed so far (series x-axis / diagnostics).
+    index: u64,
+    /// Host wall-clock accumulated across segments.
+    wall_s: f64,
+}
 
 /// Everything needed to simulate one configuration.
 pub struct Runner {
@@ -84,14 +146,29 @@ pub struct Runner {
     recent_lines: VecDeque<u64>,
     update_rng: Rng,
     accesses_seen: u64,
+    /// Cross-host effect log (multi-host engine only; `None` keeps the
+    /// single-host hot path free of logging branchwork cost beyond one
+    /// well-predicted `is_some` test).
+    effects: Option<EffectLog>,
+    /// Per-endpoint extra service delay modeling *other* hosts' device
+    /// queue pressure (epoch-quantized; written by the engine at each
+    /// barrier, all zeros in single-host runs).
+    contention: Vec<Ps>,
+    /// Fabric traffic snapshot at the last `take_effects` (per-endpoint,
+    /// pool index order) — the next epoch's delta baseline.
+    traffic_prev: Vec<TrafficStats>,
+    /// `core.now` at the last `take_effects` (epoch sim-time deltas).
+    last_epoch_now: Ps,
 }
 
 impl Runner {
     /// Build a runner. `runtime` supplies compiled predictors for
     /// ML1/ML2/ExPAND; pass `None` to fall back to the mock predictor
-    /// (unit tests / artifact-less smoke runs).
-    pub fn new(cfg: &SimConfig, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
-        Self::from_arc(Arc::new(cfg.clone()), runtime)
+    /// (unit tests / artifact-less smoke runs). Takes the caller's
+    /// `Arc` by reference — a cheap refcount bump, never a deep clone
+    /// of the config tree.
+    pub fn new(cfg: &Arc<SimConfig>, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
+        Self::from_arc(Arc::clone(cfg), runtime)
     }
 
     /// Build a runner around a shared config. This is the allocation-
@@ -189,6 +266,10 @@ impl Runner {
             recent_lines: VecDeque::with_capacity(64),
             update_rng,
             accesses_seen: 0,
+            effects: None,
+            contention: vec![0; endpoints],
+            traffic_prev: Vec::new(),
+            last_epoch_now: 0,
         })
     }
 
@@ -204,6 +285,97 @@ impl Runner {
     #[inline]
     fn cxl_backed(&self) -> bool {
         matches!(self.cfg.backing, Backing::CxlSsd)
+    }
+
+    // --- multi-host engine hooks (see `crate::sim::parallel`) ----------
+
+    /// Current simulated time at this shard's core.
+    pub fn now(&self) -> Ps {
+        self.core.now
+    }
+
+    /// Start buffering cross-host effects (multi-host shards only).
+    pub fn enable_effect_log(&mut self) {
+        let n = self.pool.len();
+        self.effects = Some(EffectLog::sized(n));
+        self.traffic_prev = self.device_traffic_snapshot();
+        self.last_epoch_now = self.core.now;
+    }
+
+    /// Drain the epoch's effect log (grants/revokes/writes/updates plus
+    /// the per-endpoint traffic and service deltas since the previous
+    /// drain). The log keeps recording for the next epoch.
+    pub fn take_effects(&mut self) -> EffectLog {
+        let snap = self.device_traffic_snapshot();
+        let now = self.core.now;
+        let n = self.pool.len();
+        let mut out = EffectLog::sized(n);
+        let eff = self.effects.as_mut().expect("effect log not enabled");
+        std::mem::swap(eff, &mut out);
+        out.traffic = snap
+            .iter()
+            .zip(self.traffic_prev.iter())
+            .map(|(cur, prev)| cur.delta_since(prev))
+            .collect();
+        out.sim_advance = now.saturating_sub(self.last_epoch_now);
+        self.traffic_prev = snap;
+        self.last_epoch_now = now;
+        out
+    }
+
+    /// Install the engine-computed per-endpoint contention delays for
+    /// the next epoch (extra service time modeling other hosts' load).
+    pub fn set_contention(&mut self, extra: &[Ps]) {
+        self.contention.clear();
+        self.contention.extend_from_slice(extra);
+        self.contention.resize(self.pool.len(), 0);
+    }
+
+    /// A BISnp delivered by the engine at an epoch boundary: another
+    /// host's store/update (or a shared-directory capacity eviction)
+    /// invalidated `line`. Rides the same host-side path as a
+    /// device-initiated snoop, then stales any in-flight fill payloads.
+    pub fn apply_remote_snoop(&mut self, line: u64) {
+        if !self.cxl_backed() {
+            return;
+        }
+        let now = self.core.now;
+        let idx = self.pool.route(line);
+        self.bi_snoop_host(idx, line, now);
+        if self.pool.revoke(idx, line) {
+            self.log_revoke(idx, line);
+        }
+        self.invalid_after.insert(line, now);
+    }
+
+    fn device_traffic_snapshot(&self) -> Vec<TrafficStats> {
+        self.pool
+            .endpoints()
+            .iter()
+            .map(|ep| self.fabric.traffic_for(ep.node))
+            .collect()
+    }
+
+    #[inline]
+    fn log_grant(&mut self, idx: usize, line: u64) {
+        if let Some(eff) = &mut self.effects {
+            eff.ops.push(HostEffect::Grant { ep: idx as u32, line });
+        }
+    }
+
+    #[inline]
+    fn log_revoke(&mut self, idx: usize, line: u64) {
+        if let Some(eff) = &mut self.effects {
+            eff.ops.push(HostEffect::Revoke { ep: idx as u32, line });
+        }
+    }
+
+    #[inline]
+    fn log_device_service(&mut self, idx: usize, service: Ps) {
+        if let Some(eff) = &mut self.effects {
+            eff.dev_reqs[idx] += 1;
+            eff.dev_busy[idx] += service;
+        }
     }
 
     /// Dirty-eviction writeback to the owning memory: `RwDMemWr` down,
@@ -222,11 +394,17 @@ impl Runner {
                 self.dirty_writebacks[idx] += 1;
                 let node = self.pool.node_of(idx);
                 let down = self.fabric.path_latency(node, 16 + 64);
-                let service = self.pool.ssd_mut(idx).serve_write(line, now + down);
+                // Log the *raw* device occupancy; the cross-host penalty
+                // is synthetic waiting time and must not feed back into
+                // the next epoch's occupancy estimate (it would ratchet).
+                let raw = self.pool.ssd_mut(idx).serve_write(line, now + down);
+                self.log_device_service(idx, raw);
+                let service = raw + self.contention[idx];
                 self.fabric.write_roundtrip(node, now, service);
                 // The host no longer caches the line: the owner's BI
                 // directory stops tracking it.
                 self.pool.revoke(idx, line);
+                self.log_revoke(idx, line);
             }
         }
     }
@@ -246,6 +424,7 @@ impl Runner {
             if self.cxl_backed() {
                 let idx = self.pool.route(ev.line);
                 self.pool.revoke(idx, ev.line);
+                self.log_revoke(idx, ev.line);
             }
         }
     }
@@ -273,7 +452,11 @@ impl Runner {
         if !self.cxl_backed() {
             return;
         }
+        self.log_grant(idx, line);
         if let Some(victim) = self.pool.grant(idx, line) {
+            // The displaced victim already left the local directory; the
+            // shared multi-host directory must drop this host's bit too.
+            self.log_revoke(idx, victim);
             self.bi_snoop_host(idx, victim, now);
         }
     }
@@ -283,6 +466,9 @@ impl Runner {
     /// in-flight fill payload for it are now stale.
     fn host_write(&mut self, line: u64, now: Ps) {
         self.invalid_after.insert(line, now);
+        if let Some(eff) = &mut self.effects {
+            eff.ops.push(HostEffect::Write { line });
+        }
         if self.prefetcher.reflector_invalidate(line) {
             self.reflector_write_invalidations += 1;
         }
@@ -305,8 +491,12 @@ impl Runner {
         if self.pool.directory(idx).contains(line) {
             self.bi_snoop_host(idx, line, now);
             self.pool.revoke(idx, line);
+            self.log_revoke(idx, line);
         }
         self.invalid_after.insert(line, now);
+        if let Some(eff) = &mut self.effects {
+            eff.ops.push(HostEffect::DeviceUpdate { line });
+        }
         if let Some(aud) = &mut self.auditor {
             aud.device_write(line);
         }
@@ -385,24 +575,48 @@ impl Runner {
         }
     }
 
-    /// Replay `n` accesses from `source`; returns the run statistics.
-    pub fn run(&mut self, source: &mut dyn TraceSource, n: usize) -> RunStats {
-        let wall_start = std::time::Instant::now();
-        let mut stats = RunStats {
+    /// Start a run: fresh stats and segment cursor for `source`. The
+    /// multi-host engine calls this once per host, then
+    /// [`Runner::run_segment`] per epoch, then [`Runner::finalize`];
+    /// [`Runner::run`] packages the three for the single-segment case.
+    pub fn begin_run(&self, source: &dyn TraceSource) -> (RunStats, RunCursor) {
+        let stats = RunStats {
             workload: source.name(),
             prefetcher: self.prefetcher.name(),
             ..Default::default()
         };
+        (stats, RunCursor::default())
+    }
+
+    /// Replay `n` accesses from `source`; returns the run statistics.
+    pub fn run(&mut self, source: &mut dyn TraceSource, n: usize) -> RunStats {
+        let (mut stats, mut cur) = self.begin_run(source);
+        self.run_segment(source, n, &mut stats, &mut cur);
+        self.finalize(&mut stats, &cur);
+        stats
+    }
+
+    /// Replay one segment of `n` accesses, accumulating into `stats`
+    /// and `cur`. All simulation state — hierarchy contents, in-flight
+    /// fills, lookahead buffer, core clock, coherence counters — carries
+    /// over between segments, so E epoch-sized segments replay exactly
+    /// like one long segment.
+    pub fn run_segment(
+        &mut self,
+        source: &mut dyn TraceSource,
+        n: usize,
+        stats: &mut RunStats,
+        cur: &mut RunCursor,
+    ) {
+        let wall_start = std::time::Instant::now();
         let lookahead_depth = self.prefetcher.wants_lookahead();
-        let mut total_access_ps: u128 = 0;
-        let mut last_llc_access: Ps = 0;
         // Fig 4e windowed hit-rate accounting.
-        let mut win_hits = 0u64;
-        let mut win_total = 0u64;
         const WIN: u64 = 2048;
 
         let update_every = self.cfg.coherence.device_update_every;
-        for i in 0..n {
+        for _ in 0..n {
+            let i = cur.index;
+            cur.index += 1;
             // Maintain the oracle lookahead (+1 for the current access).
             while self.lookahead.len() < lookahead_depth + 1 {
                 self.lookahead.push_back(source.next_access());
@@ -489,8 +703,8 @@ impl Runner {
                             &mut self.fill_scratch,
                         );
                     }
-                    win_hits += 1;
-                    win_total += 1;
+                    cur.win_hits += 1;
+                    cur.win_total += 1;
                 }
                 HitLevel::Memory => {
                     // Reflector first (ExPAND's host-side fast path).
@@ -527,8 +741,8 @@ impl Runner {
                                 &mut self.fill_scratch,
                             );
                         }
-                        win_hits += 1;
-                        win_total += 1;
+                        cur.win_hits += 1;
+                        cur.win_total += 1;
                     } else {
                         let mem_lat = match self.cfg.backing {
                             Backing::LocalDram => self.dram.read(a.line, now),
@@ -550,8 +764,16 @@ impl Runner {
                                 let idx = self.pool.route(a.line);
                                 let node = self.pool.node_of(idx);
                                 let down = self.fabric.path_latency(node, m2s_bytes(op));
-                                let service =
-                                    self.pool.ssd_mut(idx).serve_read(a.line, now + down);
+                                // Cross-host device-queue pressure rides
+                                // on top of this host's own service time
+                                // (epoch-quantized contention model). The
+                                // effect log records the raw occupancy
+                                // only — the penalty is waiting, not
+                                // service, and must not compound through
+                                // the next epoch's estimate.
+                                let raw = self.pool.ssd_mut(idx).serve_read(a.line, now + down);
+                                self.log_device_service(idx, raw);
+                                let service = raw + self.contention[idx];
                                 self.fabric.read_roundtrip(node, now, op, service)
                             }
                         };
@@ -598,7 +820,7 @@ impl Runner {
                                 &mut self.fill_scratch,
                             );
                         }
-                        win_total += 1;
+                        cur.win_total += 1;
                     }
                 }
             }
@@ -623,31 +845,40 @@ impl Runner {
                 self.events.push(f.arrives_at, f);
             }
             self.fill_scratch = fills;
-            total_access_ps += access_latency as u128;
+            cur.total_access_ps += access_latency as u128;
 
             // Series sampling.
             if self.collect_series && matches!(lk.level, HitLevel::Llc | HitLevel::Memory) {
-                let gap = self.core.now.saturating_sub(last_llc_access);
-                last_llc_access = self.core.now;
+                let gap = self.core.now.saturating_sub(cur.last_llc_access);
+                cur.last_llc_access = self.core.now;
                 if stats.llc_gap_series.len() < 20_000 {
-                    stats.llc_gap_series.push((i as u64, gap));
+                    stats.llc_gap_series.push((i, gap));
                 }
             }
-            if self.collect_series && win_total >= WIN {
+            if self.collect_series && cur.win_total >= WIN {
                 stats
                     .hit_rate_series
-                    .push((i as u64, win_hits as f64 / win_total as f64));
-                win_hits = 0;
-                win_total = 0;
+                    .push((i, cur.win_hits as f64 / cur.win_total as f64));
+                cur.win_hits = 0;
+                cur.win_total = 0;
             }
         }
 
-        stats.accesses = n as u64;
-        stats.wall_s = wall_start.elapsed().as_secs_f64();
+        stats.accesses += n as u64;
+        cur.wall_s += wall_start.elapsed().as_secs_f64();
+    }
+
+    /// Resolve the cumulative counters (core clocks, per-device rows,
+    /// coherence totals, prefetcher stats) into `stats`. Call once,
+    /// after the final segment — the sources are cumulative since
+    /// construction, so finalizing twice would not double-count, but
+    /// intermediate snapshots are not supported.
+    pub fn finalize(&mut self, stats: &mut RunStats, cur: &RunCursor) {
+        stats.wall_s = cur.wall_s;
         stats.instructions = self.core.insts;
         stats.exec_ps = self.core.now;
         stats.stall_ps = self.core.stall_ps;
-        stats.avg_access_ps = total_access_ps as f64 / n.max(1) as f64;
+        stats.avg_access_ps = cur.total_access_ps as f64 / (stats.accesses as f64).max(1.0);
         stats.ssd_internal_hit = self.pool.internal_hit_ratio();
         stats.per_device = self.pool.device_stats(&self.fabric);
         // Host-side coherence counters are kept per endpoint by the
@@ -678,7 +909,6 @@ impl Runner {
         stats.inferences = self.prefetcher.issue_stats().inferences;
         stats.inference_wall_ps = self.prefetcher.inference_ps();
         stats.debug = self.prefetcher.debug_stats();
-        stats
     }
 
     /// BI-directory coverage invariant: every line resident in the host
@@ -700,6 +930,12 @@ impl Runner {
         self.hierarchy.llc_contains(line)
     }
 
+    /// Lines currently resident in the host LLC (the multi-host engine's
+    /// shared-directory invariant check walks these).
+    pub fn llc_lines(&self) -> impl Iterator<Item = u64> + '_ {
+        self.hierarchy.llc_lines()
+    }
+
     /// Auditor counters so far (None when audit mode is off).
     pub fn audit_stats(&self) -> Option<crate::coherence::AuditStats> {
         self.auditor.as_ref().map(|a| a.stats)
@@ -711,13 +947,14 @@ impl Runner {
     }
 }
 
-/// Convenience: build + run in one call.
+/// Convenience: build + run in one call. Takes the caller's `Arc` by
+/// reference (refcount bump only — never a deep clone of the config).
 pub fn simulate(
-    cfg: &SimConfig,
+    cfg: &Arc<SimConfig>,
     runtime: Option<&Rc<Runtime>>,
     source: &mut dyn TraceSource,
 ) -> anyhow::Result<RunStats> {
-    simulate_arc(Arc::new(cfg.clone()), runtime, source)
+    simulate_arc(Arc::clone(cfg), runtime, source)
 }
 
 /// Build + run around a shared config (no deep clone — the sweep and
@@ -752,8 +989,8 @@ mod tests {
         local.backing = Backing::LocalDram;
         let mut src1 = WorkloadId::Pr.source(1);
         let mut src2 = WorkloadId::Pr.source(1);
-        let s_cxl = simulate(&cxl, None, &mut *src1).unwrap();
-        let s_local = simulate(&local, None, &mut *src2).unwrap();
+        let s_cxl = simulate(&Arc::new(cxl), None, &mut *src1).unwrap();
+        let s_local = simulate(&Arc::new(local), None, &mut *src2).unwrap();
         assert!(
             s_cxl.exec_ps > s_local.exec_ps,
             "cxl {} should exceed local {}",
@@ -770,8 +1007,8 @@ mod tests {
         pf.prefetcher = PrefetcherKind::Synthetic { accuracy: 1.0, coverage: 1.0 };
         let mut s1 = WorkloadId::Libquantum.source(2);
         let mut s2 = WorkloadId::Libquantum.source(2);
-        let none = simulate(&base, None, &mut *s1).unwrap();
-        let with = simulate(&pf, None, &mut *s2).unwrap();
+        let none = simulate(&Arc::new(base), None, &mut *s1).unwrap();
+        let with = simulate(&Arc::new(pf), None, &mut *s2).unwrap();
         assert!(
             with.exec_ps < none.exec_ps,
             "prefetch {} < none {}",
@@ -789,8 +1026,8 @@ mod tests {
         l4.cxl.switch_levels = 4;
         let mut s1 = WorkloadId::Tc.source(3);
         let mut s2 = WorkloadId::Tc.source(3);
-        let a = simulate(&l1, None, &mut *s1).unwrap();
-        let b = simulate(&l4, None, &mut *s2).unwrap();
+        let a = simulate(&Arc::new(l1), None, &mut *s1).unwrap();
+        let b = simulate(&Arc::new(l4), None, &mut *s2).unwrap();
         assert!(b.exec_ps > a.exec_ps, "level4 {} > level1 {}", b.exec_ps, a.exec_ps);
     }
 
@@ -823,7 +1060,7 @@ mod tests {
         cfg.prefetcher = PrefetcherKind::Expand;
         cfg.accesses = 60_000;
         let mut src = Strided { line: 1 << 30 };
-        let s = simulate(&cfg, None, &mut src).unwrap();
+        let s = simulate(&Arc::new(cfg), None, &mut src).unwrap();
         assert!(s.prefetch_issued > 0, "decider pushed prefetches");
         assert!(s.reflector_hits > 0, "reflector served hits: {s:?}");
     }
@@ -832,7 +1069,7 @@ mod tests {
     fn stats_are_internally_consistent() {
         let cfg = smoke_cfg();
         let mut src = WorkloadId::Cc.source(5);
-        let s = simulate(&cfg, None, &mut *src).unwrap();
+        let s = simulate(&Arc::new(cfg), None, &mut *src).unwrap();
         assert_eq!(
             s.accesses,
             s.l1_hits + s.l2_hits + s.llc_hits + s.llc_misses + s.reflector_hits
@@ -849,6 +1086,7 @@ mod tests {
         let mut cfg = smoke_cfg();
         cfg.cxl.topology =
             crate::config::TopologySpec::parse("(x,s(x),s(s(x)),s(s(s(x))))").unwrap();
+        let cfg = Arc::new(cfg);
         let mut src = WorkloadId::Pr.source(9);
         let mut r = Runner::new(&cfg, None).unwrap();
         let s = r.run(&mut *src, cfg.accesses);
@@ -881,7 +1119,7 @@ mod tests {
             cfg.cxl.topology = crate::config::TopologySpec::parse(spec).unwrap();
             cfg.cxl.interleave = crate::config::InterleavePolicy::Line;
             let mut src = WorkloadId::Tc.source(11);
-            simulate(&cfg, None, &mut *src).unwrap()
+            simulate(&Arc::new(cfg), None, &mut *src).unwrap()
         };
         let shallow = run_spec("(x,x)");
         let deep = run_spec("(x,s(s(s(x))))");
@@ -901,7 +1139,7 @@ mod tests {
         let cfg = smoke_cfg();
         let inner = WorkloadId::Pr.source(cfg.seed);
         let mut src = crate::workloads::mixed::WriteHeavy::new(inner, 0.3, cfg.seed);
-        let s = simulate(&cfg, None, &mut src).unwrap();
+        let s = simulate(&Arc::new(cfg), None, &mut src).unwrap();
         assert!(s.demand_writes > 0, "write breakdown reported: {s:?}");
         assert!(s.demand_reads > 0);
         assert_eq!(s.demand_reads + s.demand_writes, s.accesses);
@@ -916,7 +1154,7 @@ mod tests {
     fn read_only_runs_report_zero_writes() {
         let cfg = smoke_cfg();
         let mut src = WorkloadId::Libquantum.source(3);
-        let s = simulate(&cfg, None, &mut *src).unwrap();
+        let s = simulate(&Arc::new(cfg), None, &mut *src).unwrap();
         assert_eq!(s.demand_reads + s.demand_writes, s.accesses);
         // libquantum has a small natural write share; the breakdown must
         // match the trace, not be fabricated.
@@ -927,6 +1165,7 @@ mod tests {
     fn audited_write_heavy_run_is_consistent() {
         let mut cfg = smoke_cfg();
         cfg.coherence.audit = true;
+        let cfg = Arc::new(cfg);
         let inner = WorkloadId::Tc.source(cfg.seed);
         let mut src = crate::workloads::mixed::WriteHeavy::new(inner, 0.25, cfg.seed);
         let mut r = Runner::new(&cfg, None).unwrap();
@@ -946,7 +1185,7 @@ mod tests {
         cfg.cxl.topology = crate::config::TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
         cfg.accesses = 60_000;
         let mut src = Strided { line: 1 << 30 };
-        let s = simulate(&cfg, None, &mut src).unwrap();
+        let s = simulate(&Arc::new(cfg), None, &mut src).unwrap();
         assert_eq!(s.per_device.len(), 4);
         assert!(s.prefetch_issued > 0, "per-device deciders pushed prefetches: {s:?}");
         assert_eq!(

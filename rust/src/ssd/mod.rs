@@ -8,4 +8,4 @@ pub mod dram_cache;
 pub mod pool;
 
 pub use controller::CxlSsd;
-pub use pool::{endpoint_ssd_config, DevicePool, PoolEndpoint};
+pub use pool::{endpoint_ssd_config, pool_interleaver, DevicePool, Interleaver, PoolEndpoint};

@@ -60,6 +60,28 @@ pub struct Interleaver {
 }
 
 impl Interleaver {
+    /// Build the routing function directly from the policy, stripe
+    /// granularity and per-endpoint capacity weights. [`DevicePool::new`]
+    /// goes through here; the multi-host engine builds one standalone to
+    /// route cross-host effect-log lines without instantiating devices.
+    pub fn new(policy: InterleavePolicy, page_lines: u64, weights: &[u32]) -> Self {
+        // Weighted stripe slots, laid out round-robin (repeatedly cycle
+        // the endpoints, emitting each while it has weight left) so that
+        // equal weights degenerate to exact page round-robin — Capacity
+        // over a homogeneous pool routes identically to Page.
+        let mut stripes = Vec::new();
+        let mut remaining: Vec<u32> = weights.iter().map(|&w| w.max(1)).collect();
+        while remaining.iter().any(|&r| r > 0) {
+            for (i, r) in remaining.iter_mut().enumerate() {
+                if *r > 0 {
+                    *r -= 1;
+                    stripes.push(i as u32);
+                }
+            }
+        }
+        Interleaver { policy, page_lines: page_lines.max(1), stripes, endpoints: weights.len() }
+    }
+
     /// Route a line address to its owning endpoint (total and
     /// deterministic: every address maps to exactly one endpoint).
     pub fn route(&self, line: u64) -> usize {
@@ -73,6 +95,23 @@ impl Interleaver {
             }
         }
     }
+}
+
+/// Build the routing function a [`DevicePool`] over `topo` would use,
+/// without instantiating any device state. The multi-host engine uses
+/// this to resolve effect-log lines to endpoints at epoch barriers; it
+/// must agree exactly with every shard pool's own routing.
+pub fn pool_interleaver(
+    topo: &crate::cxl::Topology,
+    base: &SsdConfig,
+    policy: InterleavePolicy,
+) -> Interleaver {
+    let weights: Vec<u32> = topo
+        .ssds()
+        .iter()
+        .map(|&n| topo.nodes[n].media.unwrap_or(base.media).capacity_weight())
+        .collect();
+    Interleaver::new(policy, (base.page_bytes / 64) as u64, &weights)
 }
 
 /// The pool: every endpoint of the enumerated fabric plus the routing
@@ -110,26 +149,8 @@ impl DevicePool {
                 directory: BiDirectory::new(coherence.dir_entries, coherence.dir_ways),
             });
         }
-        // Weighted stripe slots, laid out round-robin (repeatedly cycle
-        // the endpoints, emitting each while it has weight left) so that
-        // equal weights degenerate to exact page round-robin — Capacity
-        // over a homogeneous pool routes identically to Page.
-        let mut stripes = Vec::new();
-        let mut remaining: Vec<u32> = endpoints.iter().map(|ep| ep.weight.max(1)).collect();
-        while remaining.iter().any(|&r| r > 0) {
-            for (i, r) in remaining.iter_mut().enumerate() {
-                if *r > 0 {
-                    *r -= 1;
-                    stripes.push(i as u32);
-                }
-            }
-        }
-        let router = Interleaver {
-            policy,
-            page_lines: (base.page_bytes / 64).max(1) as u64,
-            stripes,
-            endpoints: endpoints.len(),
-        };
+        let weights: Vec<u32> = endpoints.iter().map(|ep| ep.weight).collect();
+        let router = Interleaver::new(policy, (base.page_bytes / 64) as u64, &weights);
         Ok(DevicePool { endpoints, router })
     }
 

@@ -275,6 +275,83 @@ pub fn parse(text: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// Escape a string for JSON output.
+fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn render_into(out: &mut String, v: &Json, indent: usize) {
+    let pad = "  ".repeat(indent);
+    let pad_in = "  ".repeat(indent + 1);
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => {
+            // Integers print without a fraction; everything else keeps
+            // enough digits to round-trip through `parse`.
+            if x.fract() == 0.0 && x.abs() < 9e15 {
+                out.push_str(&(*x as i64).to_string());
+            } else {
+                out.push_str(&x.to_string());
+            }
+        }
+        Json::Str(s) => escape_into(out, s),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                out.push_str(&pad_in);
+                render_into(out, item, indent + 1);
+                out.push_str(if i + 1 == items.len() { "\n" } else { ",\n" });
+            }
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, val)) in map.iter().enumerate() {
+                out.push_str(&pad_in);
+                escape_into(out, k);
+                out.push_str(": ");
+                render_into(out, val, indent + 1);
+                out.push_str(if i + 1 == map.len() { "\n" } else { ",\n" });
+            }
+            out.push_str(&pad);
+            out.push('}');
+        }
+    }
+}
+
+/// Render a JSON document (pretty, 2-space indent, object keys in
+/// `BTreeMap` order). `parse(&render(v)) == v` for every value this
+/// module can represent — the bench harness uses this to rewrite
+/// tracked baseline files without dropping hand-recorded annotations.
+pub fn render(v: &Json) -> String {
+    let mut out = String::new();
+    render_into(&mut out, v, 0);
+    out.push('\n');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,5 +401,22 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let cases = [
+            r#"{"b": 1, "a": [true, null, "x\ny"], "c": {"n": 2.5}}"#,
+            r#"[1, -3, 1601281, 0.000125, "quote\" and \\ backslash"]"#,
+            r#"{}"#,
+            r#"[]"#,
+        ];
+        for text in cases {
+            let v = parse(text).unwrap();
+            let rendered = render(&v);
+            assert_eq!(parse(&rendered).unwrap(), v, "round trip failed for {text}");
+        }
+        // Integral floats render without a fraction.
+        assert_eq!(render(&Json::Num(1601281.0)), "1601281\n");
     }
 }

@@ -8,3 +8,9 @@ pub mod stats;
 
 pub use linemap::{LineMap, LineSet};
 pub use rng::Rng;
+
+/// Available hardware parallelism (1 if the platform cannot say). The
+/// default for `figures all --jobs` and the multi-host `--threads`.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

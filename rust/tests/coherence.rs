@@ -9,6 +9,7 @@ use expand_cxl::config::{presets, PrefetcherKind, SimConfig, TopologySpec};
 use expand_cxl::sim::runner::Runner;
 use expand_cxl::workloads::mixed::{MixedTrace, WriteHeavy};
 use expand_cxl::workloads::{Access, TraceSource, WorkloadId};
+use std::sync::Arc;
 
 /// Cycle over a fixed set of lines (read-only) so tests know exactly
 /// which lines the host caches.
@@ -41,7 +42,7 @@ fn audited_cfg(topology: &str) -> SimConfig {
 #[test]
 fn device_update_then_demand_read_returns_new_value() {
     for topology in ["chain", "tree:2,2,4"] {
-        let cfg = audited_cfg(topology);
+        let cfg = Arc::new(audited_cfg(topology));
         let mut r = Runner::new(&cfg, None).unwrap();
         let lines: Vec<u64> = (0..64u64).map(|i| (1 << 30) + i * 7).collect();
         let target = lines[0];
@@ -80,7 +81,7 @@ fn device_update_then_demand_read_returns_new_value() {
 /// A device update to a line the host never cached needs no snoop.
 #[test]
 fn device_update_of_uncached_line_is_snoop_free() {
-    let cfg = audited_cfg("chain");
+    let cfg = Arc::new(audited_cfg("chain"));
     let mut r = Runner::new(&cfg, None).unwrap();
     let mut src = Cyclic { lines: (0..32).map(|i| 500 + i).collect(), i: 0 };
     r.run(&mut src, 1_000);
@@ -108,6 +109,7 @@ fn write_heavy_mixed_on_4ssd_tree_is_consistent() {
         &[WorkloadId::Pr, WorkloadId::Tc, WorkloadId::Cc, WorkloadId::Libquantum],
         cfg.seed,
     );
+    let cfg = Arc::new(cfg);
     let mut src = WriteHeavy::new(Box::new(mixed), 0.3, cfg.seed);
     let mut r = Runner::new(&cfg, None).unwrap();
     let s = r.run(&mut src, cfg.accesses);
@@ -146,6 +148,7 @@ fn read_only_expand_run_stays_clean_under_audit() {
     cfg.coherence.audit = true;
     cfg.prefetcher = PrefetcherKind::Expand;
     cfg.accesses = 30_000;
+    let cfg = Arc::new(cfg);
     let mut r = Runner::new(&cfg, None).unwrap();
     let mut src = Cyclic { lines: (0..20_000u64).map(|i| (1 << 20) + i * 2).collect(), i: 0 };
     let s = r.run(&mut src, cfg.accesses);

@@ -8,6 +8,7 @@ use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig,
 use expand_cxl::sim::runner::simulate;
 use expand_cxl::workloads::mixed::PhaseTrace;
 use expand_cxl::workloads::WorkloadId;
+use std::sync::Arc;
 
 fn cfg() -> SimConfig {
     let mut c = presets::smoke();
@@ -17,7 +18,7 @@ fn cfg() -> SimConfig {
 
 fn run(c: &SimConfig, id: WorkloadId) -> expand_cxl::metrics::RunStats {
     let mut src = id.source(c.seed);
-    simulate(c, None, &mut *src).unwrap()
+    simulate(&Arc::new(c.clone()), None, &mut *src).unwrap()
 }
 
 #[test]
@@ -29,10 +30,10 @@ fn locality_gap_shrinks_with_spatial_locality() {
         let mut c_local = cfg();
         c_local.backing = Backing::LocalDram;
         let mut src = ApexMap::with_default_mem(Rng::new(1), alpha, l);
-        let local = simulate(&c_local, None, &mut src).unwrap();
+        let local = simulate(&Arc::new(c_local), None, &mut src).unwrap();
         let c_cxl = cfg();
         let mut src = ApexMap::with_default_mem(Rng::new(1), alpha, l);
-        let cxl = simulate(&c_cxl, None, &mut src).unwrap();
+        let cxl = simulate(&Arc::new(c_cxl), None, &mut src).unwrap();
         cxl.exec_ps as f64 / local.exec_ps as f64
     };
     let low_loc = gap(1.0, 4);
@@ -127,7 +128,7 @@ fn phase_trace_alternates_and_completes() {
     c.prefetcher = PrefetcherKind::Expand;
     c.accesses = 40_000;
     let mut src = PhaseTrace::new(WorkloadId::Sssp, WorkloadId::Tc, 10_000, 7);
-    let s = simulate(&c, None, &mut src).unwrap();
+    let s = simulate(&Arc::new(c), None, &mut src).unwrap();
     assert_eq!(s.accesses, 40_000);
     assert!(s.exec_ps > 0);
 }

@@ -288,7 +288,7 @@ fn prop_pool_roundtrip_traffic_sums_to_total_across_random_trees() {
             InterleavePolicy::Capacity,
         ]);
         let mut src = WorkloadId::Pr.source(cfg.seed);
-        let s = simulate(&cfg, None, &mut *src).unwrap();
+        let s = simulate(&std::sync::Arc::new(cfg), None, &mut *src).unwrap();
         // Every demand miss round-trips through exactly one endpoint, so
         // per-device service counts sum to the run's miss total...
         let reads: u64 = s.per_device.iter().map(|d| d.demand_reads).sum();
@@ -353,6 +353,7 @@ fn prop_bi_directory_invariant_under_random_traffic() {
             InterleavePolicy::Page,
             InterleavePolicy::Capacity,
         ]);
+        let cfg = std::sync::Arc::new(cfg);
         let mut r = Runner::new(&cfg, None).unwrap();
         let mut src = RandTrace { rng: Rng::new(cfg.seed), working_set: 200_000 };
         let s = r.run(&mut src, 20_000);
@@ -709,6 +710,7 @@ fn prop_runner_stats_identical_across_rebuilds_chain_and_tree() {
         cfg.prefetcher = PrefetcherKind::Expand;
         cfg.coherence.audit = true;
         cfg.cxl.topology = TopologySpec::parse(spec).unwrap();
+        let cfg = std::sync::Arc::new(cfg);
         let mut r = Runner::new(&cfg, None).unwrap();
         let mut stats = if write_boost > 0.0 {
             let inner = WorkloadId::Pr.source(cfg.seed);
@@ -735,6 +737,176 @@ fn prop_runner_stats_identical_across_rebuilds_chain_and_tree() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-host engine (ISSUE 4): thread-count invariance of the
+// epoch-quantized parallel engine, and the multi-sharer BI directory's
+// snoop-every-sharer contract.
+// ---------------------------------------------------------------------------
+
+/// The parallel engine must be bit-deterministic: identical per-host
+/// and aggregate `RunStats` — coherence counters included — for
+/// `--threads 1`, `2` and `4`, on chain and tree:2,2,4, with 1, 2 and
+/// 4 hosts. Thread assignment may only change wall clock.
+#[test]
+fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
+    use expand_cxl::workloads::WorkloadId;
+
+    for spec in ["chain", "tree:2,2,4"] {
+        for hosts in [1usize, 2, 4] {
+            let mut cfg = presets::smoke();
+            cfg.accesses = 8_000;
+            cfg.seed = 0xFA57 ^ hosts as u64;
+            cfg.prefetcher = PrefetcherKind::Expand;
+            cfg.cxl.topology = TopologySpec::parse(spec).unwrap();
+            let cfg = std::sync::Arc::new(cfg);
+            let mut prints: Vec<(usize, String)> = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let opts =
+                    MultiHostOpts { hosts, threads, epoch_accesses: 1024, artifacts: None };
+                let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
+                assert!(s.bi_invariant, "spec {spec} hosts {hosts} threads {threads}");
+                assert_eq!(s.per_host.len(), hosts);
+                assert_eq!(s.aggregate.accesses, (hosts * 8_000) as u64);
+                prints.push((threads, s.fingerprint()));
+            }
+            for w in prints.windows(2) {
+                assert_eq!(
+                    w[0].1, w[1].1,
+                    "spec {spec} hosts {hosts}: threads {} vs {} diverge",
+                    w[0].0, w[1].0
+                );
+            }
+        }
+    }
+}
+
+/// Reference multi-sharer directory: per-set LRU lists of
+/// `(line, sharer mask)`, most-recent last — the obviously-correct
+/// semantics the bitmask snoop filter must match.
+struct NaiveSharerDirectory {
+    sets: Vec<Vec<(u64, u64)>>,
+    ways: usize,
+}
+
+impl NaiveSharerDirectory {
+    fn new(sets: usize, ways: usize) -> Self {
+        NaiveSharerDirectory { sets: vec![Vec::new(); sets], ways }
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        let h = line.wrapping_mul(0xA24B_AED4_963E_E407) >> 21;
+        (h % self.sets.len() as u64) as usize
+    }
+
+    fn grant_for(&mut self, line: u64, host: usize) -> Option<(u64, u64)> {
+        let s = self.set_of(line);
+        if let Some(pos) = self.sets[s].iter().position(|&(l, _)| l == line) {
+            let (l, m) = self.sets[s].remove(pos);
+            self.sets[s].push((l, m | 1 << host));
+            return None;
+        }
+        let displaced = if self.sets[s].len() == self.ways {
+            Some(self.sets[s].remove(0))
+        } else {
+            None
+        };
+        self.sets[s].push((line, 1 << host));
+        displaced
+    }
+
+    fn revoke_for(&mut self, line: u64, host: usize) -> bool {
+        let s = self.set_of(line);
+        if let Some(pos) = self.sets[s].iter().position(|&(l, _)| l == line) {
+            let bit = 1u64 << host;
+            if self.sets[s][pos].1 & bit == 0 {
+                return false;
+            }
+            self.sets[s][pos].1 &= !bit;
+            if self.sets[s][pos].1 == 0 {
+                self.sets[s].remove(pos);
+            }
+            return true;
+        }
+        false
+    }
+
+    fn sharers(&self, line: u64) -> u64 {
+        let s = self.set_of(line);
+        self.sets[s].iter().find(|&&(l, _)| l == line).map(|&(_, m)| m).unwrap_or(0)
+    }
+}
+
+/// ISSUE 4 invariant: a displaced directory entry's snoop must reach
+/// *every* sharer in the bitmask — the returned mask equals exactly the
+/// set of hosts granted the line and never revoked. Differential
+/// against the naive reference plus an independently-tracked resident
+/// map, under random multi-host grant/revoke traffic.
+#[test]
+fn prop_multi_sharer_directory_matches_reference_and_snoops_all_sharers() {
+    use expand_cxl::coherence::BiDirectory;
+    use std::collections::HashMap;
+    forall(30, |rng, seed| {
+        let ways = 1 + rng.below(4) as usize;
+        let sets = 1 << rng.below(4);
+        let mut fast = BiDirectory::new(sets * ways, ways);
+        let mut naive = NaiveSharerDirectory::new(sets, ways);
+        let mut resident: HashMap<u64, u64> = HashMap::new();
+        for step in 0..3_000 {
+            let line = rng.below(sets as u64 * ways as u64 * 3);
+            let host = rng.below(4) as usize;
+            if rng.chance(0.65) {
+                let d_fast = fast.grant_for(line, host);
+                let d_naive = naive.grant_for(line, host);
+                assert_eq!(
+                    d_fast, d_naive,
+                    "seed {seed} step {step} grant_for({line}, {host})"
+                );
+                *resident.entry(line).or_insert(0) |= 1 << host;
+                if let Some((victim, mask)) = d_fast {
+                    let expect = resident.remove(&victim).unwrap_or(0);
+                    assert_eq!(
+                        mask, expect,
+                        "seed {seed} step {step}: displaced {victim} must name every \
+                         granted-and-unrevoked sharer"
+                    );
+                    assert_ne!(mask, 0, "seed {seed}: a tracked victim has sharers");
+                }
+            } else {
+                let r_fast = fast.revoke_for(line, host);
+                assert_eq!(
+                    r_fast,
+                    naive.revoke_for(line, host),
+                    "seed {seed} step {step} revoke_for({line}, {host})"
+                );
+                if let Some(m) = resident.get_mut(&line) {
+                    *m &= !(1u64 << host);
+                    if *m == 0 {
+                        resident.remove(&line);
+                    }
+                }
+            }
+            assert_eq!(
+                fast.sharers(line),
+                naive.sharers(line),
+                "seed {seed} step {step} sharers({line})"
+            );
+        }
+        // Final coverage: the directory tracks exactly the resident map.
+        for (&line, &mask) in &resident {
+            assert_eq!(fast.sharers(line), mask, "seed {seed}: final sharers of {line}");
+            for h in 0..4 {
+                assert_eq!(
+                    fast.contains_host(line, h),
+                    mask & (1 << h) != 0,
+                    "seed {seed}: contains_host({line}, {h})"
+                );
+            }
+        }
+    });
 }
 
 #[test]
