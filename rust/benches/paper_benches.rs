@@ -1,9 +1,11 @@
 //! Paper benches: one end-to-end bench per table/figure family, the
-//! micro-benches used by the §Perf optimization log, and two tracked
+//! micro-benches used by the §Perf optimization log, and three tracked
 //! throughput groups — `runner_throughput` (four single-host scenarios,
-//! `BENCH_PR3.json`) and `multi_host_scaling` (the epoch-quantized
-//! multi-host engine at 1 vs 4 worker threads, `BENCH_PR4.json`). CI
-//! fails on >20% regression against either committed baseline.
+//! `BENCH_PR3.json`), `multi_host_scaling` (the epoch-quantized
+//! multi-host engine at 1 vs 4 worker threads, `BENCH_PR4.json`) and
+//! `trace_replay` (trace capture/replay vs synthetic generation,
+//! `BENCH_PR5.json`). CI fails on >20% regression against any
+//! committed baseline.
 //!
 //! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Flags
 //! after the filter:
@@ -13,6 +15,9 @@
 //!   --mh-json-out PATH   write multi_host_scaling results as JSON
 //!                        (default ../BENCH_PR4.json when seeding)
 //!   --mh-check PATH      gate multi_host_scaling against a baseline
+//!   --tr-json-out PATH   write trace_replay results as JSON
+//!                        (default ../BENCH_PR5.json when seeding)
+//!   --tr-check PATH      gate trace_replay against a baseline
 //!   --max-regress F      allowed fractional regression (default 0.20)
 //! Baseline rewrites preserve hand-recorded annotations (`note`,
 //! pre-PR reference numbers) and stamp the measuring `machine`
@@ -26,7 +31,8 @@ use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig,
 use expand_cxl::config::{InterleavePolicy, TopologySpec};
 use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
 use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
-use expand_cxl::sim::runner::simulate;
+use expand_cxl::sim::runner::{simulate, Runner};
+use expand_cxl::trace::{write_trace, TraceReplay};
 use expand_cxl::util::json::{self, Json};
 use expand_cxl::util::Rng;
 use expand_cxl::workloads::apexmap::ApexMap;
@@ -57,6 +63,8 @@ struct BenchArgs {
     check: Option<String>,
     mh_json_out: Option<String>,
     mh_check: Option<String>,
+    tr_json_out: Option<String>,
+    tr_check: Option<String>,
     max_regress: f64,
 }
 
@@ -67,6 +75,8 @@ fn parse_args() -> BenchArgs {
         check: None,
         mh_json_out: None,
         mh_check: None,
+        tr_json_out: None,
+        tr_check: None,
         max_regress: 0.20,
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -86,6 +96,10 @@ fn parse_args() -> BenchArgs {
             out.mh_json_out = take_value(&mut i);
         } else if a.starts_with("--mh-check") {
             out.mh_check = take_value(&mut i);
+        } else if a.starts_with("--tr-json-out") {
+            out.tr_json_out = take_value(&mut i);
+        } else if a.starts_with("--tr-check") {
+            out.tr_check = take_value(&mut i);
         } else if a.starts_with("--check") {
             out.check = take_value(&mut i);
         } else if a.starts_with("--max-regress") {
@@ -270,6 +284,7 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             threads,
             epoch_accesses: 4096,
             artifacts: None,
+            record: false,
         };
         let total = (base.accesses * HOSTS) as u64;
         let t = measure_throughput(&full, total, ITERS, || {
@@ -294,6 +309,60 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
         );
     }
     (results, speedup)
+}
+
+/// The `trace_replay` group (tracked in `BENCH_PR5.json`): trace
+/// subsystem throughput on the chain ExPAND scenario. Three scenarios
+/// share one configuration — synthetic generation (the reference every
+/// trace-driven run competes with), record (the same run with capture
+/// enabled plus the binary write), and replay (open + decode + replay
+/// from the file). Replay has no generation cost, so it is expected to
+/// be at least as fast as synthetic generation.
+fn trace_replay(b: &Bench) -> Vec<Throughput> {
+    const ITERS: usize = 5;
+    let mut results = Vec::new();
+    let base = {
+        let mut c = cfg();
+        c.prefetcher = PrefetcherKind::Expand;
+        std::sync::Arc::new(c)
+    };
+    let path = std::env::temp_dir()
+        .join(format!("expand_bench_{}.trace", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let record_once = || {
+        let mut r = Runner::new(&base, None).unwrap();
+        r.enable_recording();
+        let mut src = WorkloadId::Pr.source(base.seed);
+        let stats = r.run(&mut *src, base.accesses);
+        write_trace(&path, &stats.workload, base.seed, &[r.take_recording()]).unwrap();
+    };
+
+    let gen_name = "trace_replay_synthetic_gen";
+    if b.enabled(gen_name) {
+        results.push(measure_throughput(gen_name, base.accesses as u64, ITERS, || {
+            let mut src = WorkloadId::Pr.source(base.seed);
+            simulate(&base, None, &mut *src).unwrap();
+        }));
+    }
+    let rec_name = "trace_replay_record";
+    if b.enabled(rec_name) {
+        results.push(measure_throughput(rec_name, base.accesses as u64, ITERS, || {
+            record_once();
+        }));
+    }
+    let rep_name = "trace_replay_replay";
+    if b.enabled(rep_name) {
+        if !std::path::Path::new(&path).exists() {
+            record_once(); // setup only (the record scenario was filtered out)
+        }
+        results.push(measure_throughput(rep_name, base.accesses as u64, ITERS, || {
+            let mut src = TraceReplay::open(&path).unwrap();
+            simulate(&base, None, &mut src).unwrap();
+        }));
+    }
+    let _ = std::fs::remove_file(&path);
+    results
 }
 
 fn main() {
@@ -422,7 +491,19 @@ fn main() {
             }
         },
     );
-    if !ok_rt || !ok_mh {
+
+    // --- End-to-end: trace_replay group (tracked baseline) --------------
+    let tr = trace_replay(&b);
+    let ok_tr = publish_group(
+        "trace_replay",
+        &tr,
+        opts.tr_json_out.as_ref(),
+        opts.tr_check.as_ref(),
+        "../BENCH_PR5.json",
+        opts.max_regress,
+        |_| {},
+    );
+    if !ok_rt || !ok_mh || !ok_tr {
         std::process::exit(1);
     }
 
@@ -463,6 +544,6 @@ fn main() {
     println!(
         "\n{} benches + {} throughput scenarios completed",
         b.results.len(),
-        throughput.len() + mh.len()
+        throughput.len() + mh.len() + tr.len()
     );
 }

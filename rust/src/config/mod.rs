@@ -513,6 +513,10 @@ pub struct SimConfig {
     pub epoch_accesses: usize,
     /// Multi-host worker threads (0 = all available cores).
     pub threads: usize,
+    /// Default workload spec (`[sim] workload = "pr"` or
+    /// `"trace:<path>"`); the CLI positional / `--workload` overrides
+    /// it. `None` means the CLI must name one.
+    pub workload: Option<String>,
 }
 
 impl Default for SimConfig {
@@ -533,6 +537,7 @@ impl Default for SimConfig {
             hosts: 1,
             epoch_accesses: 8192,
             threads: 0,
+            workload: None,
         }
     }
 }
@@ -590,6 +595,13 @@ impl SimConfig {
             ("sim", "epoch_accesses") => self.epoch_accesses = num!(),
             ("sim", "threads") => self.threads = num!(),
             ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
+            ("sim", "workload") => {
+                // Validate eagerly (bad names fail at config time, with
+                // the full list of valid choices); trace paths are only
+                // opened when a run starts.
+                crate::workloads::WorkloadSpec::parse(v)?;
+                self.workload = Some(v.to_string());
+            }
             ("sim", "prefetcher") => self.prefetcher = PrefetcherKind::parse(v)?,
             ("sim", "backing") => {
                 self.backing = match v {
@@ -616,7 +628,7 @@ impl SimConfig {
              notify_stride={}\n\
              [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x} hosts={} \
-             epoch_accesses={} threads={}",
+             epoch_accesses={} threads={} workload={}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
             self.cpu.mshrs,
             self.hierarchy.l1d.size_bytes >> 10, self.hierarchy.l1d.ways,
@@ -638,6 +650,7 @@ impl SimConfig {
             self.coherence.device_update_every, self.coherence.audit,
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
             self.hosts, self.epoch_accesses, self.threads,
+            self.workload.as_deref().unwrap_or("-"),
         )
     }
 }
@@ -743,6 +756,21 @@ mod tests {
         assert!(c.render().contains("hosts=4"));
         assert!(c.render().contains("epoch_accesses=2048"));
         assert!(c.apply("sim", "hosts", "abc").is_err());
+    }
+
+    #[test]
+    fn workload_key_validates_and_renders() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.workload, None, "no default workload");
+        assert!(c.render().contains("workload=-"));
+        c.apply("sim", "workload", "pr").unwrap();
+        assert_eq!(c.workload.as_deref(), Some("pr"));
+        c.apply("sim", "workload", "trace:/tmp/run.trace").unwrap();
+        assert_eq!(c.workload.as_deref(), Some("trace:/tmp/run.trace"));
+        assert!(c.render().contains("workload=trace:/tmp/run.trace"));
+        let err = c.apply("sim", "workload", "bogus").unwrap_err().to_string();
+        assert!(err.contains("libquantum"), "lists valid names: {err}");
+        assert_eq!(c.workload.as_deref(), Some("trace:/tmp/run.trace"), "bad value rejected");
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod sweep;
 pub mod table1;
+pub mod tracefig;
 
 use crate::config::SimConfig;
 use crate::metrics::{RunStats, Table};
@@ -26,6 +27,9 @@ pub struct FigOpts {
     pub artifacts: Option<String>,
     /// Output directory for CSVs.
     pub out_dir: String,
+    /// Trace file for the trace-driven harness (`figures trace
+    /// --trace FILE`); unused by the paper figures.
+    pub trace: Option<String>,
 }
 
 impl Default for FigOpts {
@@ -35,6 +39,7 @@ impl Default for FigOpts {
             seed: 0xE7A5D,
             artifacts: Some("artifacts".to_string()),
             out_dir: "results".to_string(),
+            trace: None,
         }
     }
 }
@@ -148,6 +153,11 @@ pub fn run_one(name: &str, opts: &FigOpts) -> anyhow::Result<()> {
     }
     match name {
         "fig5a" | "fig5b" => fig5::run(opts),
-        other => anyhow::bail!("unknown figure {other:?} (try fig1..fig7b, table1c, table1d, all)"),
+        // Trace-driven comparison: needs --trace FILE, so it is not part
+        // of `all` (which must run from a clean checkout).
+        "trace" => tracefig::run(opts),
+        other => anyhow::bail!(
+            "unknown figure {other:?} (try fig1..fig7b, table1c, table1d, trace, all)"
+        ),
     }
 }

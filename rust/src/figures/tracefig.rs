@@ -1,0 +1,95 @@
+//! Trace-driven prefetcher comparison (`figures trace --trace FILE`).
+//!
+//! The paper-figure analogue for recorded/imported workloads: replay
+//! one `CXTR` trace under every prefetcher and report speedup over
+//! NoPrefetch plus hit-rate/MPKI, so external access streams (ChampSim
+//! or CSV imports, or `--record`ed runs) slot into the same comparison
+//! the synthetic workloads get in Fig 4a.
+
+use super::{emit, FigOpts};
+use crate::config::PrefetcherKind;
+use crate::metrics::Table;
+use crate::trace::SharedTrace;
+
+const COMPARED: [PrefetcherKind; 5] = [
+    PrefetcherKind::Rule1,
+    PrefetcherKind::Rule2,
+    PrefetcherKind::Ml1,
+    PrefetcherKind::Ml2,
+    PrefetcherKind::Expand,
+];
+
+pub fn run(opts: &FigOpts) -> anyhow::Result<()> {
+    let path = opts
+        .trace
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("figures trace needs --trace <file.trace>"))?;
+    let rt = opts.runtime();
+    // Decode the file once; each cell gets a fresh shard cut from the
+    // shared records (sources are stateful and must start from the top).
+    let shared = SharedTrace::open(path)?;
+    let label = shared.header().workload.clone();
+    let mut table = Table::new(
+        &format!("Trace compare: {label} ({path})"),
+        &["speedup", "llc_hit_pct", "mpki"],
+    );
+    let mut base_src = shared.shard(0, 1)?;
+    let base = super::run_sim_source(opts, rt.as_ref(), &mut base_src, |c| {
+        c.prefetcher = PrefetcherKind::None;
+    })?;
+    table.row(
+        "NoPrefetch",
+        vec![1.0, base.llc_hit_ratio() * 100.0, base.mpki()],
+    );
+    for kind in COMPARED {
+        let mut src = shared.shard(0, 1)?;
+        let k = kind.clone();
+        let s = super::run_sim_source(opts, rt.as_ref(), &mut src, move |c| {
+            c.prefetcher = k;
+        })?;
+        table.row(
+            kind.name(),
+            vec![s.speedup_over(&base), s.llc_hit_ratio() * 100.0, s.mpki()],
+        );
+    }
+    emit(&table, opts, "trace_compare")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::write_trace;
+    use crate::workloads::{TraceSource, WorkloadId};
+
+    #[test]
+    fn trace_figure_runs_on_a_recorded_stream() {
+        let path = std::env::temp_dir()
+            .join(format!("cxtr_fig_{}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let mut src = WorkloadId::Libquantum.source(3);
+        let stream: Vec<_> = (0..5_000).map(|_| src.next_access()).collect();
+        write_trace(&path, "libquantum", 3, &[stream]).unwrap();
+
+        let out = std::env::temp_dir()
+            .join(format!("cxtr_fig_out_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let opts = FigOpts {
+            accesses: 4_000,
+            artifacts: None,
+            out_dir: out.clone(),
+            trace: Some(path.clone()),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let csv = std::fs::read_to_string(format!("{out}/trace_compare.csv")).unwrap();
+        assert!(csv.starts_with("label,speedup,llc_hit_pct,mpki"));
+        assert!(csv.contains("NoPrefetch") && csv.contains("ExPAND"), "{csv}");
+
+        let missing = FigOpts { artifacts: None, ..Default::default() };
+        assert!(run(&missing).is_err(), "no --trace must be a named error");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+}

@@ -27,5 +27,6 @@ pub mod prefetch;
 pub mod runtime;
 pub mod sim;
 pub mod ssd;
+pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run        simulate one workload/prefetcher configuration
+//!   trace      record / replay / inspect / import binary access traces
 //!   figures    regenerate paper figures/tables (fig1..fig7b, table1c/d, all)
 //!   enumerate  walk the CXL fabric: bus numbers, depths, DSLBIS, e2e latency
 //!   config     show the effective configuration for a preset/overrides
@@ -14,35 +15,48 @@ use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
 use expand_cxl::figures::{self, FigOpts};
 use expand_cxl::runtime::Runtime;
-use expand_cxl::sim::parallel::{host_seed, run_multi_host, MultiHostOpts};
-use expand_cxl::sim::runner::simulate;
+use expand_cxl::sim::parallel::{host_seed, run_multi_host_traced, MultiHostOpts};
+use expand_cxl::sim::runner::Runner;
 use expand_cxl::ssd::DevicePool;
+use expand_cxl::trace::{import_file, write_trace, ImportFormat, SharedTrace, TraceReader};
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
 use expand_cxl::util::default_parallelism;
-use expand_cxl::workloads::WorkloadId;
+use expand_cxl::workloads::{TraceSource, WorkloadSpec};
 use std::sync::Arc;
 
 const COMMANDS: &[CommandHelp] = &[
     CommandHelp {
         name: "run",
         summary: "simulate one workload under a chosen prefetcher",
-        usage: "expand run <workload> [--prefetcher none|rule1|rule2|ml1|ml2|expand] \
+        usage: "expand run <workload|trace:<path>> [--workload SPEC] [--record PATH] \
+                [--prefetcher none|rule1|rule2|ml1|ml2|expand] \
                 [--levels N] [--topology chain|tree:L,F,S|'(s(x,x),x)'] \
                 [--interleave line|page|capacity] [--media znand|pmem|dram] \
                 [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
                 [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
                 [--hosts N] [--threads N] [--epoch N]   (hosts>1 runs the \
-                deterministic epoch-quantized multi-host engine: N host shards \
-                share the pool, --threads workers (default: all cores), --epoch \
-                accesses per host per barrier quantum)",
+                deterministic epoch-quantized multi-host engine; --record \
+                captures every host's access stream into a replayable trace; \
+                trace:<path> replays one)",
+    },
+    CommandHelp {
+        name: "trace",
+        summary: "record, replay, inspect or import binary access traces",
+        usage: "expand trace record <workload> --out PATH [run options...] | \
+                trace replay <path> [run options...] | \
+                trace info <path> | \
+                trace convert <in> <out.trace> [--format champsim|csv] \
+                [--workload NAME] [--seed S]",
     },
     CommandHelp {
         name: "figures",
         summary: "regenerate paper figures/tables",
         usage: "expand figures <fig1|fig2a|fig2b|fig2c|fig4a|fig4b|fig4c|fig4d|fig4e|\
                 fig5|fig6|fig7a|fig7b|table1c|table1d|all> [--jobs N (default: all \
-                cores)] [--accesses N] [--out DIR] [--no-artifacts]",
+                cores)] [--accesses N] [--out DIR] [--no-artifacts]   (also: \
+                `figures trace --trace FILE` compares every prefetcher on a \
+                recorded trace)",
     },
     CommandHelp {
         name: "enumerate",
@@ -108,13 +122,41 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let workload = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow::anyhow!("run: missing <workload> (try: expand run tc)"))?;
-    let id = WorkloadId::parse(workload)?;
+/// Shared body of `run`, `trace record` and `trace replay`: resolve the
+/// workload spec (explicit argument > `--workload` > `[sim] workload`),
+/// simulate — single-host or multi-host engine — print the summary plus
+/// a deterministic `fingerprint=` line, and persist the captured trace
+/// when `record` names a path.
+fn run_spec(
+    args: &Args,
+    positional_workload: Option<&str>,
+    record: Option<&str>,
+) -> anyhow::Result<()> {
+    // A value-less `--record` parses as a bare flag: the run would
+    // silently complete without writing anything, and the capture would
+    // be discovered lost only at replay time. Same guard for
+    // `--workload`, which would otherwise fall back to the positional
+    // or config default.
+    anyhow::ensure!(
+        record.is_some() || !args.flag("record"),
+        "--record needs a path (e.g. --record /tmp/run.trace)"
+    );
+    anyhow::ensure!(
+        args.get("workload").is_some() || !args.flag("workload"),
+        "--workload needs a value (a workload name or trace:<path>)"
+    );
     let cfg = Arc::new(build_config(args)?);
+    let spec_str = positional_workload
+        .map(str::to_string)
+        .or_else(|| args.get("workload").map(str::to_string))
+        .or_else(|| cfg.workload.clone())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "run: missing <workload> (try: expand run tc, --workload trace:<path>, \
+                 or set `[sim] workload` in a config file)"
+            )
+        })?;
+    let spec = WorkloadSpec::parse(&spec_str)?;
     let needs_artifacts = matches!(
         cfg.prefetcher,
         PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
@@ -127,16 +169,38 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         );
     }
     eprintln!("{}", cfg.render());
-    let write_boost = args.get_f64("write-boost", 0.0)?;
+    let mut write_boost = args.get_f64("write-boost", 0.0)?;
+    if write_boost > 0.0 && matches!(spec, WorkloadSpec::Trace(_)) {
+        // A recorded stream already carries its writes (capture happens
+        // after any WriteHeavy wrapping); re-boosting would change the
+        // stream and break the replay-fingerprint contract.
+        eprintln!(
+            "note: trace replay ignores --write-boost (the recorded stream already \
+             carries its writes)"
+        );
+        write_boost = 0.0;
+    }
 
     if cfg.hosts > 1 {
         // Epoch-quantized multi-host engine: N shards, one shared pool,
-        // bit-identical results for any --threads value.
-        let opts = MultiHostOpts::from_config(&cfg);
+        // bit-identical results for any --threads value. A trace spec
+        // shards the tagged file back onto the N hosts.
+        let mut opts = MultiHostOpts::from_config(&cfg);
+        opts.record = record.is_some();
         let seed = cfg.seed;
-        let stats = run_multi_host(&cfg, &opts, move |h| {
-            let mut src: Box<dyn expand_cxl::workloads::TraceSource> =
-                id.source(host_seed(seed, h));
+        let hosts = opts.hosts;
+        // Trace replay: open + decode the file once here (errors surface
+        // before any thread spawns), then cut each host's shard from the
+        // shared in-memory records.
+        let shared = match &spec {
+            WorkloadSpec::Trace(path) => Some(SharedTrace::open(path)?),
+            WorkloadSpec::Id(_) => None,
+        };
+        let (stats, recordings) = run_multi_host_traced(&cfg, &opts, |h| {
+            let mut src: Box<dyn TraceSource> = match &shared {
+                Some(t) => Box::new(t.shard(h, hosts)?),
+                None => spec.source_for_host(seed, h, hosts)?,
+            };
             if write_boost > 0.0 {
                 src = Box::new(expand_cxl::workloads::mixed::WriteHeavy::new(
                     src,
@@ -144,7 +208,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                     host_seed(seed, h) ^ 0x5707,
                 ));
             }
-            src
+            Ok(src)
         })?;
         for (h, s) in stats.per_host.iter().enumerate() {
             println!("host{h}: {}", s.summary());
@@ -158,7 +222,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         if stats.aggregate.per_device.len() > 1 {
             print!("{}", stats.aggregate.render_per_device());
         }
+        println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
         anyhow::ensure!(stats.bi_invariant, "shared BI-directory invariant violated");
+        if let Some(path) = record {
+            let workload =
+                stats.per_host.first().map(|s| s.workload.as_str()).unwrap_or("unknown");
+            let header = write_trace(path, workload, seed, &recordings)?;
+            eprintln!(
+                "recorded {} accesses ({} host streams) to {path}",
+                header.records, header.hosts
+            );
+        }
         return Ok(());
     }
 
@@ -167,7 +241,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
-    let mut src: Box<dyn expand_cxl::workloads::TraceSource> = id.source(cfg.seed);
+    let mut src: Box<dyn TraceSource> = spec.source_for_host(cfg.seed, 0, 1)?;
     if write_boost > 0.0 {
         src = Box::new(expand_cxl::workloads::mixed::WriteHeavy::new(
             src,
@@ -175,7 +249,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             cfg.seed ^ 0x5707,
         ));
     }
-    let stats = simulate(&cfg, runtime.as_ref(), &mut *src)?;
+    let mut runner = Runner::new(&cfg, runtime.as_ref())?;
+    if record.is_some() {
+        runner.enable_recording();
+    }
+    let stats = runner.run(&mut *src, cfg.accesses);
     println!("{}", stats.summary());
     if !stats.debug.is_empty() {
         println!("  {}", stats.debug);
@@ -187,6 +265,107 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if stats.per_device.len() > 1 {
         print!("{}", stats.render_per_device());
     }
+    println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
+    if let Some(path) = record {
+        let recording = runner.take_recording();
+        let header = write_trace(path, &stats.workload, cfg.seed, &[recording])?;
+        eprintln!("recorded {} accesses to {path}", header.records);
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    run_spec(args, args.positional.get(1).map(String::as_str), args.get("record"))
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match sub {
+        "record" => {
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("trace record: missing --out <path>"))?;
+            run_spec(args, args.positional.get(2).map(String::as_str), Some(out))
+        }
+        "replay" => {
+            let path = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("trace replay: missing <path>"))?;
+            let spec = format!("trace:{path}");
+            run_spec(args, Some(spec.as_str()), args.get("record"))
+        }
+        "info" => {
+            let path = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("trace info: missing <path>"))?;
+            cmd_trace_info(path)
+        }
+        "convert" => cmd_trace_convert(args),
+        other => {
+            anyhow::bail!("unknown trace subcommand {other:?} (record|replay|info|convert)")
+        }
+    }
+}
+
+fn cmd_trace_info(path: &str) -> anyhow::Result<()> {
+    let mut reader = TraceReader::open(path)?;
+    let header = reader.header.clone();
+    let mut per_host = vec![0u64; header.hosts as usize];
+    let mut writes = 0u64;
+    let mut dependent = 0u64;
+    let mut lines = std::collections::HashSet::new();
+    // Stream the records (no materialized Vec — info must cope with
+    // traces far larger than the runs that replay slices of them).
+    while let Some((h, a)) = reader.next_record()? {
+        per_host[h as usize] += 1;
+        writes += u64::from(a.write);
+        dependent += u64::from(a.dependent);
+        lines.insert(a.line);
+    }
+    println!("trace {path}");
+    println!("  format: CXTR v{}, line={}B", header.version, header.line_bytes);
+    println!(
+        "  workload: {}  seed: {:#x}  host streams: {}",
+        header.workload, header.seed, header.hosts
+    );
+    println!(
+        "  records: {} ({} reads, {} writes ({:.1}%), {} dependent, {} distinct lines)",
+        header.records,
+        header.records - writes,
+        writes,
+        writes as f64 / (header.records.max(1)) as f64 * 100.0,
+        dependent,
+        lines.len()
+    );
+    if header.hosts > 1 {
+        for (h, n) in per_host.iter().enumerate() {
+            println!("  host {h}: {n} records");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace_convert(args: &Args) -> anyhow::Result<()> {
+    let input = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("trace convert: missing <input>"))?;
+    let output = args
+        .positional
+        .get(3)
+        .ok_or_else(|| anyhow::anyhow!("trace convert: missing <output.trace>"))?;
+    let fmt = args.get("format").map(ImportFormat::parse).transpose()?;
+    let (records, stem) = import_file(input, fmt)?;
+    let workload = args.get_or("workload", &stem).to_string();
+    let seed = args.get_u64("seed", 0)?;
+    let header = write_trace(output, &workload, seed, &[records])?;
+    println!(
+        "converted {input} -> {output}: {} records, workload {:?} (replay with: \
+         expand run trace:{output})",
+        header.records, header.workload
+    );
     Ok(())
 }
 
@@ -196,6 +375,7 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     opts.accesses = args.get_usize("accesses", opts.accesses)?;
     opts.seed = args.get_u64("seed", opts.seed)?;
     opts.out_dir = args.get_or("out", &opts.out_dir).to_string();
+    opts.trace = args.get("trace").map(str::to_string);
     if args.flag("no-artifacts") {
         opts.artifacts = None;
     } else if let Some(dir) = args.get("artifacts") {
@@ -281,6 +461,7 @@ fn main() {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
         "figures" => cmd_figures(&args),
         "enumerate" => cmd_enumerate(&args),
         "config" => cmd_config(&args),

@@ -357,6 +357,24 @@ impl RunStats {
         agg
     }
 
+    /// Deterministic fingerprint of the run: the full stats with the
+    /// host wall-clock fields (the only nondeterministic ones) zeroed.
+    /// Two runs over the same config and access stream — e.g. a
+    /// recorded run and its trace replay — produce identical
+    /// fingerprints.
+    pub fn fingerprint(&self) -> String {
+        let mut c = self.clone();
+        c.wall_s = 0.0;
+        c.inference_wall_ps = 0;
+        format!("{c:?}")
+    }
+
+    /// Compact hash of [`RunStats::fingerprint`] (the `fingerprint=`
+    /// line `run` prints; CI diffs it across record/replay).
+    pub fn fingerprint_hash(&self) -> u64 {
+        crate::util::fnv1a_64(self.fingerprint().as_bytes())
+    }
+
     /// One-line summary for the CLI.
     pub fn summary(&self) -> String {
         format!(
@@ -455,6 +473,12 @@ impl MultiHostStats {
         );
         let _ = writeln!(out, "pool_traffic: {:?}", self.pool_traffic);
         out
+    }
+
+    /// Compact hash of [`MultiHostStats::fingerprint`] (the
+    /// `fingerprint=` line multi-host `run` prints).
+    pub fn fingerprint_hash(&self) -> u64 {
+        crate::util::fnv1a_64(self.fingerprint().as_bytes())
     }
 
     /// One-line engine summary for the CLI.
@@ -567,6 +591,18 @@ mod tests {
         assert!((s.llc_hit_ratio() - 90.0 / 110.0).abs() < 1e-12);
         assert!((s.prefetch_accuracy() - 0.75).abs() < 1e-12);
         assert!((s.prefetch_coverage() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_scrubs_wall_clock_only() {
+        let mut a = RunStats { accesses: 10, llc_misses: 3, wall_s: 1.5, ..Default::default() };
+        let mut b = a.clone();
+        b.wall_s = 9.0;
+        b.inference_wall_ps = 123;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint_hash(), b.fingerprint_hash());
+        a.llc_misses = 4;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "real counters must show");
     }
 
     #[test]

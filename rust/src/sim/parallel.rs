@@ -50,7 +50,7 @@ use crate::runtime::Runtime;
 use crate::sim::runner::{EffectLog, HostEffect, RunCursor, Runner};
 use crate::sim::time::Ps;
 use crate::ssd::{pool_interleaver, Interleaver};
-use crate::workloads::TraceSource;
+use crate::workloads::{Access, TraceSource};
 use std::sync::{Barrier, Mutex};
 
 /// Multi-host engine options (normally sourced from `[sim]` config via
@@ -66,6 +66,10 @@ pub struct MultiHostOpts {
     /// Artifacts directory for compiled predictors; each shard builds
     /// its own `Runtime` so predictor state never couples shards.
     pub artifacts: Option<String>,
+    /// Capture every shard's access stream (`--record`): the traced
+    /// engine entry point returns one recording per host, ready for
+    /// `crate::trace::write_trace` as a host-tagged trace.
+    pub record: bool,
 }
 
 impl MultiHostOpts {
@@ -75,6 +79,7 @@ impl MultiHostOpts {
             threads: cfg.threads,
             epoch_accesses: cfg.epoch_accesses,
             artifacts: Some(cfg.artifacts_dir.clone()),
+            record: false,
         }
     }
 }
@@ -219,15 +224,30 @@ struct Shard {
 
 /// Run `opts.hosts` shards of `cfg` against one shared pool and return
 /// per-host plus aggregate statistics. `make_source` builds host `h`'s
-/// trace source (use [`host_seed`] to decorrelate streams); it runs on
-/// worker threads, hence `Sync`.
+/// trace source (use [`host_seed`] to decorrelate streams; a failure —
+/// e.g. a missing trace file — surfaces as an engine error); it runs
+/// on worker threads, hence `Sync`.
 pub fn run_multi_host<F>(
     cfg: &std::sync::Arc<SimConfig>,
     opts: &MultiHostOpts,
     make_source: F,
 ) -> anyhow::Result<MultiHostStats>
 where
-    F: Fn(usize) -> Box<dyn TraceSource> + Sync,
+    F: Fn(usize) -> anyhow::Result<Box<dyn TraceSource>> + Sync,
+{
+    Ok(run_multi_host_traced(cfg, opts, make_source)?.0)
+}
+
+/// [`run_multi_host`] plus the captured per-host access streams (in
+/// host-index order, empty vectors unless `opts.record`): the engine
+/// half of `--record` for multi-host runs.
+pub fn run_multi_host_traced<F>(
+    cfg: &std::sync::Arc<SimConfig>,
+    opts: &MultiHostOpts,
+    make_source: F,
+) -> anyhow::Result<(MultiHostStats, Vec<Vec<Access>>)>
+where
+    F: Fn(usize) -> anyhow::Result<Box<dyn TraceSource>> + Sync,
 {
     let hosts = opts.hosts;
     anyhow::ensure!(hosts >= 1, "multi-host engine needs at least one host");
@@ -266,7 +286,10 @@ where
     let contention: Vec<Mutex<Vec<Ps>>> =
         (0..hosts).map(|_| Mutex::new(vec![0; endpoints])).collect();
     let barrier = Barrier::new(threads);
-    let results: Mutex<Vec<(usize, RunStats, bool)>> = Mutex::new(Vec::new());
+    // One row per shard: (host, stats, shared-directory invariant held,
+    // captured access stream — empty unless `opts.record`).
+    type ShardRow = (usize, RunStats, bool, Vec<Access>);
+    let results: Mutex<Vec<ShardRow>> = Mutex::new(Vec::new());
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
     let needs_artifacts = matches!(
@@ -319,10 +342,23 @@ where
                         }
                         _ => None,
                     };
+                    // Source construction can fail too (a trace shard
+                    // that does not exist or is empty): same hard-error
+                    // path as a runner build failure.
+                    let source = match make_source(host) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            errors.lock().unwrap().push(format!("host {host}: source: {e}"));
+                            failed = true;
+                            continue;
+                        }
+                    };
                     match Runner::from_arc(std::sync::Arc::clone(&cfg), rt.as_ref()) {
                         Ok(mut runner) => {
                             runner.enable_effect_log();
-                            let source = make_source(host);
+                            if opts.record {
+                                runner.enable_recording();
+                            }
                             let (stats, cur) = runner.begin_run(&*source);
                             shards.push(Shard { host, runner, source, stats, cur });
                         }
@@ -422,6 +458,7 @@ where
                         sh.host,
                         std::mem::take(&mut sh.stats),
                         invariant,
+                        sh.runner.take_recording(),
                     ));
                 }
             });
@@ -431,7 +468,7 @@ where
     let errors = errors.into_inner().unwrap();
     anyhow::ensure!(errors.is_empty(), "multi-host engine failures: {}", errors.join("; "));
     let mut rows = results.into_inner().unwrap();
-    rows.sort_by_key(|(h, _, _)| *h);
+    rows.sort_by_key(|(h, _, _, _)| *h);
     anyhow::ensure!(
         rows.len() == hosts,
         "engine lost shards: {} of {hosts} reported",
@@ -439,8 +476,13 @@ where
     );
 
     let shared = shared.into_inner().unwrap();
-    let bi_invariant = rows.iter().all(|(_, _, inv)| *inv);
-    let per_host: Vec<RunStats> = rows.into_iter().map(|(_, s, _)| s).collect();
+    let bi_invariant = rows.iter().all(|(_, _, inv, _)| *inv);
+    let mut per_host: Vec<RunStats> = Vec::with_capacity(hosts);
+    let mut recordings: Vec<Vec<Access>> = Vec::with_capacity(hosts);
+    for (_, s, _, rec) in rows {
+        per_host.push(s);
+        recordings.push(rec);
+    }
     let mut aggregate = RunStats::aggregate(&per_host);
     aggregate.wall_s = wall_start.elapsed().as_secs_f64();
     // The shared directory is the pool's ground truth for occupancy and
@@ -452,19 +494,22 @@ where
     let shared_dir_evictions: u64 =
         shared.dirs.iter().map(|d| d.stats.capacity_evictions).sum();
 
-    Ok(MultiHostStats {
-        wall_s: aggregate.wall_s,
-        per_host,
-        aggregate,
-        hosts,
-        threads,
-        epochs: shared.epochs,
-        epoch_accesses: epoch,
-        cross_snoops: shared.cross_snoops,
-        shared_dir_evictions,
-        pool_traffic: shared.traffic,
-        bi_invariant,
-    })
+    Ok((
+        MultiHostStats {
+            wall_s: aggregate.wall_s,
+            per_host,
+            aggregate,
+            hosts,
+            threads,
+            epochs: shared.epochs,
+            epoch_accesses: epoch,
+            cross_snoops: shared.cross_snoops,
+            shared_dir_evictions,
+            pool_traffic: shared.traffic,
+            bi_invariant,
+        },
+        recordings,
+    ))
 }
 
 /// Convenience for benches/tests: run the configured workload id on
@@ -475,7 +520,7 @@ pub fn run_multi_host_workload(
     id: crate::workloads::WorkloadId,
 ) -> anyhow::Result<MultiHostStats> {
     let seed = cfg.seed;
-    run_multi_host(cfg, opts, |h| id.source(host_seed(seed, h)))
+    run_multi_host(cfg, opts, |h| Ok(id.source(host_seed(seed, h))))
 }
 
 #[cfg(test)]
@@ -493,7 +538,7 @@ mod tests {
     }
 
     fn opts(hosts: usize, threads: usize, epoch: usize) -> MultiHostOpts {
-        MultiHostOpts { hosts, threads, epoch_accesses: epoch, artifacts: None }
+        MultiHostOpts { hosts, threads, epoch_accesses: epoch, artifacts: None, record: false }
     }
 
     #[test]
@@ -534,11 +579,11 @@ mod tests {
         let seed = cfg.seed;
         let s = run_multi_host(&cfg, &opts(2, 2, 2048), |h| {
             let inner = WorkloadId::Pr.source(host_seed(seed, h));
-            Box::new(crate::workloads::mixed::WriteHeavy::new(
+            Ok(Box::new(crate::workloads::mixed::WriteHeavy::new(
                 inner,
                 0.2,
                 host_seed(seed, h),
-            ))
+            )))
         })
         .unwrap();
         assert_eq!(s.per_host.len(), 2);
@@ -571,6 +616,64 @@ mod tests {
         assert!(s.bi_invariant, "invariant is vacuous under LocalDRAM");
         assert_eq!(s.aggregate.accesses, 24_000);
         assert_eq!(s.cross_snoops, 0, "no pool, no cross-host snoops");
+    }
+
+    #[test]
+    fn source_build_failure_is_an_engine_error_not_a_deadlock() {
+        let cfg = Arc::new(engine_cfg());
+        let seed = cfg.seed;
+        let err = run_multi_host(&cfg, &opts(2, 2, 1024), |h| {
+            if h == 1 {
+                anyhow::bail!("no trace shard for host 1")
+            }
+            Ok(WorkloadId::Pr.source(host_seed(seed, h)))
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("host 1"), "{err}");
+        assert!(err.contains("no trace shard"), "{err}");
+    }
+
+    #[test]
+    fn traced_engine_captures_per_host_streams_and_replays_identically() {
+        // Record a 4-host run, shard the tagged streams back onto 4
+        // hosts, and replay on 1 and 4 threads: all three fingerprints
+        // must be identical (recording is observational; replay feeds
+        // the exact recorded pulls).
+        let mut c = engine_cfg();
+        c.cxl.topology = crate::config::TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+        let cfg = Arc::new(c);
+        let seed = cfg.seed;
+        let mut rec_opts = opts(4, 2, 2048);
+        rec_opts.record = true;
+        let (original, recordings) = super::run_multi_host_traced(&cfg, &rec_opts, |h| {
+            Ok(WorkloadId::Pr.source(host_seed(seed, h)))
+        })
+        .unwrap();
+        assert_eq!(recordings.len(), 4);
+        for rec in &recordings {
+            assert!(rec.len() >= cfg.accesses, "capture covers demand + lookahead");
+        }
+
+        let header = crate::trace::TraceHeader::new(&original.per_host[0].workload, 4, seed);
+        let tagged: Vec<(u32, Access)> = recordings
+            .iter()
+            .enumerate()
+            .flat_map(|(h, rec)| rec.iter().map(move |&a| (h as u32, a)))
+            .collect();
+        for threads in [1usize, 4] {
+            let replayed = run_multi_host(&cfg, &opts(4, threads, 2048), |h| {
+                Ok(Box::new(
+                    crate::trace::TraceReplay::shard(&header, &tagged, h, 4).unwrap(),
+                ))
+            })
+            .unwrap();
+            assert_eq!(
+                original.fingerprint(),
+                replayed.fingerprint(),
+                "threads {threads}: replay must reproduce the recorded run"
+            );
+        }
     }
 
     #[test]

@@ -159,6 +159,11 @@ pub struct Runner {
     traffic_prev: Vec<TrafficStats>,
     /// `core.now` at the last `take_effects` (epoch sim-time deltas).
     last_epoch_now: Ps,
+    /// Trace capture buffer (`--record`): every access pulled from the
+    /// trace source, in pull order, so a replay reproduces the exact
+    /// stream this run consumed (see `crate::trace`). `None` keeps the
+    /// hot path free of capture cost.
+    record_buf: Option<Vec<Access>>,
 }
 
 impl Runner {
@@ -270,6 +275,7 @@ impl Runner {
             contention: vec![0; endpoints],
             traffic_prev: Vec::new(),
             last_epoch_now: 0,
+            record_buf: None,
         })
     }
 
@@ -292,6 +298,20 @@ impl Runner {
     /// Current simulated time at this shard's core.
     pub fn now(&self) -> Ps {
         self.core.now
+    }
+
+    /// Start capturing the trace: every access subsequently pulled from
+    /// the source (demand + lookahead priming, in pull order) is
+    /// buffered until [`Runner::take_recording`]. Recording is purely
+    /// observational — it cannot perturb simulation results.
+    pub fn enable_recording(&mut self) {
+        self.record_buf = Some(Vec::new());
+    }
+
+    /// Drain the captured access stream (empty if recording was never
+    /// enabled). Feed the result to `crate::trace::write_trace`.
+    pub fn take_recording(&mut self) -> Vec<Access> {
+        self.record_buf.take().unwrap_or_default()
     }
 
     /// Start buffering cross-host effects (multi-host shards only).
@@ -619,7 +639,11 @@ impl Runner {
             cur.index += 1;
             // Maintain the oracle lookahead (+1 for the current access).
             while self.lookahead.len() < lookahead_depth + 1 {
-                self.lookahead.push_back(source.next_access());
+                let a = source.next_access();
+                if let Some(buf) = &mut self.record_buf {
+                    buf.push(a);
+                }
+                self.lookahead.push_back(a);
             }
             let a = self.lookahead.pop_front().unwrap();
 
@@ -1063,6 +1087,35 @@ mod tests {
         let s = simulate(&Arc::new(cfg), None, &mut src).unwrap();
         assert!(s.prefetch_issued > 0, "decider pushed prefetches");
         assert!(s.reflector_hits > 0, "reflector served hits: {s:?}");
+    }
+
+    #[test]
+    fn recorded_run_replays_to_identical_fingerprint() {
+        // The tentpole contract in miniature: capture a run's pulled
+        // stream, replay it through a fresh runner on the same config,
+        // and every deterministic stat matches bit-for-bit.
+        let mut cfg = smoke_cfg();
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.accesses = 20_000;
+        let cfg = Arc::new(cfg);
+        let mut src = WorkloadId::Pr.source(cfg.seed);
+        let mut r = Runner::new(&cfg, None).unwrap();
+        r.enable_recording();
+        let original = r.run(&mut *src, cfg.accesses);
+        let recording = r.take_recording();
+        assert!(
+            recording.len() >= cfg.accesses,
+            "capture covers demand + lookahead priming: {}",
+            recording.len()
+        );
+
+        let header = crate::trace::TraceHeader::new(&original.workload, 1, cfg.seed);
+        let tagged: Vec<(u32, Access)> = recording.iter().map(|&a| (0, a)).collect();
+        let mut replay = crate::trace::TraceReplay::shard(&header, &tagged, 0, 1).unwrap();
+        let mut r2 = Runner::new(&cfg, None).unwrap();
+        let replayed = r2.run(&mut replay, cfg.accesses);
+        assert_eq!(original.fingerprint(), replayed.fingerprint());
+        assert_eq!(replay.wraps, 0, "replay consumed exactly the recorded stream");
     }
 
     #[test]

@@ -71,8 +71,10 @@ impl CxlSsd {
         ns(self.cfg.controller_ns)
     }
 
-    /// Pick the earliest-free backend channel (striped by page).
-    fn channel_for(&mut self, page: u64) -> usize {
+    /// The backend channel serving `page` (striped by page). The single
+    /// source of truth for the striping rule — every demand, staging and
+    /// backlog path routes through here so they cannot diverge.
+    fn channel_for(&self, page: u64) -> usize {
         (page % self.channel_free.len() as u64) as usize
     }
 
@@ -119,7 +121,7 @@ impl CxlSsd {
     /// Prefetch-lane backlog of the channel serving `line`.
     pub fn channel_backlog(&self, line: u64, now: Ps) -> Ps {
         let page = line / self.lines_per_page();
-        let ch = (page % self.channel_free.len() as u64) as usize;
+        let ch = self.channel_for(page);
         self.stage_free[ch]
             .max(self.channel_free[ch])
             .saturating_sub(now)
@@ -128,7 +130,7 @@ impl CxlSsd {
     /// Low-priority media read for prefetch staging: yields to demand
     /// reservations, never delays them.
     fn media_read_stage(&mut self, page: u64, now: Ps) -> Ps {
-        let ch = (page % self.channel_free.len() as u64) as usize;
+        let ch = self.channel_for(page);
         let start = now.max(self.channel_free[ch]).max(self.stage_free[ch]);
         let done = start + self.cfg.media_read;
         self.stage_free[ch] = done;
@@ -247,6 +249,29 @@ mod tests {
         // Different page, same instant: queues behind channel.
         let b = s.serve_read(1000, 0);
         assert!(b > a + 2_000_000, "queued {b} vs first {a}");
+    }
+
+    #[test]
+    fn backlog_reads_the_channel_demand_occupies() {
+        // channel_backlog must consult the same channel the demand path
+        // striped the page onto (the selection rule is shared, not
+        // reimplemented): a cold read backs up exactly its own line's
+        // channel, and a line on any other channel reads zero backlog.
+        let mut cfg = SsdConfig::with_media(MediaKind::ZNand);
+        cfg.channels = 4;
+        cfg.internal_dram_bytes = 4096; // 1 page: every read is cold
+        let mut s = CxlSsd::new(&cfg);
+        let lines_per_page = (cfg.page_bytes / 64) as u64;
+        let line = 5 * lines_per_page; // page 5 -> channel 1
+        s.serve_read(line, 0);
+        assert!(s.channel_backlog(line, 0) >= cfg.media_read, "own channel backed up");
+        for other_page in [4u64, 6, 7] {
+            assert_eq!(
+                s.channel_backlog(other_page * lines_per_page, 0),
+                0,
+                "page {other_page} rides a different channel"
+            );
+        }
     }
 
     #[test]

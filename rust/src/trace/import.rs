@@ -1,0 +1,242 @@
+//! External-format importers: ChampSim-style text and a simple CSV,
+//! both converting to [`Access`] records for `trace convert`.
+
+use crate::workloads::Access;
+
+/// Default instruction gap when the input format does not carry one
+/// (the synthetic generators emit gaps in the tens).
+const DEFAULT_INST_GAP: u32 = 60;
+
+/// Supported import formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportFormat {
+    /// Whitespace-separated `<pc> <byte-addr> <type>` lines (ChampSim
+    /// text-trace style), optional 4th `inst_gap` column. `type` is
+    /// `R`/`W` (also `L`/`S`, `LOAD`/`STORE`, `RD`/`WR`). `#` comments.
+    Champsim,
+    /// `pc,addr,write[,inst_gap[,dependent]]` rows under a `pc,...`
+    /// header line. `write`/`dependent` accept 0/1, true/false, r/w.
+    Csv,
+}
+
+impl ImportFormat {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "champsim" | "txt" | "text" => Ok(ImportFormat::Champsim),
+            "csv" => Ok(ImportFormat::Csv),
+            other => anyhow::bail!("unknown import format {other:?} (champsim|csv)"),
+        }
+    }
+
+    /// Guess from the file extension (`.csv` => CSV, else ChampSim).
+    pub fn infer(path: &str) -> Self {
+        if path.to_ascii_lowercase().ends_with(".csv") {
+            ImportFormat::Csv
+        } else {
+            ImportFormat::Champsim
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImportFormat::Champsim => "champsim",
+            ImportFormat::Csv => "csv",
+        }
+    }
+}
+
+/// Parse a number, accepting `0x`-prefixed hex or decimal.
+fn parse_u64(s: &str, what: &str, lineno: usize) -> anyhow::Result<u64> {
+    let t = s.trim();
+    let r = match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => t.parse(),
+    };
+    r.map_err(|_| anyhow::anyhow!("line {lineno}: bad {what} {s:?}"))
+}
+
+fn parse_bool(s: &str, what: &str, lineno: usize) -> anyhow::Result<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "w" | "s" | "store" | "write" | "wr" => Ok(true),
+        "0" | "false" | "r" | "l" | "load" | "read" | "rd" => Ok(false),
+        other => anyhow::bail!("line {lineno}: bad {what} {other:?}"),
+    }
+}
+
+/// Import ChampSim-style text: `<pc> <byte-addr> <R|W> [inst_gap]`.
+pub fn import_champsim(text: &str) -> anyhow::Result<Vec<Access>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(
+            (3..=4).contains(&cols.len()),
+            "line {lineno}: expected `<pc> <addr> <R|W> [inst_gap]`, got {} fields",
+            cols.len()
+        );
+        let pc = parse_u64(cols[0], "pc", lineno)?;
+        let addr = parse_u64(cols[1], "address", lineno)?;
+        let write = parse_bool(cols[2], "access type", lineno)?;
+        let inst_gap = match cols.get(3) {
+            Some(g) => {
+                let v = parse_u64(g, "inst_gap", lineno)?;
+                anyhow::ensure!(v <= u32::MAX as u64, "line {lineno}: inst_gap too large");
+                v as u32
+            }
+            None => DEFAULT_INST_GAP,
+        };
+        out.push(Access { pc, line: addr >> 6, write, inst_gap, dependent: false });
+    }
+    anyhow::ensure!(!out.is_empty(), "no records found (empty/comment-only input)");
+    Ok(out)
+}
+
+/// Import CSV: header `pc,addr,write[,inst_gap[,dependent]]` then rows.
+pub fn import_csv(text: &str) -> anyhow::Result<Vec<Access>> {
+    let mut out = Vec::new();
+    let mut saw_header = false;
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if !saw_header {
+            anyhow::ensure!(
+                line.to_ascii_lowercase().starts_with("pc,"),
+                "line {lineno}: expected a `pc,addr,write,...` header row"
+            );
+            saw_header = true;
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(
+            (3..=5).contains(&cols.len()),
+            "line {lineno}: expected 3-5 columns, got {}",
+            cols.len()
+        );
+        let pc = parse_u64(cols[0], "pc", lineno)?;
+        let addr = parse_u64(cols[1], "addr", lineno)?;
+        let write = parse_bool(cols[2], "write", lineno)?;
+        let inst_gap = match cols.get(3) {
+            Some(g) if !g.trim().is_empty() => {
+                let v = parse_u64(g, "inst_gap", lineno)?;
+                anyhow::ensure!(v <= u32::MAX as u64, "line {lineno}: inst_gap too large");
+                v as u32
+            }
+            _ => DEFAULT_INST_GAP,
+        };
+        let dependent = match cols.get(4) {
+            Some(d) if !d.trim().is_empty() => parse_bool(d, "dependent", lineno)?,
+            _ => false,
+        };
+        out.push(Access { pc, line: addr >> 6, write, inst_gap, dependent });
+    }
+    anyhow::ensure!(!out.is_empty(), "no records found (empty input or header only)");
+    Ok(out)
+}
+
+/// Import text in the given format.
+pub fn import_str(text: &str, fmt: ImportFormat) -> anyhow::Result<Vec<Access>> {
+    match fmt {
+        ImportFormat::Champsim => import_champsim(text),
+        ImportFormat::Csv => import_csv(text),
+    }
+}
+
+/// Import a file (format inferred from the extension unless given).
+/// Returns the records plus the file stem (the default workload name
+/// for the converted trace).
+pub fn import_file(
+    path: &str,
+    fmt: Option<ImportFormat>,
+) -> anyhow::Result<(Vec<Access>, String)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let fmt = fmt.unwrap_or_else(|| ImportFormat::infer(path));
+    let records =
+        import_str(&text, fmt).map_err(|e| anyhow::anyhow!("{path} ({}): {e}", fmt.name()))?;
+    let stem = std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "imported".to_string());
+    Ok((records, stem))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn champsim_golden() {
+        let text = "\
+# pc       addr      type  gap
+0x401000   0x7f0040  LOAD  12
+0x401000   0x7f0080  W
+401008     8323200   r
+";
+        let recs = import_champsim(text).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(
+            recs[0],
+            Access {
+                pc: 0x401000,
+                line: 0x7f0040 >> 6,
+                write: false,
+                inst_gap: 12,
+                dependent: false
+            }
+        );
+        assert_eq!(recs[1].line, 0x7f0080 >> 6);
+        assert!(recs[1].write);
+        assert_eq!(recs[1].inst_gap, 60, "default gap");
+        assert_eq!(recs[2].pc, 401008, "decimal pc");
+        assert!(!recs[2].write);
+    }
+
+    #[test]
+    fn champsim_rejects_malformed() {
+        assert!(import_champsim("0x1 0x2\n").is_err(), "too few fields");
+        assert!(import_champsim("0x1 0x2 X\n").is_err(), "bad type");
+        assert!(import_champsim("zz 0x2 R\n").is_err(), "bad pc");
+        assert!(import_champsim("# only comments\n").is_err(), "empty");
+    }
+
+    #[test]
+    fn csv_golden() {
+        let text = "\
+pc,addr,write,inst_gap,dependent
+0x10,0x1000,0,5,0
+0x18,0x1040,1,,1
+0x20,0x2000,r
+";
+        let recs = import_csv(text).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(
+            recs[0],
+            Access { pc: 0x10, line: 0x40, write: false, inst_gap: 5, dependent: false }
+        );
+        assert!(recs[1].write && recs[1].dependent);
+        assert_eq!(recs[1].inst_gap, 60, "blank gap falls back to default");
+        assert_eq!(recs[2].line, 0x2000 >> 6);
+    }
+
+    #[test]
+    fn csv_requires_header() {
+        assert!(import_csv("0x10,0x1000,0\n").is_err());
+        assert!(import_csv("pc,addr,write\n").is_err(), "header only");
+    }
+
+    #[test]
+    fn format_parse_and_infer() {
+        assert_eq!(ImportFormat::parse("csv").unwrap(), ImportFormat::Csv);
+        assert_eq!(ImportFormat::parse("champsim").unwrap(), ImportFormat::Champsim);
+        assert!(ImportFormat::parse("xml").is_err());
+        assert_eq!(ImportFormat::infer("a/b/trace.CSV"), ImportFormat::Csv);
+        assert_eq!(ImportFormat::infer("trace.txt"), ImportFormat::Champsim);
+    }
+}

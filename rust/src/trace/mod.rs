@@ -1,0 +1,132 @@
+//! Trace capture & replay subsystem.
+//!
+//! Every workload in this repo is a synthetic generator; this module
+//! makes any run pinnable to a file. It provides:
+//!
+//! * a versioned, compact binary format (`CXTR`: magic + header with
+//!   line size / host count / seed / workload provenance, then
+//!   delta+varint-encoded records with an optional host tag) —
+//!   [`format`], written by [`TraceWriter`] and streamed back by
+//!   [`TraceReader`];
+//! * capture — the runner's recording hook buffers every access pulled
+//!   from the trace source (see `Runner::enable_recording`), and the
+//!   multi-host engine tags each shard's stream, so `--record <path>`
+//!   persists any existing run;
+//! * replay — [`TraceReplay`] plugs a trace into the
+//!   [`crate::workloads::TraceSource`] substrate (including
+//!   deterministic multi-host sharding of a tagged trace back onto N
+//!   hosts) via `--workload trace:<path>`;
+//! * import — [`import`] converts ChampSim-style text and simple CSV
+//!   access lists into the binary format (`trace convert`).
+//!
+//! A run recorded with `--record` and replayed through
+//! `--workload trace:<path>` under the same configuration reproduces
+//! the original `RunStats` fingerprint exactly: recording captures
+//! accesses at the source-pull point (demand + lookahead priming, in
+//! pull order), so the replayed stream is byte-for-byte the stream the
+//! original simulation consumed.
+
+pub mod format;
+pub mod import;
+pub mod reader;
+pub mod replay;
+pub mod writer;
+
+pub use format::TraceHeader;
+pub use import::{import_file, import_str, ImportFormat};
+pub use reader::TraceReader;
+pub use replay::{SharedTrace, TraceReplay};
+pub use writer::{write_trace, TraceWriter};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{Access, TraceSource};
+
+    /// Unique temp path per test (tests run concurrently in one
+    /// process; pid alone is not enough).
+    fn temp_path(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("cxtr_{}_{tag}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn file_roundtrip_single_host() {
+        let path = temp_path("single");
+        let stream: Vec<Access> = (0..1000u64)
+            .map(|i| Access {
+                pc: 0x400 + (i % 7) * 8,
+                line: (1 << 30) + i * 3,
+                write: i % 5 == 0,
+                inst_gap: (i % 100) as u32,
+                dependent: i % 11 == 0,
+            })
+            .collect();
+        let header = write_trace(&path, "unit[golden]", 9, &[stream.clone()]).unwrap();
+        assert_eq!(header.records, 1000);
+        assert_eq!(header.hosts, 1);
+
+        let (h, recs) = TraceReader::open(&path).unwrap().read_all().unwrap();
+        assert_eq!(h, header);
+        assert_eq!(recs.len(), 1000);
+        assert!(recs.iter().all(|(tag, _)| *tag == 0));
+        let back: Vec<Access> = recs.into_iter().map(|(_, a)| a).collect();
+        assert_eq!(back, stream, "bit-identical round trip");
+
+        let mut replay = TraceReplay::open(&path).unwrap();
+        for a in &stream {
+            assert_eq!(replay.next_access(), *a);
+        }
+        assert_eq!(replay.name(), "unit[golden]");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn file_roundtrip_tagged_hosts() {
+        let path = temp_path("tagged");
+        let streams: Vec<Vec<Access>> = (0..3u64)
+            .map(|h| {
+                (0..50u64)
+                    .map(|i| Access {
+                        pc: h * 100,
+                        line: h * 10_000 + i,
+                        write: false,
+                        inst_gap: 10,
+                        dependent: false,
+                    })
+                    .collect()
+            })
+            .collect();
+        let header = write_trace(&path, "PRx3", 5, &streams).unwrap();
+        assert_eq!(header.hosts, 3);
+        assert_eq!(header.records, 150);
+
+        let shared = SharedTrace::open(&path).unwrap();
+        assert_eq!(shared.header().hosts, 3);
+        for h in 0..3usize {
+            let mut shard = TraceReplay::open_shard(&path, h, 3).unwrap();
+            assert_eq!(shard.len(), 50);
+            for a in &streams[h] {
+                assert_eq!(shard.next_access(), *a, "host {h}");
+            }
+            // The decode-once path cuts identical shards.
+            let mut from_shared = shared.shard(h, 3).unwrap();
+            for a in &streams[h] {
+                assert_eq!(from_shared.next_access(), *a, "shared shard, host {h}");
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_reports_missing_file_and_garbage() {
+        assert!(TraceReader::open("/nonexistent/nope.trace").is_err());
+        let path = temp_path("garbage");
+        std::fs::write(&path, b"this is not a trace").unwrap();
+        let err = TraceReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("magic") || err.contains("short"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

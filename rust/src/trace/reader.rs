@@ -1,0 +1,134 @@
+//! Streamed trace reader: loads the file once and decodes records
+//! lazily out of the in-memory buffer (no per-record I/O or
+//! allocation — each decoded [`Access`] is produced by value).
+
+use super::format::{RecordDecoder, TraceHeader};
+use crate::workloads::Access;
+
+/// Decodes a `CXTR` trace record by record.
+pub struct TraceReader {
+    data: Vec<u8>,
+    pos: usize,
+    dec: RecordDecoder,
+    decoded: u64,
+    pub header: TraceHeader,
+}
+
+impl TraceReader {
+    /// Open and header-check a trace file.
+    pub fn open(path: &str) -> anyhow::Result<Self> {
+        let data = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+        Self::from_bytes(data).map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
+    }
+
+    /// Decode from an in-memory image (tests, converters).
+    pub fn from_bytes(data: Vec<u8>) -> anyhow::Result<Self> {
+        let (header, pos) = TraceHeader::decode(&data)?;
+        // A record is at least MIN_RECORD_BYTES, so a forged count that
+        // cannot fit in the file is rejected up front (it would
+        // otherwise size `read_all`'s result vector).
+        let remaining = (data.len() - pos) as u64;
+        anyhow::ensure!(
+            header.records.saturating_mul(super::format::MIN_RECORD_BYTES) <= remaining,
+            "header declares {} records but only {remaining} bytes follow",
+            header.records
+        );
+        Ok(TraceReader { data, pos, dec: RecordDecoder::new(), decoded: 0, header })
+    }
+
+    /// Next `(host, access)` record, or `None` after the last one.
+    /// Errors on truncation, trailing garbage, or a host tag outside
+    /// the header's declared range.
+    pub fn next_record(&mut self) -> anyhow::Result<Option<(u32, Access)>> {
+        if self.decoded == self.header.records {
+            anyhow::ensure!(
+                self.pos == self.data.len(),
+                "{} trailing bytes after the declared {} records",
+                self.data.len() - self.pos,
+                self.header.records
+            );
+            return Ok(None);
+        }
+        let (host, a) = self.dec.decode(&self.data, &mut self.pos)?;
+        anyhow::ensure!(
+            host < self.header.hosts,
+            "record {} tagged host {host}, but the header declares {} hosts",
+            self.decoded,
+            self.header.hosts
+        );
+        self.decoded += 1;
+        Ok(Some((host, a)))
+    }
+
+    /// Decode the remaining records in one pass.
+    pub fn read_all(mut self) -> anyhow::Result<(TraceHeader, Vec<(u32, Access)>)> {
+        let mut out = Vec::with_capacity((self.header.records - self.decoded) as usize);
+        while let Some(rec) = self.next_record()? {
+            out.push(rec);
+        }
+        Ok((self.header, out))
+    }
+}
+
+/// In-memory dual of [`TraceReader::open`] + `read_all` (the proptest
+/// round-trip partner of [`super::format::encode_records`]).
+pub fn decode_records(bytes: &[u8]) -> anyhow::Result<(TraceHeader, Vec<(u32, Access)>)> {
+    TraceReader::from_bytes(bytes.to_vec())?.read_all()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::encode_records;
+    use super::*;
+
+    fn acc(pc: u64, line: u64, write: bool) -> Access {
+        Access { pc, line, write, inst_gap: 42, dependent: false }
+    }
+
+    #[test]
+    fn reads_back_what_was_encoded() {
+        let recs = vec![(0, acc(1, 10, false)), (1, acc(1, 11, true)), (0, acc(9, 5, false))];
+        let bytes = encode_records(&TraceHeader::new("t", 2, 7), &recs).unwrap();
+        let (h, back) = decode_records(&bytes).unwrap();
+        assert_eq!(h.workload, "t");
+        assert_eq!(h.records, 3);
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn rejects_truncated_and_padded_files() {
+        let recs = vec![(0, acc(1, 10, false)), (0, acc(1, 11, false))];
+        let bytes = encode_records(&TraceHeader::new("t", 1, 0), &recs).unwrap();
+        let mut cut = bytes.clone();
+        cut.truncate(bytes.len() - 1);
+        assert!(decode_records(&cut).is_err(), "truncated record");
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode_records(&padded).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn rejects_forged_record_count() {
+        // records=u64::MAX with a tiny body must be rejected before any
+        // allocation is sized from it.
+        let recs = vec![(0, acc(1, 10, false))];
+        let mut bytes = encode_records(&TraceHeader::new("t", 1, 0), &recs).unwrap();
+        bytes[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_records(&bytes).unwrap_err().to_string();
+        assert!(err.contains("records"), "{err}");
+    }
+
+    #[test]
+    fn rejects_host_tag_beyond_header() {
+        // Encode with a 2-host header, then shrink the declared host
+        // count: the tagged record must be rejected on read.
+        let recs = vec![(1u32, acc(1, 10, false))];
+        let bytes = encode_records(&TraceHeader::new("t", 2, 0), &recs).unwrap();
+        let mut h = TraceHeader::new("t", 1, 0);
+        h.records = 1;
+        let mut forged = h.encode();
+        forged.extend_from_slice(&bytes[TraceHeader::decode(&bytes).unwrap().1..]);
+        assert!(decode_records(&forged).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Trace-driven workload source: plugs a recorded (or imported) trace
+//! into the same [`TraceSource`] substrate every synthetic generator
+//! uses, so any run — single-host, multi-host engine, figures,
+//! benches — can be driven from a file via `--workload trace:<path>`.
+
+use super::format::TraceHeader;
+use super::reader::TraceReader;
+use crate::workloads::{Access, TraceSource};
+
+/// Replays one host shard of a trace as an infinite access stream.
+///
+/// Sharding semantics (`host` of `hosts`):
+/// * `hosts == header.hosts` — host `h` replays exactly the records
+///   tagged `h`, in file order: a run recorded with `--hosts N` and
+///   replayed with `--hosts N` reproduces each shard's stream exactly.
+/// * otherwise — records are dealt round-robin in file order (record
+///   `i` goes to host `i % hosts`), a deterministic re-shard of any
+///   trace onto any host count (including a multi-host trace replayed
+///   single-host, which concatenates the tagged blocks).
+///
+/// The stream is infinite, as [`TraceSource`] requires: past the last
+/// record it wraps to the first (`wraps` counts how often). A replay
+/// of the recorded run's own configuration consumes exactly the
+/// recorded records and never wraps.
+pub struct TraceReplay {
+    records: Vec<Access>,
+    pos: usize,
+    workload: String,
+    /// Times the stream wrapped past its end.
+    pub wraps: u64,
+}
+
+impl TraceReplay {
+    /// Replay the whole file as one stream (single-host runs).
+    pub fn open(path: &str) -> anyhow::Result<Self> {
+        Self::open_shard(path, 0, 1)
+    }
+
+    /// Replay host `host`'s shard of an `hosts`-way replay.
+    pub fn open_shard(path: &str, host: usize, hosts: usize) -> anyhow::Result<Self> {
+        let (header, records) = TraceReader::open(path)?.read_all()?;
+        Self::shard(&header, &records, host, hosts)
+            .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
+    }
+
+    /// Shard pre-decoded records (see the type docs for semantics).
+    pub fn shard(
+        header: &TraceHeader,
+        records: &[(u32, Access)],
+        host: usize,
+        hosts: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(hosts >= 1 && host < hosts, "bad shard {host}/{hosts}");
+        let mine: Vec<Access> = if header.hosts as usize == hosts {
+            records
+                .iter()
+                .filter(|(tag, _)| *tag as usize == host)
+                .map(|&(_, a)| a)
+                .collect()
+        } else {
+            records
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % hosts == host)
+                .map(|(_, &(_, a))| a)
+                .collect()
+        };
+        anyhow::ensure!(
+            !mine.is_empty(),
+            "shard {host}/{hosts} of workload {:?} has no records ({} total, {} recorded hosts)",
+            header.workload,
+            records.len(),
+            header.hosts
+        );
+        Ok(TraceReplay {
+            records: mine,
+            pos: 0,
+            workload: header.workload.clone(),
+            wraps: 0,
+        })
+    }
+
+    /// Records in this shard.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+/// One decoded trace shared across shard builders: the multi-host
+/// replay path opens and decodes the file **once**, then cuts N
+/// [`TraceReplay`] shards out of the in-memory records — instead of
+/// each of N hosts re-reading and re-decoding the whole file to keep
+/// 1/N of it.
+pub struct SharedTrace {
+    header: TraceHeader,
+    records: Vec<(u32, Access)>,
+}
+
+impl SharedTrace {
+    pub fn open(path: &str) -> anyhow::Result<Self> {
+        let (header, records) = TraceReader::open(path)?.read_all()?;
+        Ok(SharedTrace { header, records })
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    /// Cut host `host`-of-`hosts`'s shard (semantics of
+    /// [`TraceReplay::shard`]).
+    pub fn shard(&self, host: usize, hosts: usize) -> anyhow::Result<TraceReplay> {
+        TraceReplay::shard(&self.header, &self.records, host, hosts)
+    }
+}
+
+impl TraceSource for TraceReplay {
+    fn next_access(&mut self) -> Access {
+        if self.pos == self.records.len() {
+            self.pos = 0;
+            self.wraps += 1;
+        }
+        let a = self.records[self.pos];
+        self.pos += 1;
+        a
+    }
+
+    /// The *recorded* workload's name, so a replayed run's `RunStats`
+    /// (whose `workload` field is the source name) is bit-identical to
+    /// the original run's.
+    fn name(&self) -> String {
+        self.workload.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(line: u64) -> Access {
+        Access { pc: 0x10, line, write: false, inst_gap: 50, dependent: false }
+    }
+
+    fn tagged(hosts: u32, per_host: usize) -> (TraceHeader, Vec<(u32, Access)>) {
+        let mut recs = Vec::new();
+        for h in 0..hosts {
+            for i in 0..per_host {
+                recs.push((h, acc(u64::from(h) * 1000 + i as u64)));
+            }
+        }
+        (TraceHeader::new("PR", hosts, 1), recs)
+    }
+
+    #[test]
+    fn equal_host_count_replays_exact_tagged_shards() {
+        let (h, recs) = tagged(4, 5);
+        for host in 0..4usize {
+            let mut r = TraceReplay::shard(&h, &recs, host, 4).unwrap();
+            assert_eq!(r.len(), 5);
+            for i in 0..5u64 {
+                assert_eq!(r.next_access().line, host as u64 * 1000 + i);
+            }
+            assert_eq!(r.wraps, 0);
+        }
+    }
+
+    #[test]
+    fn mismatched_host_count_deals_round_robin() {
+        let (h, recs) = tagged(1, 6);
+        let mut a = TraceReplay::shard(&h, &recs, 0, 2).unwrap();
+        let mut b = TraceReplay::shard(&h, &recs, 1, 2).unwrap();
+        assert_eq!(
+            (0..3).map(|_| a.next_access().line).collect::<Vec<_>>(),
+            vec![0, 2, 4]
+        );
+        assert_eq!(
+            (0..3).map(|_| b.next_access().line).collect::<Vec<_>>(),
+            vec![1, 3, 5]
+        );
+    }
+
+    #[test]
+    fn multi_host_trace_replayed_single_host_concatenates() {
+        let (h, recs) = tagged(2, 2);
+        let mut r = TraceReplay::shard(&h, &recs, 0, 1).unwrap();
+        let lines: Vec<u64> = (0..4).map(|_| r.next_access().line).collect();
+        assert_eq!(lines, vec![0, 1, 1000, 1001]);
+    }
+
+    #[test]
+    fn wraps_past_the_end_and_counts() {
+        let (h, recs) = tagged(1, 3);
+        let mut r = TraceReplay::shard(&h, &recs, 0, 1).unwrap();
+        let lines: Vec<u64> = (0..7).map(|_| r.next_access().line).collect();
+        assert_eq!(lines, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.wraps, 2);
+        assert_eq!(r.name(), "PR", "replay reports the recorded workload");
+    }
+
+    #[test]
+    fn empty_shard_is_an_error() {
+        let (mut h, mut recs) = tagged(2, 2);
+        // A forged 2-host trace whose records are all tagged 0: shard 1
+        // of an equal-count replay would be empty.
+        h.hosts = 2;
+        for r in &mut recs {
+            r.0 = 0;
+        }
+        assert!(TraceReplay::shard(&h, &recs, 1, 2).is_err());
+        assert!(TraceReplay::shard(&h, &recs, 2, 2).is_err(), "host out of range");
+    }
+}

@@ -1,0 +1,81 @@
+//! Buffered trace writer: streams delta-encoded records to disk and
+//! patches the header's record count on finish.
+
+use super::format::{RecordEncoder, TraceHeader, RECORDS_OFFSET};
+use crate::workloads::Access;
+use std::io::{Seek, SeekFrom, Write};
+
+/// Flush threshold for the in-memory encode buffer.
+const FLUSH_BYTES: usize = 64 << 10;
+
+/// Streams records into a `CXTR` file. Create, `push` every record,
+/// then call [`TraceWriter::finish`] — dropping the writer without
+/// finishing leaves a file whose header says zero records (detectably
+/// incomplete, never silently wrong).
+pub struct TraceWriter {
+    file: std::fs::File,
+    buf: Vec<u8>,
+    enc: RecordEncoder,
+    header: TraceHeader,
+}
+
+impl TraceWriter {
+    /// Create `path` and write the header (record count 0 until
+    /// `finish`). `hosts` is the number of tagged host streams the
+    /// caller will push (1 for single-host runs).
+    pub fn create(path: &str, workload: &str, hosts: u32, seed: u64) -> anyhow::Result<Self> {
+        let header = TraceHeader::new(workload, hosts, seed);
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating trace {path}: {e}"))?;
+        Ok(TraceWriter { file, buf: header.encode(), enc: RecordEncoder::new(), header })
+    }
+
+    /// Append one record tagged with its host stream.
+    pub fn push(&mut self, host: u32, a: &Access) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            host < self.header.hosts,
+            "record host tag {host} out of range (trace declares {} hosts)",
+            self.header.hosts
+        );
+        self.enc.encode(host, a, &mut self.buf);
+        self.header.records += 1;
+        if self.buf.len() >= FLUSH_BYTES {
+            self.flush_buf()?;
+        }
+        Ok(())
+    }
+
+    fn flush_buf(&mut self) -> anyhow::Result<()> {
+        self.file.write_all(&self.buf)?;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Flush and patch the final record count into the header. Returns
+    /// the completed header.
+    pub fn finish(mut self) -> anyhow::Result<TraceHeader> {
+        self.flush_buf()?;
+        self.file.seek(SeekFrom::Start(RECORDS_OFFSET as u64))?;
+        self.file.write_all(&self.header.records.to_le_bytes())?;
+        self.file.flush()?;
+        Ok(self.header)
+    }
+}
+
+/// Write one complete trace: `streams[h]` becomes host `h`'s tagged
+/// records (a single-element slice produces a plain single-host trace).
+pub fn write_trace(
+    path: &str,
+    workload: &str,
+    seed: u64,
+    streams: &[Vec<Access>],
+) -> anyhow::Result<TraceHeader> {
+    anyhow::ensure!(!streams.is_empty(), "write_trace: no host streams");
+    let mut w = TraceWriter::create(path, workload, streams.len() as u32, seed)?;
+    for (h, stream) in streams.iter().enumerate() {
+        for a in stream {
+            w.push(h as u32, a)?;
+        }
+    }
+    w.finish()
+}

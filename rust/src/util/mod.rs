@@ -14,3 +14,26 @@ pub use rng::Rng;
 pub fn default_parallelism() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
+
+/// FNV-1a 64-bit hash: compact deterministic fingerprints for CLI/CI
+/// comparison (e.g. the `fingerprint=` line `run` prints, which the
+/// trace record/replay CI check diffs).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(super::fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -102,8 +102,20 @@ impl WorkloadId {
             "lbm" => WorkloadId::Lbm,
             "libquantum" => WorkloadId::Libquantum,
             "mcf" => WorkloadId::Mcf,
-            other => anyhow::bail!("unknown workload {other:?}"),
+            other => anyhow::bail!(
+                "unknown workload {other:?} (valid: {})",
+                Self::names_csv()
+            ),
         })
+    }
+
+    /// Comma-separated lowercase names of every workload (error help).
+    pub fn names_csv() -> String {
+        Self::ALL
+            .iter()
+            .map(|id| id.name().to_ascii_lowercase())
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 
     pub fn is_graph(&self) -> bool {
@@ -123,6 +135,66 @@ impl WorkloadId {
             WorkloadId::Lbm => Box::new(spec::SpecTrace::lbm(rng)),
             WorkloadId::Libquantum => Box::new(spec::SpecTrace::libquantum(rng)),
             WorkloadId::Mcf => Box::new(spec::SpecTrace::mcf(rng)),
+        }
+    }
+}
+
+/// A workload selector as the CLI/config accept it: a synthetic
+/// generator by name, or a recorded/imported trace file via
+/// `trace:<path>` (see `crate::trace`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    Id(WorkloadId),
+    /// Replay the `CXTR` trace at this path.
+    Trace(String),
+}
+
+impl WorkloadSpec {
+    /// Parse a workload argument. Errors name every valid choice.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(path) = s.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "trace workload needs a path: trace:<path>");
+            return Ok(WorkloadSpec::Trace(path.to_string()));
+        }
+        WorkloadId::parse(s).map(WorkloadSpec::Id).map_err(|_| {
+            anyhow::anyhow!(
+                "unknown workload {s:?} (valid: {}, or trace:<path>)",
+                WorkloadId::names_csv()
+            )
+        })
+    }
+
+    /// Compact render (config show, logs).
+    pub fn describe(&self) -> String {
+        match self {
+            WorkloadSpec::Id(id) => id.name().to_string(),
+            WorkloadSpec::Trace(path) => format!("trace:{path}"),
+        }
+    }
+
+    /// Build host `h`-of-`hosts`'s stream. Synthetic generators get the
+    /// engine's decorrelated per-host seed (host 0 keeps `seed`, so a
+    /// 1-host spec replays the classic single-host stream); traces are
+    /// sharded per [`crate::trace::TraceReplay::shard`].
+    ///
+    /// Each call on a `Trace` spec reads and decodes the file — callers
+    /// building many shards of one trace should decode once via
+    /// [`crate::trace::SharedTrace`] and cut shards from it (the CLI's
+    /// multi-host path does).
+    pub fn source_for_host(
+        &self,
+        seed: u64,
+        host: usize,
+        hosts: usize,
+    ) -> anyhow::Result<Box<dyn TraceSource>> {
+        match self {
+            WorkloadSpec::Id(id) => {
+                Ok(id.source(crate::sim::parallel::host_seed(seed, host)))
+            }
+            WorkloadSpec::Trace(path) => {
+                let replay = crate::trace::TraceReplay::open_shard(path, host, hosts)?;
+                Ok(Box::new(replay) as Box<dyn TraceSource>)
+            }
         }
     }
 }
@@ -176,6 +248,39 @@ mod tests {
                 assert_eq!(a.next_access(), b.next_access(), "{}", id.name());
             }
         }
+    }
+
+    #[test]
+    fn spec_parses_ids_and_traces_and_lists_names_on_error() {
+        assert_eq!(WorkloadSpec::parse("pr").unwrap(), WorkloadSpec::Id(WorkloadId::Pr));
+        assert_eq!(
+            WorkloadSpec::parse("trace:/tmp/x.trace").unwrap(),
+            WorkloadSpec::Trace("/tmp/x.trace".into())
+        );
+        assert!(WorkloadSpec::parse("trace:").is_err(), "empty path");
+        let err = WorkloadSpec::parse("bogus").unwrap_err().to_string();
+        for name in ["cc", "pr", "sssp", "tc", "bwaves", "leslie3d", "lbm", "libquantum", "mcf"]
+        {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        assert!(err.contains("trace:<path>"), "{err}");
+        let id_err = WorkloadId::parse("bogus").unwrap_err().to_string();
+        assert!(id_err.contains("libquantum"), "id errors list names too: {id_err}");
+    }
+
+    #[test]
+    fn spec_source_host0_matches_plain_source() {
+        let mut a = WorkloadSpec::Id(WorkloadId::Pr).source_for_host(7, 0, 1).unwrap();
+        let mut b = WorkloadId::Pr.source(7);
+        for _ in 0..200 {
+            assert_eq!(a.next_access(), b.next_access());
+        }
+        assert!(
+            WorkloadSpec::Trace("/nonexistent/x.trace".into())
+                .source_for_host(7, 0, 1)
+                .is_err(),
+            "missing trace file surfaces as an error"
+        );
     }
 
     #[test]

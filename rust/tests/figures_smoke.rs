@@ -10,6 +10,7 @@ fn opts(tag: &str) -> FigOpts {
         seed: 7,
         artifacts: Some("artifacts".to_string()),
         out_dir: format!("target/test-results-{tag}"),
+        trace: None,
     }
 }
 

@@ -765,8 +765,13 @@ fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
             let cfg = std::sync::Arc::new(cfg);
             let mut prints: Vec<(usize, String)> = Vec::new();
             for threads in [1usize, 2, 4] {
-                let opts =
-                    MultiHostOpts { hosts, threads, epoch_accesses: 1024, artifacts: None };
+                let opts = MultiHostOpts {
+                    hosts,
+                    threads,
+                    epoch_accesses: 1024,
+                    artifacts: None,
+                    record: false,
+                };
                 let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
                 assert!(s.bi_invariant, "spec {spec} hosts {hosts} threads {threads}");
                 assert_eq!(s.per_host.len(), hosts);
@@ -906,6 +911,66 @@ fn prop_multi_sharer_directory_matches_reference_and_snoops_all_sharers() {
                 );
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trace format (ISSUE 5): arbitrary access streams must round-trip
+// through the CXTR encoder bit-identically — host tags included.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_trace_roundtrip_bit_identical() {
+    use expand_cxl::trace::format::{encode_records, TraceHeader};
+    use expand_cxl::trace::reader::decode_records;
+    use expand_cxl::workloads::Access;
+
+    forall(30, |rng, seed| {
+        let hosts = 1 + rng.below(5) as u32;
+        let n = 1 + rng.below(3_000) as usize;
+        // Adversarial value mix: clustered lines (small deltas), wild
+        // jumps (u64-scale deltas), repeated and fresh pcs, extreme
+        // inst_gaps — everything the delta/varint layers special-case.
+        let mut pc = 0x400_000u64;
+        let mut line = 1u64 << 33;
+        let mut records: Vec<(u32, Access)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            match rng.below(4) {
+                0 => line = line.wrapping_add(rng.below(64)),
+                1 => line = line.wrapping_sub(rng.below(64)),
+                2 => line = rng.next_u64(),
+                _ => {}
+            }
+            if rng.chance(0.3) {
+                pc = rng.next_u64();
+            }
+            let gap = match rng.below(3) {
+                0 => 0,
+                1 => rng.below(200) as u32,
+                _ => u32::MAX - rng.below(5) as u32,
+            };
+            records.push((
+                rng.below(u64::from(hosts)) as u32,
+                Access {
+                    pc,
+                    line,
+                    write: rng.chance(0.3),
+                    inst_gap: gap,
+                    dependent: rng.chance(0.2),
+                },
+            ));
+        }
+        let header = TraceHeader::new("prop[mixed]", hosts, 0xF00D ^ seed);
+        let bytes = encode_records(&header, &records).unwrap();
+        let (h, back) = decode_records(&bytes).unwrap();
+        assert_eq!(h.records, n as u64, "seed {seed}");
+        assert_eq!(h.hosts, hosts, "seed {seed}");
+        assert_eq!(h.workload, "prop[mixed]", "seed {seed}");
+        assert_eq!(back, records, "seed {seed}: stream must round-trip bit-identically");
+        // Re-encoding the decoded stream is byte-stable (the format is
+        // canonical: one encoding per stream).
+        let bytes2 = encode_records(&h, &back).unwrap();
+        assert_eq!(bytes, bytes2, "seed {seed}: canonical encoding");
     });
 }
 

@@ -1,0 +1,185 @@
+//! Trace subsystem end-to-end tests (ISSUE 5): file-level record →
+//! replay determinism on single- and multi-host runs, importer-to-sim
+//! flow, and the `--workload trace:<path>` plumbing.
+
+use expand_cxl::config::{presets, PrefetcherKind, TopologySpec};
+use expand_cxl::sim::parallel::{run_multi_host, run_multi_host_traced, MultiHostOpts};
+use expand_cxl::sim::runner::Runner;
+use expand_cxl::trace::{import_str, write_trace, ImportFormat, TraceReader, TraceReplay};
+use expand_cxl::workloads::{mixed::WriteHeavy, WorkloadId, WorkloadSpec};
+use std::sync::Arc;
+
+/// Unique temp path per test (the suite runs tests concurrently).
+fn temp_trace(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("cxtr_it_{}_{tag}.trace", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn smoke_cfg(accesses: usize) -> expand_cxl::config::SimConfig {
+    let mut c = presets::smoke();
+    c.accesses = accesses;
+    c.prefetcher = PrefetcherKind::Expand;
+    c
+}
+
+/// Record a run to a file, replay it through `--workload trace:<path>`
+/// plumbing (WorkloadSpec), and demand an identical fingerprint.
+fn record_replay_roundtrip(spec: &str, write_boost: f64, tag: &str) {
+    let path = temp_trace(tag);
+    let mut cfg = smoke_cfg(15_000);
+    cfg.cxl.topology = TopologySpec::parse(spec).unwrap();
+    let cfg = Arc::new(cfg);
+
+    let mut runner = Runner::new(&cfg, None).unwrap();
+    runner.enable_recording();
+    let original = if write_boost > 0.0 {
+        let inner = WorkloadId::Pr.source(cfg.seed);
+        let mut src = WriteHeavy::new(inner, write_boost, cfg.seed ^ 0x5707);
+        runner.run(&mut src, cfg.accesses)
+    } else {
+        let mut src = WorkloadId::Pr.source(cfg.seed);
+        runner.run(&mut *src, cfg.accesses)
+    };
+    let header =
+        write_trace(&path, &original.workload, cfg.seed, &[runner.take_recording()]).unwrap();
+    assert!(header.records >= cfg.accesses as u64);
+
+    // `trace info` surface: header + record count must be readable.
+    let reader = TraceReader::open(&path).unwrap();
+    assert_eq!(reader.header.records, header.records);
+    assert_eq!(reader.header.workload, original.workload);
+
+    // Replay through the same plumbing `--workload trace:<path>` uses.
+    let wl = WorkloadSpec::parse(&format!("trace:{path}")).unwrap();
+    let mut src = wl.source_for_host(cfg.seed, 0, 1).unwrap();
+    let mut runner2 = Runner::new(&cfg, None).unwrap();
+    let replayed = runner2.run(&mut *src, cfg.accesses);
+    assert_eq!(
+        original.fingerprint(),
+        replayed.fingerprint(),
+        "{spec} boost {write_boost}: replay must reproduce the recorded run"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn chain_record_replay_reproduces_fingerprint() {
+    record_replay_roundtrip("chain", 0.0, "chain");
+}
+
+#[test]
+fn tree_record_replay_reproduces_fingerprint() {
+    record_replay_roundtrip("tree:2,2,4", 0.0, "tree");
+}
+
+#[test]
+fn write_heavy_record_replay_reproduces_fingerprint() {
+    // The recorded stream already carries the promoted writes; replay
+    // without re-wrapping must reproduce them.
+    record_replay_roundtrip("chain", 0.3, "wh");
+}
+
+#[test]
+fn multi_host_record_replay_is_thread_invariant_and_exact() {
+    // Acceptance criterion: a 4-host recorded run replayed via a tagged
+    // trace file reproduces the original fingerprint under --threads 1
+    // and 4 alike.
+    let path = temp_trace("mh4");
+    let mut cfg = smoke_cfg(8_000);
+    cfg.cxl.topology = TopologySpec::parse("tree:1,2,4").unwrap();
+    let cfg = Arc::new(cfg);
+    let seed = cfg.seed;
+
+    let opts = |threads: usize, record: bool| MultiHostOpts {
+        hosts: 4,
+        threads,
+        epoch_accesses: 2048,
+        artifacts: None,
+        record,
+    };
+    let wl = WorkloadSpec::parse("pr").unwrap();
+    let (original, recordings) = run_multi_host_traced(&cfg, &opts(2, true), |h| {
+        wl.source_for_host(seed, h, 4)
+    })
+    .unwrap();
+    assert_eq!(recordings.len(), 4);
+    let header = write_trace(&path, &original.per_host[0].workload, seed, &recordings).unwrap();
+    assert_eq!(header.hosts, 4);
+
+    let replay_spec = WorkloadSpec::parse(&format!("trace:{path}")).unwrap();
+    for threads in [1usize, 4] {
+        let replayed = run_multi_host(&cfg, &opts(threads, false), |h| {
+            replay_spec.source_for_host(seed, h, 4)
+        })
+        .unwrap();
+        assert_eq!(
+            original.fingerprint(),
+            replayed.fingerprint(),
+            "threads {threads}: tagged-file replay must reproduce the recorded engine run"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn missing_trace_shard_fails_the_engine_cleanly() {
+    let cfg = Arc::new(smoke_cfg(4_000));
+    let wl = WorkloadSpec::parse("trace:/nonexistent/nope.trace").unwrap();
+    let err = run_multi_host(
+        &cfg,
+        &MultiHostOpts {
+            hosts: 2,
+            threads: 2,
+            epoch_accesses: 1024,
+            artifacts: None,
+            record: false,
+        },
+        |h| wl.source_for_host(cfg.seed, h, 2),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("source"), "engine names the failing stage: {err}");
+}
+
+#[test]
+fn imported_champsim_trace_drives_the_simulator() {
+    // Importer -> binary trace -> replay: the convert flow end to end.
+    let path = temp_trace("champsim");
+    let mut text = String::from("# synthetic strided champsim-style input\n");
+    for i in 0..4_000u64 {
+        let pc = 0x401000 + (i % 4) * 8;
+        let addr = 0x1000_0000u64 + i * 128;
+        let kind = if i % 7 == 0 { "W" } else { "R" };
+        text.push_str(&format!("{pc:#x} {addr:#x} {kind} 40\n"));
+    }
+    let records = import_str(&text, ImportFormat::Champsim).unwrap();
+    assert_eq!(records.len(), 4_000);
+    write_trace(&path, "champsim-import", 0, &[records]).unwrap();
+
+    let mut cfg = presets::smoke();
+    cfg.accesses = 3_000;
+    let cfg = Arc::new(cfg);
+    let mut src = TraceReplay::open(&path).unwrap();
+    let mut runner = Runner::new(&cfg, None).unwrap();
+    let stats = runner.run(&mut src, cfg.accesses);
+    assert_eq!(stats.workload, "champsim-import");
+    assert_eq!(stats.accesses, 3_000);
+    assert!(stats.demand_writes > 0, "imported W records are stores: {stats:?}");
+    assert_eq!(
+        stats.accesses,
+        stats.l1_hits + stats.l2_hits + stats.llc_hits + stats.llc_misses + stats.reflector_hits
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn csv_import_matches_champsim_import_of_the_same_stream() {
+    // The two importers are different syntaxes for the same records.
+    let champsim = "0x10 0x1000 R 5\n0x18 0x1040 W 9\n";
+    let csv = "pc,addr,write,inst_gap\n0x10,0x1000,0,5\n0x18,0x1040,1,9\n";
+    let a = import_str(champsim, ImportFormat::Champsim).unwrap();
+    let b = import_str(csv, ImportFormat::Csv).unwrap();
+    assert_eq!(a, b);
+}
