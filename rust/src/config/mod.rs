@@ -513,6 +513,11 @@ pub struct SimConfig {
     pub epoch_accesses: usize,
     /// Multi-host worker threads (0 = all available cores).
     pub threads: usize,
+    /// Hot-loop batch size: accesses pulled, routed and replayed per
+    /// batch in `run_segment`. Purely a throughput knob — results are
+    /// bit-identical for every value (pinned by proptests); 1 recovers
+    /// the scalar per-access loop.
+    pub batch: usize,
     /// Default workload spec (`[sim] workload = "pr"` or
     /// `"trace:<path>"`); the CLI positional / `--workload` overrides
     /// it. `None` means the CLI must name one.
@@ -537,6 +542,7 @@ impl Default for SimConfig {
             hosts: 1,
             epoch_accesses: 8192,
             threads: 0,
+            batch: 256,
             workload: None,
         }
     }
@@ -594,6 +600,7 @@ impl SimConfig {
             ("sim", "hosts") => self.hosts = num!(),
             ("sim", "epoch_accesses") => self.epoch_accesses = num!(),
             ("sim", "threads") => self.threads = num!(),
+            ("sim", "batch") => self.batch = num!(),
             ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
             ("sim", "workload") => {
                 // Validate eagerly (bad names fail at config time, with
@@ -628,7 +635,7 @@ impl SimConfig {
              notify_stride={}\n\
              [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x} hosts={} \
-             epoch_accesses={} threads={} workload={}",
+             epoch_accesses={} threads={} batch={} workload={}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
             self.cpu.mshrs,
             self.hierarchy.l1d.size_bytes >> 10, self.hierarchy.l1d.ways,
@@ -649,7 +656,7 @@ impl SimConfig {
             self.coherence.dir_entries, self.coherence.dir_ways,
             self.coherence.device_update_every, self.coherence.audit,
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
-            self.hosts, self.epoch_accesses, self.threads,
+            self.hosts, self.epoch_accesses, self.threads, self.batch,
             self.workload.as_deref().unwrap_or("-"),
         )
     }
@@ -756,6 +763,16 @@ mod tests {
         assert!(c.render().contains("hosts=4"));
         assert!(c.render().contains("epoch_accesses=2048"));
         assert!(c.apply("sim", "hosts", "abc").is_err());
+    }
+
+    #[test]
+    fn batch_key_applies_and_renders() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.batch, 256, "batched hot loop by default");
+        c.apply("sim", "batch", "64").unwrap();
+        assert_eq!(c.batch, 64);
+        assert!(c.render().contains("batch=64"));
+        assert!(c.apply("sim", "batch", "wide").is_err());
     }
 
     #[test]

@@ -84,7 +84,11 @@ impl Fabric {
 
     /// Pure propagation latency (no queuing) of `bytes` from RC to
     /// `dev` (or back — symmetric): per-hop link latency + serialization,
-    /// plus per-switch processing, plus RC processing.
+    /// plus per-switch processing, plus RC processing. Inlined so the
+    /// batched miss path (endpoint index already resolved by the batch
+    /// route pass) folds this into two table loads and a fused
+    /// multiply-add.
+    #[inline]
     pub fn path_latency(&self, dev: NodeId, bytes: usize) -> Ps {
         let ser = serialize_ps(&self.cfg, bytes);
         ns(self.cfg.rc_latency_ns)

@@ -35,7 +35,7 @@ const COMMANDS: &[CommandHelp] = &[
                 [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
                 [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
-                [--hosts N] [--threads N] [--epoch N]   (hosts>1 runs the \
+                [--hosts N] [--threads N] [--epoch N] [--batch N]   (hosts>1 runs the \
                 deterministic epoch-quantized multi-host engine; --record \
                 captures every host's access stream into a replayable trace; \
                 trace:<path> replays one)",
@@ -111,6 +111,7 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.hosts = args.get_usize("hosts", cfg.hosts)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.epoch_accesses = args.get_usize("epoch", cfg.epoch_accesses)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
     cfg.expand.hit_notify_stride =
         args.get_usize("hit-notify-stride", cfg.expand.hit_notify_stride)?;
     cfg.coherence.dir_entries = args.get_usize("dir-entries", cfg.coherence.dir_entries)?;
@@ -310,20 +311,13 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_trace_info(path: &str) -> anyhow::Result<()> {
-    let mut reader = TraceReader::open(path)?;
+    // One streaming pass straight over the mapping — no materialized
+    // record Vec, so info copes with traces far larger than the runs
+    // that replay slices of them (pinned by a large-trace regression
+    // test in tests/trace.rs).
+    let reader = TraceReader::open(path)?;
     let header = reader.header.clone();
-    let mut per_host = vec![0u64; header.hosts as usize];
-    let mut writes = 0u64;
-    let mut dependent = 0u64;
-    let mut lines = std::collections::HashSet::new();
-    // Stream the records (no materialized Vec — info must cope with
-    // traces far larger than the runs that replay slices of them).
-    while let Some((h, a)) = reader.next_record()? {
-        per_host[h as usize] += 1;
-        writes += u64::from(a.write);
-        dependent += u64::from(a.dependent);
-        lines.insert(a.line);
-    }
+    let s = reader.scan()?;
     println!("trace {path}");
     println!("  format: CXTR v{}, line={}B", header.version, header.line_bytes);
     println!(
@@ -333,14 +327,14 @@ fn cmd_trace_info(path: &str) -> anyhow::Result<()> {
     println!(
         "  records: {} ({} reads, {} writes ({:.1}%), {} dependent, {} distinct lines)",
         header.records,
-        header.records - writes,
-        writes,
-        writes as f64 / (header.records.max(1)) as f64 * 100.0,
-        dependent,
-        lines.len()
+        header.records - s.writes,
+        s.writes,
+        s.writes as f64 / (header.records.max(1)) as f64 * 100.0,
+        s.dependent,
+        s.distinct_lines
     );
     if header.hosts > 1 {
-        for (h, n) in per_host.iter().enumerate() {
+        for (h, n) in s.per_host.iter().enumerate() {
             println!("  host {h}: {n} records");
         }
     }

@@ -137,18 +137,27 @@ impl Cache {
     }
 
     /// Row-major probe of one set: slot index of `line` if resident.
-    /// Tag equality and generation check fold into one comparison pair
-    /// over the flat tag row — no per-way struct loads.
+    /// Branchless accumulation over the flat tag row: at most one valid
+    /// slot can match (insertions go through `find` first), so OR-ing
+    /// the matching index into the accumulator is exact. No early exit
+    /// means no data-dependent branch — the loop reduces to a masked
+    /// compare over `ways` consecutive (tag, gen) pairs that the
+    /// vectorizer can unroll, which matters in the batched hot loop
+    /// where this probe runs three-plus times per access.
     #[inline]
     fn find(&self, set: usize, line: u64) -> Option<usize> {
         let base = set * self.ways;
         let gen = self.live_gen;
-        for i in base..base + self.ways {
-            if self.tags[i] == line && self.gen[i] == gen {
-                return Some(i);
-            }
+        let tags = &self.tags[base..base + self.ways];
+        let gens = &self.gen[base..base + self.ways];
+        let mut found = 0usize;
+        let mut any = false;
+        for (i, (&t, &g)) in tags.iter().zip(gens.iter()).enumerate() {
+            let hit = (t == line) & (g == gen);
+            found |= if hit { base + i } else { 0 };
+            any |= hit;
         }
-        None
+        any.then_some(found)
     }
 
     #[inline]

@@ -41,6 +41,15 @@
 //! therefore produce bit-identical per-host and aggregate [`RunStats`]
 //! (coherence counters included) — asserted by the determinism
 //! proptests and cheap enough to re-check anywhere.
+//!
+//! The batched hot loop (`[sim] batch`) composes cleanly with epoch
+//! quantization: each `run_segment(epoch)` call chops its own accesses
+//! into batches internally, the batching is entirely shard-local (pull
+//! counts and pull order match the scalar loop exactly), and the only
+//! state a segment boundary carries is the shard's own lookahead
+//! window — exactly what the scalar loop carried — so thread-count
+//! invariance and batch-size invariance are independent, and both are
+//! pinned by the differential proptests.
 
 use crate::coherence::BiDirectory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};

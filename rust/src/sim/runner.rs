@@ -117,7 +117,20 @@ pub struct Runner {
     pool: DevicePool,
     prefetcher: Box<dyn Prefetcher>,
     events: EventQueue<PrefetchFill>,
-    lookahead: VecDeque<Access>,
+    /// Flat batched access stream: accesses are pulled from the source
+    /// whole batches at a time (`[sim] batch`, via
+    /// [`crate::workloads::TraceSource::fill_batch`]) and consumed in
+    /// place. The entries past the consume point double as the
+    /// prefetcher's oracle lookahead window — a contiguous slice, no
+    /// separate `VecDeque` and no `make_contiguous` per access.
+    stream: Vec<Access>,
+    /// Consumed prefix of `stream` (compacted at each batch boundary,
+    /// so the buffer stays at ~batch+lookahead entries).
+    stream_pos: usize,
+    /// Per-batch endpoint routes, resolved in one tight pass up front
+    /// (`DevicePool::route` is pure): the miss path and its directory
+    /// grant reuse one index instead of routing twice per access.
+    route_scratch: Vec<usize>,
     /// Collect Fig 4d/4e time series.
     pub collect_series: bool,
     /// Shadow-memory consistency auditor (audit mode; persists across
@@ -257,7 +270,9 @@ impl Runner {
             pool,
             prefetcher,
             events: EventQueue::new(),
-            lookahead: VecDeque::new(),
+            stream: Vec::new(),
+            stream_pos: 0,
+            route_scratch: Vec::new(),
             collect_series: false,
             auditor,
             invalid_after: LineMap::new(),
@@ -618,9 +633,18 @@ impl Runner {
 
     /// Replay one segment of `n` accesses, accumulating into `stats`
     /// and `cur`. All simulation state — hierarchy contents, in-flight
-    /// fills, lookahead buffer, core clock, coherence counters — carries
+    /// fills, stream buffer, core clock, coherence counters — carries
     /// over between segments, so E epoch-sized segments replay exactly
     /// like one long segment.
+    ///
+    /// The segment runs in fixed-size batches (`[sim] batch`): each
+    /// batch pulls its accesses from the source in bulk, resolves their
+    /// endpoint routes in one tight pass, then replays them. The pull
+    /// rule is exact — per batch of `k`, exactly enough accesses are
+    /// pulled to leave `k` consumable plus the prefetcher's lookahead
+    /// window — so pull count and order match the old per-access loop
+    /// for every batch size, and results are bit-identical whatever
+    /// `batch` says (the differential proptests pin this).
     pub fn run_segment(
         &mut self,
         source: &mut dyn TraceSource,
@@ -629,127 +653,124 @@ impl Runner {
         cur: &mut RunCursor,
     ) {
         let wall_start = std::time::Instant::now();
-        let lookahead_depth = self.prefetcher.wants_lookahead();
+        let depth = self.prefetcher.wants_lookahead();
         // Fig 4e windowed hit-rate accounting.
         const WIN: u64 = 2048;
 
         let update_every = self.cfg.coherence.device_update_every;
-        for _ in 0..n {
-            let i = cur.index;
-            cur.index += 1;
-            // Maintain the oracle lookahead (+1 for the current access).
-            while self.lookahead.len() < lookahead_depth + 1 {
-                let a = source.next_access();
+        // Recent-line tracking only feeds the update injector; skip the
+        // deque churn entirely when no update can ever fire.
+        let track_recent = update_every > 0 && self.cxl_backed();
+        let cxl = self.cxl_backed();
+        let batch = self.cfg.batch.max(1);
+
+        let mut done = 0usize;
+        while done < n {
+            let k = batch.min(n - done);
+            // Compact the consumed prefix: the buffer holds at most
+            // batch + lookahead accesses for the whole run.
+            if self.stream_pos > 0 {
+                self.stream.drain(..self.stream_pos);
+                self.stream_pos = 0;
+            }
+            // Top the stream up to `k` consumable accesses plus the
+            // oracle lookahead window. At a segment boundary exactly
+            // `depth` unconsumed accesses remain — identical leftover,
+            // pull count and pull order to the scalar per-access loop.
+            let need = (k + depth).saturating_sub(self.stream.len());
+            if need > 0 {
+                let start = self.stream.len();
+                source.fill_batch(&mut self.stream, need);
+                debug_assert_eq!(self.stream.len(), start + need, "fill_batch contract");
                 if let Some(buf) = &mut self.record_buf {
-                    buf.push(a);
+                    buf.extend_from_slice(&self.stream[start..]);
                 }
-                self.lookahead.push_back(a);
             }
-            let a = self.lookahead.pop_front().unwrap();
-
-            self.core.advance(a.inst_gap as u64);
-            self.apply_due_fills();
-
-            // Periodic device-side update injection: pick a recently
-            // demanded line so the update actually races host-cached
-            // data and in-flight pushes.
-            self.accesses_seen += 1;
-            if update_every > 0
-                && self.cxl_backed()
-                && self.accesses_seen % update_every as u64 == 0
-                && !self.recent_lines.is_empty()
-            {
-                let pick = self.update_rng.below(self.recent_lines.len() as u64) as usize;
-                let line = self.recent_lines[pick];
-                self.device_update(line);
+            // Batch route pass: resolve every access's owning endpoint
+            // up front (`route` is pure — a tight autovectorizable loop
+            // over the line addresses); the miss path and its directory
+            // grant below reuse the index instead of routing twice.
+            if cxl {
+                let mut routes = std::mem::take(&mut self.route_scratch);
+                routes.clear();
+                routes.reserve(k);
+                for a in &self.stream[..k] {
+                    routes.push(self.pool.route(a.line));
+                }
+                self.route_scratch = routes;
             }
-            if self.recent_lines.len() == 64 {
-                self.recent_lines.pop_front();
-            }
-            self.recent_lines.push_back(a.line);
 
-            let lk = self.hierarchy.access_rw(0, a.line, a.write);
-            let now = self.core.now;
-            self.fill_scratch.clear();
-            let mut access_latency = lk.latency as f64;
-            if a.write {
-                stats.demand_writes += 1;
-            } else {
-                stats.demand_reads += 1;
-            }
-            // Stores don't train the prefetchers: the paper's MemRdPC
-            // piggyback (and the decider stream behind it) is read-only;
-            // writes travel as plain MemWr data.
-            let observe = !a.write;
+            for bi in 0..k {
+                let i = cur.index;
+                cur.index += 1;
+                let a = self.stream[bi];
 
-            // Hit-path coherence bookkeeping, common to L1/L2/LLC: a
-            // store dirties the line (and stales reflector/in-flight
-            // copies); a read is version-checked by the auditor.
-            if lk.level != HitLevel::Memory {
+                self.core.advance(a.inst_gap as u64);
+                self.apply_due_fills();
+
+                // Periodic device-side update injection: pick a recently
+                // demanded line so the update actually races host-cached
+                // data and in-flight pushes.
+                if track_recent {
+                    self.accesses_seen += 1;
+                    if self.accesses_seen % update_every as u64 == 0
+                        && !self.recent_lines.is_empty()
+                    {
+                        let pick =
+                            self.update_rng.below(self.recent_lines.len() as u64) as usize;
+                        let line = self.recent_lines[pick];
+                        self.device_update(line);
+                    }
+                    if self.recent_lines.len() == 64 {
+                        self.recent_lines.pop_front();
+                    }
+                    self.recent_lines.push_back(a.line);
+                }
+
+                let lk = self.hierarchy.access_rw(0, a.line, a.write);
+                let now = self.core.now;
+                self.fill_scratch.clear();
+                let mut access_latency = lk.latency as f64;
                 if a.write {
-                    self.host_write(a.line, now);
-                } else if let Some(aud) = &mut self.auditor {
-                    aud.host_read_cached(a.line);
+                    stats.demand_writes += 1;
+                } else {
+                    stats.demand_reads += 1;
                 }
-            }
+                // Stores don't train the prefetchers: the paper's MemRdPC
+                // piggyback (and the decider stream behind it) is read-only;
+                // writes travel as plain MemWr data.
+                let observe = !a.write;
 
-            match lk.level {
-                HitLevel::L1 => {
-                    // Pipelined; absorbed into base IPC.
-                    self.core.hit(0, false);
-                    stats.l1_hits += 1;
-                }
-                HitLevel::L2 => {
-                    self.core.hit(lk.latency, a.dependent);
-                    stats.l2_hits += 1;
-                }
-                HitLevel::Llc => {
-                    self.core.hit(lk.latency, a.dependent);
-                    stats.llc_hits += 1;
-                    if lk.llc_prefetch_first_touch {
-                        // useful prefetch tracked by cache stats
+                // Hit-path coherence bookkeeping, common to L1/L2/LLC: a
+                // store dirties the line (and stales reflector/in-flight
+                // copies); a read is version-checked by the auditor.
+                if lk.level != HitLevel::Memory {
+                    if a.write {
+                        self.host_write(a.line, now);
+                    } else if let Some(aud) = &mut self.auditor {
+                        aud.host_read_cached(a.line);
                     }
-                    if observe {
-                        let backing = self.cfg.backing;
-                        let la = self.lookahead.make_contiguous();
-                        let mut env = PrefetchEnv {
-                            fabric: &mut self.fabric,
-                            pool: &mut self.pool,
-                            dram: &mut self.dram,
-                            backing,
-                        };
-                        self.prefetcher.on_llc_access(
-                            &a,
-                            true,
-                            now,
-                            la,
-                            &mut env,
-                            &mut self.fill_scratch,
-                        );
-                    }
-                    cur.win_hits += 1;
-                    cur.win_total += 1;
                 }
-                HitLevel::Memory => {
-                    // Reflector first (ExPAND's host-side fast path).
-                    if let Some(rlat) = self.prefetcher.reflector_check(a.line, now) {
-                        if let Some(aud) = &mut self.auditor {
-                            aud.reflector_consume(a.line);
-                        }
-                        let lat = lk.latency + rlat;
-                        self.core.hit(lat, a.dependent);
-                        let ev = self.hierarchy.fill_demand(0, a.line, a.write);
-                        if let Some(e) = ev {
-                            self.handle_llc_eviction(e, now);
-                        }
-                        stats.reflector_hits += 1;
-                        access_latency = lat as f64;
-                        if a.write {
-                            self.host_write(a.line, now);
+
+                match lk.level {
+                    HitLevel::L1 => {
+                        // Pipelined; absorbed into base IPC.
+                        self.core.hit(0, false);
+                        stats.l1_hits += 1;
+                    }
+                    HitLevel::L2 => {
+                        self.core.hit(lk.latency, a.dependent);
+                        stats.l2_hits += 1;
+                    }
+                    HitLevel::Llc => {
+                        self.core.hit(lk.latency, a.dependent);
+                        stats.llc_hits += 1;
+                        if lk.llc_prefetch_first_touch {
+                            // useful prefetch tracked by cache stats
                         }
                         if observe {
                             let backing = self.cfg.backing;
-                            let la = self.lookahead.make_contiguous();
+                            let la = &self.stream[bi + 1..bi + 1 + depth];
                             let mut env = PrefetchEnv {
                                 fabric: &mut self.fabric,
                                 pool: &mut self.pool,
@@ -767,125 +788,170 @@ impl Runner {
                         }
                         cur.win_hits += 1;
                         cur.win_total += 1;
-                    } else {
-                        let mem_lat = match self.cfg.backing {
-                            Backing::LocalDram => self.dram.read(a.line, now),
-                            Backing::CxlSsd => {
-                                // Reads under ExPAND piggyback the PC
-                                // (MemRdPC); writes fetch ownership with
-                                // a plain read (write-allocate RFO).
-                                let op = if matches!(self.cfg.prefetcher, PrefetcherKind::Expand)
-                                    && !a.write
-                                {
-                                    M2S::RwDMemRdPC
-                                } else {
-                                    M2S::ReqMemRd
-                                };
-                                // Route the miss to the endpoint that owns
-                                // this line under the interleave policy;
-                                // the round trip runs over that device's
-                                // virtual hierarchy.
-                                let idx = self.pool.route(a.line);
-                                let node = self.pool.node_of(idx);
-                                let down = self.fabric.path_latency(node, m2s_bytes(op));
-                                // Cross-host device-queue pressure rides
-                                // on top of this host's own service time
-                                // (epoch-quantized contention model). The
-                                // effect log records the raw occupancy
-                                // only — the penalty is waiting, not
-                                // service, and must not compound through
-                                // the next epoch's estimate.
-                                let raw = self.pool.ssd_mut(idx).serve_read(a.line, now + down);
-                                self.log_device_service(idx, raw);
-                                let service = raw + self.contention[idx];
-                                self.fabric.read_roundtrip(node, now, op, service)
+                    }
+                    HitLevel::Memory => {
+                        // Reflector first (ExPAND's host-side fast path).
+                        if let Some(rlat) = self.prefetcher.reflector_check(a.line, now) {
+                            if let Some(aud) = &mut self.auditor {
+                                aud.reflector_consume(a.line);
                             }
-                        };
-                        debug_assert!(
-                            mem_lat < 1 << 50,
-                            "absurd mem_lat {mem_lat} at access {i} now {now}"
-                        );
-                        if let Some(aud) = &mut self.auditor {
-                            aud.memory_read(a.line);
-                        }
-                        let total = lk.latency + mem_lat;
-                        self.core.miss(total, a.dependent);
-                        let ev = self.hierarchy.fill_demand(0, a.line, a.write);
-                        // Settle the eviction (possible dirty writeback)
-                        // before granting: the grant's directory victim
-                        // may be this very line.
-                        if let Some(e) = ev {
-                            self.handle_llc_eviction(e, now);
-                        }
-                        if self.cxl_backed() {
-                            let idx = self.pool.route(a.line);
-                            self.grant(idx, a.line, now);
-                        }
-                        stats.llc_misses += 1;
-                        access_latency = total as f64;
-                        if a.write {
-                            self.host_write(a.line, now);
-                        }
-                        if observe {
-                            let backing = self.cfg.backing;
-                            let la = self.lookahead.make_contiguous();
-                            let mut env = PrefetchEnv {
-                                fabric: &mut self.fabric,
-                                pool: &mut self.pool,
-                                dram: &mut self.dram,
-                                backing,
+                            let lat = lk.latency + rlat;
+                            self.core.hit(lat, a.dependent);
+                            let ev = self.hierarchy.fill_demand(0, a.line, a.write);
+                            if let Some(e) = ev {
+                                self.handle_llc_eviction(e, now);
+                            }
+                            stats.reflector_hits += 1;
+                            access_latency = lat as f64;
+                            if a.write {
+                                self.host_write(a.line, now);
+                            }
+                            if observe {
+                                let backing = self.cfg.backing;
+                                let la = &self.stream[bi + 1..bi + 1 + depth];
+                                let mut env = PrefetchEnv {
+                                    fabric: &mut self.fabric,
+                                    pool: &mut self.pool,
+                                    dram: &mut self.dram,
+                                    backing,
+                                };
+                                self.prefetcher.on_llc_access(
+                                    &a,
+                                    true,
+                                    now,
+                                    la,
+                                    &mut env,
+                                    &mut self.fill_scratch,
+                                );
+                            }
+                            cur.win_hits += 1;
+                            cur.win_total += 1;
+                        } else {
+                            let mem_lat = match self.cfg.backing {
+                                Backing::LocalDram => self.dram.read(a.line, now),
+                                Backing::CxlSsd => {
+                                    // Reads under ExPAND piggyback the PC
+                                    // (MemRdPC); writes fetch ownership with
+                                    // a plain read (write-allocate RFO).
+                                    let op = if matches!(
+                                        self.cfg.prefetcher,
+                                        PrefetcherKind::Expand
+                                    ) && !a.write
+                                    {
+                                        M2S::RwDMemRdPC
+                                    } else {
+                                        M2S::ReqMemRd
+                                    };
+                                    // The batch route pass already resolved
+                                    // the endpoint that owns this line under
+                                    // the interleave policy; the round trip
+                                    // runs over that device's virtual
+                                    // hierarchy.
+                                    let idx = self.route_scratch[bi];
+                                    let node = self.pool.node_of(idx);
+                                    let down = self.fabric.path_latency(node, m2s_bytes(op));
+                                    // Cross-host device-queue pressure rides
+                                    // on top of this host's own service time
+                                    // (epoch-quantized contention model). The
+                                    // effect log records the raw occupancy
+                                    // only — the penalty is waiting, not
+                                    // service, and must not compound through
+                                    // the next epoch's estimate.
+                                    let raw =
+                                        self.pool.ssd_mut(idx).serve_read(a.line, now + down);
+                                    self.log_device_service(idx, raw);
+                                    let service = raw + self.contention[idx];
+                                    self.fabric.read_roundtrip(node, now, op, service)
+                                }
                             };
-                            self.prefetcher.on_llc_access(
-                                &a,
-                                false,
-                                now,
-                                la,
-                                &mut env,
-                                &mut self.fill_scratch,
+                            debug_assert!(
+                                mem_lat < 1 << 50,
+                                "absurd mem_lat {mem_lat} at access {i} now {now}"
                             );
+                            if let Some(aud) = &mut self.auditor {
+                                aud.memory_read(a.line);
+                            }
+                            let total = lk.latency + mem_lat;
+                            self.core.miss(total, a.dependent);
+                            let ev = self.hierarchy.fill_demand(0, a.line, a.write);
+                            // Settle the eviction (possible dirty writeback)
+                            // before granting: the grant's directory victim
+                            // may be this very line.
+                            if let Some(e) = ev {
+                                self.handle_llc_eviction(e, now);
+                            }
+                            if cxl {
+                                self.grant(self.route_scratch[bi], a.line, now);
+                            }
+                            stats.llc_misses += 1;
+                            access_latency = total as f64;
+                            if a.write {
+                                self.host_write(a.line, now);
+                            }
+                            if observe {
+                                let backing = self.cfg.backing;
+                                let la = &self.stream[bi + 1..bi + 1 + depth];
+                                let mut env = PrefetchEnv {
+                                    fabric: &mut self.fabric,
+                                    pool: &mut self.pool,
+                                    dram: &mut self.dram,
+                                    backing,
+                                };
+                                self.prefetcher.on_llc_access(
+                                    &a,
+                                    false,
+                                    now,
+                                    la,
+                                    &mut env,
+                                    &mut self.fill_scratch,
+                                );
+                            }
+                            cur.win_total += 1;
                         }
-                        cur.win_total += 1;
                     }
                 }
+
+                // Drain the scratch buffer without giving up its allocation
+                // (take/restore keeps the borrow checker out of the loop).
+                let fills = std::mem::take(&mut self.fill_scratch);
+                for &f in &fills {
+                    // A payload captured while the host holds the line dirty
+                    // is stale by construction (the device copy lags the
+                    // store), and the arrival-time checks cannot catch it if
+                    // the writeback completes while the fill is in flight —
+                    // drop at issue. ExPAND pushes never reach here dirty
+                    // (the BI directory filters host-cached lines); this
+                    // guards the host-issued prefetchers.
+                    if self.hierarchy.llc_dirty(f.line) {
+                        continue;
+                    }
+                    if let Some(aud) = &mut self.auditor {
+                        aud.fill_issue(f.line, f.issued_at);
+                    }
+                    self.events.push(f.arrives_at, f);
+                }
+                self.fill_scratch = fills;
+                cur.total_access_ps += access_latency as u128;
+
+                // Series sampling.
+                if self.collect_series && matches!(lk.level, HitLevel::Llc | HitLevel::Memory) {
+                    let gap = self.core.now.saturating_sub(cur.last_llc_access);
+                    cur.last_llc_access = self.core.now;
+                    if stats.llc_gap_series.len() < 20_000 {
+                        stats.llc_gap_series.push((i, gap));
+                    }
+                }
+                if self.collect_series && cur.win_total >= WIN {
+                    stats
+                        .hit_rate_series
+                        .push((i, cur.win_hits as f64 / cur.win_total as f64));
+                    cur.win_hits = 0;
+                    cur.win_total = 0;
+                }
             }
 
-            // Drain the scratch buffer without giving up its allocation
-            // (take/restore keeps the borrow checker out of the loop).
-            let fills = std::mem::take(&mut self.fill_scratch);
-            for &f in &fills {
-                // A payload captured while the host holds the line dirty
-                // is stale by construction (the device copy lags the
-                // store), and the arrival-time checks cannot catch it if
-                // the writeback completes while the fill is in flight —
-                // drop at issue. ExPAND pushes never reach here dirty
-                // (the BI directory filters host-cached lines); this
-                // guards the host-issued prefetchers.
-                if self.hierarchy.llc_dirty(f.line) {
-                    continue;
-                }
-                if let Some(aud) = &mut self.auditor {
-                    aud.fill_issue(f.line, f.issued_at);
-                }
-                self.events.push(f.arrives_at, f);
-            }
-            self.fill_scratch = fills;
-            cur.total_access_ps += access_latency as u128;
-
-            // Series sampling.
-            if self.collect_series && matches!(lk.level, HitLevel::Llc | HitLevel::Memory) {
-                let gap = self.core.now.saturating_sub(cur.last_llc_access);
-                cur.last_llc_access = self.core.now;
-                if stats.llc_gap_series.len() < 20_000 {
-                    stats.llc_gap_series.push((i, gap));
-                }
-            }
-            if self.collect_series && cur.win_total >= WIN {
-                stats
-                    .hit_rate_series
-                    .push((i, cur.win_hits as f64 / cur.win_total as f64));
-                cur.win_hits = 0;
-                cur.win_total = 0;
-            }
+            self.stream_pos = k;
+            done += k;
         }
 
         stats.accesses += n as u64;

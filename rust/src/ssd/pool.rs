@@ -84,6 +84,10 @@ impl Interleaver {
 
     /// Route a line address to its owning endpoint (total and
     /// deterministic: every address maps to exactly one endpoint).
+    /// Inlined: the batched hot loop resolves a whole batch of routes
+    /// in one tight pass, which autovectorizes once this div/mod chain
+    /// is visible at the call site.
+    #[inline]
     pub fn route(&self, line: u64) -> usize {
         let n = self.endpoints as u64;
         match self.policy {
@@ -205,6 +209,7 @@ impl DevicePool {
     }
 
     /// Route a line address to its owning endpoint.
+    #[inline]
     pub fn route(&self, line: u64) -> usize {
         self.router.route(line)
     }

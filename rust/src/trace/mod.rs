@@ -34,7 +34,7 @@ pub mod writer;
 
 pub use format::TraceHeader;
 pub use import::{import_file, import_str, ImportFormat};
-pub use reader::TraceReader;
+pub use reader::{TraceReader, TraceSummary};
 pub use replay::{SharedTrace, TraceReplay};
 pub use writer::{write_trace, TraceWriter};
 

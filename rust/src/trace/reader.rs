@@ -1,56 +1,96 @@
-//! Streamed trace reader: loads the file once and decodes records
-//! lazily out of the in-memory buffer (no per-record I/O or
-//! allocation — each decoded [`Access`] is produced by value).
+//! Streamed trace reader: maps the file read-only (zero-copy — see
+//! [`crate::util::mmap::Mmap`]) and decodes records lazily straight out
+//! of the mapping (no per-record I/O or allocation — each decoded
+//! [`Access`] is produced by value, and large traces never materialize
+//! as an intermediate byte `Vec`).
 
 use super::format::{RecordDecoder, TraceHeader};
+use crate::util::linemap::LineSet;
+use crate::util::mmap::Mmap;
 use crate::workloads::Access;
+
+/// Backing bytes of a trace: an owned buffer (tests, converters,
+/// in-memory round-trips) or a live read-only mapping (file replay).
+pub(crate) enum Data {
+    Owned(Vec<u8>),
+    Mapped(Mmap),
+}
+
+impl Data {
+    #[inline]
+    pub(crate) fn bytes(&self) -> &[u8] {
+        match self {
+            Data::Owned(v) => v,
+            Data::Mapped(m) => m,
+        }
+    }
+}
 
 /// Decodes a `CXTR` trace record by record.
 pub struct TraceReader {
-    data: Vec<u8>,
+    data: Data,
     pos: usize,
+    /// Offset of the first record (end of the header) — the rewind
+    /// point for wrap-around replay.
+    body: usize,
     dec: RecordDecoder,
     decoded: u64,
     pub header: TraceHeader,
 }
 
+/// Streaming whole-trace statistics (`trace info`): computed in one
+/// decode pass over the mapping, never holding more than the running
+/// counters and the distinct-line set in memory.
+pub struct TraceSummary {
+    /// Records per tagged host stream (`per_host.len() == header.hosts`).
+    pub per_host: Vec<u64>,
+    pub writes: u64,
+    pub dependent: u64,
+    pub distinct_lines: u64,
+}
+
 impl TraceReader {
-    /// Open and header-check a trace file.
+    /// Open and header-check a trace file (mmap-backed; falls back to a
+    /// buffered read where mapping is unavailable).
     pub fn open(path: &str) -> anyhow::Result<Self> {
-        let data = std::fs::read(path)
-            .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
-        Self::from_bytes(data).map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
+        let map = Mmap::open(path).map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+        Self::from_data(Data::Mapped(map)).map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
     }
 
     /// Decode from an in-memory image (tests, converters).
     pub fn from_bytes(data: Vec<u8>) -> anyhow::Result<Self> {
-        let (header, pos) = TraceHeader::decode(&data)?;
+        Self::from_data(Data::Owned(data))
+    }
+
+    fn from_data(data: Data) -> anyhow::Result<Self> {
+        let (header, pos) = TraceHeader::decode(data.bytes())?;
         // A record is at least MIN_RECORD_BYTES, so a forged count that
         // cannot fit in the file is rejected up front (it would
         // otherwise size `read_all`'s result vector).
-        let remaining = (data.len() - pos) as u64;
+        let remaining = (data.bytes().len() - pos) as u64;
         anyhow::ensure!(
             header.records.saturating_mul(super::format::MIN_RECORD_BYTES) <= remaining,
             "header declares {} records but only {remaining} bytes follow",
             header.records
         );
-        Ok(TraceReader { data, pos, dec: RecordDecoder::new(), decoded: 0, header })
+        Ok(TraceReader { data, pos, body: pos, dec: RecordDecoder::new(), decoded: 0, header })
     }
 
     /// Next `(host, access)` record, or `None` after the last one.
     /// Errors on truncation, trailing garbage, or a host tag outside
     /// the header's declared range.
     pub fn next_record(&mut self) -> anyhow::Result<Option<(u32, Access)>> {
+        let bytes = self.data.bytes();
         if self.decoded == self.header.records {
             anyhow::ensure!(
-                self.pos == self.data.len(),
+                self.pos == bytes.len(),
                 "{} trailing bytes after the declared {} records",
-                self.data.len() - self.pos,
+                bytes.len() - self.pos,
                 self.header.records
             );
             return Ok(None);
         }
-        let (host, a) = self.dec.decode(&self.data, &mut self.pos)?;
+        let (host, a) = self.dec.decode(bytes, &mut self.pos)?;
         anyhow::ensure!(
             host < self.header.hosts,
             "record {} tagged host {host}, but the header declares {} hosts",
@@ -68,6 +108,32 @@ impl TraceReader {
             out.push(rec);
         }
         Ok((self.header, out))
+    }
+
+    /// Stream the remaining records into a [`TraceSummary`] (the
+    /// `trace info` path: one pass, no record vector).
+    pub fn scan(mut self) -> anyhow::Result<TraceSummary> {
+        let mut s = TraceSummary {
+            per_host: vec![0u64; self.header.hosts as usize],
+            writes: 0,
+            dependent: 0,
+            distinct_lines: 0,
+        };
+        let mut lines = LineSet::with_capacity(4096);
+        while let Some((h, a)) = self.next_record()? {
+            s.per_host[h as usize] += 1;
+            s.writes += u64::from(a.write);
+            s.dependent += u64::from(a.dependent);
+            lines.insert(a.line);
+        }
+        s.distinct_lines = lines.len() as u64;
+        Ok(s)
+    }
+
+    /// Dismantle into the raw parts a lazy replay needs: header, the
+    /// backing bytes, and the body offset (first record).
+    pub(crate) fn into_raw(self) -> (TraceHeader, Data, usize) {
+        (self.header, self.data, self.body)
     }
 }
 
@@ -130,5 +196,21 @@ mod tests {
         let mut forged = h.encode();
         forged.extend_from_slice(&bytes[TraceHeader::decode(&bytes).unwrap().1..]);
         assert!(decode_records(&forged).is_err());
+    }
+
+    #[test]
+    fn scan_matches_read_all_counts() {
+        let recs = vec![
+            (0, acc(1, 10, false)),
+            (1, acc(1, 11, true)),
+            (0, acc(9, 5, false)),
+            (1, acc(9, 10, true)),
+        ];
+        let bytes = encode_records(&TraceHeader::new("t", 2, 7), &recs).unwrap();
+        let s = TraceReader::from_bytes(bytes).unwrap().scan().unwrap();
+        assert_eq!(s.per_host, vec![2, 2]);
+        assert_eq!(s.writes, 2);
+        assert_eq!(s.dependent, 0);
+        assert_eq!(s.distinct_lines, 3, "lines 10, 11, 5");
     }
 }

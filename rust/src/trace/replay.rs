@@ -2,9 +2,16 @@
 //! into the same [`TraceSource`] substrate every synthetic generator
 //! uses, so any run — single-host, multi-host engine, figures,
 //! benches — can be driven from a file via `--workload trace:<path>`.
+//!
+//! File-backed replays are **zero-copy**: the file stays memory-mapped
+//! and CXTR varint records are decoded batch-at-a-time straight out of
+//! the mapping, so replaying a large trace never materializes an
+//! intermediate `Vec<(u32, Access)>`. The eager decoded mode survives
+//! for in-memory sharding ([`TraceReplay::shard`] / [`SharedTrace`]),
+//! where N hosts cut shards from one decode.
 
-use super::format::TraceHeader;
-use super::reader::TraceReader;
+use super::format::{RecordDecoder, TraceHeader};
+use super::reader::{Data, TraceReader};
 use crate::workloads::{Access, TraceSource};
 
 /// Replays one host shard of a trace as an infinite access stream.
@@ -23,11 +30,72 @@ use crate::workloads::{Access, TraceSource};
 /// of the recorded run's own configuration consumes exactly the
 /// recorded records and never wraps.
 pub struct TraceReplay {
-    records: Vec<Access>,
-    pos: usize,
+    mode: Mode,
     workload: String,
     /// Times the stream wrapped past its end.
     pub wraps: u64,
+}
+
+enum Mode {
+    /// Shard cut from pre-decoded records (in-memory path).
+    Decoded { records: Vec<Access>, pos: usize },
+    /// Lazy decode straight from the file mapping (file path).
+    Mapped(MappedShard),
+}
+
+/// Decode cursor over a validated mapped trace. The varint encoding is
+/// delta-based with *global* decoder state, so every record is decoded
+/// in file order and non-matching hosts' records are skipped — still a
+/// single linear pass with no allocation.
+struct MappedShard {
+    data: Data,
+    /// Offset of the first record (rewind point).
+    body: usize,
+    /// true: keep records tagged `host`; false: round-robin deal.
+    tag_mode: bool,
+    host: usize,
+    hosts: usize,
+    /// Records belonging to this shard (counted at open).
+    shard_len: usize,
+    dec: RecordDecoder,
+    pos: usize,
+    /// File-order index of the next record (round-robin dealing).
+    index: u64,
+    /// Shard records emitted since the last rewind.
+    emitted: usize,
+}
+
+impl MappedShard {
+    /// Next record of this shard. The whole file was decode-validated
+    /// at open, so mid-stream decode errors are unreachable.
+    fn next(&mut self) -> Access {
+        loop {
+            let (host, a) = self
+                .dec
+                .decode(self.data.bytes(), &mut self.pos)
+                .expect("trace validated at open");
+            let i = self.index;
+            self.index += 1;
+            let keep = if self.tag_mode {
+                host as usize == self.host
+            } else {
+                (i % self.hosts as u64) as usize == self.host
+            };
+            if keep {
+                self.emitted += 1;
+                return a;
+            }
+        }
+    }
+
+    /// Back to the first record (wrap-around). Skipped trailing records
+    /// of other hosts are discarded, matching the decoded mode.
+    fn rewind(&mut self) {
+        self.dec = RecordDecoder::new();
+        self.pos = self.body;
+        self.index = 0;
+        self.emitted = 0;
+    }
 }
 
 impl TraceReplay {
@@ -36,11 +104,53 @@ impl TraceReplay {
         Self::open_shard(path, 0, 1)
     }
 
-    /// Replay host `host`'s shard of an `hosts`-way replay.
+    /// Replay host `host`'s shard of an `hosts`-way replay, decoding
+    /// lazily from a read-only mapping of the file. One validation pass
+    /// runs at open (truncation, trailing garbage, host-range and
+    /// record-count checks — exactly `TraceReader`'s), so the replay
+    /// loop itself cannot fail.
     pub fn open_shard(path: &str, host: usize, hosts: usize) -> anyhow::Result<Self> {
-        let (header, records) = TraceReader::open(path)?.read_all()?;
-        Self::shard(&header, &records, host, hosts)
-            .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
+        anyhow::ensure!(hosts >= 1 && host < hosts, "trace {path}: bad shard {host}/{hosts}");
+        let mut reader = TraceReader::open(path)?;
+        let tag_mode = reader.header.hosts as usize == hosts;
+        let mut shard_len = 0usize;
+        let mut index = 0u64;
+        while let Some((h, _)) =
+            reader.next_record().map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?
+        {
+            let keep = if tag_mode {
+                h as usize == host
+            } else {
+                (index % hosts as u64) as usize == host
+            };
+            shard_len += keep as usize;
+            index += 1;
+        }
+        anyhow::ensure!(
+            shard_len > 0,
+            "trace {path}: shard {host}/{hosts} of workload {:?} has no records \
+             ({} total, {} recorded hosts)",
+            reader.header.workload,
+            reader.header.records,
+            reader.header.hosts
+        );
+        let (header, data, body) = reader.into_raw();
+        Ok(TraceReplay {
+            mode: Mode::Mapped(MappedShard {
+                data,
+                body,
+                tag_mode,
+                host,
+                hosts,
+                shard_len,
+                dec: RecordDecoder::new(),
+                pos: body,
+                index: 0,
+                emitted: 0,
+            }),
+            workload: header.workload,
+            wraps: 0,
+        })
     }
 
     /// Shard pre-decoded records (see the type docs for semantics).
@@ -73,8 +183,7 @@ impl TraceReplay {
             header.hosts
         );
         Ok(TraceReplay {
-            records: mine,
-            pos: 0,
+            mode: Mode::Decoded { records: mine, pos: 0 },
             workload: header.workload.clone(),
             wraps: 0,
         })
@@ -82,11 +191,14 @@ impl TraceReplay {
 
     /// Records in this shard.
     pub fn len(&self) -> usize {
-        self.records.len()
+        match &self.mode {
+            Mode::Decoded { records, .. } => records.len(),
+            Mode::Mapped(m) => m.shard_len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.len() == 0
     }
 }
 
@@ -119,13 +231,55 @@ impl SharedTrace {
 
 impl TraceSource for TraceReplay {
     fn next_access(&mut self) -> Access {
-        if self.pos == self.records.len() {
-            self.pos = 0;
-            self.wraps += 1;
+        match &mut self.mode {
+            Mode::Decoded { records, pos } => {
+                if *pos == records.len() {
+                    *pos = 0;
+                    self.wraps += 1;
+                }
+                let a = records[*pos];
+                *pos += 1;
+                a
+            }
+            Mode::Mapped(m) => {
+                if m.emitted == m.shard_len {
+                    m.rewind();
+                    self.wraps += 1;
+                }
+                m.next()
+            }
         }
-        let a = self.records[self.pos];
-        self.pos += 1;
-        a
+    }
+
+    /// Bulk refill: decoded shards memcpy whole runs; mapped shards
+    /// decode records straight off the mapping. Identical stream to `n`
+    /// scalar [`TraceSource::next_access`] pulls, wraps included.
+    fn fill_batch(&mut self, out: &mut Vec<Access>, n: usize) {
+        out.reserve(n);
+        match &mut self.mode {
+            Mode::Decoded { records, pos } => {
+                let mut left = n;
+                while left > 0 {
+                    if *pos == records.len() {
+                        *pos = 0;
+                        self.wraps += 1;
+                    }
+                    let take = left.min(records.len() - *pos);
+                    out.extend_from_slice(&records[*pos..*pos + take]);
+                    *pos += take;
+                    left -= take;
+                }
+            }
+            Mode::Mapped(m) => {
+                for _ in 0..n {
+                    if m.emitted == m.shard_len {
+                        m.rewind();
+                        self.wraps += 1;
+                    }
+                    out.push(m.next());
+                }
+            }
+        }
     }
 
     /// The *recorded* workload's name, so a replayed run's `RunStats`
@@ -138,6 +292,7 @@ impl TraceSource for TraceReplay {
 
 #[cfg(test)]
 mod tests {
+    use super::super::format::encode_records;
     use super::*;
 
     fn acc(line: u64) -> Access {
@@ -211,5 +366,45 @@ mod tests {
         }
         assert!(TraceReplay::shard(&h, &recs, 1, 2).is_err());
         assert!(TraceReplay::shard(&h, &recs, 2, 2).is_err(), "host out of range");
+    }
+
+    /// Write the tagged fixture to a real file and pit the mapped
+    /// (lazy) shard against the decoded one: identical streams for
+    /// both sharding modes, wrap-around included.
+    #[test]
+    fn mapped_shard_matches_decoded_shard() {
+        let (h, recs) = tagged(2, 4);
+        let bytes = encode_records(&h, &recs).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("cxtr_ut_mapped_{}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::write(&path, &bytes).unwrap();
+        // (host, hosts) pairs covering tag mode (hosts == 2) and
+        // round-robin (hosts == 3 and single-host concatenation).
+        for (host, hosts) in [(0, 2), (1, 2), (0, 1), (2, 3)] {
+            let mut mapped = TraceReplay::open_shard(&path, host, hosts).unwrap();
+            let mut decoded = TraceReplay::shard(&h, &recs, host, hosts).unwrap();
+            assert_eq!(mapped.len(), decoded.len(), "shard {host}/{hosts}");
+            // Pull past the end twice so both modes wrap.
+            for i in 0..(decoded.len() * 2 + 3) {
+                assert_eq!(
+                    mapped.next_access(),
+                    decoded.next_access(),
+                    "shard {host}/{hosts} record {i}"
+                );
+            }
+            assert_eq!(mapped.wraps, decoded.wraps, "shard {host}/{hosts}");
+            assert_eq!(mapped.name(), decoded.name());
+        }
+        // Batched refill equals scalar pulls (fresh replays).
+        let mut scalar = TraceReplay::open_shard(&path, 0, 2).unwrap();
+        let mut batched = TraceReplay::open_shard(&path, 0, 2).unwrap();
+        let mut got = Vec::new();
+        batched.fill_batch(&mut got, 11);
+        let want: Vec<Access> = (0..11).map(|_| scalar.next_access()).collect();
+        assert_eq!(got, want);
+        assert_eq!(batched.wraps, scalar.wraps);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -45,6 +45,30 @@ impl TraceWriter {
         Ok(())
     }
 
+    /// Append a whole run of records for one host stream. Equivalent to
+    /// `push` per record but amortized: one host-range check and one
+    /// record-count update per call, encode into the buffer in 4096-
+    /// record chunks, flush only between chunks — this closes the
+    /// record-path gap the per-record small-write pattern left
+    /// (BENCH_PR5: record 3.41M vs 4.01M synthetic accesses/s).
+    pub fn push_all(&mut self, host: u32, accesses: &[Access]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            host < self.header.hosts,
+            "record host tag {host} out of range (trace declares {} hosts)",
+            self.header.hosts
+        );
+        for chunk in accesses.chunks(4096) {
+            for a in chunk {
+                self.enc.encode(host, a, &mut self.buf);
+            }
+            if self.buf.len() >= FLUSH_BYTES {
+                self.flush_buf()?;
+            }
+        }
+        self.header.records += accesses.len() as u64;
+        Ok(())
+    }
+
     fn flush_buf(&mut self) -> anyhow::Result<()> {
         self.file.write_all(&self.buf)?;
         self.buf.clear();
@@ -73,9 +97,7 @@ pub fn write_trace(
     anyhow::ensure!(!streams.is_empty(), "write_trace: no host streams");
     let mut w = TraceWriter::create(path, workload, streams.len() as u32, seed)?;
     for (h, stream) in streams.iter().enumerate() {
-        for a in stream {
-            w.push(h as u32, a)?;
-        }
+        w.push_all(h as u32, stream)?;
     }
     w.finish()
 }

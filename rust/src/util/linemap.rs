@@ -94,7 +94,11 @@ impl<V: Copy + Default> LineMap<V> {
     }
 
     /// Insert or overwrite; returns the previous value if the key was
-    /// present (the `HashMap::insert` contract).
+    /// present (the `HashMap::insert` contract). Inlined: the batched
+    /// hot loop calls this per access (directory grants, reflector
+    /// bookkeeping), and the common no-grow path is a handful of
+    /// instructions once the call overhead is gone.
+    #[inline]
     pub fn insert(&mut self, key: u64, val: V) -> Option<V> {
         // Keep occupied + tombstones under 7/8 of capacity so probes
         // always terminate at an EMPTY slot.
@@ -136,6 +140,7 @@ impl<V: Copy + Default> LineMap<V> {
     }
 
     /// Remove `key`, returning its value if it was present.
+    #[inline]
     pub fn remove(&mut self, key: u64) -> Option<V> {
         let mut i = self.slot_of(key);
         loop {
@@ -228,11 +233,13 @@ impl LineSet {
 
     /// Returns true if the key was newly inserted (the `HashSet`
     /// contract).
+    #[inline]
     pub fn insert(&mut self, key: u64) -> bool {
         self.map.insert(key, ()).is_none()
     }
 
     /// Returns true if the key was present.
+    #[inline]
     pub fn remove(&mut self, key: u64) -> bool {
         self.map.remove(key).is_some()
     }

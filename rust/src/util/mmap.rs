@@ -1,0 +1,161 @@
+//! Read-only memory mapping without external crates (this image is
+//! offline: no libc/memmap2). On Unix the file is mapped `PROT_READ`
+//! + `MAP_PRIVATE` straight from the kernel's raw syscall surface; on
+//! other platforms — or when `mmap` fails (e.g. an empty file, some
+//! network filesystems) — the bytes are read into an owned buffer so
+//! callers never see the difference.
+//!
+//! The zero-copy replay path (`trace::TraceReplay` in mapped mode)
+//! decodes CXTR varint records directly out of this mapping, so replay
+//! of a multi-GB trace costs page-cache reads, not a full-file decode
+//! into an intermediate `Vec`.
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// A read-only view of a file: either a live `mmap` region or an owned
+/// fallback buffer. Dereferences to `&[u8]` either way.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    /// `Some` when the bytes were read into memory instead of mapped
+    /// (empty file, non-Unix platform, or a failed `mmap`).
+    owned: Option<Vec<u8>>,
+}
+
+// Safety: the mapping is immutable (`PROT_READ`, `MAP_PRIVATE`) and
+// lives until `Drop`; the owned fallback is a plain `Vec<u8>`. Shared
+// `&[u8]` views from any thread are sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only, falling back to `std::fs::read` when
+    /// mapping is unavailable.
+    pub fn open(path: &str) -> anyhow::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)
+                .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+            let len = file
+                .metadata()
+                .map_err(|e| anyhow::anyhow!("stat {path}: {e}"))?
+                .len() as usize;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Mmap { ptr, len, owned: None });
+                }
+            }
+            // Zero-length files cannot be mapped; degraded filesystems
+            // may refuse — both fall through to the owned path below.
+        }
+        let data = std::fs::read(path).map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+        Ok(Mmap::from_owned(data))
+    }
+
+    /// Wrap an in-memory buffer in the same interface (tests, non-Unix).
+    pub fn from_owned(data: Vec<u8>) -> Mmap {
+        Mmap { ptr: std::ptr::null(), len: data.len(), owned: Some(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.owned {
+            Some(v) => v.len(),
+            None => self.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.owned {
+            Some(v) => v,
+            // Safety: `ptr` is a live PROT_READ mapping of exactly
+            // `len` bytes (len > 0 whenever owned is None).
+            None => unsafe { std::slice::from_raw_parts(self.ptr, self.len) },
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.owned.is_none() && self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr as *mut u8, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("mmap_ut_{}_{tag}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn mapping_matches_fs_read() {
+        let path = temp("roundtrip");
+        // Larger than one page so the mapping spans several.
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 31 + 7) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(&m[..], &data[..]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty_slice() {
+        let path = temp("empty");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(&m[..], b"");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_reports_the_path() {
+        let err = Mmap::open("/nonexistent/nope.bin").unwrap_err().to_string();
+        assert!(err.contains("/nonexistent/nope.bin"), "{err}");
+    }
+}

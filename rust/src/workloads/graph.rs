@@ -510,6 +510,21 @@ impl TraceSource for GraphTrace {
         self.chunk.pop().expect("refill produced accesses")
     }
 
+    /// Bulk refill: drain whole chunk runs instead of per-access pops.
+    /// Refills trigger only on an empty chunk — exactly when the scalar
+    /// path would — so the emitted stream (and the algorithm state
+    /// machine's progression) is identical to `n` scalar pulls.
+    fn fill_batch(&mut self, out: &mut Vec<Access>, n: usize) {
+        out.reserve(n);
+        let mut left = n;
+        while left > 0 {
+            if self.chunk.is_empty() {
+                self.refill();
+            }
+            left -= self.chunk.pop_into(out, left);
+        }
+    }
+
     fn name(&self) -> String {
         format!(
             "{}/{}",

@@ -136,6 +136,21 @@ impl TraceSource for WriteHeavy {
         a
     }
 
+    /// Bulk fill: batch through the wrapped source, then promote in
+    /// place. The promotion rng is drawn once per non-write in stream
+    /// order — exactly the scalar path's draw sequence — and the
+    /// wrapper's rng is separate from the inner source's, so batching
+    /// changes neither stream.
+    fn fill_batch(&mut self, out: &mut Vec<Access>, n: usize) {
+        let start = out.len();
+        self.inner.fill_batch(out, n);
+        for a in &mut out[start..] {
+            if !a.write && self.rng.chance(self.fraction) {
+                a.write = true;
+            }
+        }
+    }
+
     fn name(&self) -> String {
         format!("write-heavy[{} @{:.0}%]", self.inner.name(), self.fraction * 100.0)
     }

@@ -37,6 +37,22 @@ pub struct Access {
 pub trait TraceSource {
     fn next_access(&mut self) -> Access;
     fn name(&self) -> String;
+
+    /// Append the next `n` accesses to `out` (the runner's batched hot
+    /// loop pulls through this).
+    ///
+    /// **Determinism contract**: the appended accesses must be exactly
+    /// the stream `n` scalar [`TraceSource::next_access`] calls would
+    /// produce, for every `n` — batching a source must never change its
+    /// stream. The default forwards to `next_access`; generators with
+    /// internal chunk buffers override it to drain whole runs.
+    fn fill_batch(&mut self, out: &mut Vec<Access>, n: usize) {
+        out.reserve(n);
+        for _ in 0..n {
+            let a = self.next_access();
+            out.push(a);
+        }
+    }
 }
 
 /// Workload identifiers used across the CLI/figures (paper's set).
@@ -218,6 +234,14 @@ impl Chunk {
         self.buf.pop_front()
     }
 
+    /// Drain up to `n` buffered accesses into `out`, returning how many
+    /// moved (bulk dual of `pop` for the batched fill path).
+    pub fn pop_into(&mut self, out: &mut Vec<Access>, n: usize) -> usize {
+        let take = n.min(self.buf.len());
+        out.extend(self.buf.drain(..take));
+        take
+    }
+
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -246,6 +270,27 @@ mod tests {
             let mut b = id.source(7);
             for _ in 0..1000 {
                 assert_eq!(a.next_access(), b.next_access(), "{}", id.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_batch_equals_scalar_pulls_for_every_source() {
+        // The batched hot loop's determinism rests on this contract:
+        // fill_batch emits exactly the stream scalar pulls would, for
+        // any mix of batch sizes (including refill-boundary-crossing
+        // ones — 4096 is each generator's chunk size).
+        for id in WorkloadId::ALL {
+            let mut scalar = id.source(11);
+            let mut batched = id.source(11);
+            let mut got = Vec::new();
+            for n in [1usize, 7, 256, 5000] {
+                got.clear();
+                batched.fill_batch(&mut got, n);
+                assert_eq!(got.len(), n, "{}", id.name());
+                for (i, a) in got.iter().enumerate() {
+                    assert_eq!(*a, scalar.next_access(), "{} batch {n} item {i}", id.name());
+                }
             }
         }
     }

@@ -214,6 +214,25 @@ impl TraceSource for SpecTrace {
         self.chunk.pop().expect("refill produced accesses")
     }
 
+    /// Bulk refill: drain whole chunk runs instead of per-access pops.
+    /// Refills trigger only on an empty chunk — exactly when the scalar
+    /// path would — so the emitted stream (and the generator's rng
+    /// consumption order) is identical to `n` scalar pulls.
+    fn fill_batch(&mut self, out: &mut Vec<Access>, n: usize) {
+        out.reserve(n);
+        let mut left = n;
+        while left > 0 {
+            if self.chunk.is_empty() {
+                match self.kind {
+                    Kind::Bwaves | Kind::Leslie3d | Kind::Lbm => self.refill_stencil(),
+                    Kind::Libquantum => self.refill_libquantum(),
+                    Kind::Mcf => self.refill_mcf(),
+                }
+            }
+            left -= self.chunk.pop_into(out, left);
+        }
+    }
+
     fn name(&self) -> String {
         match self.kind {
             Kind::Bwaves => "bwaves",

@@ -739,6 +739,104 @@ fn prop_runner_stats_identical_across_rebuilds_chain_and_tree() {
     }
 }
 
+/// ISSUE 6 differential: the batched hot loop is a pure throughput
+/// transform. `[sim] batch = 1` recovers the scalar per-access loop;
+/// every other batch size must produce a bit-identical `RunStats`
+/// (coherence counters included, auditor on) — on chain and
+/// tree:2,2,4, read-only and write-heavy. The exact-pull rule (top up
+/// to batch + lookahead, record at the pull point) is what this pins:
+/// any divergence in pull count, pull order, route reuse or
+/// recent-line gating shows up as a fingerprint mismatch.
+#[test]
+fn prop_batched_hot_loop_matches_scalar_for_every_batch_size() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::sim::runner::Runner;
+    use expand_cxl::workloads::{mixed::WriteHeavy, WorkloadId};
+
+    let run_once = |spec: &str, batch: usize, write_boost: f64| {
+        let mut cfg = presets::smoke();
+        cfg.accesses = 12_000;
+        cfg.seed = 0xBA7C;
+        cfg.batch = batch;
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.coherence.audit = true;
+        // Exercise the update injector's recent-line gating too.
+        cfg.coherence.device_update_every = 900;
+        cfg.cxl.topology = TopologySpec::parse(spec).unwrap();
+        let cfg = std::sync::Arc::new(cfg);
+        let mut r = Runner::new(&cfg, None).unwrap();
+        let mut stats = if write_boost > 0.0 {
+            let inner = WorkloadId::Pr.source(cfg.seed);
+            let mut src = WriteHeavy::new(inner, write_boost, cfg.seed);
+            r.run(&mut src, cfg.accesses)
+        } else {
+            let mut src = WorkloadId::Pr.source(cfg.seed);
+            r.run(&mut *src, cfg.accesses)
+        };
+        assert!(r.bi_invariant_holds(), "spec {spec} batch {batch}");
+        stats.wall_s = 0.0;
+        stats.inference_wall_ps = 0;
+        format!("{stats:?}")
+    };
+
+    for spec in ["chain", "tree:2,2,4"] {
+        for boost in [0.0, 0.3] {
+            let scalar = run_once(spec, 1, boost);
+            for batch in [8usize, 64, 256] {
+                let batched = run_once(spec, batch, boost);
+                assert_eq!(
+                    scalar, batched,
+                    "spec {spec} boost {boost}: batch {batch} diverges from scalar"
+                );
+            }
+        }
+    }
+}
+
+/// Batch-size invariance must also hold through the epoch-quantized
+/// multi-host engine: a 4-host run over the shared pool produces the
+/// same fingerprint for every batch size, at 1 and 4 worker threads —
+/// partial batches at epoch boundaries and the carried lookahead
+/// window included.
+#[test]
+fn prop_multi_host_engine_batch_size_invariant() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
+    use expand_cxl::workloads::WorkloadId;
+
+    let mut prints: Vec<(usize, usize, String)> = Vec::new();
+    for batch in [1usize, 8, 64, 256] {
+        let mut cfg = presets::smoke();
+        cfg.accesses = 8_000;
+        cfg.seed = 0xBA7C_4057;
+        cfg.batch = batch;
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.cxl.topology = TopologySpec::parse("tree:2,2,4").unwrap();
+        let cfg = std::sync::Arc::new(cfg);
+        for threads in [1usize, 4] {
+            let opts = MultiHostOpts {
+                hosts: 4,
+                threads,
+                // Not a multiple of any batch size above 1: every epoch
+                // ends mid-batch, exercising the partial-batch path.
+                epoch_accesses: 1000,
+                artifacts: None,
+                record: false,
+            };
+            let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
+            assert!(s.bi_invariant, "batch {batch} threads {threads}");
+            prints.push((batch, threads, s.fingerprint()));
+        }
+    }
+    for w in prints.windows(2) {
+        assert_eq!(
+            w[0].2, w[1].2,
+            "batch {} threads {} vs batch {} threads {} diverge",
+            w[0].0, w[0].1, w[1].0, w[1].1
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Multi-host engine (ISSUE 4): thread-count invariance of the
 // epoch-quantized parallel engine, and the multi-sharer BI directory's

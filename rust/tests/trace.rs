@@ -175,6 +175,43 @@ fn imported_champsim_trace_drives_the_simulator() {
 }
 
 #[test]
+fn trace_info_scan_streams_a_large_trace_without_materializing_it() {
+    // ISSUE 6 regression guard: `trace info` must stream the reader
+    // (TraceReader::scan over the mapping), never read_all-decode the
+    // whole file. 300k records push the writer through many 64 KB
+    // flush chunks (the batched push_all path) and the file well past
+    // a single read buffer; scan's counts must still be exact.
+    let path = temp_trace("info_large");
+    const N: u64 = 150_000;
+    let streams: Vec<Vec<expand_cxl::workloads::Access>> = (0..2u64)
+        .map(|h| {
+            (0..N)
+                .map(|i| expand_cxl::workloads::Access {
+                    pc: 0x400 + (i % 16) * 8,
+                    line: h * (1 << 30) + (i % 50_000) * 3,
+                    write: i % 4 == 0,
+                    inst_gap: (i % 90) as u32,
+                    dependent: i % 9 == 0,
+                })
+                .collect()
+        })
+        .collect();
+    let header = write_trace(&path, "large[synthetic]", 7, &streams).unwrap();
+    assert_eq!(header.records, 2 * N);
+    assert_eq!(header.hosts, 2);
+
+    let reader = TraceReader::open(&path).unwrap();
+    assert_eq!(reader.header.records, 2 * N);
+    let s = reader.scan().unwrap();
+    assert_eq!(s.per_host, vec![N, N]);
+    assert_eq!(s.writes, 2 * N / 4);
+    assert_eq!(s.dependent, 2 * (N / 9 + 1), "ceil(150k/9) dependents per host");
+    // Each host touches 50k distinct line values offset by 1<<30.
+    assert_eq!(s.distinct_lines, 100_000);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn csv_import_matches_champsim_import_of_the_same_stream() {
     // The two importers are different syntaxes for the same records.
     let champsim = "0x10 0x1000 R 5\n0x18 0x1040 W 9\n";
