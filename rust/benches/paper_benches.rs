@@ -33,6 +33,7 @@ mod harness;
 
 use expand_cxl::config::{presets, Backing, MediaKind, PrefetcherKind, SimConfig, SsdConfig};
 use expand_cxl::config::{InterleavePolicy, TopologySpec};
+use expand_cxl::obs::ObsOptions;
 use expand_cxl::runtime::{AddressPredictor, Runtime, WindowInput};
 use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
 use expand_cxl::sim::runner::{simulate, Runner};
@@ -297,6 +298,7 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             epoch_accesses: 4096,
             artifacts: None,
             record: false,
+            obs: None,
         };
         let total = (base.accesses * HOSTS) as u64;
         let t = measure_throughput(&full, total, ITERS, || {
@@ -388,7 +390,14 @@ fn trace_replay(b: &Bench) -> Vec<Throughput> {
 /// the scenarios plus the replay-vs-synthetic ratio (acceptance floor
 /// 1.5x), computed against this group's own chain scenario so both
 /// sides of the ratio come from the same build and budget.
-fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
+///
+/// The group also carries the observability overhead guard: the chain
+/// run measured with the obs recorder off and on (`obs_overhead_off` /
+/// `obs_overhead_on`). The off side rides the same gated group as the
+/// chain scenario; the on side must stay within 10% of off — enforced
+/// with a hard assert, and the ratio is annotated into the tracked
+/// JSON. Third return value: obs on/off throughput ratio.
+fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>, Option<f64>) {
     const ITERS: usize = 5;
     let mut results = Vec::new();
     let mut scenario = |name: &str, c: SimConfig, write_boost: f64| -> Option<f64> {
@@ -464,7 +473,52 @@ fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
     if let Some(r) = ratio {
         println!("batched hot loop: replay_mmap/synthetic_chain = {r:.2}x (target >=1.5x)");
     }
-    (results, ratio)
+
+    // Observability overhead guard: the identical chain run through the
+    // Runner with the recorder disabled and enabled. Disabled is one
+    // well-predicted `is_some` branch per site; enabled is O(1)
+    // histogram bumps plus a capacity-bounded event ring.
+    let mut obs_ratio: Option<f64> = None;
+    {
+        let base = {
+            let mut c = cfg();
+            c.prefetcher = PrefetcherKind::Expand;
+            std::sync::Arc::new(c)
+        };
+        let mut obs_run = |name: &str, obs: bool| -> Option<f64> {
+            let full = format!("batched_hot_loop_{name}");
+            if !b.enabled(&full) {
+                return None;
+            }
+            let t = measure_throughput(&full, base.accesses as u64, ITERS, || {
+                let mut r = Runner::new(&base, None).unwrap();
+                if obs {
+                    r.enable_obs(ObsOptions {
+                        series_stride: 4096,
+                        trace_events: true,
+                        ..ObsOptions::default()
+                    });
+                }
+                let mut src = WorkloadId::Pr.source(base.seed);
+                let stats = r.run(&mut *src, base.accesses);
+                if obs {
+                    assert!(stats.obs.is_some(), "enabled recorder must surface a summary");
+                }
+            });
+            let aps = t.mean_accesses_per_sec;
+            results.push(t);
+            Some(aps)
+        };
+        let off = obs_run("obs_overhead_off", false);
+        let on = obs_run("obs_overhead_on", true);
+        if let (Some(off), Some(on)) = (off, on) {
+            let r = on / off;
+            obs_ratio = Some(r);
+            println!("batched hot loop: obs_on/obs_off = {r:.2}x (floor 0.90x)");
+            assert!(r >= 0.90, "observability overhead exceeds 10%: on/off = {r:.3}x");
+        }
+    }
+    (results, ratio, obs_ratio)
 }
 
 fn main() {
@@ -607,7 +661,7 @@ fn main() {
     );
 
     // --- End-to-end: batched_hot_loop group (tracked baseline) ----------
-    let (b6, replay_ratio) = batched_hot_loop(&b);
+    let (b6, replay_ratio, obs_ratio) = batched_hot_loop(&b);
     let ok_b6 = publish_group(
         "batched_hot_loop",
         &b6,
@@ -618,11 +672,19 @@ fn main() {
         |doc| {
             // The zero-copy replay headline rides as a top-level field
             // (acceptance floor: >=1.5x over synthetic generation).
-            if let (Json::Obj(m), Some(r)) = (doc, replay_ratio) {
-                m.insert(
-                    "replay_mmap_vs_synthetic_chain".to_string(),
-                    Json::Num((r * 100.0).round() / 100.0),
-                );
+            if let Json::Obj(m) = doc {
+                if let Some(r) = replay_ratio {
+                    m.insert(
+                        "replay_mmap_vs_synthetic_chain".to_string(),
+                        Json::Num((r * 100.0).round() / 100.0),
+                    );
+                }
+                if let Some(r) = obs_ratio {
+                    m.insert(
+                        "obs_overhead_on_vs_off".to_string(),
+                        Json::Num((r * 100.0).round() / 100.0),
+                    );
+                }
             }
         },
     );

@@ -223,6 +223,14 @@ impl Fabric {
     pub fn traffic_for(&self, dev: NodeId) -> TrafficStats {
         self.traffic.get(dev).copied().unwrap_or_default()
     }
+
+    /// Cumulative M2S request count for one endpoint — the cheap
+    /// occupancy column the observability time series samples per epoch
+    /// (full [`TrafficStats`] snapshots stay reserved for the engine's
+    /// barrier merges).
+    pub fn requests_for(&self, dev: NodeId) -> u64 {
+        self.traffic.get(dev).map(|t| t.requests()).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]

@@ -180,6 +180,10 @@ impl Prefetcher for ExpandPrefetcher {
         self.reflector.invalidate(line)
     }
 
+    fn reflector_len(&self) -> usize {
+        self.reflector.len()
+    }
+
     fn name(&self) -> String {
         "ExPAND".into()
     }

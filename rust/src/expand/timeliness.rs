@@ -95,11 +95,27 @@ impl DeadlineModel {
     }
 }
 
+/// Signed timeliness error of one observed push: positive = the push
+/// arrived later than the enumeration-time model predicted, negative =
+/// earlier. The observability layer histograms |error| per endpoint to
+/// quantify how precise the e2e estimate actually is.
+#[inline]
+pub fn signed_error(predicted_e2e: Ps, actual_e2e: Ps) -> i64 {
+    actual_e2e as i64 - predicted_e2e as i64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{CxlConfig, SsdConfig};
     use crate::cxl::Topology;
+
+    #[test]
+    fn signed_error_direction() {
+        assert_eq!(signed_error(1000, 1300), 300, "late push is positive");
+        assert_eq!(signed_error(1000, 800), -200, "early push is negative");
+        assert_eq!(signed_error(1000, 1000), 0);
+    }
 
     fn setup(levels: usize) -> TimelinessInfo {
         let topo = Topology::chain(levels);

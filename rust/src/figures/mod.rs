@@ -49,13 +49,15 @@ impl FigOpts {
     pub fn runtime(&self) -> Option<std::rc::Rc<crate::runtime::Runtime>> {
         let dir = self.artifacts.as_deref()?;
         if !crate::runtime::Runtime::artifacts_available(dir) {
-            eprintln!("[figures] no artifacts at {dir}; using mock predictor");
+            crate::util::log::info(&format!("[figures] no artifacts at {dir}; using mock predictor"));
             return None;
         }
         match crate::runtime::Runtime::new(dir) {
             Ok(rt) => Some(rt),
             Err(e) => {
-                eprintln!("[figures] runtime unavailable ({e}); using mock predictor");
+                crate::util::log::info(&format!(
+                    "[figures] runtime unavailable ({e}); using mock predictor"
+                ));
                 None
             }
         }

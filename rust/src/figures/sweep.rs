@@ -54,9 +54,9 @@ pub fn run_jobs(jobs: &[(&str, FigFn)], opts: &FigOpts, workers: usize) -> anyho
             scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 let Some(&(name, f)) = jobs.get(i) else { break };
-                eprintln!("[sweep] {name} ...");
+                crate::util::log::info(&format!("[sweep] {name} ..."));
                 match f(opts) {
-                    Ok(()) => eprintln!("[sweep] {name} done"),
+                    Ok(()) => crate::util::log::info(&format!("[sweep] {name} done")),
                     Err(e) => failures.lock().unwrap().push(format!("{name}: {e}")),
                 }
             });

@@ -23,6 +23,7 @@ pub mod expand;
 pub mod figures;
 pub mod mem;
 pub mod metrics;
+pub mod obs;
 pub mod prefetch;
 pub mod runtime;
 pub mod sim;

@@ -6,6 +6,10 @@
 //!   figures    regenerate paper figures/tables (fig1..fig7b, table1c/d, all)
 //!   enumerate  walk the CXL fabric: bus numbers, depths, DSLBIS, e2e latency
 //!   config     show the effective configuration for a preset/overrides
+//!   obs        validate observability exports (metrics JSON, Chrome trace)
+//!
+//! Global flags: `--quiet` silences status chatter, `-v`/`--verbose`
+//! additionally prints the effective configuration.
 
 use expand_cxl::config::{
     parse as cfgparse, presets, Backing, InterleavePolicy, MediaKind, PrefetcherKind, SimConfig,
@@ -14,13 +18,14 @@ use expand_cxl::config::{
 use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
 use expand_cxl::figures::{self, FigOpts};
+use expand_cxl::obs::{self, ObsOptions};
 use expand_cxl::runtime::Runtime;
 use expand_cxl::sim::parallel::{host_seed, run_multi_host_traced, MultiHostOpts};
 use expand_cxl::sim::runner::Runner;
 use expand_cxl::ssd::DevicePool;
 use expand_cxl::trace::{import_file, write_trace, ImportFormat, SharedTrace, TraceReader};
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
-use expand_cxl::util::default_parallelism;
+use expand_cxl::util::{default_parallelism, log};
 use expand_cxl::workloads::{TraceSource, WorkloadSpec};
 use std::sync::Arc;
 
@@ -35,10 +40,18 @@ const COMMANDS: &[CommandHelp] = &[
                 [--backing cxl|local] [--accesses N] [--seed S] [--preset NAME] \
                 [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
-                [--hosts N] [--threads N] [--epoch N] [--batch N]   (hosts>1 runs the \
-                deterministic epoch-quantized multi-host engine; --record \
-                captures every host's access stream into a replayable trace; \
-                trace:<path> replays one)",
+                [--hosts N] [--threads N] [--epoch N] [--batch N] \
+                [--metrics-out PATH] [--trace-events PATH] [--series-out PATH] \
+                (hosts>1 runs the deterministic epoch-quantized multi-host \
+                engine; --record captures every host's access stream into a \
+                replayable trace; trace:<path> replays one; --metrics-out \
+                dumps latency histograms as JSON, --trace-events a \
+                Perfetto-loadable Chrome trace, --series-out a per-epoch CSV)",
+    },
+    CommandHelp {
+        name: "obs",
+        summary: "validate observability exports",
+        usage: "expand obs check-metrics <metrics.json> | obs check-trace <trace.json>",
     },
     CommandHelp {
         name: "trace",
@@ -146,6 +159,16 @@ fn run_spec(
         args.get("workload").is_some() || !args.flag("workload"),
         "--workload needs a value (a workload name or trace:<path>)"
     );
+    for opt in ["metrics-out", "trace-events", "series-out"] {
+        anyhow::ensure!(
+            args.get(opt).is_some() || !args.flag(opt),
+            "--{opt} needs a path (e.g. --{opt} /tmp/out.json)"
+        );
+    }
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let trace_out = args.get("trace-events").map(str::to_string);
+    let series_out = args.get("series-out").map(str::to_string);
+    let obs_on = metrics_out.is_some() || trace_out.is_some() || series_out.is_some();
     let cfg = Arc::new(build_config(args)?);
     let spec_str = positional_workload
         .map(str::to_string)
@@ -163,21 +186,21 @@ fn run_spec(
         PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
     );
     if needs_artifacts && !Runtime::artifacts_available(&cfg.artifacts_dir) {
-        eprintln!(
+        log::info(&format!(
             "warning: artifacts not found in {:?}; using the mock predictor \
              (run `make artifacts`)",
             cfg.artifacts_dir
-        );
+        ));
     }
-    eprintln!("{}", cfg.render());
+    log::verbose(&cfg.render());
     let mut write_boost = args.get_f64("write-boost", 0.0)?;
     if write_boost > 0.0 && matches!(spec, WorkloadSpec::Trace(_)) {
         // A recorded stream already carries its writes (capture happens
         // after any WriteHeavy wrapping); re-boosting would change the
         // stream and break the replay-fingerprint contract.
-        eprintln!(
+        log::info(
             "note: trace replay ignores --write-boost (the recorded stream already \
-             carries its writes)"
+             carries its writes)",
         );
         write_boost = 0.0;
     }
@@ -188,6 +211,10 @@ fn run_spec(
         // shards the tagged file back onto the N hosts.
         let mut opts = MultiHostOpts::from_config(&cfg);
         opts.record = record.is_some();
+        opts.obs = obs_on.then(|| ObsOptions {
+            trace_events: trace_out.is_some(),
+            ..ObsOptions::default()
+        });
         let seed = cfg.seed;
         let hosts = opts.hosts;
         // Trace replay: open + decode the file once here (errors surface
@@ -223,16 +250,29 @@ fn run_spec(
         if stats.aggregate.per_device.len() > 1 {
             print!("{}", stats.aggregate.render_per_device());
         }
+        if let Some(o) = &stats.aggregate.obs {
+            print!("{}", o.render());
+        }
         println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
         anyhow::ensure!(stats.bi_invariant, "shared BI-directory invariant violated");
+        if let Some(rec) = &stats.obs {
+            write_obs_outputs(
+                rec,
+                stats.fingerprint_hash(),
+                stats.hosts,
+                metrics_out.as_deref(),
+                trace_out.as_deref(),
+                series_out.as_deref(),
+            )?;
+        }
         if let Some(path) = record {
             let workload =
                 stats.per_host.first().map(|s| s.workload.as_str()).unwrap_or("unknown");
             let header = write_trace(path, workload, seed, &recordings)?;
-            eprintln!(
+            log::info(&format!(
                 "recorded {} accesses ({} host streams) to {path}",
                 header.records, header.hosts
-            );
+            ));
         }
         return Ok(());
     }
@@ -254,6 +294,15 @@ fn run_spec(
     if record.is_some() {
         runner.enable_recording();
     }
+    if obs_on {
+        // Single-host series rows sample on epoch-sized access strides
+        // (the multi-host engine snapshots at its barriers instead).
+        runner.enable_obs(ObsOptions {
+            series_stride: cfg.epoch_accesses as u64,
+            trace_events: trace_out.is_some(),
+            ..ObsOptions::default()
+        });
+    }
     let stats = runner.run(&mut *src, cfg.accesses);
     println!("{}", stats.summary());
     if !stats.debug.is_empty() {
@@ -266,11 +315,74 @@ fn run_spec(
     if stats.per_device.len() > 1 {
         print!("{}", stats.render_per_device());
     }
+    if let Some(o) = &stats.obs {
+        print!("{}", o.render());
+    }
     println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
+    if let Some(rec) = runner.take_obs() {
+        write_obs_outputs(
+            &rec,
+            stats.fingerprint_hash(),
+            1,
+            metrics_out.as_deref(),
+            trace_out.as_deref(),
+            series_out.as_deref(),
+        )?;
+    }
     if let Some(path) = record {
         let recording = runner.take_recording();
         let header = write_trace(path, &stats.workload, cfg.seed, &[recording])?;
-        eprintln!("recorded {} accesses to {path}", header.records);
+        log::info(&format!("recorded {} accesses to {path}", header.records));
+    }
+    Ok(())
+}
+
+/// Write the requested observability exports from a finished recorder:
+/// fingerprint-stamped metrics JSON, a Chrome `trace_event` JSON
+/// (Perfetto-loadable), and the per-epoch series CSV.
+fn write_obs_outputs(
+    rec: &obs::ObsRecorder,
+    fingerprint: u64,
+    hosts: usize,
+    metrics_out: Option<&str>,
+    trace_out: Option<&str>,
+    series_out: Option<&str>,
+) -> anyhow::Result<()> {
+    if let Some(path) = metrics_out {
+        std::fs::write(path, rec.metrics_json(fingerprint, hosts))
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        log::info(&format!("wrote metrics JSON to {path}"));
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(path, rec.trace_json())
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        log::info(&format!("wrote Chrome trace events to {path} (load in ui.perfetto.dev)"));
+    }
+    if let Some(path) = series_out {
+        std::fs::write(path, rec.series.to_csv(rec.endpoints()))
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        log::info(&format!("wrote per-epoch series CSV to {path}"));
+    }
+    Ok(())
+}
+
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    if !matches!(sub, "check-metrics" | "check-trace") {
+        anyhow::bail!("unknown obs subcommand {sub:?} (check-metrics|check-trace)");
+    }
+    let path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("obs {sub}: missing <path>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    if sub == "check-metrics" {
+        let digest = obs::validate_metrics_json(&text)?;
+        println!("{path}: OK ({digest})");
+    } else {
+        let events = obs::trace_events::validate_chrome_json(&text)?;
+        println!("{path}: OK ({events} trace events)");
     }
     Ok(())
 }
@@ -382,7 +494,10 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
         figures::sweep::run_all(&opts, jobs)
     } else {
         if args.get("jobs").is_some() && jobs > 1 {
-            eprintln!("note: --jobs parallelizes across harnesses; `figures {name}` is a single harness and runs serially");
+            log::info(&format!(
+                "note: --jobs parallelizes across harnesses; `figures {name}` is a \
+                 single harness and runs serially"
+            ));
         }
         figures::run_one(name, &opts)
     }
@@ -452,6 +567,11 @@ fn cmd_config(args: &Args) -> anyhow::Result<()> {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    if args.flag("quiet") || args.flag("q") {
+        log::set_level(log::QUIET);
+    } else if args.flag("verbose") || args.flag("v") {
+        log::set_level(log::VERBOSE);
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "run" => cmd_run(&args),
@@ -459,6 +579,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "enumerate" => cmd_enumerate(&args),
         "config" => cmd_config(&args),
+        "obs" => cmd_obs(&args),
         "help" | "--help" | "-h" => {
             print!(
                 "{}",

@@ -120,6 +120,10 @@ pub struct RunStats {
     pub reflector_write_invalidations: u64,
     /// Shadow-memory auditor counters (audit mode only).
     pub audit: Option<AuditStats>,
+    /// Observability digest (per-class / per-endpoint latency quantiles
+    /// and timeliness error) — present when the obs recorder was
+    /// enabled. Deterministic, so it participates in fingerprints.
+    pub obs: Option<crate::obs::ObsSummary>,
     pub prefetch_issued: u64,
     pub prefetch_useful: u64,
     pub prefetch_wasted: u64,
@@ -431,6 +435,11 @@ pub struct MultiHostStats {
     /// Every host-LLC-resident line was tracked (with that host's bit)
     /// in the shared directory at end of run.
     pub bi_invariant: bool,
+    /// Merged pool-wide observability recorder (histograms, series,
+    /// events) — present when obs was enabled. Excluded from the
+    /// hand-written fingerprint above; its deterministic digest lives in
+    /// `aggregate.obs` instead.
+    pub obs: Option<Box<crate::obs::ObsRecorder>>,
 }
 
 impl MultiHostStats {

@@ -1,0 +1,241 @@
+//! Mergeable log-bucketed latency histogram (HDR-style).
+//!
+//! Values are bucketed on a log2 grid with `2^SUB_BITS` linear
+//! sub-buckets per octave: bucket boundaries are a pure function of the
+//! value, so two histograms recorded independently (per shard, per
+//! epoch) merge by element-wise count addition — exact and
+//! order-independent, which is what makes the multi-host engine's
+//! metrics bit-identical across `--threads 1` vs `N`. The relative
+//! quantile error is bounded by `1 / 2^SUB_BITS` (~3.1%); `min`/`max`
+//! are tracked exactly alongside the buckets.
+
+/// Linear sub-buckets per octave: 32 (relative error <= 1/32).
+pub const SUB_BITS: u32 = 5;
+const SUB_COUNT: u64 = 1 << SUB_BITS;
+
+/// Bucket index for `v` — fixed integer geometry, no floats.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_COUNT {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    (((shift as u64 + 1) << SUB_BITS) + ((v >> shift) - SUB_COUNT)) as usize
+}
+
+/// Smallest value mapping to bucket `idx` (the quantile estimate for
+/// every sample in the bucket; `bucket_floor(bucket_index(v)) <= v`
+/// with relative error `< 1/SUB_COUNT`).
+#[inline]
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < 2 * SUB_COUNT as usize {
+        return idx as u64;
+    }
+    let shift = (idx >> SUB_BITS) as u32 - 1;
+    (((idx as u64) & (SUB_COUNT - 1)) + SUB_COUNT) << shift
+}
+
+/// A mergeable latency histogram. Counts grow lazily toward the highest
+/// recorded bucket (u64::MAX needs 1920 buckets, so the vector is
+/// bounded); recording is branch-light and allocation-free once the
+/// high-water bucket is reached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: Vec::new(), total: 0, min: u64::MAX, max: 0, sum: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let idx = bucket_index(v);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Element-wise merge — exact and order-independent (u64 addition
+    /// commutes), the property the merge-order proptest pins.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact mean of the recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Bucket floor of the k-th smallest recorded sample (0-based).
+    /// Saturates at the last occupied bucket for out-of-range `k`.
+    pub fn value_at_rank(&self, k: u64) -> u64 {
+        let mut cum = 0u64;
+        let mut last = 0usize;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            last = i;
+            if cum > k {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(last)
+    }
+
+    /// Interpolating quantile with the same rank convention as
+    /// `util::stats::percentile` (`rank = q * (n - 1)`, linear between
+    /// adjacent samples), computed over bucket floors: the result is
+    /// within the bucket relative-error bound of the exact value.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * (self.total - 1) as f64;
+        let lo = rank.floor() as u64;
+        let hi = rank.ceil() as u64;
+        let v_lo = self.value_at_rank(lo) as f64;
+        if hi == lo {
+            return v_lo;
+        }
+        let v_hi = self.value_at_rank(hi) as f64;
+        v_lo + (v_hi - v_lo) * (rank - lo as f64)
+    }
+
+    /// Integer quantile for summaries (`p50`/`p99`/`p999`): rounded
+    /// interpolated quantile — deterministic (pure integer bucket walk
+    /// plus one f64 rounding).
+    pub fn percentile_ps(&self, q: f64) -> u64 {
+        self.quantile(q).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_monotone_and_bounded() {
+        // Index is monotone in v; floor under-approximates by <= 1/32.
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < u64::MAX / 2 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index must be monotone at {v}");
+            prev = idx;
+            let lb = bucket_floor(idx);
+            assert!(lb <= v, "floor {lb} > value {v}");
+            assert!(
+                (v - lb) as f64 <= v as f64 / SUB_COUNT as f64,
+                "bucket error too large: v={v} lb={lb}"
+            );
+            v = v * 3 / 2 + 1;
+        }
+        // Exact below 2 octaves.
+        for v in 0..64u64 {
+            assert_eq!(bucket_floor(bucket_index(v)), v);
+        }
+        assert!(bucket_index(u64::MAX) < 1920);
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile_ps(0.5), 0);
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        let p50 = h.percentile_ps(0.5) as f64;
+        assert!((p50 - 500.0).abs() <= 500.0 / 32.0 + 1.0, "p50 = {p50}");
+        let p99 = h.percentile_ps(0.99) as f64;
+        assert!((990.0 - p99) <= 990.0 / 32.0 + 1.0 && p99 <= 991.0, "p99 = {p99}");
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_single_recording() {
+        let vals: Vec<u64> = (0..500).map(|i| (i * 7919) % 100_000).collect();
+        let mut whole = Histogram::new();
+        for &v in &vals {
+            whole.record(v);
+        }
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        let mut merged = Histogram::new();
+        merged.merge(&b);
+        merged.merge(&a);
+        assert_eq!(merged, whole, "merge order must not matter and must equal direct recording");
+    }
+}

@@ -1,0 +1,544 @@
+//! Observability subsystem: mergeable latency histograms, per-epoch
+//! time series, and a structured event tracer.
+//!
+//! Three layers, all deterministic across `--threads 1` vs `N` and
+//! near-zero-cost when disabled (the runner keeps the recorder behind
+//! one `Option` the same way the effect log and record buffer are):
+//!
+//! 1. [`hist`] — HDR-style log-bucketed latency histograms per access
+//!    class and per endpoint, plus a per-endpoint **timeliness-error**
+//!    histogram (predicted e2e latency from `expand/timeliness` vs the
+//!    observed push flight time — the paper's "precise prefetch
+//!    timeliness estimations" claim, quantified). Merges are exact and
+//!    order-independent, so multi-host shards record independently and
+//!    the engine merges at the end in host-index order.
+//! 2. [`series`] — windowed throughput / hit-ratio / occupancy /
+//!    contention samples at the engine's epoch barrier (or on fixed
+//!    access strides single-host), exported as CSV or inside the
+//!    metrics JSON.
+//! 3. [`trace_events`] — a ring of simulation spans exported as Chrome
+//!    `trace_event` JSON for Perfetto.
+
+pub mod hist;
+pub mod series;
+pub mod trace_events;
+
+pub use hist::Histogram;
+pub use series::{SeriesPoint, SeriesRecorder, SeriesSnap};
+pub use trace_events::{EventKind, EventRing, ObsEvent};
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Latency class a sample belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessClass {
+    /// Demand hit anywhere in the hierarchy (L1/L2/LLC/reflector).
+    DemandHit = 0,
+    /// Demand LLC miss served by memory (DRAM or CXL round trip).
+    DemandMiss = 1,
+    /// Prefetch fill flight time (issue -> arrival).
+    PrefetchFill = 2,
+    /// Back-invalidation snoop round trip.
+    BiSnp = 3,
+    /// Dirty writeback round trip.
+    Writeback = 4,
+}
+
+pub const CLASS_COUNT: usize = 5;
+
+impl AccessClass {
+    pub const ALL: [AccessClass; CLASS_COUNT] = [
+        AccessClass::DemandHit,
+        AccessClass::DemandMiss,
+        AccessClass::PrefetchFill,
+        AccessClass::BiSnp,
+        AccessClass::Writeback,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccessClass::DemandHit => "demand_hit",
+            AccessClass::DemandMiss => "demand_miss",
+            AccessClass::PrefetchFill => "prefetch_fill",
+            AccessClass::BiSnp => "bisnp",
+            AccessClass::Writeback => "writeback",
+        }
+    }
+}
+
+/// What to collect (histograms are always on once the recorder exists —
+/// they are the cheap layer; series and events opt in separately).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsOptions {
+    /// Sample a series point every `series_stride` accesses in
+    /// single-host segments (0 = only at explicit epoch marks, which is
+    /// what the multi-host engine drives).
+    pub series_stride: u64,
+    /// Capture ring-buffered trace events.
+    pub trace_events: bool,
+    /// Event ring capacity (overwrite-oldest past this).
+    pub trace_capacity: usize,
+}
+
+impl Default for ObsOptions {
+    fn default() -> Self {
+        ObsOptions { series_stride: 0, trace_events: false, trace_capacity: 65_536 }
+    }
+}
+
+/// Per-endpoint timeliness-error tracking: |predicted - actual| in a
+/// histogram plus signed direction counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimelinessErr {
+    pub err: Histogram,
+    /// Fills that arrived earlier than the model predicted.
+    pub early: u64,
+    /// Fills that arrived later than the model predicted.
+    pub late: u64,
+}
+
+/// The per-runner (per-shard) recorder. Merged across shards by the
+/// engine with [`ObsRecorder::absorb`] in host-index order; since the
+/// histograms merge exactly and the series/event rows carry host tags,
+/// the merged result is independent of thread scheduling.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsRecorder {
+    pub opts: ObsOptions,
+    class_hist: Vec<Histogram>,
+    ep_hist: Vec<Histogram>,
+    ep_timeliness: Vec<TimelinessErr>,
+    pub series: SeriesRecorder,
+    pub events: EventRing,
+    /// Host tag applied to locally recorded series points and events.
+    host: u32,
+    /// Engine-level per-epoch, per-endpoint utilization rho (filled by
+    /// the parallel engine after the merge; empty single-host).
+    pub epoch_rho: Vec<Vec<f64>>,
+}
+
+impl ObsRecorder {
+    pub fn new(endpoints: usize, opts: ObsOptions) -> Self {
+        ObsRecorder {
+            events: EventRing::new(opts.trace_capacity),
+            opts,
+            class_hist: vec![Histogram::new(); CLASS_COUNT],
+            ep_hist: vec![Histogram::new(); endpoints],
+            ep_timeliness: vec![TimelinessErr::default(); endpoints],
+            series: SeriesRecorder::default(),
+            host: 0,
+            epoch_rho: Vec::new(),
+        }
+    }
+
+    pub fn endpoints(&self) -> usize {
+        self.ep_hist.len()
+    }
+
+    #[inline]
+    pub fn record(&mut self, class: AccessClass, ps: u64) {
+        self.class_hist[class as usize].record(ps);
+    }
+
+    #[inline]
+    pub fn record_endpoint(&mut self, ep: usize, ps: u64) {
+        self.ep_hist[ep].record(ps);
+    }
+
+    /// Record one observed push against the endpoint's predicted e2e
+    /// latency (see `expand::timeliness::signed_error`).
+    #[inline]
+    pub fn record_timeliness(&mut self, ep: usize, predicted_ps: u64, actual_ps: u64) {
+        let err = crate::expand::timeliness::signed_error(predicted_ps, actual_ps);
+        let t = &mut self.ep_timeliness[ep];
+        t.err.record(err.unsigned_abs());
+        if err > 0 {
+            t.late += 1;
+        } else if err < 0 {
+            t.early += 1;
+        }
+    }
+
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        self.opts.trace_events
+    }
+
+    #[inline]
+    pub fn event(&mut self, kind: EventKind, start_ps: u64, dur_ps: u64, ep: u32, line: u64) {
+        if self.opts.trace_events {
+            self.events.push(ObsEvent { kind, start_ps, dur_ps, host: self.host, ep, line });
+        }
+    }
+
+    /// True when the single-host stride sampler owes a point at `index`.
+    #[inline]
+    pub fn series_due(&self, index: u64) -> bool {
+        let s = self.opts.series_stride;
+        s > 0 && index / s > self.series.points.len() as u64
+    }
+
+    pub fn series_mark(&mut self, snap: SeriesSnap) {
+        self.series.mark(self.host, snap);
+    }
+
+    /// Merge a shard recorder into this one. Call in host-index order:
+    /// histograms merge exactly (order-free), series and events are
+    /// re-tagged with `host` and concatenated (order restored at export
+    /// by the deterministic sort).
+    pub fn absorb(&mut self, other: &ObsRecorder, host: u32) {
+        for (a, b) in self.class_hist.iter_mut().zip(&other.class_hist) {
+            a.merge(b);
+        }
+        for (a, b) in self.ep_hist.iter_mut().zip(&other.ep_hist) {
+            a.merge(b);
+        }
+        for (a, b) in self.ep_timeliness.iter_mut().zip(&other.ep_timeliness) {
+            a.err.merge(&b.err);
+            a.early += b.early;
+            a.late += b.late;
+        }
+        for p in &other.series.points {
+            self.series.points.push(SeriesPoint { host, ..p.clone() });
+        }
+        self.events.absorb(&other.events, host);
+    }
+
+    pub fn class_histogram(&self, class: AccessClass) -> &Histogram {
+        &self.class_hist[class as usize]
+    }
+
+    pub fn endpoint_histogram(&self, ep: usize) -> &Histogram {
+        &self.ep_hist[ep]
+    }
+
+    pub fn timeliness(&self, ep: usize) -> &TimelinessErr {
+        &self.ep_timeliness[ep]
+    }
+
+    /// Small deterministic digest carried inside `RunStats` (and hence
+    /// inside run fingerprints): per-class and per-endpoint quantiles.
+    pub fn summary(&self) -> ObsSummary {
+        let quant = |h: &Histogram| QuantileRow {
+            count: h.count(),
+            p50: h.percentile_ps(0.50),
+            p99: h.percentile_ps(0.99),
+            p999: h.percentile_ps(0.999),
+            max: h.max(),
+        };
+        ObsSummary {
+            classes: AccessClass::ALL
+                .iter()
+                .map(|&c| ClassSummary {
+                    class: c.name(),
+                    lat: quant(self.class_histogram(c)),
+                })
+                .collect(),
+            endpoints: (0..self.endpoints())
+                .map(|ep| {
+                    let t = &self.ep_timeliness[ep];
+                    EndpointSummary {
+                        lat: quant(&self.ep_hist[ep]),
+                        timeliness_err: quant(&t.err),
+                        early: t.early,
+                        late: t.late,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Fingerprint-stable metrics JSON (`--metrics-out`): every value is
+    /// derived from simulated state, so two runs with identical
+    /// fingerprints produce byte-identical files (CI diffs threads 1
+    /// vs 4). `fingerprint` is the run's `fingerprint_hash`.
+    pub fn metrics_json(&self, fingerprint: u64, hosts: usize) -> String {
+        let hist_obj = |h: &Histogram| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("count".into(), Json::Num(h.count() as f64));
+            m.insert("min_ps".into(), Json::Num(h.min() as f64));
+            m.insert("p50_ps".into(), Json::Num(h.percentile_ps(0.50) as f64));
+            m.insert("p99_ps".into(), Json::Num(h.percentile_ps(0.99) as f64));
+            m.insert("p999_ps".into(), Json::Num(h.percentile_ps(0.999) as f64));
+            m.insert("max_ps".into(), Json::Num(h.max() as f64));
+            m.insert("mean_ps".into(), Json::Num(h.mean()));
+            Json::Obj(m)
+        };
+        let mut classes: BTreeMap<String, Json> = BTreeMap::new();
+        for &c in &AccessClass::ALL {
+            classes.insert(c.name().into(), hist_obj(self.class_histogram(c)));
+        }
+        let endpoints: Vec<Json> = (0..self.endpoints())
+            .map(|ep| {
+                let t = &self.ep_timeliness[ep];
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                m.insert("index".into(), Json::Num(ep as f64));
+                m.insert("latency".into(), hist_obj(&self.ep_hist[ep]));
+                let mut terr: BTreeMap<String, Json> = BTreeMap::new();
+                if let Json::Obj(base) = hist_obj(&t.err) {
+                    terr.extend(base);
+                }
+                terr.insert("early".into(), Json::Num(t.early as f64));
+                terr.insert("late".into(), Json::Num(t.late as f64));
+                m.insert("timeliness_error".into(), Json::Obj(terr));
+                Json::Obj(m)
+            })
+            .collect();
+        let series: Vec<Json> = self
+            .series
+            .points
+            .iter()
+            .map(|p| {
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                m.insert("host".into(), Json::Num(p.host as f64));
+                m.insert("index".into(), Json::Num(p.index as f64));
+                m.insert("sim_ps".into(), Json::Num(p.sim_ps as f64));
+                m.insert("accesses".into(), Json::Num(p.accesses as f64));
+                m.insert("span_ps".into(), Json::Num(p.span_ps as f64));
+                m.insert("throughput_acc_s".into(), Json::Num(p.throughput_acc_s()));
+                m.insert("llc_hit_ratio".into(), Json::Num(p.llc_hit_ratio));
+                m.insert("stale_rate".into(), Json::Num(p.stale_rate));
+                m.insert("reflector_len".into(), Json::Num(p.reflector_len as f64));
+                m.insert(
+                    "ep_requests".into(),
+                    Json::Arr(p.ep_requests.iter().map(|&r| Json::Num(r as f64)).collect()),
+                );
+                m.insert(
+                    "ep_contention_ps".into(),
+                    Json::Arr(
+                        p.ep_contention_ps.iter().map(|&c| Json::Num(c as f64)).collect(),
+                    ),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let epoch_rho: Vec<Json> = self
+            .epoch_rho
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&r| Json::Num(r)).collect()))
+            .collect();
+
+        let mut root: BTreeMap<String, Json> = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(METRICS_SCHEMA.into()));
+        root.insert("fingerprint".into(), Json::Str(format!("{fingerprint:#018x}")));
+        root.insert("hosts".into(), Json::Num(hosts as f64));
+        root.insert(
+            "histogram_sub_buckets".into(),
+            Json::Num((1u64 << hist::SUB_BITS) as f64),
+        );
+        root.insert("classes".into(), Json::Obj(classes));
+        root.insert("endpoints".into(), Json::Arr(endpoints));
+        root.insert("series".into(), Json::Arr(series));
+        root.insert("epoch_rho".into(), Json::Arr(epoch_rho));
+        json::render(&Json::Obj(root))
+    }
+
+    /// Chrome `trace_event` export of the event ring.
+    pub fn trace_json(&self) -> String {
+        trace_events::to_chrome_json(&self.events)
+    }
+}
+
+pub const METRICS_SCHEMA: &str = "expand-obs-metrics/v1";
+
+/// Quantile digest of one histogram.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QuantileRow {
+    pub count: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassSummary {
+    pub class: &'static str,
+    pub lat: QuantileRow,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EndpointSummary {
+    pub lat: QuantileRow,
+    pub timeliness_err: QuantileRow,
+    pub early: u64,
+    pub late: u64,
+}
+
+/// Deterministic digest stored in `RunStats::obs` (participates in run
+/// fingerprints — thread-count invariance of the quantiles is enforced
+/// by the same fingerprint diff that covers every other stat).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsSummary {
+    pub classes: Vec<ClassSummary>,
+    pub endpoints: Vec<EndpointSummary>,
+}
+
+impl ObsSummary {
+    /// Human-readable per-class quantile lines for the CLI summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.classes {
+            if c.lat.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  lat[{}]: n={} p50={:.1}ns p99={:.1}ns p999={:.1}ns max={:.1}ns\n",
+                c.class,
+                c.lat.count,
+                c.lat.p50 as f64 / 1e3,
+                c.lat.p99 as f64 / 1e3,
+                c.lat.p999 as f64 / 1e3,
+                c.lat.max as f64 / 1e3,
+            ));
+        }
+        for (i, e) in self.endpoints.iter().enumerate() {
+            if e.timeliness_err.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  timeliness[ep{}]: n={} |err| p50={:.1}ns p99={:.1}ns early={} late={}\n",
+                i,
+                e.timeliness_err.count,
+                e.timeliness_err.p50 as f64 / 1e3,
+                e.timeliness_err.p99 as f64 / 1e3,
+                e.early,
+                e.late,
+            ));
+        }
+        out
+    }
+}
+
+/// Schema-validate a `--metrics-out` file (used by the CI observability
+/// job through `expand obs check-metrics`). Returns a one-line digest.
+pub fn validate_metrics_json(text: &str) -> anyhow::Result<String> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("metrics JSON parse error: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("metrics JSON missing schema"))?;
+    anyhow::ensure!(schema == METRICS_SCHEMA, "unexpected schema {schema:?}");
+    let fp = doc
+        .get("fingerprint")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("metrics JSON missing fingerprint"))?;
+    let classes = doc
+        .get("classes")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!("metrics JSON missing classes object"))?;
+    for &c in &AccessClass::ALL {
+        let row = classes
+            .get(c.name())
+            .ok_or_else(|| anyhow::anyhow!("classes missing {:?}", c.name()))?;
+        for key in ["count", "p50_ps", "p99_ps", "p999_ps", "max_ps", "mean_ps"] {
+            anyhow::ensure!(
+                row.get(key).and_then(|v| v.as_f64()).is_some(),
+                "class {} missing numeric {key}",
+                c.name()
+            );
+        }
+    }
+    let endpoints = doc
+        .get("endpoints")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("metrics JSON missing endpoints array"))?;
+    for (i, ep) in endpoints.iter().enumerate() {
+        for key in ["latency", "timeliness_error"] {
+            let row = ep
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("endpoint {i} missing {key}"))?;
+            anyhow::ensure!(
+                row.get("p99_ps").and_then(|v| v.as_f64()).is_some(),
+                "endpoint {i} {key} missing p99_ps"
+            );
+        }
+    }
+    anyhow::ensure!(
+        doc.get("series").and_then(|v| v.as_arr()).is_some(),
+        "metrics JSON missing series array"
+    );
+    let demand = classes.get("demand_miss").unwrap();
+    Ok(format!(
+        "metrics OK: {} classes, {} endpoints, {} series points, demand_miss p99 {} ps, \
+         fingerprint {fp}",
+        AccessClass::ALL.len(),
+        endpoints.len(),
+        doc.get("series").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0),
+        demand.get("p99_ps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> ObsRecorder {
+        let mut r = ObsRecorder::new(2, ObsOptions { trace_events: true, ..Default::default() });
+        for i in 0..100u64 {
+            r.record(AccessClass::DemandMiss, 10_000 + i * 37);
+            r.record_endpoint((i % 2) as usize, 10_000 + i * 37);
+        }
+        r.record(AccessClass::DemandHit, 800);
+        r.record_timeliness(0, 50_000, 61_000);
+        r.record_timeliness(0, 50_000, 47_000);
+        r.event(EventKind::DemandMiss, 1_000, 10_000, 0, 0x80);
+        r.series_mark(SeriesSnap {
+            index: 100,
+            sim_ps: 1_000_000,
+            llc_hits: 1,
+            llc_lookups: 101,
+            ep_requests: vec![50, 50],
+            ep_contention_ps: vec![0, 0],
+            ..Default::default()
+        });
+        r
+    }
+
+    #[test]
+    fn metrics_json_round_trips_and_validates() {
+        let r = sample_recorder();
+        let text = r.metrics_json(0xdead_beef, 1);
+        let digest = validate_metrics_json(&text).unwrap();
+        assert!(digest.contains("2 endpoints"), "{digest}");
+        assert!(digest.contains("0x00000000deadbeef"), "{digest}");
+        // Emission is deterministic byte-for-byte.
+        assert_eq!(text, r.metrics_json(0xdead_beef, 1));
+        assert!(validate_metrics_json("{\"schema\": \"nope\"}").is_err());
+        assert!(validate_metrics_json("not json").is_err());
+    }
+
+    #[test]
+    fn absorb_merges_histograms_and_tags_hosts() {
+        let a = sample_recorder();
+        let b = sample_recorder();
+        let mut merged = ObsRecorder::new(2, ObsOptions::default());
+        merged.absorb(&a, 0);
+        merged.absorb(&b, 1);
+        assert_eq!(
+            merged.class_histogram(AccessClass::DemandMiss).count(),
+            2 * a.class_histogram(AccessClass::DemandMiss).count()
+        );
+        assert_eq!(merged.series.points.len(), 2);
+        assert_eq!(merged.series.points[1].host, 1);
+        let t = merged.timeliness(0);
+        assert_eq!(t.early, 2);
+        assert_eq!(t.late, 2);
+        assert_eq!(t.err.count(), 4);
+    }
+
+    #[test]
+    fn summary_surfaces_quantiles() {
+        let r = sample_recorder();
+        let s = r.summary();
+        assert_eq!(s.classes.len(), CLASS_COUNT);
+        let miss = &s.classes[AccessClass::DemandMiss as usize];
+        assert_eq!(miss.class, "demand_miss");
+        assert_eq!(miss.lat.count, 100);
+        assert!(miss.lat.p50 > 10_000 && miss.lat.p50 <= miss.lat.p99);
+        assert!(miss.lat.p99 <= miss.lat.max);
+        let rendered = s.render();
+        assert!(rendered.contains("lat[demand_miss]"), "{rendered}");
+        assert!(rendered.contains("timeliness[ep0]"), "{rendered}");
+    }
+}

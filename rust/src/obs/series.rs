@@ -1,0 +1,181 @@
+//! Per-epoch / per-stride time-series recorder.
+//!
+//! The runner snapshots cumulative counters into a [`SeriesSnap`] —
+//! at the parallel engine's epoch barrier (one snap per shard per
+//! epoch) or on fixed access strides in single-host runs — and the
+//! recorder turns consecutive snaps into windowed [`SeriesPoint`] rows
+//! (throughput over *simulated* time, LLC hit ratio, stale-push rate,
+//! reflector residency, per-endpoint request and contention columns).
+//! Everything is derived from simulated state, never wall clock, so the
+//! series is bit-identical across thread counts.
+
+/// Cumulative counters at one sampling instant (runner-supplied).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeriesSnap {
+    /// Accesses replayed so far.
+    pub index: u64,
+    /// Simulated time at the shard's core.
+    pub sim_ps: u64,
+    /// Cumulative LLC-level hits (LLC + reflector).
+    pub llc_hits: u64,
+    /// Cumulative LLC-level lookups (hits + misses).
+    pub llc_lookups: u64,
+    /// Cumulative stale BISnpData pushes dropped.
+    pub stale_pushes: u64,
+    /// Cumulative BISnpData pushes arrived.
+    pub pushes_arrived: u64,
+    /// Current reflector residency (lines).
+    pub reflector_len: u64,
+    /// Cumulative fabric requests per endpoint.
+    pub ep_requests: Vec<u64>,
+    /// Current per-endpoint contention penalty (ps).
+    pub ep_contention_ps: Vec<u64>,
+}
+
+/// One windowed sample row (deltas between consecutive snaps).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeriesPoint {
+    /// Originating host shard (0 in single-host runs).
+    pub host: u32,
+    pub index: u64,
+    pub sim_ps: u64,
+    /// Accesses replayed in this window.
+    pub accesses: u64,
+    /// Simulated time the window spanned.
+    pub span_ps: u64,
+    /// LLC-level hit ratio over the window.
+    pub llc_hit_ratio: f64,
+    /// Stale-push rate over the window (stale / arrived).
+    pub stale_rate: f64,
+    pub reflector_len: u64,
+    /// Fabric requests per endpoint over the window.
+    pub ep_requests: Vec<u64>,
+    pub ep_contention_ps: Vec<u64>,
+}
+
+impl SeriesPoint {
+    /// Window throughput in accesses per simulated second.
+    pub fn throughput_acc_s(&self) -> f64 {
+        if self.span_ps == 0 {
+            0.0
+        } else {
+            self.accesses as f64 / (self.span_ps as f64 / 1e12)
+        }
+    }
+}
+
+/// Turns cumulative snaps into windowed points.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeriesRecorder {
+    pub points: Vec<SeriesPoint>,
+    last: Option<SeriesSnap>,
+}
+
+impl SeriesRecorder {
+    pub fn mark(&mut self, host: u32, snap: SeriesSnap) {
+        let zero = SeriesSnap::default();
+        let prev = self.last.as_ref().unwrap_or(&zero);
+        let lookups = snap.llc_lookups.saturating_sub(prev.llc_lookups);
+        let hits = snap.llc_hits.saturating_sub(prev.llc_hits);
+        let arrived = snap.pushes_arrived.saturating_sub(prev.pushes_arrived);
+        let stale = snap.stale_pushes.saturating_sub(prev.stale_pushes);
+        let ep_requests = snap
+            .ep_requests
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| r.saturating_sub(prev.ep_requests.get(i).copied().unwrap_or(0)))
+            .collect();
+        self.points.push(SeriesPoint {
+            host,
+            index: snap.index,
+            sim_ps: snap.sim_ps,
+            accesses: snap.index.saturating_sub(prev.index),
+            span_ps: snap.sim_ps.saturating_sub(prev.sim_ps),
+            llc_hit_ratio: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+            stale_rate: if arrived == 0 { 0.0 } else { stale as f64 / arrived as f64 },
+            reflector_len: snap.reflector_len,
+            ep_requests,
+            ep_contention_ps: snap.ep_contention_ps.clone(),
+        });
+        self.last = Some(snap);
+    }
+
+    /// Render every point as CSV (dynamic per-endpoint columns).
+    pub fn to_csv(&self, endpoints: usize) -> String {
+        let mut out = String::from(
+            "host,index,sim_ps,accesses,span_ps,throughput_acc_s,llc_hit_ratio,\
+             stale_rate,reflector_len",
+        );
+        for ep in 0..endpoints {
+            out.push_str(&format!(",ep{ep}_reqs,ep{ep}_contention_ps"));
+        }
+        out.push('\n');
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.1},{:.6},{:.6},{}",
+                p.host,
+                p.index,
+                p.sim_ps,
+                p.accesses,
+                p.span_ps,
+                p.throughput_acc_s(),
+                p.llc_hit_ratio,
+                p.stale_rate,
+                p.reflector_len
+            ));
+            for ep in 0..endpoints {
+                out.push_str(&format!(
+                    ",{},{}",
+                    p.ep_requests.get(ep).copied().unwrap_or(0),
+                    p.ep_contention_ps.get(ep).copied().unwrap_or(0)
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_are_deltas_of_cumulative_snaps() {
+        let mut r = SeriesRecorder::default();
+        r.mark(
+            0,
+            SeriesSnap {
+                index: 100,
+                sim_ps: 1_000_000,
+                llc_hits: 40,
+                llc_lookups: 50,
+                ep_requests: vec![10, 20],
+                ..Default::default()
+            },
+        );
+        r.mark(
+            0,
+            SeriesSnap {
+                index: 300,
+                sim_ps: 3_000_000,
+                llc_hits: 140,
+                llc_lookups: 250,
+                ep_requests: vec![30, 25],
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.points.len(), 2);
+        let p = &r.points[1];
+        assert_eq!(p.accesses, 200);
+        assert_eq!(p.span_ps, 2_000_000);
+        assert!((p.llc_hit_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(p.ep_requests, vec![20, 5]);
+        // 200 accesses over 2 us of simulated time = 1e8 acc/s.
+        assert!((p.throughput_acc_s() - 1e8).abs() < 1.0);
+        let csv = r.to_csv(2);
+        assert!(csv.starts_with("host,index,"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains(",ep1_reqs"));
+    }
+}

@@ -1,0 +1,225 @@
+//! Structured event tracer: a fixed-capacity ring of simulation spans
+//! exported as Chrome `trace_event` JSON (loadable in Perfetto /
+//! `chrome://tracing`).
+//!
+//! Events carry simulated timestamps only (picoseconds, exported as
+//! microseconds with fractional precision), so a trace is bit-identical
+//! across `--threads 1` vs `N`. The ring overwrites the oldest events
+//! when full — recording cost stays O(1) per event with no allocation
+//! after warm-up — and the export sorts chronologically with a full
+//! deterministic tie-break.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// What a span describes. `name()` is the Chrome event name; host-side
+/// phases render on the host track (tid 0), device flows on per-endpoint
+/// tracks (tid = endpoint + 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// One batch of the hot loop (span = simulated time the batch advanced).
+    Batch,
+    /// Epoch boundary at the parallel engine's barrier (instant).
+    EpochMerge,
+    /// Demand LLC miss round trip to the owning endpoint.
+    DemandMiss,
+    /// Prefetch issued (span = scheduled flight time).
+    PrefetchIssue,
+    /// Prefetch payload arrived and was installed.
+    PrefetchFill,
+    /// Prefetch payload arrived stale and was dropped.
+    PrefetchStale,
+    /// Reflector hit consumed a pushed line.
+    PrefetchConsume,
+    /// Back-invalidation snoop round trip.
+    BiSnp,
+    /// Dirty writeback round trip.
+    Writeback,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Batch => "batch",
+            EventKind::EpochMerge => "epoch_merge",
+            EventKind::DemandMiss => "demand_miss",
+            EventKind::PrefetchIssue => "prefetch_issue",
+            EventKind::PrefetchFill => "prefetch_fill",
+            EventKind::PrefetchStale => "prefetch_stale",
+            EventKind::PrefetchConsume => "prefetch_consume",
+            EventKind::BiSnp => "bisnp",
+            EventKind::Writeback => "writeback",
+        }
+    }
+
+    /// Host-side events render on the host track; device flows get one
+    /// track per endpoint.
+    fn device_track(self) -> bool {
+        !matches!(self, EventKind::Batch | EventKind::EpochMerge)
+    }
+}
+
+/// One recorded span (16 B of payload — the ring is cache-friendly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsEvent {
+    pub kind: EventKind,
+    pub start_ps: u64,
+    pub dur_ps: u64,
+    pub host: u32,
+    pub ep: u32,
+    pub line: u64,
+}
+
+/// Fixed-capacity overwrite-oldest ring.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventRing {
+    buf: Vec<ObsEvent>,
+    cap: usize,
+    /// Next write position once the ring has wrapped.
+    head: usize,
+    /// Events overwritten (reported so truncation is never silent).
+    pub dropped: u64,
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> Self {
+        EventRing { buf: Vec::new(), cap: cap.max(1), head: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: ObsEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events in insertion order (oldest surviving first).
+    pub fn chronological(&self) -> impl Iterator<Item = &ObsEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Append every event of `other` (re-tagged to `host`) without the
+    /// capacity limit — used only when merging per-shard rings into one
+    /// export ring, where each input was already capped.
+    pub fn absorb(&mut self, other: &EventRing, host: u32) {
+        self.dropped += other.dropped;
+        for ev in other.chronological() {
+            self.buf.push(ObsEvent { host, ..*ev });
+        }
+    }
+}
+
+/// Export as Chrome `trace_event` JSON Object Format: a `traceEvents`
+/// array of `ph:"X"` complete events (spans) and `ph:"i"` instants,
+/// `pid` = host shard, `tid` = track (0 host loop, endpoint + 1 device
+/// flows), timestamps in microseconds of *simulated* time.
+pub fn to_chrome_json(ring: &EventRing) -> String {
+    let mut events: Vec<&ObsEvent> = ring.chronological().collect();
+    events.sort_by_key(|e| (e.start_ps, e.host, e.ep, e.kind, e.line));
+    let mut arr = Vec::with_capacity(events.len());
+    for e in events {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".into(), Json::Str(e.kind.name().into()));
+        m.insert("cat".into(), Json::Str("sim".into()));
+        m.insert("pid".into(), Json::Num(e.host as f64));
+        let tid = if e.kind.device_track() { e.ep as f64 + 1.0 } else { 0.0 };
+        m.insert("tid".into(), Json::Num(tid));
+        m.insert("ts".into(), Json::Num(e.start_ps as f64 / 1e6));
+        if e.dur_ps > 0 {
+            m.insert("ph".into(), Json::Str("X".into()));
+            m.insert("dur".into(), Json::Num(e.dur_ps as f64 / 1e6));
+        } else {
+            m.insert("ph".into(), Json::Str("i".into()));
+            m.insert("s".into(), Json::Str("t".into()));
+        }
+        let mut args: BTreeMap<String, Json> = BTreeMap::new();
+        args.insert("line".into(), Json::Str(format!("{:#x}", e.line)));
+        args.insert("endpoint".into(), Json::Num(e.ep as f64));
+        m.insert("args".into(), Json::Obj(args));
+        arr.push(Json::Obj(m));
+    }
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(arr));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    root.insert("dropped_events".into(), Json::Num(ring.dropped as f64));
+    json::render(&Json::Obj(root))
+}
+
+/// Validate Chrome `trace_event` JSON structure: `traceEvents` must be
+/// an array whose entries carry `name`/`ph`/`ts`/`pid`/`tid`, with
+/// `dur` required on `"X"` events. Returns the event count.
+pub fn validate_chrome_json(text: &str) -> anyhow::Result<usize> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("trace JSON parse error: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace JSON has no traceEvents array"))?;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("event {i}: missing ph"))?;
+        for key in ["name", "ts", "pid", "tid"] {
+            anyhow::ensure!(e.get(key).is_some(), "event {i}: missing {key}");
+        }
+        anyhow::ensure!(
+            e.get("ts").and_then(|v| v.as_f64()).is_some(),
+            "event {i}: ts must be numeric"
+        );
+        if ph == "X" {
+            anyhow::ensure!(
+                e.get("dur").and_then(|v| v.as_f64()).is_some(),
+                "event {i}: complete event needs numeric dur"
+            );
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, start: u64, dur: u64) -> ObsEvent {
+        ObsEvent { kind, start_ps: start, dur_ps: dur, host: 0, ep: 0, line: 0x40 }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = EventRing::new(3);
+        for i in 0..5u64 {
+            r.push(ev(EventKind::DemandMiss, i, 1));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped, 2);
+        let starts: Vec<u64> = r.chronological().map(|e| e.start_ps).collect();
+        assert_eq!(starts, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_export_validates() {
+        let mut r = EventRing::new(16);
+        r.push(ev(EventKind::PrefetchIssue, 1_000_000, 2_000_000));
+        r.push(ev(EventKind::PrefetchFill, 3_000_000, 0));
+        r.push(ev(EventKind::Batch, 0, 5_000_000));
+        let text = to_chrome_json(&r);
+        assert_eq!(validate_chrome_json(&text).unwrap(), 3);
+        // Instants carry a scope, spans a duration.
+        assert!(text.contains("\"ph\": \"i\""));
+        assert!(text.contains("\"ph\": \"X\""));
+        assert!(validate_chrome_json("{\"traceEvents\": 3}").is_err());
+        assert!(validate_chrome_json("{}").is_err());
+    }
+}

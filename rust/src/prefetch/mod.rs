@@ -113,6 +113,12 @@ pub trait Prefetcher {
         false
     }
 
+    /// Current reflector residency in lines (observability time series;
+    /// only ExPAND holds a reflector, so the default is 0).
+    fn reflector_len(&self) -> usize {
+        0
+    }
+
     fn name(&self) -> String;
 
     /// Metadata/model storage (Table 1d "Memory overhead").

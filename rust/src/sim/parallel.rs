@@ -55,6 +55,7 @@ use crate::coherence::BiDirectory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};
 use crate::cxl::transaction::TrafficStats;
 use crate::metrics::{MultiHostStats, RunStats};
+use crate::obs::{ObsOptions, ObsRecorder};
 use crate::runtime::Runtime;
 use crate::sim::runner::{EffectLog, HostEffect, RunCursor, Runner};
 use crate::sim::time::Ps;
@@ -79,6 +80,12 @@ pub struct MultiHostOpts {
     /// engine entry point returns one recording per host, ready for
     /// `crate::trace::write_trace` as a host-tagged trace.
     pub record: bool,
+    /// Observability options (`--metrics-out`/`--trace-events`): each
+    /// shard records into its own [`ObsRecorder`], merged in host-index
+    /// order at the end so the result is thread-count invariant. The
+    /// series stride is forced to 0 — multi-host series points are
+    /// snapshotted at epoch barriers, not access strides.
+    pub obs: Option<ObsOptions>,
 }
 
 impl MultiHostOpts {
@@ -89,6 +96,7 @@ impl MultiHostOpts {
             epoch_accesses: cfg.epoch_accesses,
             artifacts: Some(cfg.artifacts_dir.clone()),
             record: false,
+            obs: None,
         }
     }
 }
@@ -116,6 +124,10 @@ struct Shared {
     cross_snoops: u64,
     /// Barriers executed.
     epochs: u64,
+    /// Engine-level per-epoch, per-endpoint pool occupancy rho
+    /// (busy/span over merged logs), captured only when observability
+    /// is on. One row per epoch barrier.
+    epoch_rho: Option<Vec<Vec<f64>>>,
 }
 
 impl Shared {
@@ -218,6 +230,13 @@ impl Shared {
             }
             *contention[h].lock().unwrap() = extra;
         }
+        if let Some(rows) = &mut self.epoch_rho {
+            let row: Vec<f64> = busy_tot
+                .iter()
+                .map(|&busy| ((busy as f64) / (span as f64)).min(1.0))
+                .collect();
+            rows.push(row);
+        }
         self.epochs += 1;
     }
 }
@@ -288,6 +307,7 @@ where
         router,
         cross_snoops: 0,
         epochs: 0,
+        epoch_rho: opts.obs.as_ref().map(|_| Vec::new()),
     });
 
     let logs: Vec<Mutex<Option<EffectLog>>> = (0..hosts).map(|_| Mutex::new(None)).collect();
@@ -296,8 +316,9 @@ where
         (0..hosts).map(|_| Mutex::new(vec![0; endpoints])).collect();
     let barrier = Barrier::new(threads);
     // One row per shard: (host, stats, shared-directory invariant held,
-    // captured access stream — empty unless `opts.record`).
-    type ShardRow = (usize, RunStats, bool, Vec<Access>);
+    // captured access stream — empty unless `opts.record` — and the
+    // shard's obs recorder when observability is on).
+    type ShardRow = (usize, RunStats, bool, Vec<Access>, Option<Box<ObsRecorder>>);
     let results: Mutex<Vec<ShardRow>> = Mutex::new(Vec::new());
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
@@ -368,6 +389,15 @@ where
                             if opts.record {
                                 runner.enable_recording();
                             }
+                            if let Some(o) = &opts.obs {
+                                // Stride-based sampling would couple
+                                // series rows to batch interleaving;
+                                // multi-host rows come from the epoch
+                                // barrier instead.
+                                let mut o = o.clone();
+                                o.series_stride = 0;
+                                runner.enable_obs(o);
+                            }
                             let (stats, cur) = runner.begin_run(&*source);
                             shards.push(Shard { host, runner, source, stats, cur });
                         }
@@ -412,6 +442,7 @@ where
                                             &mut sh.cur,
                                         );
                                     }
+                                    sh.runner.obs_epoch_mark(&sh.stats, &sh.cur);
                                     *logs[sh.host].lock().unwrap() =
                                         Some(sh.runner.take_effects());
                                 }
@@ -468,6 +499,7 @@ where
                         std::mem::take(&mut sh.stats),
                         invariant,
                         sh.runner.take_recording(),
+                        sh.runner.take_obs(),
                     ));
                 }
             });
@@ -477,7 +509,7 @@ where
     let errors = errors.into_inner().unwrap();
     anyhow::ensure!(errors.is_empty(), "multi-host engine failures: {}", errors.join("; "));
     let mut rows = results.into_inner().unwrap();
-    rows.sort_by_key(|(h, _, _, _)| *h);
+    rows.sort_by_key(|r| r.0);
     anyhow::ensure!(
         rows.len() == hosts,
         "engine lost shards: {} of {hosts} reported",
@@ -485,12 +517,14 @@ where
     );
 
     let shared = shared.into_inner().unwrap();
-    let bi_invariant = rows.iter().all(|(_, _, inv, _)| *inv);
+    let bi_invariant = rows.iter().all(|r| r.2);
     let mut per_host: Vec<RunStats> = Vec::with_capacity(hosts);
     let mut recordings: Vec<Vec<Access>> = Vec::with_capacity(hosts);
-    for (_, s, _, rec) in rows {
+    let mut shard_obs: Vec<Option<Box<ObsRecorder>>> = Vec::with_capacity(hosts);
+    for (_, s, _, rec, obs) in rows {
         per_host.push(s);
         recordings.push(rec);
+        shard_obs.push(obs);
     }
     let mut aggregate = RunStats::aggregate(&per_host);
     aggregate.wall_s = wall_start.elapsed().as_secs_f64();
@@ -502,6 +536,21 @@ where
     }
     let shared_dir_evictions: u64 =
         shared.dirs.iter().map(|d| d.stats.capacity_evictions).sum();
+
+    // Fleet observability: fold every shard's recorder into one, in
+    // host-index order (histogram merges commute, but event/series rows
+    // are host-tagged in a fixed order so exports are byte-stable).
+    let obs = opts.obs.as_ref().map(|o| {
+        let mut merged = ObsRecorder::new(endpoints, o.clone());
+        for (h, rec) in shard_obs.iter().enumerate() {
+            if let Some(rec) = rec {
+                merged.absorb(rec, h as u32);
+            }
+        }
+        merged.epoch_rho = shared.epoch_rho.clone().unwrap_or_default();
+        aggregate.obs = Some(merged.summary());
+        Box::new(merged)
+    });
 
     Ok((
         MultiHostStats {
@@ -516,6 +565,7 @@ where
             shared_dir_evictions,
             pool_traffic: shared.traffic,
             bi_invariant,
+            obs,
         },
         recordings,
     ))
@@ -547,7 +597,14 @@ mod tests {
     }
 
     fn opts(hosts: usize, threads: usize, epoch: usize) -> MultiHostOpts {
-        MultiHostOpts { hosts, threads, epoch_accesses: epoch, artifacts: None, record: false }
+        MultiHostOpts {
+            hosts,
+            threads,
+            epoch_accesses: epoch,
+            artifacts: None,
+            record: false,
+            obs: None,
+        }
     }
 
     #[test]
@@ -575,6 +632,34 @@ mod tests {
         let b = run_multi_host_workload(&cfg, &opts(4, 4, 2048), WorkloadId::Pr).unwrap();
         assert_eq!(a.fingerprint(), b.fingerprint(), "threads must not leak into results");
         assert!(a.bi_invariant && b.bi_invariant);
+    }
+
+    #[test]
+    fn obs_exports_are_thread_count_invariant() {
+        let cfg = Arc::new(engine_cfg());
+        let mut o1 = opts(4, 1, 2048);
+        o1.obs =
+            Some(crate::obs::ObsOptions { trace_events: true, ..crate::obs::ObsOptions::default() });
+        let mut o4 = o1.clone();
+        o4.threads = 4;
+        let a = run_multi_host_workload(&cfg, &o1, WorkloadId::Pr).unwrap();
+        let b = run_multi_host_workload(&cfg, &o4, WorkloadId::Pr).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let (ra, rb) = (a.obs.as_ref().unwrap(), b.obs.as_ref().unwrap());
+        assert_eq!(
+            ra.metrics_json(a.fingerprint_hash(), a.hosts),
+            rb.metrics_json(b.fingerprint_hash(), b.hosts),
+            "metrics export must be byte-identical across thread counts"
+        );
+        assert_eq!(ra.trace_json(), rb.trace_json(), "trace export must be byte-identical");
+        assert_eq!(ra.epoch_rho.len() as u64, a.epochs, "one rho row per barrier");
+        assert!(a.aggregate.obs.is_some(), "fleet summary surfaces in the aggregate");
+        assert!(
+            ra.class_histogram(crate::obs::AccessClass::DemandMiss).count() > 0,
+            "misses must land in the fleet histogram"
+        );
+        // Epoch-barrier series rows: one per host per epoch.
+        assert_eq!(ra.series.points.len() as u64, a.epochs * a.hosts as u64);
     }
 
     #[test]

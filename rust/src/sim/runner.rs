@@ -26,6 +26,7 @@ use crate::expand::ExpandPrefetcher;
 use crate::mem::cache::Evicted;
 use crate::mem::{DramModel, Hierarchy, HitLevel};
 use crate::metrics::RunStats;
+use crate::obs::{AccessClass, EventKind, ObsOptions, ObsRecorder, SeriesSnap};
 use crate::prefetch::ml::MlPrefetcher;
 use crate::prefetch::rule1_best_offset::BestOffset;
 use crate::prefetch::rule2_temporal::TemporalIsb;
@@ -177,6 +178,10 @@ pub struct Runner {
     /// stream this run consumed (see `crate::trace`). `None` keeps the
     /// hot path free of capture cost.
     record_buf: Option<Vec<Access>>,
+    /// Observability recorder (histograms / series / events). `None`
+    /// keeps the hot path at one well-predicted `is_some` branch per
+    /// instrumentation site, mirroring `effects` and `record_buf`.
+    obs: Option<Box<ObsRecorder>>,
 }
 
 impl Runner {
@@ -291,6 +296,7 @@ impl Runner {
             traffic_prev: Vec::new(),
             last_epoch_now: 0,
             record_buf: None,
+            obs: None,
         })
     }
 
@@ -327,6 +333,54 @@ impl Runner {
     /// enabled). Feed the result to `crate::trace::write_trace`.
     pub fn take_recording(&mut self) -> Vec<Access> {
         self.record_buf.take().unwrap_or_default()
+    }
+
+    /// Enable the observability recorder (histograms always; series /
+    /// trace events per `opts`). Purely observational — every recorded
+    /// value is simulated time, so enabling it cannot perturb results.
+    pub fn enable_obs(&mut self, opts: ObsOptions) {
+        self.obs = Some(Box::new(ObsRecorder::new(self.pool.len(), opts)));
+    }
+
+    /// Detach the recorder (`None` if obs was never enabled).
+    pub fn take_obs(&mut self) -> Option<Box<ObsRecorder>> {
+        self.obs.take()
+    }
+
+    /// Snapshot a time-series point at an epoch barrier (multi-host
+    /// engine, once per shard per epoch) and mark the boundary in the
+    /// event trace. No-op when obs is disabled.
+    pub fn obs_epoch_mark(&mut self, stats: &RunStats, cur: &RunCursor) {
+        if self.obs.is_none() {
+            return;
+        }
+        let snap = self.series_snap(stats, cur.index);
+        let now = self.core.now;
+        let obs = self.obs.as_mut().unwrap();
+        obs.series_mark(snap);
+        obs.event(EventKind::EpochMerge, now, 0, 0, 0);
+    }
+
+    /// Cumulative counters for one series sample (cheap: sums over the
+    /// per-endpoint vectors plus one traffic-counter read per endpoint).
+    fn series_snap(&self, stats: &RunStats, index: u64) -> SeriesSnap {
+        let hits = stats.llc_hits + stats.reflector_hits;
+        SeriesSnap {
+            index,
+            sim_ps: self.core.now,
+            llc_hits: hits,
+            llc_lookups: hits + stats.llc_misses,
+            stale_pushes: self.stale_pushes.iter().sum(),
+            pushes_arrived: self.pushes_arrived.iter().sum(),
+            reflector_len: self.prefetcher.reflector_len() as u64,
+            ep_requests: self
+                .pool
+                .endpoints()
+                .iter()
+                .map(|ep| self.fabric.requests_for(ep.node))
+                .collect(),
+            ep_contention_ps: self.contention.clone(),
+        }
     }
 
     /// Start buffering cross-host effects (multi-host shards only).
@@ -422,7 +476,11 @@ impl Runner {
         }
         match self.cfg.backing {
             Backing::LocalDram => {
-                self.dram.read(line, now); // same bank/bus occupancy as a read
+                let lat = self.dram.read(line, now); // same bank/bus occupancy as a read
+                if let Some(obs) = &mut self.obs {
+                    obs.record(AccessClass::Writeback, lat);
+                    obs.event(EventKind::Writeback, now, lat, 0, line);
+                }
             }
             Backing::CxlSsd => {
                 let idx = self.pool.route(line);
@@ -435,7 +493,12 @@ impl Runner {
                 let raw = self.pool.ssd_mut(idx).serve_write(line, now + down);
                 self.log_device_service(idx, raw);
                 let service = raw + self.contention[idx];
-                self.fabric.write_roundtrip(node, now, service);
+                let lat = self.fabric.write_roundtrip(node, now, service);
+                if let Some(obs) = &mut self.obs {
+                    obs.record(AccessClass::Writeback, lat);
+                    obs.record_endpoint(idx, lat);
+                    obs.event(EventKind::Writeback, now, lat, idx as u32, line);
+                }
                 // The host no longer caches the line: the owner's BI
                 // directory stops tracking it.
                 self.pool.revoke(idx, line);
@@ -469,8 +532,13 @@ impl Runner {
     /// and acks with BIRsp. `idx` is the snooping endpoint.
     fn bi_snoop_host(&mut self, idx: usize, line: u64, now: Ps) {
         let node = self.pool.node_of(idx);
-        self.fabric.bi_invalidate(node, now);
+        let lat = self.fabric.bi_invalidate(node, now);
         self.bi_snoops[idx] += 1;
+        if let Some(obs) = &mut self.obs {
+            obs.record(AccessClass::BiSnp, lat);
+            obs.record_endpoint(idx, lat);
+            obs.event(EventKind::BiSnp, now, lat, idx as u32, line);
+        }
         if self.hierarchy.llc_dirty(line) {
             self.writeback(line, now);
         }
@@ -558,8 +626,18 @@ impl Runner {
             let idx = if self.cxl_backed() { self.pool.route(fill.line) } else { 0 };
             if fill.to_reflector && self.cxl_backed() {
                 self.pushes_arrived[idx] += 1;
+                // Timeliness error of this push: the enumeration-time
+                // e2e model vs the observed issue->arrival flight time.
+                // Every arrival counts (stale ones still *arrived*).
+                if let Some(obs) = &mut self.obs {
+                    let predicted = self.pool.endpoints()[idx].timeliness.e2e_ps;
+                    obs.record_timeliness(idx, predicted, t.saturating_sub(fill.issued_at));
+                }
             }
             if stale {
+                if let Some(obs) = &mut self.obs {
+                    obs.event(EventKind::PrefetchStale, t, 0, idx as u32, fill.line);
+                }
                 // Only BISnpData pushes feed the stale-push rate; stale
                 // host-prefetch fills are dropped the same way but are
                 // not pushes (counting them would skew the rate for
@@ -582,6 +660,12 @@ impl Runner {
                         aud.fill_arrive_reflector(fill.line, fill.issued_at);
                     }
                     self.prefetcher.on_reflector_fill(fill.line, t);
+                    if let Some(obs) = &mut self.obs {
+                        let flight = t.saturating_sub(fill.issued_at);
+                        obs.record(AccessClass::PrefetchFill, flight);
+                        obs.record_endpoint(idx, flight);
+                        obs.event(EventKind::PrefetchFill, t, 0, idx as u32, fill.line);
+                    }
                 } else if let Some(aud) = &mut self.auditor {
                     aud.fill_dropped(fill.line, fill.issued_at);
                 }
@@ -604,6 +688,14 @@ impl Runner {
                     self.grant(idx, fill.line, t);
                     if let Some(aud) = &mut self.auditor {
                         aud.fill_arrive_llc(fill.line, fill.issued_at);
+                    }
+                    if let Some(obs) = &mut self.obs {
+                        let flight = t.saturating_sub(fill.issued_at);
+                        obs.record(AccessClass::PrefetchFill, flight);
+                        if matches!(self.cfg.backing, Backing::CxlSsd) {
+                            obs.record_endpoint(idx, flight);
+                        }
+                        obs.event(EventKind::PrefetchFill, t, 0, idx as u32, fill.line);
                     }
                 }
             }
@@ -700,6 +792,7 @@ impl Runner {
                 self.route_scratch = routes;
             }
 
+            let batch_start_ps = self.core.now;
             for bi in 0..k {
                 let i = cur.index;
                 cur.index += 1;
@@ -757,14 +850,23 @@ impl Runner {
                         // Pipelined; absorbed into base IPC.
                         self.core.hit(0, false);
                         stats.l1_hits += 1;
+                        if let Some(obs) = &mut self.obs {
+                            obs.record(AccessClass::DemandHit, lk.latency);
+                        }
                     }
                     HitLevel::L2 => {
                         self.core.hit(lk.latency, a.dependent);
                         stats.l2_hits += 1;
+                        if let Some(obs) = &mut self.obs {
+                            obs.record(AccessClass::DemandHit, lk.latency);
+                        }
                     }
                     HitLevel::Llc => {
                         self.core.hit(lk.latency, a.dependent);
                         stats.llc_hits += 1;
+                        if let Some(obs) = &mut self.obs {
+                            obs.record(AccessClass::DemandHit, lk.latency);
+                        }
                         if lk.llc_prefetch_first_touch {
                             // useful prefetch tracked by cache stats
                         }
@@ -803,6 +905,17 @@ impl Runner {
                             }
                             stats.reflector_hits += 1;
                             access_latency = lat as f64;
+                            if let Some(obs) = &mut self.obs {
+                                obs.record(AccessClass::DemandHit, lat);
+                                let ep = if cxl { self.route_scratch[bi] } else { 0 };
+                                obs.event(
+                                    EventKind::PrefetchConsume,
+                                    now,
+                                    0,
+                                    ep as u32,
+                                    a.line,
+                                );
+                            }
                             if a.write {
                                 self.host_write(a.line, now);
                             }
@@ -885,6 +998,22 @@ impl Runner {
                             }
                             stats.llc_misses += 1;
                             access_latency = total as f64;
+                            if let Some(obs) = &mut self.obs {
+                                obs.record(AccessClass::DemandMiss, total);
+                                if cxl {
+                                    let ep = self.route_scratch[bi];
+                                    obs.record_endpoint(ep, total);
+                                    obs.event(
+                                        EventKind::DemandMiss,
+                                        now,
+                                        total,
+                                        ep as u32,
+                                        a.line,
+                                    );
+                                } else {
+                                    obs.event(EventKind::DemandMiss, now, total, 0, a.line);
+                                }
+                            }
                             if a.write {
                                 self.host_write(a.line, now);
                             }
@@ -929,9 +1058,29 @@ impl Runner {
                         aud.fill_issue(f.line, f.issued_at);
                     }
                     self.events.push(f.arrives_at, f);
+                    if let Some(obs) = &mut self.obs {
+                        if obs.trace_on() {
+                            let ep = if cxl { self.pool.route(f.line) } else { 0 };
+                            obs.event(
+                                EventKind::PrefetchIssue,
+                                f.issued_at,
+                                f.arrives_at.saturating_sub(f.issued_at),
+                                ep as u32,
+                                f.line,
+                            );
+                        }
+                    }
                 }
                 self.fill_scratch = fills;
                 cur.total_access_ps += access_latency as u128;
+
+                // Single-host time-series stride sampling (stride 0 —
+                // the multi-host engine's setting — never fires; epoch
+                // marks come through `obs_epoch_mark` instead).
+                if self.obs.as_ref().is_some_and(|o| o.series_due(cur.index)) {
+                    let snap = self.series_snap(stats, cur.index);
+                    self.obs.as_mut().unwrap().series_mark(snap);
+                }
 
                 // Series sampling.
                 if self.collect_series && matches!(lk.level, HitLevel::Llc | HitLevel::Memory) {
@@ -948,6 +1097,11 @@ impl Runner {
                     cur.win_hits = 0;
                     cur.win_total = 0;
                 }
+            }
+
+            if let Some(obs) = &mut self.obs {
+                let span = self.core.now.saturating_sub(batch_start_ps);
+                obs.event(EventKind::Batch, batch_start_ps, span, 0, k as u64);
             }
 
             self.stream_pos = k;
@@ -999,6 +1153,9 @@ impl Runner {
         stats.inferences = self.prefetcher.issue_stats().inferences;
         stats.inference_wall_ps = self.prefetcher.inference_ps();
         stats.debug = self.prefetcher.debug_stats();
+        if let Some(obs) = &self.obs {
+            stats.obs = Some(obs.summary());
+        }
     }
 
     /// BI-directory coverage invariant: every line resident in the host

@@ -18,8 +18,14 @@ pub struct Args {
 
 impl Args {
     /// Parse raw arguments. `--key=value` and `--key value` both work;
-    /// a `--key` followed by another `--...` or nothing is a flag.
+    /// a `--key` followed by another `--...`/`-x` flag or nothing is a
+    /// flag itself. Short `-v` tokens are flags (negative numbers stay
+    /// option values: `--alpha -0.5` parses as expected).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        // A `-...` token is a flag unless it is a negative number.
+        fn is_flag_token(s: &str) -> bool {
+            s.len() > 1 && s.starts_with('-') && s.parse::<f64>().is_err()
+        }
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -29,7 +35,7 @@ impl Args {
                 } else {
                     let takes_value = it
                         .peek()
-                        .map(|n| !n.starts_with("--"))
+                        .map(|n| !is_flag_token(n))
                         .unwrap_or(false);
                     if takes_value {
                         let v = it.next().unwrap();
@@ -38,6 +44,8 @@ impl Args {
                         out.flags.push(rest.to_string());
                     }
                 }
+            } else if is_flag_token(&a) {
+                out.flags.push(a.trim_start_matches('-').to_string());
             } else {
                 out.positional.push(a);
             }
@@ -139,5 +147,20 @@ mod tests {
         let a = argv("run --quick");
         assert!(a.flag("quick"));
         assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn short_flags_and_negative_values() {
+        // `-v` after a would-be-valued option must stay a flag, not be
+        // eaten as the option's value.
+        let a = argv("run --metrics-out -v chain");
+        assert!(a.flag("v"));
+        assert!(a.flag("metrics-out"));
+        assert_eq!(a.get("metrics-out"), None);
+        assert_eq!(a.positional, vec!["run", "chain"]);
+        // Negative numbers still parse as option values.
+        let b = argv("x --alpha -0.5 -q");
+        assert_eq!(b.get_f64("alpha", 0.0).unwrap(), -0.5);
+        assert!(b.flag("q"));
     }
 }

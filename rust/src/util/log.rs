@@ -1,0 +1,57 @@
+//! Tiny leveled stderr logger for CLI status prints.
+//!
+//! Machine-parseable output (fingerprints, metrics JSON, CSV) always
+//! goes to stdout or files; human status notes route through here so
+//! `--quiet` silences them and `-v` adds detail without disturbing
+//! whatever a pipeline is parsing. Hard errors bypass the logger.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const QUIET: u8 = 0;
+pub const INFO: u8 = 1;
+pub const VERBOSE: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+/// Set the global level (QUIET / INFO / VERBOSE).
+pub fn set_level(level: u8) {
+    LEVEL.store(level.min(VERBOSE), Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Status note — shown unless `--quiet`.
+pub fn info(msg: &str) {
+    if level() >= INFO {
+        eprintln!("{msg}");
+    }
+}
+
+/// Detail — shown only with `-v` / `--verbose`.
+pub fn verbose(msg: &str) {
+    if level() >= VERBOSE {
+        eprintln!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_clamp_and_round_trip() {
+        let prev = level();
+        set_level(VERBOSE);
+        assert_eq!(level(), VERBOSE);
+        set_level(9);
+        assert_eq!(level(), VERBOSE);
+        set_level(QUIET);
+        assert_eq!(level(), QUIET);
+        // info/verbose must not panic at any level.
+        info("quiet test line");
+        verbose("quiet test line");
+        set_level(prev);
+    }
+}

@@ -3,6 +3,7 @@
 pub mod cli;
 pub mod json;
 pub mod linemap;
+pub mod log;
 pub mod mmap;
 pub mod rng;
 pub mod stats;

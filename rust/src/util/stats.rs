@@ -55,7 +55,8 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts last instead of panicking partial_cmp().unwrap().
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0 * (v.len() - 1) as f64).clamp(0.0, (v.len() - 1) as f64);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -100,6 +101,16 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_input() {
+        // Regression: partial_cmp().unwrap() used to abort on NaN.
+        let xs = [f64::NAN, 3.0, 1.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!(p50.is_finite(), "NaN input must not panic, got {p50}");
+        // total_cmp sorts NaN last, so low percentiles see real samples.
+        assert_eq!(percentile(&xs, 0.0), 1.0);
     }
 
     #[test]

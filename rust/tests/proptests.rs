@@ -822,6 +822,7 @@ fn prop_multi_host_engine_batch_size_invariant() {
                 epoch_accesses: 1000,
                 artifacts: None,
                 record: false,
+                obs: None,
             };
             let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
             assert!(s.bi_invariant, "batch {batch} threads {threads}");
@@ -869,6 +870,7 @@ fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
                     epoch_accesses: 1024,
                     artifacts: None,
                     record: false,
+                    obs: None,
                 };
                 let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
                 assert!(s.bi_invariant, "spec {spec} hosts {hosts} threads {threads}");
@@ -1070,6 +1072,139 @@ fn prop_trace_roundtrip_bit_identical() {
         let bytes2 = encode_records(&h, &back).unwrap();
         assert_eq!(bytes, bytes2, "seed {seed}: canonical encoding");
     });
+}
+
+// ---------------------------------------------------------------------------
+// Observability (ISSUE 7): log-bucketed histograms must merge exactly
+// (any shard split, any merge order) and track the exact percentile
+// within the bucket geometry's relative-error bound; the multi-host
+// metrics export must be byte-identical across thread counts.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_histogram_merge_is_order_invariant_and_exact() {
+    use expand_cxl::obs::Histogram;
+
+    forall(30, |rng, seed| {
+        let n = 1 + rng.below(4_000) as usize;
+        // Adversarial value mix: sub-bucket-exact small values, octave
+        // boundaries, wild u64-scale latencies.
+        let values: Vec<u64> = (0..n)
+            .map(|_| match rng.below(4) {
+                0 => rng.below(64),
+                1 => (1u64 << (6 + rng.below(20))) + rng.below(1 << 6),
+                2 => rng.below(1 << 40),
+                _ => rng.next_u64(),
+            })
+            .collect();
+        let mut whole = Histogram::default();
+        for &v in &values {
+            whole.record(v);
+        }
+        // Split into 1..=8 shards round-robin with random offsets, merge
+        // forward and backward: all three histograms must be identical.
+        let shards_n = 1 + rng.below(8) as usize;
+        let mut shards = vec![Histogram::default(); shards_n];
+        for (i, &v) in values.iter().enumerate() {
+            shards[(i + seed as usize) % shards_n].record(v);
+        }
+        let mut fwd = Histogram::default();
+        for s in &shards {
+            fwd.merge(s);
+        }
+        let mut bwd = Histogram::default();
+        for s in shards.iter().rev() {
+            bwd.merge(s);
+        }
+        assert_eq!(whole, fwd, "seed {seed}: sharded merge must equal whole recording");
+        assert_eq!(fwd, bwd, "seed {seed}: merge order must not matter");
+        assert_eq!(whole.count(), n as u64, "seed {seed}");
+        assert_eq!(whole.max(), values.iter().copied().max().unwrap(), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_track_exact_percentile_within_bucket_error() {
+    use expand_cxl::obs::Histogram;
+    use expand_cxl::util::stats::percentile;
+
+    // Bucket floors keep 5 sub-bucket bits per octave: every recorded
+    // value v maps to a floor in (v * 32/33, v], and the interpolated
+    // histogram quantile inherits that one-sided relative bound against
+    // the exact same-rank-convention percentile.
+    forall(30, |rng, seed| {
+        let n = 1 + rng.below(2_000) as usize;
+        let values: Vec<u64> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => rng.below(64),
+                1 => rng.below(1 << 20),
+                _ => rng.below(1 << 44),
+            })
+            .collect();
+        let mut h = Histogram::default();
+        for &v in &values {
+            h.record(v);
+        }
+        let xs: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.quantile(q);
+            assert!(
+                approx <= exact + 1e-6,
+                "seed {seed} q{q}: histogram quantile {approx} above exact {exact}"
+            );
+            assert!(
+                approx >= exact * (32.0 / 33.0) - 1e-6,
+                "seed {seed} q{q}: histogram quantile {approx} below bound of exact {exact}"
+            );
+        }
+    });
+}
+
+/// The fingerprint-stamped metrics export must be byte-identical for
+/// `--threads 1` vs `4` — histograms, per-endpoint timeliness errors,
+/// epoch series rows and rho matrix included.
+#[test]
+fn prop_multi_host_obs_exports_thread_count_invariant() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::obs::ObsOptions;
+    use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
+    use expand_cxl::workloads::WorkloadId;
+
+    for seed in 0..3u64 {
+        let mut cfg = presets::smoke();
+        cfg.accesses = 6_000;
+        cfg.seed = 0x0B5 ^ seed.wrapping_mul(0x9E37_79B9);
+        cfg.prefetcher = PrefetcherKind::Expand;
+        cfg.cxl.topology = TopologySpec::parse("tree:1,2,4").unwrap();
+        let cfg = std::sync::Arc::new(cfg);
+        let run = |threads: usize| {
+            let opts = MultiHostOpts {
+                hosts: 4,
+                threads,
+                epoch_accesses: 1024,
+                artifacts: None,
+                record: false,
+                obs: Some(ObsOptions { trace_events: true, ..ObsOptions::default() }),
+            };
+            run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "seed {seed}");
+        let (ra, rb) = (a.obs.as_ref().unwrap(), b.obs.as_ref().unwrap());
+        assert_eq!(
+            ra.metrics_json(a.fingerprint_hash(), 4),
+            rb.metrics_json(b.fingerprint_hash(), 4),
+            "seed {seed}: metrics JSON must not depend on thread count"
+        );
+        assert_eq!(ra.trace_json(), rb.trace_json(), "seed {seed}: trace JSON");
+        assert_eq!(
+            ra.series.to_csv(ra.endpoints()),
+            rb.series.to_csv(rb.endpoints()),
+            "seed {seed}: series CSV"
+        );
+    }
 }
 
 #[test]
