@@ -397,7 +397,14 @@ fn trace_replay(b: &Bench) -> Vec<Throughput> {
 /// chain scenario; the on side must stay within 10% of off — enforced
 /// with a hard assert, and the ratio is annotated into the tracked
 /// JSON. Third return value: obs on/off throughput ratio.
-fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>, Option<f64>) {
+///
+/// A parallel guard covers fault injection (`fault_off` /
+/// `fault_idle`): the chain run with no fault state at all vs an
+/// enabled-but-idle schedule whose draws happen on every miss and fill
+/// but ~never fire. Idle must stay within 2% of off — the hot loop may
+/// not pay for robustness it isn't using. Fourth return value:
+/// idle/off throughput ratio.
+fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>, Option<f64>, Option<f64>) {
     const ITERS: usize = 5;
     let mut results = Vec::new();
     let mut scenario = |name: &str, c: SimConfig, write_boost: f64| -> Option<f64> {
@@ -518,7 +525,51 @@ fn batched_hot_loop(b: &Bench) -> (Vec<Throughput>, Option<f64>, Option<f64>) {
             assert!(r >= 0.90, "observability overhead exceeds 10%: on/off = {r:.3}x");
         }
     }
-    (results, ratio, obs_ratio)
+
+    // Fault-path overhead guard: the identical chain run with fault
+    // injection fully disabled (no fault state — one well-predicted
+    // `is_some` branch per site) and enabled-but-idle (probabilities so
+    // small every miss and fill draws but ~never hits).
+    let mut fault_ratio: Option<f64> = None;
+    {
+        let mut fault_run = |name: &str, spec: Option<&str>| -> Option<f64> {
+            let full = format!("batched_hot_loop_{name}");
+            if !b.enabled(&full) {
+                return None;
+            }
+            let base = {
+                let mut c = cfg();
+                c.prefetcher = PrefetcherKind::Expand;
+                if let Some(s) = spec {
+                    c.fault = expand_cxl::fault::FaultConfig::parse(s).unwrap();
+                }
+                std::sync::Arc::new(c)
+            };
+            let t = measure_throughput(&full, base.accesses as u64, ITERS, || {
+                let mut src = WorkloadId::Pr.source(base.seed);
+                let s = simulate(&base, None, &mut *src).unwrap();
+                if spec.is_some() {
+                    assert_eq!(
+                        s.link_retries + s.poison_drops,
+                        0,
+                        "idle schedule must not actually fire"
+                    );
+                }
+            });
+            let aps = t.mean_accesses_per_sec;
+            results.push(t);
+            Some(aps)
+        };
+        let off = fault_run("fault_off", None);
+        let idle = fault_run("fault_idle", Some("link_crc=1e-18,poison=1e-18"));
+        if let (Some(off), Some(idle)) = (off, idle) {
+            let r = idle / off;
+            fault_ratio = Some(r);
+            println!("batched hot loop: fault_idle/fault_off = {r:.2}x (floor 0.98x)");
+            assert!(r >= 0.98, "fault path costs more than 2% when idle: idle/off = {r:.3}x");
+        }
+    }
+    (results, ratio, obs_ratio, fault_ratio)
 }
 
 fn main() {
@@ -661,7 +712,7 @@ fn main() {
     );
 
     // --- End-to-end: batched_hot_loop group (tracked baseline) ----------
-    let (b6, replay_ratio, obs_ratio) = batched_hot_loop(&b);
+    let (b6, replay_ratio, obs_ratio, fault_ratio) = batched_hot_loop(&b);
     let ok_b6 = publish_group(
         "batched_hot_loop",
         &b6,
@@ -682,6 +733,12 @@ fn main() {
                 if let Some(r) = obs_ratio {
                     m.insert(
                         "obs_overhead_on_vs_off".to_string(),
+                        Json::Num((r * 100.0).round() / 100.0),
+                    );
+                }
+                if let Some(r) = fault_ratio {
+                    m.insert(
+                        "fault_idle_vs_off".to_string(),
                         Json::Num((r * 100.0).round() / 100.0),
                     );
                 }

@@ -498,6 +498,9 @@ pub struct SimConfig {
     pub ssd: SsdConfig,
     pub expand: ExpandConfig,
     pub coherence: CoherenceConfig,
+    /// Deterministic fault-injection schedule (`[fault]` / `--fault`);
+    /// quiet by default.
+    pub fault: crate::fault::FaultConfig,
     pub prefetcher: PrefetcherKind,
     pub backing: Backing,
     /// Accesses to simulate per run (trace length).
@@ -534,6 +537,7 @@ impl Default for SimConfig {
             ssd: SsdConfig::default(),
             expand: ExpandConfig::default(),
             coherence: CoherenceConfig::default(),
+            fault: crate::fault::FaultConfig::default(),
             prefetcher: PrefetcherKind::None,
             backing: Backing::CxlSsd,
             accesses: 2_000_000,
@@ -595,6 +599,7 @@ impl SimConfig {
             ("coherence", "dir_ways") => self.coherence.dir_ways = num!(),
             ("coherence", "device_update_every") => self.coherence.device_update_every = num!(),
             ("coherence", "audit") => self.coherence.audit = v.parse().map_err(|_| bad())?,
+            ("fault", _) => self.fault.apply(key, v)?,
             ("sim", "accesses") => self.accesses = num!(),
             ("sim", "seed") => self.seed = num!(),
             ("sim", "hosts") => self.hosts = num!(),
@@ -634,6 +639,7 @@ impl SimConfig {
              [expand] reflector={}KB window={} stride={} timing={} tacc={} tuning={} \
              notify_stride={}\n\
              [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
+             [fault] {}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x} hosts={} \
              epoch_accesses={} threads={} batch={} workload={}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
@@ -655,6 +661,7 @@ impl SimConfig {
             self.expand.online_tuning, self.expand.hit_notify_stride,
             self.coherence.dir_entries, self.coherence.dir_ways,
             self.coherence.device_update_every, self.coherence.audit,
+            self.fault.render(),
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
             self.hosts, self.epoch_accesses, self.threads, self.batch,
             self.workload.as_deref().unwrap_or("-"),
@@ -788,6 +795,26 @@ mod tests {
         let err = c.apply("sim", "workload", "bogus").unwrap_err().to_string();
         assert!(err.contains("libquantum"), "lists valid names: {err}");
         assert_eq!(c.workload.as_deref(), Some("trace:/tmp/run.trace"), "bad value rejected");
+    }
+
+    #[test]
+    fn fault_keys_apply_and_render() {
+        let mut c = SimConfig::default();
+        assert!(!c.fault.enabled(), "quiet by default");
+        assert!(c.render().contains("[fault] off"));
+        c.apply("fault", "link_crc", "1e-4").unwrap();
+        c.apply("fault", "dev_stall", "ep1@4Kacc:100us").unwrap();
+        c.apply("fault", "hot_remove", "ep2@8Kacc").unwrap();
+        c.apply("fault", "poison", "1e-5").unwrap();
+        c.apply("fault", "timeout", "25us").unwrap();
+        assert!(c.fault.enabled());
+        assert_eq!(c.fault.link_crc, 1e-4);
+        assert_eq!(c.fault.dev_stall.unwrap().at, 4_000);
+        assert_eq!(c.fault.hot_remove.unwrap().ep, 2);
+        assert_eq!(c.fault.timeout_ps, 25_000_000);
+        assert!(c.render().contains("link_crc=1e-4"));
+        assert!(c.apply("fault", "link_crc", "2.0").is_err());
+        assert!(c.apply("fault", "nope", "1").is_err());
     }
 
     #[test]

@@ -214,6 +214,15 @@ impl Fabric {
         at_dev - now
     }
 
+    /// Replay cost of one LRSM-style link retry on `dev`'s path: the
+    /// receiver NAKs the corrupted flit and the sender replays it from
+    /// the retry buffer, so the access pays one extra flit round trip on
+    /// the deepest link plus the flit's reserialization — latency only,
+    /// never a failure (CXL physical-layer CRC + retry semantics).
+    pub fn crc_replay_ps(&self, _dev: NodeId) -> Ps {
+        2 * ns(self.cfg.link_latency_ns) + serialize_ps(&self.cfg, self.cfg.flit_bytes)
+    }
+
     /// Per-endpoint traffic counters (zero record for non-endpoints and
     /// out-of-range ids). The multi-host engine snapshots each shard
     /// fabric's endpoint rows at epoch boundaries and merges the deltas
@@ -362,6 +371,16 @@ mod tests {
         let (mut f1, s1) = fabric(1);
         let (mut f3, s3) = fabric(3);
         assert!(f3.bi_invalidate(s3, 0) > f1.bi_invalidate(s1, 0));
+    }
+
+    #[test]
+    fn crc_replay_costs_a_flit_round_trip() {
+        let (f, ssd) = fabric(2);
+        let cfg = CxlConfig::default();
+        let replay = f.crc_replay_ps(ssd);
+        assert_eq!(replay, 2 * ns(cfg.link_latency_ns) + serialize_ps(&cfg, cfg.flit_bytes));
+        // A retry is strictly cheaper than the full path it rides on.
+        assert!(replay < f.path_latency(ssd, 80), "replay {replay}");
     }
 
     #[test]

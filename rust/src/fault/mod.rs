@@ -1,0 +1,440 @@
+//! Deterministic fault injection: the seeded schedule of link CRC
+//! errors, device stalls, poisoned fills, and endpoint hot-removal that
+//! the runner degrades through instead of failing.
+//!
+//! Every fault decision is a pure function of `(seed, access index,
+//! endpoint, salt)` — never of wall-clock order — so a faulted run is
+//! bit-identical across `--threads 1` vs N and across batch sizes, and
+//! the whole storm replays from the run seed alone. The schedule itself
+//! comes from the `[fault]` config table or the `--fault` CLI spec,
+//! e.g. `link_crc=1e-6,dev_stall=ep2@5Macc:200us,hot_remove=ep3@8Macc,poison=1e-7`.
+
+use crate::sim::time::{Ps, PS_PER_MS, PS_PER_NS, PS_PER_US};
+use crate::util::rng::splitmix64;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A device stall window: endpoint `ep` stops answering for `dur_ps`
+/// starting at the shard's access index `at` (host-side timeouts +
+/// backoff absorb it; see the runner).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallSpec {
+    pub ep: usize,
+    pub at: u64,
+    pub dur_ps: Ps,
+}
+
+/// Surprise hot-removal: endpoint `ep` disappears at access index `at`
+/// and the interleaver re-routes its sets across the survivors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RemoveSpec {
+    pub ep: usize,
+    pub at: u64,
+}
+
+/// The full deterministic fault schedule for one run. Default is
+/// entirely quiet (every probability zero, no scheduled events), which
+/// the runner treats as "no fault state at all" — the hot loop keeps
+/// its single `Option::is_some` branch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-flit-exchange probability of a link CRC error (absorbed by an
+    /// LRSM-style retry/replay that adds latency, never fails the access).
+    pub link_crc: f64,
+    /// Per-fill probability the data arrives poisoned (never consumed:
+    /// fills are dropped and re-fetched, demand reads retry).
+    pub poison: f64,
+    /// At most one stall window per run (deterministic schedules compose
+    /// across runs; one window is enough to exercise the whole path).
+    pub dev_stall: Option<StallSpec>,
+    /// At most one hot-removal per run.
+    pub hot_remove: Option<RemoveSpec>,
+    /// Host-side timeout before a demand read to a stalled device is
+    /// retried.
+    pub timeout_ps: Ps,
+    /// Cap on the exponential retry backoff.
+    pub max_backoff_ps: Ps,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            link_crc: 0.0,
+            poison: 0.0,
+            dev_stall: None,
+            hot_remove: None,
+            timeout_ps: 50 * PS_PER_US,
+            max_backoff_ps: 400 * PS_PER_US,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault source is active (the runner only materializes
+    /// fault state when this is true).
+    pub fn enabled(&self) -> bool {
+        self.link_crc > 0.0
+            || self.poison > 0.0
+            || self.dev_stall.is_some()
+            || self.hot_remove.is_some()
+    }
+
+    /// Apply one `key=value` pair (shared by the `[fault]` config table
+    /// and the `--fault` spec).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "link_crc" => self.link_crc = parse_probability(value).context("fault.link_crc")?,
+            "poison" => self.poison = parse_probability(value).context("fault.poison")?,
+            "dev_stall" => self.dev_stall = Some(parse_stall(value).context("fault.dev_stall")?),
+            "hot_remove" => {
+                self.hot_remove = Some(parse_remove(value).context("fault.hot_remove")?)
+            }
+            "timeout" => self.timeout_ps = parse_duration(value).context("fault.timeout")?,
+            "max_backoff" => {
+                self.max_backoff_ps = parse_duration(value).context("fault.max_backoff")?
+            }
+            _ => bail!("unknown fault key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a full `--fault` spec: comma-separated `key=value` pairs,
+    /// e.g. `link_crc=1e-6,dev_stall=ep2@5Macc:200us,hot_remove=ep3@8Macc`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut cfg = FaultConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault spec part '{part}' is not key=value"))?;
+            cfg.apply(key.trim(), value.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Validate the schedule against a concrete pool size. Hot-removal
+    /// needs at least one survivor to redirect to.
+    pub fn validate(&self, endpoints: usize) -> Result<()> {
+        if let Some(s) = &self.dev_stall {
+            anyhow::ensure!(
+                s.ep < endpoints,
+                "fault.dev_stall endpoint ep{} out of range (pool has {endpoints})",
+                s.ep
+            );
+        }
+        if let Some(r) = &self.hot_remove {
+            anyhow::ensure!(
+                r.ep < endpoints,
+                "fault.hot_remove endpoint ep{} out of range (pool has {endpoints})",
+                r.ep
+            );
+            anyhow::ensure!(
+                endpoints >= 2,
+                "fault.hot_remove needs >= 2 endpoints to redirect to survivors"
+            );
+        }
+        anyhow::ensure!(self.timeout_ps > 0, "fault.timeout must be > 0");
+        Ok(())
+    }
+
+    /// Render back to the canonical spec grammar (config `render()` and
+    /// run banners round-trip through this).
+    pub fn render(&self) -> String {
+        if !self.enabled() {
+            return "off".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.link_crc > 0.0 {
+            parts.push(format!("link_crc={:e}", self.link_crc));
+        }
+        if self.poison > 0.0 {
+            parts.push(format!("poison={:e}", self.poison));
+        }
+        if let Some(s) = &self.dev_stall {
+            parts.push(format!("dev_stall=ep{}@{}acc:{}us", s.ep, s.at, s.dur_ps / PS_PER_US));
+        }
+        if let Some(r) = &self.hot_remove {
+            parts.push(format!("hot_remove=ep{}@{}acc", r.ep, r.at));
+        }
+        parts.push(format!("timeout={}us", self.timeout_ps / PS_PER_US));
+        parts.join(",")
+    }
+}
+
+/// `1e-6` / `0.25` — a probability in `[0, 1]`.
+fn parse_probability(s: &str) -> Result<f64> {
+    let p: f64 = s.parse().map_err(|_| anyhow!("'{s}' is not a number"))?;
+    anyhow::ensure!((0.0..=1.0).contains(&p), "probability '{s}' outside [0, 1]");
+    Ok(p)
+}
+
+/// `ep2` — an endpoint index.
+fn parse_ep(s: &str) -> Result<usize> {
+    let idx = s
+        .strip_prefix("ep")
+        .ok_or_else(|| anyhow!("endpoint '{s}' must look like ep<N>"))?;
+    idx.parse().map_err(|_| anyhow!("endpoint '{s}' must look like ep<N>"))
+}
+
+/// `5Macc` / `8000` — an access-count with optional K/M/G scale and
+/// optional `acc` suffix.
+pub fn parse_count(s: &str) -> Result<u64> {
+    let t = s.strip_suffix("acc").unwrap_or(s);
+    let (digits, mult) = match t.chars().last() {
+        Some('K' | 'k') => (&t[..t.len() - 1], 1_000u64),
+        Some('M' | 'm') => (&t[..t.len() - 1], 1_000_000),
+        Some('G' | 'g') => (&t[..t.len() - 1], 1_000_000_000),
+        _ => (t, 1),
+    };
+    let n: u64 = digits.trim().parse().map_err(|_| anyhow!("'{s}' is not an access count"))?;
+    Ok(n.saturating_mul(mult))
+}
+
+/// `200us` / `3ms` / `1500ns` — a duration in picoseconds.
+pub fn parse_duration(s: &str) -> Result<Ps> {
+    let (digits, unit) = s.split_at(s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len()));
+    let n: f64 = digits.trim().parse().map_err(|_| anyhow!("'{s}' is not a duration"))?;
+    anyhow::ensure!(n >= 0.0, "duration '{s}' is negative");
+    let per = match unit {
+        "ns" => PS_PER_NS,
+        "us" => PS_PER_US,
+        "ms" => PS_PER_MS,
+        "ps" | "" => 1,
+        _ => bail!("duration '{s}' has unknown unit '{unit}' (ps/ns/us/ms)"),
+    };
+    Ok((n * per as f64).round() as Ps)
+}
+
+/// `ep2@5Macc:200us`.
+fn parse_stall(s: &str) -> Result<StallSpec> {
+    let (head, dur) =
+        s.split_once(':').ok_or_else(|| anyhow!("'{s}' must look like ep<N>@<at>:<dur>"))?;
+    let (ep, at) =
+        head.split_once('@').ok_or_else(|| anyhow!("'{s}' must look like ep<N>@<at>:<dur>"))?;
+    Ok(StallSpec { ep: parse_ep(ep)?, at: parse_count(at)?, dur_ps: parse_duration(dur)? })
+}
+
+/// `ep3@8Macc`.
+fn parse_remove(s: &str) -> Result<RemoveSpec> {
+    let (ep, at) =
+        s.split_once('@').ok_or_else(|| anyhow!("'{s}' must look like ep<N>@<at>"))?;
+    Ok(RemoveSpec { ep: parse_ep(ep)?, at: parse_count(at)? })
+}
+
+// Salts separating the independent fault draw streams.
+pub const SALT_CRC: u64 = 0xC12C_C12C_C12C_C12C;
+pub const SALT_CRC_FILL: u64 = 0xC12C_F111_C12C_F111;
+pub const SALT_POISON: u64 = 0xB0B0_0B0B_B0B0_0B0B;
+pub const SALT_POISON_DEMAND: u64 = 0xB0B0_DEAD_B0B0_DEAD;
+
+/// One deterministic 64-bit draw keyed by `(seed, access index,
+/// endpoint, salt)` — independent of thread interleaving and batch
+/// boundaries by construction.
+#[inline]
+pub fn draw(seed: u64, index: u64, ep: u64, salt: u64) -> u64 {
+    let mut s = seed
+        ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ep.wrapping_mul(0xA24B_AED4_963E_E407)
+        ^ salt;
+    splitmix64(&mut s)
+}
+
+/// Probability to a threshold on the full `u64` draw range: the hot
+/// path compares `draw < threshold` without touching floats.
+#[inline]
+pub fn threshold(p: f64) -> u64 {
+    if p <= 0.0 {
+        0
+    } else if p >= 1.0 {
+        u64::MAX
+    } else {
+        (p * (u64::MAX as f64)) as u64
+    }
+}
+
+/// Per-run fault state the runner carries: the schedule, precomputed
+/// thresholds, and the activation latches for the scheduled events.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub cfg: FaultConfig,
+    /// The shard's fault stream seed (per-host derived in multi-host).
+    pub seed: u64,
+    pub crc_threshold: u64,
+    pub poison_threshold: u64,
+    /// End of the active stall window (`0` until the trigger access).
+    pub stall_until: Ps,
+    /// Hot-removal latched (the pool is in degraded mode).
+    pub removed: bool,
+    /// Simulated instant of the hot-removal: in-flight fills issued to
+    /// the dead endpoint before this never complete and are dropped.
+    pub removed_at: Ps,
+}
+
+impl FaultState {
+    pub fn new(cfg: &FaultConfig, seed: u64) -> Self {
+        FaultState {
+            cfg: cfg.clone(),
+            seed,
+            crc_threshold: threshold(cfg.link_crc),
+            poison_threshold: threshold(cfg.poison),
+            stall_until: 0,
+            removed: false,
+            removed_at: 0,
+        }
+    }
+
+    /// CRC draw for the demand path at `index` against endpoint `ep`.
+    #[inline]
+    pub fn crc_hit(&self, index: u64, ep: usize) -> bool {
+        self.crc_threshold > 0 && draw(self.seed, index, ep as u64, SALT_CRC) < self.crc_threshold
+    }
+
+    /// CRC draw for a prefetch fill issued at `index` toward `ep`.
+    #[inline]
+    pub fn crc_fill_hit(&self, index: u64, ep: usize) -> bool {
+        self.crc_threshold > 0
+            && draw(self.seed, index, ep as u64, SALT_CRC_FILL) < self.crc_threshold
+    }
+
+    /// Poison draw for a fill issued at `index` toward `ep`.
+    #[inline]
+    pub fn poison_fill_hit(&self, index: u64, ep: usize) -> bool {
+        self.poison_threshold > 0
+            && draw(self.seed, index, ep as u64, SALT_POISON) < self.poison_threshold
+    }
+
+    /// Poison draw for the demand read at `index` against `ep` (a hit
+    /// costs one extra re-fetch round trip).
+    #[inline]
+    pub fn poison_demand_hit(&self, index: u64, ep: usize) -> bool {
+        self.poison_threshold > 0
+            && draw(self.seed, index, ep as u64, SALT_POISON_DEMAND) < self.poison_threshold
+    }
+
+    /// Total host-side wait (timeout + capped exponential backoff) for a
+    /// demand read hitting endpoint `ep` at time `now` while it stalls,
+    /// plus the number of timed-out attempts. `(0, 0)` when not stalled.
+    #[inline]
+    pub fn stall_wait(&self, ep: usize, now: Ps) -> (Ps, u64) {
+        let Some(s) = &self.cfg.dev_stall else { return (0, 0) };
+        if s.ep != ep || self.stall_until <= now {
+            return (0, 0);
+        }
+        let mut t = now;
+        let mut backoff = self.cfg.timeout_ps;
+        let mut retries = 0u64;
+        while t < self.stall_until {
+            t += self.cfg.timeout_ps + backoff;
+            backoff = (backoff * 2).min(self.cfg.max_backoff_ps);
+            retries += 1;
+        }
+        (t - now, retries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_quiet_and_renders_off() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.render(), "off");
+        assert!(cfg.validate(1).is_ok());
+    }
+
+    #[test]
+    fn parses_the_issue_example_spec() {
+        let cfg = FaultConfig::parse(
+            "link_crc=1e-6,dev_stall=ep2@5Macc:200us,hot_remove=ep3@8Macc,poison=1e-7",
+        )
+        .unwrap();
+        assert_eq!(cfg.link_crc, 1e-6);
+        assert_eq!(cfg.poison, 1e-7);
+        assert_eq!(
+            cfg.dev_stall,
+            Some(StallSpec { ep: 2, at: 5_000_000, dur_ps: 200 * PS_PER_US })
+        );
+        assert_eq!(cfg.hot_remove, Some(RemoveSpec { ep: 3, at: 8_000_000 }));
+        assert!(cfg.enabled());
+    }
+
+    #[test]
+    fn parses_counts_and_durations() {
+        assert_eq!(parse_count("5Macc").unwrap(), 5_000_000);
+        assert_eq!(parse_count("12k").unwrap(), 12_000);
+        assert_eq!(parse_count("800").unwrap(), 800);
+        assert_eq!(parse_count("1Gacc").unwrap(), 1_000_000_000);
+        assert_eq!(parse_duration("200us").unwrap(), 200 * PS_PER_US);
+        assert_eq!(parse_duration("3ms").unwrap(), 3 * PS_PER_MS);
+        assert_eq!(parse_duration("1500ns").unwrap(), 1_500 * PS_PER_NS);
+        assert_eq!(parse_duration("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultConfig::parse("link_crc=2.0").is_err(), "p > 1");
+        assert!(FaultConfig::parse("nope=1").is_err(), "unknown key");
+        assert!(FaultConfig::parse("dev_stall=2@5M:200us").is_err(), "missing ep prefix");
+        assert!(FaultConfig::parse("dev_stall=ep2@5M").is_err(), "missing duration");
+        assert!(FaultConfig::parse("hot_remove=ep1").is_err(), "missing @at");
+        assert!(FaultConfig::parse("timeout=7lightyears").is_err(), "bad unit");
+    }
+
+    #[test]
+    fn validate_checks_pool_bounds() {
+        let cfg = FaultConfig::parse("hot_remove=ep3@1Kacc").unwrap();
+        assert!(cfg.validate(4).is_ok());
+        assert!(cfg.validate(3).is_err(), "ep3 out of range");
+        let cfg = FaultConfig::parse("hot_remove=ep0@1Kacc").unwrap();
+        assert!(cfg.validate(1).is_err(), "no survivors");
+        let cfg = FaultConfig::parse("dev_stall=ep2@1Kacc:10us").unwrap();
+        assert!(cfg.validate(2).is_err(), "stall ep out of range");
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_stream_separated() {
+        assert_eq!(draw(7, 100, 2, SALT_CRC), draw(7, 100, 2, SALT_CRC));
+        assert_ne!(draw(7, 100, 2, SALT_CRC), draw(7, 100, 2, SALT_POISON));
+        assert_ne!(draw(7, 100, 2, SALT_CRC), draw(7, 101, 2, SALT_CRC));
+        assert_ne!(draw(7, 100, 2, SALT_CRC), draw(7, 100, 3, SALT_CRC));
+        assert_ne!(draw(7, 100, 2, SALT_CRC), draw(8, 100, 2, SALT_CRC));
+    }
+
+    #[test]
+    fn threshold_rate_matches_probability() {
+        let p = 0.01;
+        let th = threshold(p);
+        let hits = (0..200_000u64).filter(|&i| draw(0xE7A5D, i, 1, SALT_CRC) < th).count();
+        let rate = hits as f64 / 200_000.0;
+        assert!((rate - p).abs() < 0.002, "rate {rate}");
+        assert_eq!(threshold(0.0), 0);
+        assert_eq!(threshold(1.5), u64::MAX);
+    }
+
+    #[test]
+    fn stall_wait_applies_capped_backoff() {
+        let cfg = FaultConfig {
+            dev_stall: Some(StallSpec { ep: 1, at: 0, dur_ps: 300 * PS_PER_US }),
+            timeout_ps: 50 * PS_PER_US,
+            max_backoff_ps: 100 * PS_PER_US,
+            ..FaultConfig::default()
+        };
+        let mut st = FaultState::new(&cfg, 1);
+        st.stall_until = 300 * PS_PER_US;
+        // Attempts wait 100us (50+50), then 150us (50+100 capped): 250us
+        // total is still short of 300us, so a third attempt lands at 400us.
+        let (wait, retries) = st.stall_wait(1, 0);
+        assert_eq!(retries, 3);
+        assert_eq!(wait, 400 * PS_PER_US);
+        // Other endpoints and post-window times are unaffected.
+        assert_eq!(st.stall_wait(0, 0), (0, 0));
+        assert_eq!(st.stall_wait(1, 300 * PS_PER_US), (0, 0));
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let cfg = FaultConfig::parse("link_crc=1e-4,dev_stall=ep1@2Kacc:100us").unwrap();
+        let back = FaultConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

@@ -20,6 +20,7 @@ pub mod coherence;
 pub mod config;
 pub mod cxl;
 pub mod expand;
+pub mod fault;
 pub mod figures;
 pub mod mem;
 pub mod metrics;

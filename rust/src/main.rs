@@ -17,6 +17,7 @@ use expand_cxl::config::{
 };
 use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
+use expand_cxl::fault::FaultConfig;
 use expand_cxl::figures::{self, FigOpts};
 use expand_cxl::obs::{self, ObsOptions};
 use expand_cxl::runtime::Runtime;
@@ -25,7 +26,7 @@ use expand_cxl::sim::runner::Runner;
 use expand_cxl::ssd::DevicePool;
 use expand_cxl::trace::{import_file, write_trace, ImportFormat, SharedTrace, TraceReader};
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
-use expand_cxl::util::{default_parallelism, log};
+use expand_cxl::util::{default_parallelism, log, write_atomic};
 use expand_cxl::workloads::{TraceSource, WorkloadSpec};
 use std::sync::Arc;
 
@@ -42,11 +43,15 @@ const COMMANDS: &[CommandHelp] = &[
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
                 [--hosts N] [--threads N] [--epoch N] [--batch N] \
                 [--metrics-out PATH] [--trace-events PATH] [--series-out PATH] \
+                [--fault SPEC] \
                 (hosts>1 runs the deterministic epoch-quantized multi-host \
                 engine; --record captures every host's access stream into a \
                 replayable trace; trace:<path> replays one; --metrics-out \
                 dumps latency histograms as JSON, --trace-events a \
-                Perfetto-loadable Chrome trace, --series-out a per-epoch CSV)",
+                Perfetto-loadable Chrome trace, --series-out a per-epoch CSV; \
+                --fault injects a deterministic fault schedule, e.g. \
+                'link_crc=1e-6,dev_stall=ep2@5Macc:200us,hot_remove=ep3@8Macc,\
+                poison=1e-7')",
     },
     CommandHelp {
         name: "obs",
@@ -132,6 +137,13 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
         args.get_usize("device-update-every", cfg.coherence.device_update_every)?;
     if args.flag("audit") {
         cfg.coherence.audit = true;
+    }
+    anyhow::ensure!(
+        args.get("fault").is_some() || !args.flag("fault"),
+        "--fault needs a spec (e.g. --fault link_crc=1e-6,poison=1e-7)"
+    );
+    if let Some(spec) = args.get("fault") {
+        cfg.fault = FaultConfig::parse(spec)?;
     }
     Ok(cfg)
 }
@@ -247,6 +259,10 @@ fn run_spec(
         if !coherence.is_empty() {
             println!("  {coherence}");
         }
+        let faults = stats.aggregate.fault_summary();
+        if !faults.is_empty() {
+            println!("  {faults}");
+        }
         if stats.aggregate.per_device.len() > 1 {
             print!("{}", stats.aggregate.render_per_device());
         }
@@ -312,6 +328,10 @@ fn run_spec(
     if !coherence.is_empty() {
         println!("  {coherence}");
     }
+    let faults = stats.fault_summary();
+    if !faults.is_empty() {
+        println!("  {faults}");
+    }
     if stats.per_device.len() > 1 {
         print!("{}", stats.render_per_device());
     }
@@ -349,18 +369,15 @@ fn write_obs_outputs(
     series_out: Option<&str>,
 ) -> anyhow::Result<()> {
     if let Some(path) = metrics_out {
-        std::fs::write(path, rec.metrics_json(fingerprint, hosts))
-            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        write_atomic(path, rec.metrics_json(fingerprint, hosts).as_bytes())?;
         log::info(&format!("wrote metrics JSON to {path}"));
     }
     if let Some(path) = trace_out {
-        std::fs::write(path, rec.trace_json())
-            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        write_atomic(path, rec.trace_json().as_bytes())?;
         log::info(&format!("wrote Chrome trace events to {path} (load in ui.perfetto.dev)"));
     }
     if let Some(path) = series_out {
-        std::fs::write(path, rec.series.to_csv(rec.endpoints()))
-            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        write_atomic(path, rec.series.to_csv(rec.endpoints()).as_bytes())?;
         log::info(&format!("wrote per-epoch series CSV to {path}"));
     }
     Ok(())

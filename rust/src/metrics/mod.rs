@@ -46,6 +46,24 @@ pub struct DeviceStats {
     pub dir_occupancy: usize,
     /// BI-directory capacity evictions (each cost a BISnp round trip).
     pub dir_evictions: u64,
+    /// Link CRC errors absorbed by LRSM retry/replay on this endpoint's
+    /// path (fault injection; latency only, never a failure).
+    pub link_retries: u64,
+    /// Host-side demand-read timeout attempts against this endpoint
+    /// while it stalled.
+    pub timeouts: u64,
+    /// Poisoned lines dropped instead of consumed (fills re-fetched,
+    /// demand reads retried).
+    pub poison_drops: u64,
+    /// In-flight fills dropped because this endpoint stalled or was
+    /// removed.
+    pub fault_dropped_fills: u64,
+    /// Accesses whose healthy-pool home was this endpoint after it was
+    /// hot-removed (each failed over to a survivor).
+    pub failed_over: u64,
+    /// Accesses this endpoint absorbed via degraded-mode redirection of
+    /// a removed peer's sets.
+    pub redirected: u64,
 }
 
 impl DeviceStats {
@@ -82,6 +100,12 @@ impl DeviceStats {
         self.pushes_arrived += o.pushes_arrived;
         self.dir_occupancy += o.dir_occupancy;
         self.dir_evictions += o.dir_evictions;
+        self.link_retries += o.link_retries;
+        self.timeouts += o.timeouts;
+        self.poison_drops += o.poison_drops;
+        self.fault_dropped_fills += o.fault_dropped_fills;
+        self.failed_over += o.failed_over;
+        self.redirected += o.redirected;
     }
 }
 
@@ -118,6 +142,17 @@ pub struct RunStats {
     pub device_updates: u64,
     /// Reflector entries invalidated by host stores.
     pub reflector_write_invalidations: u64,
+    /// Link CRC errors absorbed by LRSM retry/replay (fault injection).
+    pub link_retries: u64,
+    /// Host-side demand-read timeout attempts against stalled devices.
+    pub dev_timeouts: u64,
+    /// Poisoned lines dropped instead of consumed.
+    pub poison_drops: u64,
+    /// In-flight fills dropped because their endpoint stalled or was
+    /// removed.
+    pub fault_dropped_fills: u64,
+    /// Accesses re-routed to survivors after a hot-removal.
+    pub redirected_accesses: u64,
     /// Shadow-memory auditor counters (audit mode only).
     pub audit: Option<AuditStats>,
     /// Observability digest (per-class / per-endpoint latency quantiles
@@ -258,6 +293,27 @@ impl RunStats {
         s
     }
 
+    /// One-line fault/degradation summary (CLI; empty when the run saw
+    /// no fault activity at all).
+    pub fn fault_summary(&self) -> String {
+        if self.link_retries == 0
+            && self.dev_timeouts == 0
+            && self.poison_drops == 0
+            && self.fault_dropped_fills == 0
+            && self.redirected_accesses == 0
+        {
+            return String::new();
+        }
+        format!(
+            "faults: link-retries={} timeouts={} poison-drops={} dropped-fills={} redirected={}",
+            self.link_retries,
+            self.dev_timeouts,
+            self.poison_drops,
+            self.fault_dropped_fills,
+            self.redirected_accesses,
+        )
+    }
+
     /// Multi-line per-device table (shown by the CLI for pools with more
     /// than one endpoint; also useful from tests/examples).
     pub fn render_per_device(&self) -> String {
@@ -324,6 +380,11 @@ impl RunStats {
             agg.stale_pushes += s.stale_pushes;
             agg.device_updates += s.device_updates;
             agg.reflector_write_invalidations += s.reflector_write_invalidations;
+            agg.link_retries += s.link_retries;
+            agg.dev_timeouts += s.dev_timeouts;
+            agg.poison_drops += s.poison_drops;
+            agg.fault_dropped_fills += s.fault_dropped_fills;
+            agg.redirected_accesses += s.redirected_accesses;
             agg.prefetch_issued += s.prefetch_issued;
             agg.prefetch_useful += s.prefetch_useful;
             agg.prefetch_wasted += s.prefetch_wasted;
@@ -572,11 +633,12 @@ impl Table {
         out
     }
 
-    /// Write CSV under `dir/<name>.csv`.
+    /// Write CSV under `dir/<name>.csv` (atomic: temp file + rename, so
+    /// an interrupted run never leaves a truncated figure behind).
     pub fn write_csv(&self, dir: &str, name: &str) -> anyhow::Result<String> {
         std::fs::create_dir_all(dir)?;
         let path = format!("{dir}/{name}.csv");
-        std::fs::write(&path, self.to_csv())?;
+        crate::util::write_atomic(&path, self.to_csv().as_bytes())?;
         Ok(path)
     }
 }
@@ -762,6 +824,42 @@ mod tests {
         a.aggregate.wall_s = 0.25;
         assert_eq!(f1, a.fingerprint());
         assert!(f1.contains("cross_snoops=7"));
+    }
+
+    #[test]
+    fn fault_counters_sum_in_absorb_aggregate_and_summary() {
+        let host = || RunStats {
+            link_retries: 2,
+            dev_timeouts: 3,
+            poison_drops: 1,
+            fault_dropped_fills: 4,
+            redirected_accesses: 5,
+            per_device: vec![DeviceStats {
+                node: 2,
+                link_retries: 2,
+                timeouts: 3,
+                poison_drops: 1,
+                fault_dropped_fills: 4,
+                failed_over: 5,
+                redirected: 0,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let agg = RunStats::aggregate(&[host(), host()]);
+        assert_eq!(agg.link_retries, 4);
+        assert_eq!(agg.dev_timeouts, 6);
+        assert_eq!(agg.poison_drops, 2);
+        assert_eq!(agg.fault_dropped_fills, 8);
+        assert_eq!(agg.redirected_accesses, 10);
+        assert_eq!(agg.per_device[0].link_retries, 4);
+        assert_eq!(agg.per_device[0].failed_over, 10);
+        assert!(agg.fault_summary().contains("link-retries=4"), "{}", agg.fault_summary());
+        assert!(RunStats::default().fault_summary().is_empty(), "quiet runs stay silent");
+        // Fault counters participate in fingerprints.
+        let mut other = host();
+        other.link_retries = 99;
+        assert_ne!(host().fingerprint(), other.fingerprint());
     }
 
     #[test]

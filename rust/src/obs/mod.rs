@@ -43,9 +43,13 @@ pub enum AccessClass {
     BiSnp = 3,
     /// Dirty writeback round trip.
     Writeback = 4,
+    /// LRSM link retry replay latency (fault injection).
+    LinkRetry = 5,
+    /// Host-side timeout + backoff wait against a stalled device.
+    DevTimeout = 6,
 }
 
-pub const CLASS_COUNT: usize = 5;
+pub const CLASS_COUNT: usize = 7;
 
 impl AccessClass {
     pub const ALL: [AccessClass; CLASS_COUNT] = [
@@ -54,6 +58,8 @@ impl AccessClass {
         AccessClass::PrefetchFill,
         AccessClass::BiSnp,
         AccessClass::Writeback,
+        AccessClass::LinkRetry,
+        AccessClass::DevTimeout,
     ];
 
     pub fn name(self) -> &'static str {
@@ -63,6 +69,8 @@ impl AccessClass {
             AccessClass::PrefetchFill => "prefetch_fill",
             AccessClass::BiSnp => "bisnp",
             AccessClass::Writeback => "writeback",
+            AccessClass::LinkRetry => "link_retry",
+            AccessClass::DevTimeout => "dev_timeout",
         }
     }
 }
@@ -87,6 +95,19 @@ impl Default for ObsOptions {
     }
 }
 
+/// Per-endpoint fault/error counters surfaced in the metrics JSON
+/// (patched in from the run's per-device stats at finalize; summed
+/// element-wise on multi-host merge).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EpFaults {
+    pub link_retries: u64,
+    pub timeouts: u64,
+    pub poison_drops: u64,
+    pub dropped_fills: u64,
+    pub failed_over: u64,
+    pub redirected: u64,
+}
+
 /// Per-endpoint timeliness-error tracking: |predicted - actual| in a
 /// histogram plus signed direction counters.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -108,6 +129,8 @@ pub struct ObsRecorder {
     class_hist: Vec<Histogram>,
     ep_hist: Vec<Histogram>,
     ep_timeliness: Vec<TimelinessErr>,
+    /// Per-endpoint fault counters (`endpoints[i].faults` in the JSON).
+    pub ep_faults: Vec<EpFaults>,
     pub series: SeriesRecorder,
     pub events: EventRing,
     /// Host tag applied to locally recorded series points and events.
@@ -125,6 +148,7 @@ impl ObsRecorder {
             class_hist: vec![Histogram::new(); CLASS_COUNT],
             ep_hist: vec![Histogram::new(); endpoints],
             ep_timeliness: vec![TimelinessErr::default(); endpoints],
+            ep_faults: vec![EpFaults::default(); endpoints],
             series: SeriesRecorder::default(),
             host: 0,
             epoch_rho: Vec::new(),
@@ -197,6 +221,14 @@ impl ObsRecorder {
             a.err.merge(&b.err);
             a.early += b.early;
             a.late += b.late;
+        }
+        for (a, b) in self.ep_faults.iter_mut().zip(&other.ep_faults) {
+            a.link_retries += b.link_retries;
+            a.timeouts += b.timeouts;
+            a.poison_drops += b.poison_drops;
+            a.dropped_fills += b.dropped_fills;
+            a.failed_over += b.failed_over;
+            a.redirected += b.redirected;
         }
         for p in &other.series.points {
             self.series.points.push(SeriesPoint { host, ..p.clone() });
@@ -281,6 +313,15 @@ impl ObsRecorder {
                 terr.insert("early".into(), Json::Num(t.early as f64));
                 terr.insert("late".into(), Json::Num(t.late as f64));
                 m.insert("timeliness_error".into(), Json::Obj(terr));
+                let f = self.ep_faults.get(ep).copied().unwrap_or_default();
+                let mut fobj: BTreeMap<String, Json> = BTreeMap::new();
+                fobj.insert("link_retries".into(), Json::Num(f.link_retries as f64));
+                fobj.insert("timeouts".into(), Json::Num(f.timeouts as f64));
+                fobj.insert("poison_drops".into(), Json::Num(f.poison_drops as f64));
+                fobj.insert("dropped_fills".into(), Json::Num(f.dropped_fills as f64));
+                fobj.insert("failed_over".into(), Json::Num(f.failed_over as f64));
+                fobj.insert("redirected".into(), Json::Num(f.redirected as f64));
+                m.insert("faults".into(), Json::Obj(fobj));
                 Json::Obj(m)
             })
             .collect();
@@ -453,6 +494,18 @@ pub fn validate_metrics_json(text: &str) -> anyhow::Result<String> {
                 "endpoint {i} {key} missing p99_ps"
             );
         }
+        let faults = ep
+            .get("faults")
+            .ok_or_else(|| anyhow::anyhow!("endpoint {i} missing faults object"))?;
+        for key in
+            ["link_retries", "timeouts", "poison_drops", "dropped_fills", "failed_over",
+             "redirected"]
+        {
+            anyhow::ensure!(
+                faults.get(key).and_then(|v| v.as_f64()).is_some(),
+                "endpoint {i} faults missing numeric {key}"
+            );
+        }
     }
     anyhow::ensure!(
         doc.get("series").and_then(|v| v.as_arr()).is_some(),
@@ -525,6 +578,27 @@ mod tests {
         assert_eq!(t.early, 2);
         assert_eq!(t.late, 2);
         assert_eq!(t.err.count(), 4);
+    }
+
+    #[test]
+    fn ep_fault_counters_merge_and_export() {
+        let mut a = sample_recorder();
+        a.ep_faults[1] = EpFaults { link_retries: 3, timeouts: 2, ..Default::default() };
+        let mut b = sample_recorder();
+        b.ep_faults[1] = EpFaults { link_retries: 1, poison_drops: 5, ..Default::default() };
+        let mut merged = ObsRecorder::new(2, ObsOptions::default());
+        merged.absorb(&a, 0);
+        merged.absorb(&b, 1);
+        assert_eq!(merged.ep_faults[1].link_retries, 4);
+        assert_eq!(merged.ep_faults[1].timeouts, 2);
+        assert_eq!(merged.ep_faults[1].poison_drops, 5);
+        assert_eq!(merged.ep_faults[0], EpFaults::default());
+        let text = merged.metrics_json(1, 2);
+        validate_metrics_json(&text).unwrap();
+        assert!(text.contains("\"link_retries\": 4"), "{text}");
+        // A file without the faults object must now fail validation.
+        let stripped = text.replace("\"faults\"", "\"nofaults\"");
+        assert!(validate_metrics_json(&stripped).is_err());
     }
 
     #[test]

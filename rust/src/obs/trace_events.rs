@@ -35,6 +35,14 @@ pub enum EventKind {
     BiSnp,
     /// Dirty writeback round trip.
     Writeback,
+    /// LRSM link retry replay on an endpoint's path (fault injection).
+    LinkRetry,
+    /// Host-side timeout + backoff span against a stalled endpoint.
+    DevTimeout,
+    /// Poisoned line dropped instead of consumed (instant).
+    PoisonDrop,
+    /// Endpoint hot-removed; pool flipped to degraded routing (instant).
+    HotRemove,
 }
 
 impl EventKind {
@@ -49,6 +57,10 @@ impl EventKind {
             EventKind::PrefetchConsume => "prefetch_consume",
             EventKind::BiSnp => "bisnp",
             EventKind::Writeback => "writeback",
+            EventKind::LinkRetry => "link_retry",
+            EventKind::DevTimeout => "dev_timeout",
+            EventKind::PoisonDrop => "poison_drop",
+            EventKind::HotRemove => "hot_remove",
         }
     }
 
@@ -214,8 +226,15 @@ mod tests {
         r.push(ev(EventKind::PrefetchIssue, 1_000_000, 2_000_000));
         r.push(ev(EventKind::PrefetchFill, 3_000_000, 0));
         r.push(ev(EventKind::Batch, 0, 5_000_000));
+        r.push(ev(EventKind::LinkRetry, 4_000_000, 500_000));
+        r.push(ev(EventKind::DevTimeout, 5_000_000, 2_000_000));
+        r.push(ev(EventKind::PoisonDrop, 6_000_000, 0));
+        r.push(ev(EventKind::HotRemove, 7_000_000, 0));
         let text = to_chrome_json(&r);
-        assert_eq!(validate_chrome_json(&text).unwrap(), 3);
+        assert_eq!(validate_chrome_json(&text).unwrap(), 7);
+        // Fault events render on the endpoint's device track.
+        assert!(text.contains("\"name\": \"link_retry\""), "{text}");
+        assert!(text.contains("\"name\": \"hot_remove\""), "{text}");
         // Instants carry a scope, spans a duration.
         assert!(text.contains("\"ph\": \"i\""));
         assert!(text.contains("\"ph\": \"X\""));

@@ -120,6 +120,13 @@ struct Shared {
     traffic: Vec<TrafficStats>,
     /// Address-to-endpoint routing (identical to every shard pool's).
     router: Interleaver,
+    /// Scheduled hot-removal, translated to the epoch that contains the
+    /// trigger access: `(epoch index, endpoint)`. The shared router
+    /// flips into degraded mode at the head of that epoch's merge, so
+    /// it re-routes exactly when every shard's own pool does (each
+    /// shard flushes its dead-homed LLC lines at its own flip, which
+    /// keeps the shared-directory coverage invariant exact).
+    remove_at_epoch: Option<(u64, usize)>,
     /// BISnp invalidations delivered across hosts.
     cross_snoops: u64,
     /// Barriers executed.
@@ -156,6 +163,11 @@ impl Shared {
         contention: &[Mutex<Vec<Ps>>],
     ) {
         let endpoints = self.dirs.len();
+        if let Some((e, dead)) = self.remove_at_epoch {
+            if self.epochs >= e && self.router.dead().is_none() {
+                self.router.set_dead(dead);
+            }
+        }
         let taken: Vec<Option<EffectLog>> =
             logs.iter().map(|slot| slot.lock().unwrap().take()).collect();
 
@@ -305,6 +317,7 @@ where
             .collect(),
         traffic: vec![TrafficStats::default(); endpoints],
         router,
+        remove_at_epoch: cfg.fault.hot_remove.map(|r| (r.at / epoch as u64, r.ep)),
         cross_snoops: 0,
         epochs: 0,
         epoch_rho: opts.obs.as_ref().map(|_| Vec::new()),

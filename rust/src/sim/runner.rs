@@ -23,10 +23,11 @@ use crate::cxl::transaction::{m2s_bytes, TrafficStats, M2S};
 use crate::cxl::Fabric;
 use crate::expand::timeliness::DeadlineModel;
 use crate::expand::ExpandPrefetcher;
+use crate::fault::FaultState;
 use crate::mem::cache::Evicted;
 use crate::mem::{DramModel, Hierarchy, HitLevel};
 use crate::metrics::RunStats;
-use crate::obs::{AccessClass, EventKind, ObsOptions, ObsRecorder, SeriesSnap};
+use crate::obs::{AccessClass, EpFaults, EventKind, ObsOptions, ObsRecorder, SeriesSnap};
 use crate::prefetch::ml::MlPrefetcher;
 use crate::prefetch::rule1_best_offset::BestOffset;
 use crate::prefetch::rule2_temporal::TemporalIsb;
@@ -105,6 +106,15 @@ pub struct RunCursor {
     wall_s: f64,
 }
 
+/// An in-flight prefetch payload plus the fault flags drawn at issue:
+/// poison travels with the data, so the arrival handler can drop the
+/// fill without re-drawing (draws are keyed by the *issuing* access).
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    fill: PrefetchFill,
+    poisoned: bool,
+}
+
 /// Everything needed to simulate one configuration.
 pub struct Runner {
     /// Shared, immutable configuration: builders that run many cells
@@ -117,7 +127,7 @@ pub struct Runner {
     fabric: Fabric,
     pool: DevicePool,
     prefetcher: Box<dyn Prefetcher>,
-    events: EventQueue<PrefetchFill>,
+    events: EventQueue<InFlight>,
     /// Flat batched access stream: accesses are pulled from the source
     /// whole batches at a time (`[sim] batch`, via
     /// [`crate::workloads::TraceSource::fill_batch`]) and consumed in
@@ -182,6 +192,13 @@ pub struct Runner {
     /// keeps the hot path at one well-predicted `is_some` branch per
     /// instrumentation site, mirroring `effects` and `record_buf`.
     obs: Option<Box<ObsRecorder>>,
+    /// Deterministic fault schedule state (`None` when `[fault]` is
+    /// quiet — the hot path pays one `is_some` branch per site, pinned
+    /// by the `fault_off` bench guard).
+    faults: Option<FaultState>,
+    /// Per-endpoint fault counters (always allocated; all-zero without
+    /// fault state).
+    fault_counts: Vec<EpFaults>,
 }
 
 impl Runner {
@@ -264,6 +281,8 @@ impl Runner {
         };
 
         let endpoints = pool.len();
+        cfg.fault.validate(endpoints)?;
+        let faults = cfg.fault.enabled().then(|| FaultState::new(&cfg.fault, cfg.seed));
         let auditor = cfg.coherence.audit.then(ShadowMemory::new);
         let update_rng = Rng::new(cfg.seed ^ 0xB15_BADC0DE);
         Ok(Runner {
@@ -297,6 +316,8 @@ impl Runner {
             last_epoch_now: 0,
             record_buf: None,
             obs: None,
+            faults,
+            fault_counts: vec![EpFaults::default(); endpoints],
         })
     }
 
@@ -607,8 +628,62 @@ impl Runner {
         self.device_updates += 1;
     }
 
+    /// Scheduled fault triggers, latched at exact access indices so the
+    /// flip is batch- and thread-count-invariant: the stall window opens
+    /// and the hot-removal fires exactly at `[fault]`'s `at` access.
+    fn fault_triggers(&mut self, index: u64, bi: usize, k: usize) {
+        let now = self.core.now;
+        let Some(fs) = &mut self.faults else { return };
+        if let Some(s) = fs.cfg.dev_stall {
+            if index == s.at {
+                fs.stall_until = now + s.dur_ps;
+            }
+        }
+        let mut flip = None;
+        if let Some(r) = fs.cfg.hot_remove {
+            if index == r.at && !fs.removed {
+                fs.removed = true;
+                fs.removed_at = now;
+                flip = Some(r.ep);
+            }
+        }
+        if let Some(dead) = flip {
+            self.hot_remove(dead, now, bi, k);
+        }
+    }
+
+    /// Surprise hot-removal of endpoint `dead`: flip the pool into
+    /// degraded routing, re-route the unconsumed tail of the current
+    /// batch (the route pass ran against the healthy pool, and a
+    /// mid-batch flip must match batch size 1), then flush every
+    /// host-cached line the dead endpoint homed — dirty data writes
+    /// back to its survivor home via the redirected route, and the
+    /// BISnp flush path keeps the auditor and BI directories exact.
+    fn hot_remove(&mut self, dead: usize, now: Ps, bi: usize, k: usize) {
+        self.pool.set_dead(dead);
+        for j in bi..k {
+            self.route_scratch[j] = self.pool.route(self.stream[j].line);
+        }
+        let doomed: Vec<u64> = self
+            .hierarchy
+            .llc_lines()
+            .filter(|&l| self.pool.router().base_route(l) == dead)
+            .collect();
+        self.fault_counts[dead].failed_over += doomed.len() as u64;
+        for line in doomed {
+            self.bi_snoop_host(dead, line, now);
+            self.pool.revoke(dead, line);
+            self.log_revoke(dead, line);
+        }
+        if let Some(obs) = &mut self.obs {
+            obs.event(EventKind::HotRemove, now, 0, dead as u32, 0);
+        }
+    }
+
     fn apply_due_fills(&mut self) {
-        while let Some((t, fill)) = self.events.pop_due(self.core.now) {
+        let cxl = self.cxl_backed();
+        while let Some((t, inflight)) = self.events.pop_due(self.core.now) {
+            let fill = inflight.fill;
             // Stale-push protection: the payload was captured at
             // `issued_at`; if the line was stored to since (host write
             // or device update), or the host holds a newer dirty copy,
@@ -623,8 +698,51 @@ impl Runner {
                     .invalid_after
                     .get(fill.line)
                     .is_some_and(|w| w >= fill.issued_at);
-            let idx = if self.cxl_backed() { self.pool.route(fill.line) } else { 0 };
-            if fill.to_reflector && self.cxl_backed() {
+            let idx = if cxl { self.pool.route(fill.line) } else { 0 };
+            // Fault drops come before any arrival bookkeeping: a
+            // poisoned payload is discarded at the link, a fill whose
+            // arrival lands inside the stalled endpoint's window was
+            // never answered, and a fill issued to the dead endpoint
+            // before its hot-removal can never complete. None of these
+            // install data; the auditor retires the pending issue.
+            if let Some(fs) = &self.faults {
+                let stalled = cxl && fs.stall_wait(idx, t).0 > 0;
+                let orphaned = cxl
+                    && fs.removed
+                    && fill.issued_at < fs.removed_at
+                    && fs
+                        .cfg
+                        .hot_remove
+                        .is_some_and(|r| self.pool.router().base_route(fill.line) == r.ep);
+                if inflight.poisoned || stalled || orphaned {
+                    if inflight.poisoned {
+                        self.fault_counts[idx].poison_drops += 1;
+                        // The device copy is suspect: drop the line's
+                        // reflector copy and BI entry, and stale any
+                        // other payload captured earlier, so the next
+                        // demand read re-fetches instead of consuming
+                        // poisoned data.
+                        self.prefetcher.reflector_invalidate(fill.line);
+                        if cxl && self.pool.revoke(idx, fill.line) {
+                            self.log_revoke(idx, fill.line);
+                        }
+                        self.invalid_after.insert(fill.line, t);
+                        if let Some(obs) = &mut self.obs {
+                            obs.event(EventKind::PoisonDrop, t, 0, idx as u32, fill.line);
+                        }
+                    } else {
+                        self.fault_counts[idx].dropped_fills += 1;
+                        if let Some(obs) = &mut self.obs {
+                            obs.event(EventKind::PrefetchStale, t, 0, idx as u32, fill.line);
+                        }
+                    }
+                    if let Some(aud) = &mut self.auditor {
+                        aud.fill_dropped(fill.line, fill.issued_at);
+                    }
+                    continue;
+                }
+            }
+            if fill.to_reflector && cxl {
                 self.pushes_arrived[idx] += 1;
                 // Timeliness error of this push: the enumeration-time
                 // e2e model vs the observed issue->arrival flight time.
@@ -642,7 +760,7 @@ impl Runner {
                 // host-prefetch fills are dropped the same way but are
                 // not pushes (counting them would skew the rate for
                 // non-ExPAND prefetchers, whose denominator stays 0).
-                if fill.to_reflector && self.cxl_backed() {
+                if fill.to_reflector && cxl {
                     self.stale_pushes[idx] += 1;
                 }
                 if let Some(aud) = &mut self.auditor {
@@ -800,6 +918,9 @@ impl Runner {
 
                 self.core.advance(a.inst_gap as u64);
                 self.apply_due_fills();
+                if cxl && self.faults.is_some() {
+                    self.fault_triggers(i, bi, k);
+                }
 
                 // Periodic device-side update injection: pick a recently
                 // demanded line so the update actually races host-cached
@@ -963,6 +1084,46 @@ impl Runner {
                                     let idx = self.route_scratch[bi];
                                     let node = self.pool.node_of(idx);
                                     let down = self.fabric.path_latency(node, m2s_bytes(op));
+                                    // Host-side fault absorption on the
+                                    // demand path: a stalled device costs
+                                    // timeout + capped-backoff retries before
+                                    // the read goes through, and a link CRC
+                                    // error adds one LRSM replay. Both draws
+                                    // key off the access index, never wall
+                                    // order.
+                                    let mut fault_lat: Ps = 0;
+                                    if let Some(fs) = &self.faults {
+                                        let (wait, retries) = fs.stall_wait(idx, now);
+                                        if retries > 0 {
+                                            self.fault_counts[idx].timeouts += retries;
+                                            fault_lat += wait;
+                                            if let Some(obs) = &mut self.obs {
+                                                obs.record(AccessClass::DevTimeout, wait);
+                                                obs.event(
+                                                    EventKind::DevTimeout,
+                                                    now,
+                                                    wait,
+                                                    idx as u32,
+                                                    a.line,
+                                                );
+                                            }
+                                        }
+                                        if fs.crc_hit(i, idx) {
+                                            let replay = self.fabric.crc_replay_ps(node);
+                                            self.fault_counts[idx].link_retries += 1;
+                                            fault_lat += replay;
+                                            if let Some(obs) = &mut self.obs {
+                                                obs.record(AccessClass::LinkRetry, replay);
+                                                obs.event(
+                                                    EventKind::LinkRetry,
+                                                    now,
+                                                    replay,
+                                                    idx as u32,
+                                                    a.line,
+                                                );
+                                            }
+                                        }
+                                    }
                                     // Cross-host device-queue pressure rides
                                     // on top of this host's own service time
                                     // (epoch-quantized contention model). The
@@ -970,11 +1131,56 @@ impl Runner {
                                     // only — the penalty is waiting, not
                                     // service, and must not compound through
                                     // the next epoch's estimate.
+                                    let start = now + fault_lat;
                                     let raw =
-                                        self.pool.ssd_mut(idx).serve_read(a.line, now + down);
+                                        self.pool.ssd_mut(idx).serve_read(a.line, start + down);
                                     self.log_device_service(idx, raw);
                                     let service = raw + self.contention[idx];
-                                    self.fabric.read_roundtrip(node, now, op, service)
+                                    let mut lat = fault_lat
+                                        + self.fabric.read_roundtrip(node, start, op, service);
+                                    if self
+                                        .faults
+                                        .as_ref()
+                                        .is_some_and(|fs| fs.poison_demand_hit(i, idx))
+                                    {
+                                        // The response arrived poisoned:
+                                        // drop it and fetch again — one
+                                        // extra full round trip, real
+                                        // traffic and device occupancy.
+                                        self.fault_counts[idx].poison_drops += 1;
+                                        let t2 = now + lat;
+                                        let raw2 = self
+                                            .pool
+                                            .ssd_mut(idx)
+                                            .serve_read(a.line, t2 + down);
+                                        self.log_device_service(idx, raw2);
+                                        lat += self.fabric.read_roundtrip(
+                                            node,
+                                            t2,
+                                            op,
+                                            raw2 + self.contention[idx],
+                                        );
+                                        if let Some(obs) = &mut self.obs {
+                                            obs.event(
+                                                EventKind::PoisonDrop,
+                                                t2,
+                                                0,
+                                                idx as u32,
+                                                a.line,
+                                            );
+                                        }
+                                    }
+                                    // Degraded-pool accounting: the access
+                                    // reached a survivor standing in for the
+                                    // line's healthy (removed) home.
+                                    if self.faults.as_ref().is_some_and(|fs| fs.removed) {
+                                        let base = self.pool.router().base_route(a.line);
+                                        if base != idx {
+                                            self.fault_counts[base].failed_over += 1;
+                                            self.fault_counts[idx].redirected += 1;
+                                        }
+                                    }
+                                    lat
                                 }
                             };
                             debug_assert!(
@@ -1057,14 +1263,44 @@ impl Runner {
                     if let Some(aud) = &mut self.auditor {
                         aud.fill_issue(f.line, f.issued_at);
                     }
-                    self.events.push(f.arrives_at, f);
+                    // Fault draws ride with the payload from the issuing
+                    // access (index xor line decorrelates multiple fills
+                    // issued by one access): a link CRC replay delays the
+                    // arrival, poison is latched into the in-flight record
+                    // and dropped — never installed — on arrival.
+                    let mut arrives_at = f.arrives_at;
+                    let mut poisoned = false;
+                    if cxl {
+                        if let Some(fs) = &self.faults {
+                            let ep = self.pool.route(f.line);
+                            let key = i ^ f.line;
+                            if fs.crc_fill_hit(key, ep) {
+                                let replay =
+                                    self.fabric.crc_replay_ps(self.pool.node_of(ep));
+                                arrives_at += replay;
+                                self.fault_counts[ep].link_retries += 1;
+                                if let Some(obs) = &mut self.obs {
+                                    obs.record(AccessClass::LinkRetry, replay);
+                                    obs.event(
+                                        EventKind::LinkRetry,
+                                        f.issued_at,
+                                        replay,
+                                        ep as u32,
+                                        f.line,
+                                    );
+                                }
+                            }
+                            poisoned = fs.poison_fill_hit(key, ep);
+                        }
+                    }
+                    self.events.push(arrives_at, InFlight { fill: f, poisoned });
                     if let Some(obs) = &mut self.obs {
                         if obs.trace_on() {
                             let ep = if cxl { self.pool.route(f.line) } else { 0 };
                             obs.event(
                                 EventKind::PrefetchIssue,
                                 f.issued_at,
-                                f.arrives_at.saturating_sub(f.issued_at),
+                                arrives_at.saturating_sub(f.issued_at),
                                 ep as u32,
                                 f.line,
                             );
@@ -1132,12 +1368,24 @@ impl Runner {
             d.stale_pushes = self.stale_pushes[i];
             d.pushes_arrived = self.pushes_arrived[i];
             d.writebacks = self.dirty_writebacks[i];
+            let f = self.fault_counts[i];
+            d.link_retries = f.link_retries;
+            d.timeouts = f.timeouts;
+            d.poison_drops = f.poison_drops;
+            d.fault_dropped_fills = f.dropped_fills;
+            d.failed_over = f.failed_over;
+            d.redirected = f.redirected;
         }
         stats.dirty_writebacks = self.dirty_writebacks.iter().sum();
         stats.bi_snoops = self.bi_snoops.iter().sum();
         stats.stale_pushes = self.stale_pushes.iter().sum();
         stats.device_updates = self.device_updates;
         stats.reflector_write_invalidations = self.reflector_write_invalidations;
+        stats.link_retries = self.fault_counts.iter().map(|f| f.link_retries).sum();
+        stats.dev_timeouts = self.fault_counts.iter().map(|f| f.timeouts).sum();
+        stats.poison_drops = self.fault_counts.iter().map(|f| f.poison_drops).sum();
+        stats.fault_dropped_fills = self.fault_counts.iter().map(|f| f.dropped_fills).sum();
+        stats.redirected_accesses = self.fault_counts.iter().map(|f| f.redirected).sum();
         if let Some(aud) = &self.auditor {
             stats.audit = Some(aud.stats);
             debug_assert_eq!(
@@ -1153,7 +1401,8 @@ impl Runner {
         stats.inferences = self.prefetcher.issue_stats().inferences;
         stats.inference_wall_ps = self.prefetcher.inference_ps();
         stats.debug = self.prefetcher.debug_stats();
-        if let Some(obs) = &self.obs {
+        if let Some(obs) = &mut self.obs {
+            obs.ep_faults.copy_from_slice(&self.fault_counts);
             stats.obs = Some(obs.summary());
         }
     }
@@ -1452,6 +1701,118 @@ mod tests {
         assert!(audit.reads_checked > 0);
         assert!(audit.writes_applied > 0);
         assert!(r.bi_invariant_holds(), "LLC lines must be directory-tracked");
+    }
+
+    /// Four-endpoint tree under the full fault storm: CRC errors on
+    /// both demand and fill paths, a 2 ms device stall, poison, and a
+    /// mid-run hot-removal. The synthetic prefetcher keeps fills in
+    /// flight so every injection site is exercised.
+    fn fault_storm_cfg() -> SimConfig {
+        let mut cfg = smoke_cfg();
+        cfg.prefetcher = PrefetcherKind::Synthetic { accuracy: 0.9, coverage: 0.9 };
+        cfg.cxl.topology = crate::config::TopologySpec::Tree { levels: 2, fanout: 2, ssds: 4 };
+        cfg.fault = crate::fault::FaultConfig::parse(
+            "link_crc=5e-3,poison=2e-3,dev_stall=ep1@5Kacc:2ms,hot_remove=ep3@12Kacc",
+        )
+        .unwrap();
+        cfg
+    }
+
+    #[test]
+    fn fault_storm_degrades_gracefully_and_audits_clean() {
+        let mut cfg = fault_storm_cfg();
+        cfg.coherence.audit = true;
+        let cfg = Arc::new(cfg);
+        let mut src = WorkloadId::Pr.source(cfg.seed);
+        let mut r = Runner::new(&cfg, None).unwrap();
+        let s = r.run(&mut *src, cfg.accesses);
+
+        let audit = s.audit.expect("auditor enabled");
+        assert_eq!(audit.violations, 0, "{audit:?}");
+        assert_eq!(audit.stale_consumptions, 0, "a poisoned line must never be served");
+        assert!(r.bi_invariant_holds(), "degraded directories stay exact");
+
+        assert!(s.link_retries > 0, "CRC replays occurred: {s:?}");
+        assert!(s.dev_timeouts > 0, "stall window produced host timeouts: {s:?}");
+        assert!(s.poison_drops > 0, "poison fired: {s:?}");
+        assert!(s.redirected_accesses > 0, "dead endpoint's lines re-routed: {s:?}");
+        assert!(s.per_device[3].failed_over > 0, "removed endpoint records failover: {s:?}");
+        // Totals are exactly the per-device sums.
+        assert_eq!(s.link_retries, s.per_device.iter().map(|d| d.link_retries).sum::<u64>());
+        assert_eq!(s.poison_drops, s.per_device.iter().map(|d| d.poison_drops).sum::<u64>());
+        assert_eq!(s.dev_timeouts, s.per_device.iter().map(|d| d.timeouts).sum::<u64>());
+        assert!(!s.fault_summary().is_empty());
+        assert_eq!(
+            s.accesses,
+            s.l1_hits + s.l2_hits + s.llc_hits + s.llc_misses + s.reflector_hits
+        );
+    }
+
+    #[test]
+    fn fault_schedule_is_batch_size_invariant() {
+        // Draws key off the access index and the stall/removal triggers
+        // fire mid-batch exactly as they would at batch size 1, so the
+        // whole faulted run is bit-identical whatever `[sim] batch` says.
+        let fps: Vec<String> = [1usize, 64, 256]
+            .into_iter()
+            .map(|b| {
+                let mut cfg = fault_storm_cfg();
+                cfg.batch = b;
+                let mut src = WorkloadId::Pr.source(cfg.seed);
+                let s = simulate(&Arc::new(cfg), None, &mut *src).unwrap();
+                assert!(s.link_retries + s.poison_drops > 0, "batch {b}: faults fired");
+                s.fingerprint()
+            })
+            .collect();
+        assert_eq!(fps[0], fps[1]);
+        assert_eq!(fps[0], fps[2]);
+    }
+
+    #[test]
+    fn hot_removal_starves_the_dead_endpoint_and_keeps_accounting_exact() {
+        let mut cfg = smoke_cfg();
+        cfg.cxl.topology = crate::config::TopologySpec::Tree { levels: 2, fanout: 2, ssds: 4 };
+        cfg.fault = crate::fault::FaultConfig::parse("hot_remove=ep3@2Kacc").unwrap();
+        let cfg = Arc::new(cfg);
+        let mut src = WorkloadId::Pr.source(cfg.seed);
+        let s = simulate(&cfg, None, &mut *src).unwrap();
+
+        // The dead endpoint saw only the pre-removal prefix; survivors
+        // keep accumulating plus its redirected share.
+        assert!(
+            s.per_device[3].demand_reads < s.per_device[0].demand_reads,
+            "{:?}",
+            s.per_device
+        );
+        assert!(s.per_device[3].failed_over > 0);
+        assert_eq!(s.per_device[3].redirected, 0, "a dead endpoint receives nothing");
+        assert!(s.redirected_accesses > 0);
+        assert_eq!(
+            s.redirected_accesses,
+            s.per_device.iter().map(|d| d.redirected).sum::<u64>()
+        );
+        // Without poison retries, per-device demand sums to the run's
+        // miss traffic exactly — nothing double-counted by the re-route.
+        let total: u64 = s.per_device.iter().map(|d| d.demand_reads).sum();
+        assert_eq!(total, s.llc_misses);
+    }
+
+    #[test]
+    fn faults_off_reports_zero_counters_and_empty_summary() {
+        let cfg = smoke_cfg();
+        assert!(!cfg.fault.enabled(), "smoke preset injects nothing");
+        let mut src = WorkloadId::Pr.source(4);
+        let s = simulate(&Arc::new(cfg), None, &mut *src).unwrap();
+        assert_eq!(
+            s.link_retries
+                + s.dev_timeouts
+                + s.poison_drops
+                + s.fault_dropped_fills
+                + s.redirected_accesses,
+            0
+        );
+        assert!(s.fault_summary().is_empty());
+        assert!(s.per_device.iter().all(|d| d.link_retries == 0 && d.failed_over == 0));
     }
 
     #[test]

@@ -57,6 +57,9 @@ pub struct Interleaver {
     /// Capacity policy: endpoint index per weighted stripe slot.
     stripes: Vec<u32>,
     endpoints: usize,
+    /// Degraded mode after hot-removal: this endpoint's sets are
+    /// deterministically re-routed across the survivors.
+    dead: Option<usize>,
 }
 
 impl Interleaver {
@@ -79,16 +82,22 @@ impl Interleaver {
                 }
             }
         }
-        Interleaver { policy, page_lines: page_lines.max(1), stripes, endpoints: weights.len() }
+        Interleaver {
+            policy,
+            page_lines: page_lines.max(1),
+            stripes,
+            endpoints: weights.len(),
+            dead: None,
+        }
     }
 
-    /// Route a line address to its owning endpoint (total and
+    /// The healthy-pool route, ignoring degraded mode (total and
     /// deterministic: every address maps to exactly one endpoint).
     /// Inlined: the batched hot loop resolves a whole batch of routes
     /// in one tight pass, which autovectorizes once this div/mod chain
     /// is visible at the call site.
     #[inline]
-    pub fn route(&self, line: u64) -> usize {
+    pub fn base_route(&self, line: u64) -> usize {
         let n = self.endpoints as u64;
         match self.policy {
             InterleavePolicy::Line => (line % n) as usize,
@@ -98,6 +107,38 @@ impl Interleaver {
                 self.stripes[(stripe % self.stripes.len() as u64) as usize] as usize
             }
         }
+    }
+
+    /// Route a line address to its owning endpoint. In degraded mode the
+    /// dead endpoint's lines redirect to a survivor picked by a
+    /// deterministic hash of the line (so the dead set spreads across
+    /// every survivor instead of piling onto one neighbor).
+    #[inline]
+    pub fn route(&self, line: u64) -> usize {
+        let r = self.base_route(line);
+        match self.dead {
+            None => r,
+            Some(dead) if r != dead => r,
+            Some(dead) => {
+                let h = line.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+                let mut s = (h % (self.endpoints as u64 - 1)) as usize;
+                if s >= dead {
+                    s += 1;
+                }
+                s
+            }
+        }
+    }
+
+    /// Flip into degraded mode: `dead`'s sets re-route across survivors.
+    pub fn set_dead(&mut self, dead: usize) {
+        debug_assert!(dead < self.endpoints && self.endpoints >= 2);
+        self.dead = Some(dead);
+    }
+
+    /// The removed endpoint, if the pool is degraded.
+    pub fn dead(&self) -> Option<usize> {
+        self.dead
     }
 }
 
@@ -212,6 +253,16 @@ impl DevicePool {
     #[inline]
     pub fn route(&self, line: u64) -> usize {
         self.router.route(line)
+    }
+
+    /// The routing view itself (degraded-mode checks and base routes).
+    pub fn router(&self) -> &Interleaver {
+        &self.router
+    }
+
+    /// Hot-removal: flip the pool's routing into degraded mode.
+    pub fn set_dead(&mut self, dead: usize) {
+        self.router.set_dead(dead);
     }
 
     /// Pooled internal-DRAM hit ratio across all endpoints.
@@ -373,6 +424,40 @@ mod tests {
             &CoherenceConfig::default()
         )
         .is_err());
+    }
+
+    #[test]
+    fn degraded_mode_redirects_only_the_dead_endpoints_lines() {
+        let mut il = Interleaver::new(InterleavePolicy::Line, 64, &[1, 1, 1, 1]);
+        let healthy: Vec<usize> = (0..1000).map(|l| il.route(l)).collect();
+        il.set_dead(2);
+        assert_eq!(il.dead(), Some(2));
+        let mut redirected = [0u64; 4];
+        for l in 0..1000u64 {
+            let r = il.route(l);
+            assert_ne!(r, 2, "line {l} routed to the dead endpoint");
+            if il.base_route(l) == 2 {
+                redirected[r] += 1;
+            } else {
+                assert_eq!(r, healthy[l as usize], "survivor-homed line {l} moved");
+            }
+        }
+        // The dead set spreads across every survivor.
+        assert_eq!(redirected[2], 0);
+        assert!(redirected[0] > 0 && redirected[1] > 0 && redirected[3] > 0, "{redirected:?}");
+    }
+
+    #[test]
+    fn degraded_routing_is_deterministic() {
+        let mk = || {
+            let mut il = Interleaver::new(InterleavePolicy::Page, 64, &[4, 2, 1]);
+            il.set_dead(0);
+            il
+        };
+        let (a, b) = (mk(), mk());
+        for l in (0..50_000u64).step_by(7) {
+            assert_eq!(a.route(l), b.route(l));
+        }
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct TraceReader {
     body: usize,
     dec: RecordDecoder,
     decoded: u64,
+    /// Where the bytes came from (file path, or `"<memory>"` for
+    /// in-memory images) — stamped into every record-level error so a
+    /// corrupt trace names its file and byte offset.
+    src: String,
     pub header: TraceHeader,
 }
 
@@ -54,15 +58,16 @@ impl TraceReader {
     /// buffered read where mapping is unavailable).
     pub fn open(path: &str) -> anyhow::Result<Self> {
         let map = Mmap::open(path).map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
-        Self::from_data(Data::Mapped(map)).map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
+        Self::from_data(Data::Mapped(map), path.to_string())
+            .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))
     }
 
     /// Decode from an in-memory image (tests, converters).
     pub fn from_bytes(data: Vec<u8>) -> anyhow::Result<Self> {
-        Self::from_data(Data::Owned(data))
+        Self::from_data(Data::Owned(data), "<memory>".into())
     }
 
-    fn from_data(data: Data) -> anyhow::Result<Self> {
+    fn from_data(data: Data, src: String) -> anyhow::Result<Self> {
         let (header, pos) = TraceHeader::decode(data.bytes())?;
         // A record is at least MIN_RECORD_BYTES, so a forged count that
         // cannot fit in the file is rejected up front (it would
@@ -73,27 +78,36 @@ impl TraceReader {
             "header declares {} records but only {remaining} bytes follow",
             header.records
         );
-        Ok(TraceReader { data, pos, body: pos, dec: RecordDecoder::new(), decoded: 0, header })
+        Ok(TraceReader { data, pos, body: pos, dec: RecordDecoder::new(), decoded: 0, src, header })
     }
 
     /// Next `(host, access)` record, or `None` after the last one.
     /// Errors on truncation, trailing garbage, or a host tag outside
-    /// the header's declared range.
+    /// the header's declared range — each naming the source and the
+    /// byte offset of the failing record, so a corrupt replay is
+    /// debuggable from the message alone.
     pub fn next_record(&mut self) -> anyhow::Result<Option<(u32, Access)>> {
         let bytes = self.data.bytes();
         if self.decoded == self.header.records {
             anyhow::ensure!(
                 self.pos == bytes.len(),
-                "{} trailing bytes after the declared {} records",
+                "{}: {} trailing bytes at byte offset {} after the declared {} records",
+                self.src,
                 bytes.len() - self.pos,
+                self.pos,
                 self.header.records
             );
             return Ok(None);
         }
-        let (host, a) = self.dec.decode(bytes, &mut self.pos)?;
+        let off = self.pos;
+        let (host, a) = self.dec.decode(bytes, &mut self.pos).map_err(|e| {
+            anyhow::anyhow!("{}: record {} at byte offset {off}: {e}", self.src, self.decoded)
+        })?;
         anyhow::ensure!(
             host < self.header.hosts,
-            "record {} tagged host {host}, but the header declares {} hosts",
+            "{}: record {} at byte offset {off} tagged host {host}, but the header declares \
+             {} hosts",
+            self.src,
             self.decoded,
             self.header.hosts
         );
@@ -196,6 +210,27 @@ mod tests {
         let mut forged = h.encode();
         forged.extend_from_slice(&bytes[TraceHeader::decode(&bytes).unwrap().1..]);
         assert!(decode_records(&forged).is_err());
+    }
+
+    #[test]
+    fn decode_errors_name_source_and_byte_offset() {
+        let recs = vec![(0, acc(1, 10, false)), (0, acc(1, 11, false))];
+        let bytes = encode_records(&TraceHeader::new("t", 1, 0), &recs).unwrap();
+        let mut cut = bytes.clone();
+        cut.truncate(bytes.len() - 1);
+        let err = decode_records(&cut).unwrap_err().to_string();
+        assert!(err.contains("<memory>"), "{err}");
+        assert!(err.contains("record 1 at byte offset"), "{err}");
+        // File-backed reads name the path instead.
+        let path = std::env::temp_dir()
+            .join(format!("cxtr_ut_corrupt_{}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::write(&path, &cut).unwrap();
+        let err = TraceReader::open(&path).unwrap().read_all().unwrap_err().to_string();
+        assert!(err.contains(&path), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

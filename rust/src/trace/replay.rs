@@ -115,9 +115,8 @@ impl TraceReplay {
         let tag_mode = reader.header.hosts as usize == hosts;
         let mut shard_len = 0usize;
         let mut index = 0u64;
-        while let Some((h, _)) =
-            reader.next_record().map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?
-        {
+        // `next_record` errors already name the file and byte offset.
+        while let Some((h, _)) = reader.next_record()? {
             let keep = if tag_mode {
                 h as usize == host
             } else {

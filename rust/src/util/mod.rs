@@ -17,6 +17,42 @@ pub fn default_parallelism() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Atomic artifact write: the bytes land in a same-directory temp file
+/// first and are renamed over `path` only once fully flushed, so an
+/// interrupted or faulted run never leaves truncated JSON/CSV behind.
+/// Every `--metrics-out` / `--series-out` / `--trace-events` / figure
+/// CSV export goes through here.
+pub fn write_atomic(path: impl AsRef<std::path::Path>, bytes: &[u8]) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    let path = path.as_ref();
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("writing {}: path has no file name", path.display()))?;
+    // Same-directory temp name (rename must not cross filesystems);
+    // pid-tagged so concurrent processes cannot collide.
+    let tmp_name = format!(".{}.{}.tmp", name.to_string_lossy(), std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let write = || -> std::io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing {}", tmp.display()));
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into {}", tmp.display(), path.display()))
+        .inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })
+}
+
 /// FNV-1a 64-bit hash: compact deterministic fingerprints for CLI/CI
 /// comparison (e.g. the `fingerprint=` line `run` prints, which the
 /// trace record/replay CI check diffs).
@@ -31,6 +67,30 @@ pub fn fnv1a_64(bytes: &[u8]) -> u64 {
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn write_atomic_replaces_content_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("expand-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        super::write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        super::write_atomic(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_atomic_errors_name_the_path() {
+        let err = super::write_atomic("/nonexistent-dir-xyz/out.json", b"x").unwrap_err();
+        assert!(format!("{err:#}").contains("nonexistent-dir-xyz"), "{err:#}");
+    }
+
     #[test]
     fn fnv_matches_reference_vectors() {
         // Standard FNV-1a 64 test vectors.

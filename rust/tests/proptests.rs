@@ -889,6 +889,79 @@ fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
     }
 }
 
+/// PR 8 tentpole invariant: any `[fault]` schedule — random CRC and
+/// poison probabilities, a random device stall, a random hot-removal
+/// (only on pools with >= 2 endpoints; a chain cannot lose its only
+/// device) — yields bit-identical fingerprints, fault counters
+/// included, across thread counts and batch sizes. Faults key off
+/// access indices, never wall order, so this must hold exactly.
+#[test]
+fn prop_fault_schedules_thread_and_batch_invariant() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::fault::{FaultConfig, RemoveSpec, StallSpec};
+    use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
+    use expand_cxl::sim::time::us;
+    use expand_cxl::workloads::WorkloadId;
+
+    forall(4, |rng, case| {
+        for spec in ["chain", "tree:2,2,4"] {
+            let endpoints: u64 = if spec == "chain" { 1 } else { 4 };
+            let mut fault = FaultConfig {
+                link_crc: [0.0, 1e-4, 5e-3][rng.below(3) as usize],
+                poison: [0.0, 1e-4, 2e-3][rng.below(3) as usize],
+                ..FaultConfig::default()
+            };
+            if rng.below(2) == 1 {
+                fault.dev_stall = Some(StallSpec {
+                    ep: rng.below(endpoints) as usize,
+                    at: 500 + rng.below(4_000),
+                    dur_ps: us((50 + rng.below(400)) as f64),
+                });
+            }
+            if endpoints > 1 && rng.below(2) == 1 {
+                fault.hot_remove =
+                    Some(RemoveSpec { ep: rng.below(endpoints) as usize, at: 1_000 + rng.below(4_000) });
+            }
+
+            let mut base = presets::smoke();
+            base.accesses = 6_000;
+            base.seed = 0xF417 ^ case;
+            base.prefetcher = PrefetcherKind::Expand;
+            base.cxl.topology = TopologySpec::parse(spec).unwrap();
+            base.fault = fault;
+
+            let mut prints: Vec<((usize, usize), String)> = Vec::new();
+            for (threads, batch) in [(1usize, 1usize), (2, 64), (4, 256), (1, 256), (4, 1)] {
+                let mut cfg = base.clone();
+                cfg.batch = batch;
+                let cfg = std::sync::Arc::new(cfg);
+                let opts = MultiHostOpts {
+                    hosts: 2,
+                    threads,
+                    epoch_accesses: 1000,
+                    artifacts: None,
+                    record: false,
+                    obs: None,
+                };
+                let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
+                assert!(
+                    s.bi_invariant,
+                    "case {case} spec {spec} threads {threads} batch {batch}: {:?}",
+                    base.fault
+                );
+                prints.push(((threads, batch), s.fingerprint()));
+            }
+            for w in prints.windows(2) {
+                assert_eq!(
+                    w[0].1, w[1].1,
+                    "case {case} spec {spec}: {:?} vs {:?} diverge under {:?}",
+                    w[0].0, w[1].0, base.fault
+                );
+            }
+        }
+    });
+}
+
 /// Reference multi-sharer directory: per-set LRU lists of
 /// `(line, sharer mask)`, most-recent last — the obviously-correct
 /// semantics the bitmask snoop filter must match.

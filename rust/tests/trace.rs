@@ -98,6 +98,7 @@ fn multi_host_record_replay_is_thread_invariant_and_exact() {
         epoch_accesses: 2048,
         artifacts: None,
         record,
+        obs: None,
     };
     let wl = WorkloadSpec::parse("pr").unwrap();
     let (original, recordings) = run_multi_host_traced(&cfg, &opts(2, true), |h| {
@@ -135,12 +136,39 @@ fn missing_trace_shard_fails_the_engine_cleanly() {
             epoch_accesses: 1024,
             artifacts: None,
             record: false,
+            obs: None,
         },
         |h| wl.source_for_host(cfg.seed, h, 2),
     )
     .unwrap_err()
     .to_string();
     assert!(err.contains("source"), "engine names the failing stage: {err}");
+}
+
+#[test]
+fn corrupt_trace_error_names_the_file_and_offset() {
+    // Record a valid trace, chop its tail mid-record, and drive it
+    // through the `--workload trace:<path>` plumbing: the failure must
+    // name the file and the byte offset of the record that broke, not
+    // just "decode error".
+    let path = temp_trace("corrupt");
+    let cfg = Arc::new(smoke_cfg(5_000));
+    let mut runner = Runner::new(&cfg, None).unwrap();
+    runner.enable_recording();
+    let mut src = WorkloadId::Pr.source(cfg.seed);
+    let stats = runner.run(&mut *src, cfg.accesses);
+    write_trace(&path, &stats.workload, cfg.seed, &[runner.take_recording()]).unwrap();
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    let cut = bytes.len() - 3;
+    bytes.truncate(cut);
+    std::fs::write(&path, &bytes).unwrap();
+
+    let wl = WorkloadSpec::parse(&format!("trace:{path}")).unwrap();
+    let err = wl.source_for_host(cfg.seed, 0, 1).unwrap_err().to_string();
+    assert!(err.contains(&path), "error must name the file: {err}");
+    assert!(err.contains("byte offset"), "error must carry the offset: {err}");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
