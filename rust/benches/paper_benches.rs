@@ -1,12 +1,14 @@
 //! Paper benches: one end-to-end bench per table/figure family, the
-//! micro-benches used by the §Perf optimization log, and four tracked
+//! micro-benches used by the §Perf optimization log, and five tracked
 //! throughput groups — `runner_throughput` (four single-host scenarios,
 //! `BENCH_PR3.json`), `multi_host_scaling` (the epoch-quantized
 //! multi-host engine at 1 vs 4 worker threads, `BENCH_PR4.json`),
 //! `trace_replay` (trace capture/replay vs synthetic generation,
-//! `BENCH_PR5.json`) and `batched_hot_loop` (the batched SIMD-friendly
-//! hot loop + mmap zero-copy replay, `BENCH_PR6.json`). CI fails on
-//! >20% regression against any committed baseline.
+//! `BENCH_PR5.json`), `batched_hot_loop` (the batched SIMD-friendly
+//! hot loop + mmap zero-copy replay, `BENCH_PR6.json`) and
+//! `fleet_scaling` (the hierarchical fleet engine at 256 multiplexed
+//! hosts, `BENCH_PR9.json`). CI fails on >20% regression against any
+//! committed baseline.
 //!
 //! Run: `cargo bench` (optionally `cargo bench -- <filter>`). Flags
 //! after the filter:
@@ -22,6 +24,9 @@
 //!   --b6-json-out PATH   write batched_hot_loop results as JSON
 //!                        (default ../BENCH_PR6.json when seeding)
 //!   --b6-check PATH      gate batched_hot_loop against a baseline
+//!   --fl-json-out PATH   write fleet_scaling results as JSON
+//!                        (default ../BENCH_PR9.json when seeding)
+//!   --fl-check PATH      gate fleet_scaling against a baseline
 //!   --max-regress F      allowed fractional regression (default 0.20)
 //! Baseline rewrites preserve hand-recorded annotations (`note`,
 //! pre-PR reference numbers) and stamp the measuring `machine`
@@ -72,6 +77,8 @@ struct BenchArgs {
     tr_check: Option<String>,
     b6_json_out: Option<String>,
     b6_check: Option<String>,
+    fl_json_out: Option<String>,
+    fl_check: Option<String>,
     max_regress: f64,
 }
 
@@ -86,6 +93,8 @@ fn parse_args() -> BenchArgs {
         tr_check: None,
         b6_json_out: None,
         b6_check: None,
+        fl_json_out: None,
+        fl_check: None,
         max_regress: 0.20,
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -113,6 +122,10 @@ fn parse_args() -> BenchArgs {
             out.b6_json_out = take_value(&mut i);
         } else if a.starts_with("--b6-check") {
             out.b6_check = take_value(&mut i);
+        } else if a.starts_with("--fl-json-out") {
+            out.fl_json_out = take_value(&mut i);
+        } else if a.starts_with("--fl-check") {
+            out.fl_check = take_value(&mut i);
         } else if a.starts_with("--check") {
             out.check = take_value(&mut i);
         } else if a.starts_with("--max-regress") {
@@ -296,9 +309,7 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             hosts: HOSTS,
             threads,
             epoch_accesses: 4096,
-            artifacts: None,
-            record: false,
-            obs: None,
+            ..MultiHostOpts::default()
         };
         let total = (base.accesses * HOSTS) as u64;
         let t = measure_throughput(&full, total, ITERS, || {
@@ -323,6 +334,82 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
         );
     }
     (results, speedup)
+}
+
+/// The `fleet_scaling` group (tracked in `BENCH_PR9.json`): the
+/// hierarchical fleet engine at 256 multiplexed hosts on a shared
+/// 4-SSD pool. Three scenarios: the 256-host run on 1 worker thread
+/// (the sequential reference for the whole merge tree), the same run
+/// on every available core (threads auto — the headline), and the
+/// all-core run with an 8-tenant diurnal fleet mix riding along (the
+/// tenant SLO rollup's cost). The serial and all-core runs must
+/// produce bit-identical fingerprints — asserted here, on every
+/// iteration — and the annotated headline is per-core scaling
+/// efficiency `(aps_all / aps_1) / cores` (acceptance floor 0.7).
+fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
+    const ITERS: usize = 2;
+    const HOSTS: usize = 256;
+    let mut results = Vec::new();
+    let base = {
+        let mut c = cfg();
+        c.accesses = 2_000; // per host: 512k fleet accesses per iteration
+        c.prefetcher = PrefetcherKind::Expand;
+        c.cxl.topology = TopologySpec::Tree { levels: 1, fanout: 2, ssds: 4 };
+        std::sync::Arc::new(c)
+    };
+    let cores = expand_cxl::util::default_parallelism().min(HOSTS).max(1);
+
+    let mut thr = |name: &str, threads: usize, fleet: Option<&str>| -> Option<(f64, String)> {
+        let full = format!("fleet_scaling_{name}");
+        if !b.enabled(&full) {
+            return None;
+        }
+        let opts = MultiHostOpts {
+            hosts: HOSTS,
+            threads,
+            epoch_accesses: 1024,
+            fleet: fleet.map(|s| {
+                expand_cxl::workloads::fleet::FleetSpec::parse(s).unwrap()
+            }),
+            ..MultiHostOpts::default()
+        };
+        let total = (base.accesses * HOSTS) as u64;
+        let mut fp = String::new();
+        let t = measure_throughput(&full, total, ITERS, || {
+            let s = run_multi_host_workload(&base, &opts, WorkloadId::Pr).unwrap();
+            assert!(s.bi_invariant, "BI-directory invariant violated at fleet scale");
+            fp = s.fingerprint();
+        });
+        let aps = t.mean_accesses_per_sec;
+        results.push(t);
+        Some((aps, fp))
+    };
+
+    let serial = thr("hosts256_threads1", 1, None);
+    let wide = thr("hosts256_threads_all", 0, None);
+    let _mix = thr(
+        "hosts256_fleet_mix",
+        0,
+        Some("tenants=8,skew=100,shape=diurnal,period=8192,peak=4,arrival=2048"),
+    );
+
+    if let (Some((_, f1)), Some((_, fw))) = (&serial, &wide) {
+        assert_eq!(
+            f1, fw,
+            "threads-1 and all-core fleet runs must be bit-identical"
+        );
+        println!("fleet scaling: 256-host fingerprint identical at 1 and {cores} threads");
+    }
+    let efficiency = match (&serial, &wide) {
+        (Some((a, _)), Some((p, _))) if *a > 0.0 => Some((p / a) / cores as f64),
+        _ => None,
+    };
+    if let Some(e) = efficiency {
+        println!(
+            "fleet scaling: per-core efficiency = {e:.2}x on {cores} cores (target >=0.7x)"
+        );
+    }
+    (results, efficiency)
 }
 
 /// The `trace_replay` group (tracked in `BENCH_PR5.json`): trace
@@ -745,7 +832,33 @@ fn main() {
             }
         },
     );
-    if !ok_rt || !ok_mh || !ok_tr || !ok_b6 {
+    // --- End-to-end: fleet_scaling group (tracked baseline) -------------
+    let (fl, efficiency) = fleet_scaling(&b);
+    let ok_fl = publish_group(
+        "fleet_scaling",
+        &fl,
+        opts.fl_json_out.as_ref(),
+        opts.fl_check.as_ref(),
+        "../BENCH_PR9.json",
+        opts.max_regress,
+        |doc| {
+            // The fleet headline: per-core scaling efficiency of the
+            // 256-host hierarchical merge (acceptance floor 0.7).
+            if let Json::Obj(m) = doc {
+                if let Some(e) = efficiency {
+                    m.insert(
+                        "per_core_efficiency_hosts256".to_string(),
+                        Json::Num((e * 100.0).round() / 100.0),
+                    );
+                }
+                m.insert(
+                    "measured_cores".to_string(),
+                    Json::Num(expand_cxl::util::default_parallelism() as f64),
+                );
+            }
+        },
+    );
+    if !ok_rt || !ok_mh || !ok_tr || !ok_b6 || !ok_fl {
         std::process::exit(1);
     }
 
@@ -786,6 +899,6 @@ fn main() {
     println!(
         "\n{} benches + {} throughput scenarios completed",
         b.results.len(),
-        throughput.len() + mh.len() + tr.len() + b6.len()
+        throughput.len() + mh.len() + tr.len() + b6.len() + fl.len()
     );
 }

@@ -17,6 +17,20 @@
 //! line's full mask so the caller can BISnp *every* sharer. The
 //! single-host API ([`BiDirectory::grant`]/[`BiDirectory::revoke`]) is
 //! the host-0 specialization and behaves exactly as before.
+//!
+//! Fleet scale (> 64 hosts): the 64-bit mask does not grow. The fleet
+//! engine folds hosts onto *group indices* — `ceil(hosts / 64)` hosts
+//! per bit, see `sim::parallel::SharerFold` — and passes the group
+//! index wherever this module takes a `host`. That keeps the directory
+//! an over-approximation (a set group bit means *some* host in the
+//! group may cache the line), which is exactly the safe direction for
+//! a snoop filter; the engine compensates by snooping every member of
+//! a flagged group and by never trusting a clear-on-revoke at folded
+//! granularity (another group member may still hold the line, so
+//! clean-evict revokes are suppressed when folding is active). The
+//! `debug_assert!(host < 64)` below is therefore a real invariant at
+//! every scale: callers hand the directory bit positions, never raw
+//! host ids beyond 64.
 
 /// Directory statistics (per endpoint).
 #[derive(Debug, Clone, Copy, Default)]

@@ -516,6 +516,15 @@ pub struct SimConfig {
     pub epoch_accesses: usize,
     /// Multi-host worker threads (0 = all available cores).
     pub threads: usize,
+    /// Hosts per merge group in the fleet engine's hierarchical epoch
+    /// merge tree (0 = auto: hosts split evenly over the workers).
+    /// Purely a scheduling knob — results are bit-identical for every
+    /// value (pinned by proptests).
+    pub merge_group: usize,
+    /// Fleet workload layer (`[fleet]` section / `--fleet`): tenant
+    /// mix, arrival stagger and traffic shaping for multi-host runs.
+    /// `None` leaves per-host streams unshaped.
+    pub fleet: Option<crate::workloads::fleet::FleetSpec>,
     /// Hot-loop batch size: accesses pulled, routed and replayed per
     /// batch in `run_segment`. Purely a throughput knob — results are
     /// bit-identical for every value (pinned by proptests); 1 recovers
@@ -546,6 +555,8 @@ impl Default for SimConfig {
             hosts: 1,
             epoch_accesses: 8192,
             threads: 0,
+            merge_group: 0,
+            fleet: None,
             batch: 256,
             workload: None,
         }
@@ -605,7 +616,12 @@ impl SimConfig {
             ("sim", "hosts") => self.hosts = num!(),
             ("sim", "epoch_accesses") => self.epoch_accesses = num!(),
             ("sim", "threads") => self.threads = num!(),
+            ("sim", "merge_group") => self.merge_group = num!(),
             ("sim", "batch") => self.batch = num!(),
+            ("fleet", _) => self
+                .fleet
+                .get_or_insert_with(crate::workloads::fleet::FleetSpec::default)
+                .apply(key, v)?,
             ("sim", "artifacts_dir") => self.artifacts_dir = v.to_string(),
             ("sim", "workload") => {
                 // Validate eagerly (bad names fail at config time, with
@@ -629,7 +645,7 @@ impl SimConfig {
 
     /// Render the effective config (`expand config show`).
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "[cpu] cores={} freq_ghz={} rob={} ipc={} mshrs={}\n\
              [l1d] {}KB/{}w {}cyc\n[l2] {}KB/{}w {}cyc\n[llc] {}MB/{}w {}cyc\n\
              [dram] tRP/tRCD/tCAS={}ns/{}ns/{}ns ch={}\n\
@@ -641,7 +657,7 @@ impl SimConfig {
              [coherence] dir_entries={} dir_ways={} device_update_every={} audit={}\n\
              [fault] {}\n\
              [sim] prefetcher={} backing={:?} accesses={} seed={:#x} hosts={} \
-             epoch_accesses={} threads={} batch={} workload={}",
+             epoch_accesses={} threads={} merge_group={} batch={} workload={}",
             self.cpu.cores, self.cpu.freq_ghz, self.cpu.rob_entries, self.cpu.base_ipc,
             self.cpu.mshrs,
             self.hierarchy.l1d.size_bytes >> 10, self.hierarchy.l1d.ways,
@@ -663,9 +679,14 @@ impl SimConfig {
             self.coherence.device_update_every, self.coherence.audit,
             self.fault.render(),
             self.prefetcher.name(), self.backing, self.accesses, self.seed,
-            self.hosts, self.epoch_accesses, self.threads, self.batch,
+            self.hosts, self.epoch_accesses, self.threads, self.merge_group, self.batch,
             self.workload.as_deref().unwrap_or("-"),
-        )
+        );
+        if let Some(fleet) = &self.fleet {
+            out.push('\n');
+            out.push_str(fleet.render().trim_end());
+        }
+        out
     }
 }
 
@@ -770,6 +791,25 @@ mod tests {
         assert!(c.render().contains("hosts=4"));
         assert!(c.render().contains("epoch_accesses=2048"));
         assert!(c.apply("sim", "hosts", "abc").is_err());
+    }
+
+    #[test]
+    fn fleet_keys_apply_and_render() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.merge_group, 0, "auto merge-group sizing by default");
+        assert!(c.fleet.is_none(), "no fleet layer by default");
+        c.apply("sim", "merge_group", "8").unwrap();
+        assert_eq!(c.merge_group, 8);
+        assert!(c.render().contains("merge_group=8"));
+        c.apply("fleet", "tenants", "6").unwrap();
+        c.apply("fleet", "shape", "diurnal").unwrap();
+        let fleet = c.fleet.as_ref().expect("fleet section materializes on first key");
+        assert_eq!(fleet.tenants, 6);
+        assert_eq!(fleet.shape, crate::workloads::fleet::TrafficShape::Diurnal);
+        assert!(c.render().contains("[fleet]"));
+        assert!(c.render().contains("shape = diurnal"));
+        assert!(c.apply("fleet", "bogus", "1").is_err());
+        assert!(c.apply("sim", "merge_group", "x").is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use super::topology::{NodeId, NodeKind, Topology};
 use super::transaction::{m2s_bytes, s2m_bytes, M2S, S2M, TrafficStats};
 use crate::config::CxlConfig;
 use crate::sim::time::{ns, Ps};
+use std::sync::Arc;
 
 /// Direction of a traversal (affects which port queue is used).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,9 +38,13 @@ enum Lane {
     Prefetch,
 }
 
-/// The fabric: topology + per-link availability + traffic accounting.
+/// Read-only traversal plan: topology plus the dense per-node path/latency
+/// tables. Every host fabric in a multi-host run shares one plan behind an
+/// `Arc` — at fleet scale (256+ host contexts) rebuilding or duplicating the
+/// path tables per host would dominate both construction time and memory,
+/// while the tables themselves never change after enumeration.
 #[derive(Debug, Clone)]
-pub struct Fabric {
+pub struct FabricPlan {
     pub topo: Topology,
     cfg: CxlConfig,
     /// RC-to-node path (inclusive both ends), indexed by node id —
@@ -51,6 +56,24 @@ pub struct Fabric {
     switches: Vec<u64>,
     /// Whether a node is a switch (store-and-forward on crossing into it).
     is_switch: Vec<bool>,
+}
+
+impl FabricPlan {
+    pub fn new(topo: Topology, cfg: &CxlConfig) -> Self {
+        let n = topo.nodes.len();
+        let paths: Vec<Vec<NodeId>> = (0..n).map(|i| topo.path_from_root(i)).collect();
+        let hops = paths.iter().map(|p| (p.len() - 1) as u64).collect();
+        let switches = (0..n).map(|i| topo.switch_depth(i) as u64).collect();
+        let is_switch = topo.nodes.iter().map(|nd| nd.kind == NodeKind::Switch).collect();
+        FabricPlan { topo, cfg: cfg.clone(), paths, hops, switches, is_switch }
+    }
+}
+
+/// The fabric: a shared read-only plan + this host's mutable link
+/// availability and traffic accounting.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    plan: Arc<FabricPlan>,
     /// Per (child-node, direction) demand-lane next-free time, dense by
     /// child node id. The link between a node and its parent is keyed by
     /// the child id.
@@ -61,25 +84,27 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn new(topo: Topology, cfg: &CxlConfig) -> Self {
-        let n = topo.nodes.len();
-        let paths: Vec<Vec<NodeId>> = (0..n).map(|i| topo.path_from_root(i)).collect();
-        let hops = paths.iter().map(|p| (p.len() - 1) as u64).collect();
-        let switches = (0..n).map(|i| topo.switch_depth(i) as u64).collect();
-        let is_switch = topo.nodes.iter().map(|nd| nd.kind == NodeKind::Switch).collect();
-        Fabric {
-            topo,
-            cfg: cfg.clone(),
-            paths,
-            hops,
-            switches,
-            is_switch,
-            link_free: vec![[0; 2]; n],
-            traffic: vec![TrafficStats::default(); n],
-        }
+        Self::from_plan(Arc::new(FabricPlan::new(topo, cfg)))
+    }
+
+    /// A fresh fabric (idle links, zero traffic) over an existing shared
+    /// plan — the per-host constructor the fleet engine uses.
+    pub fn from_plan(plan: Arc<FabricPlan>) -> Self {
+        let n = plan.topo.nodes.len();
+        Fabric { plan, link_free: vec![[0; 2]; n], traffic: vec![TrafficStats::default(); n] }
+    }
+
+    /// The shared plan (cheap `Arc` clone).
+    pub fn plan(&self) -> Arc<FabricPlan> {
+        self.plan.clone()
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.plan.topo
     }
 
     pub fn cfg(&self) -> &CxlConfig {
-        &self.cfg
+        &self.plan.cfg
     }
 
     /// Pure propagation latency (no queuing) of `bytes` from RC to
@@ -90,10 +115,11 @@ impl Fabric {
     /// multiply-add.
     #[inline]
     pub fn path_latency(&self, dev: NodeId, bytes: usize) -> Ps {
-        let ser = serialize_ps(&self.cfg, bytes);
-        ns(self.cfg.rc_latency_ns)
-            + self.hops[dev] * (ns(self.cfg.link_latency_ns) + ser)
-            + self.switches[dev] * ns(self.cfg.switch_latency_ns)
+        let plan = &*self.plan;
+        let ser = serialize_ps(&plan.cfg, bytes);
+        ns(plan.cfg.rc_latency_ns)
+            + plan.hops[dev] * (ns(plan.cfg.link_latency_ns) + ser)
+            + plan.switches[dev] * ns(plan.cfg.switch_latency_ns)
     }
 
     /// Queued traversal at absolute time `now`: walks the path charging
@@ -103,15 +129,18 @@ impl Fabric {
     }
 
     fn traverse_lane(&mut self, dev: NodeId, now: Ps, bytes: usize, dir: Dir, lane: Lane) -> Ps {
-        let ser = serialize_ps(&self.cfg, bytes);
-        let link_lat = ns(self.cfg.link_latency_ns);
-        let switch_lat = ns(self.cfg.switch_latency_ns);
-        let mut t = now + ns(self.cfg.rc_latency_ns);
+        // Disjoint field borrow: `plan` pins only `self.plan`, leaving
+        // `self.link_free` free for mutation below.
+        let plan = &*self.plan;
+        let ser = serialize_ps(&plan.cfg, bytes);
+        let link_lat = ns(plan.cfg.link_latency_ns);
+        let switch_lat = ns(plan.cfg.switch_latency_ns);
+        let mut t = now + ns(plan.cfg.rc_latency_ns);
         // Walk link by link: link i connects path[i] and path[i+1], keyed
         // by the child (path[i+1]); Up iterates the same links deepest
         // child first. The path slice is borrowed from the precomputed
         // table — no per-traversal allocation.
-        let path = &self.paths[dev];
+        let path = &plan.paths[dev];
         let links = path.len() - 1;
         let d = dir as usize;
         for k in 0..links {
@@ -138,7 +167,7 @@ impl Fabric {
             };
             let done = start + link_lat + ser;
             // Switch store-and-forward after crossing into a switch.
-            t = if self.is_switch[child] { done + switch_lat } else { done };
+            t = if plan.is_switch[child] { done + switch_lat } else { done };
         }
         t
     }
@@ -220,7 +249,8 @@ impl Fabric {
     /// the deepest link plus the flit's reserialization — latency only,
     /// never a failure (CXL physical-layer CRC + retry semantics).
     pub fn crc_replay_ps(&self, _dev: NodeId) -> Ps {
-        2 * ns(self.cfg.link_latency_ns) + serialize_ps(&self.cfg, self.cfg.flit_bytes)
+        let cfg = &self.plan.cfg;
+        2 * ns(cfg.link_latency_ns) + serialize_ps(cfg, cfg.flit_bytes)
     }
 
     /// Per-endpoint traffic counters (zero record for non-endpoints and
@@ -282,10 +312,14 @@ mod tests {
         let topo = Topology::parse_custom("(x, s(z, p), s(s(d)))").unwrap();
         let f = Fabric::new(topo.clone(), &CxlConfig::default());
         for node in 0..topo.nodes.len() {
-            assert_eq!(f.paths[node], topo.path_from_root(node), "node {node}");
-            assert_eq!(f.hops[node] as usize, topo.path_from_root(node).len() - 1);
-            assert_eq!(f.switches[node] as usize, topo.switch_depth(node));
+            assert_eq!(f.plan.paths[node], topo.path_from_root(node), "node {node}");
+            assert_eq!(f.plan.hops[node] as usize, topo.path_from_root(node).len() - 1);
+            assert_eq!(f.plan.switches[node] as usize, topo.switch_depth(node));
         }
+        // Host fabrics built from a shared plan start idle and share tables.
+        let g = Fabric::from_plan(f.plan());
+        assert_eq!(g.plan.paths, f.plan.paths);
+        assert_eq!(g.requests_for(0), 0);
     }
 
     #[test]

@@ -9,5 +9,5 @@ pub mod flit;
 pub mod topology;
 pub mod transaction;
 
-pub use fabric::Fabric;
+pub use fabric::{Fabric, FabricPlan};
 pub use topology::{NodeId, NodeKind, Topology};

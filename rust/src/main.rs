@@ -27,6 +27,7 @@ use expand_cxl::ssd::DevicePool;
 use expand_cxl::trace::{import_file, write_trace, ImportFormat, SharedTrace, TraceReader};
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
 use expand_cxl::util::{default_parallelism, log, write_atomic};
+use expand_cxl::workloads::fleet::FleetSpec;
 use expand_cxl::workloads::{TraceSource, WorkloadSpec};
 use std::sync::Arc;
 
@@ -42,16 +43,21 @@ const COMMANDS: &[CommandHelp] = &[
                 [--config FILE] [--set sec.key=v] [--write-boost F] [--audit] \
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
                 [--hosts N] [--threads N] [--epoch N] [--batch N] \
+                [--merge-group N] [--fleet k=v,...] \
                 [--metrics-out PATH] [--trace-events PATH] [--series-out PATH] \
                 [--fault SPEC] \
-                (hosts>1 runs the deterministic epoch-quantized multi-host \
-                engine; --record captures every host's access stream into a \
-                replayable trace; trace:<path> replays one; --metrics-out \
-                dumps latency histograms as JSON, --trace-events a \
-                Perfetto-loadable Chrome trace, --series-out a per-epoch CSV; \
-                --fault injects a deterministic fault schedule, e.g. \
-                'link_crc=1e-6,dev_stall=ep2@5Macc:200us,hot_remove=ep3@8Macc,\
-                poison=1e-7')",
+                (hosts>1 runs the deterministic epoch-quantized fleet engine \
+                — up to 4096 hosts, hierarchical epoch merging, bit-identical \
+                for any --threads/--merge-group value; --fleet drives a \
+                tenant mix with per-tenant SLO reporting, e.g. \
+                'tenants=8,skew=100,shape=diurnal,period=8192,peak=8,\
+                arrival=4096'; --record captures every host's access stream \
+                into a replayable trace; trace:<path> replays one; \
+                --metrics-out dumps latency histograms as JSON, \
+                --trace-events a Perfetto-loadable Chrome trace, --series-out \
+                a per-epoch CSV; --fault injects a deterministic fault \
+                schedule, e.g. 'link_crc=1e-6,dev_stall=ep2@5Macc:200us,\
+                hot_remove=ep3@8Macc,poison=1e-7')",
     },
     CommandHelp {
         name: "obs",
@@ -129,7 +135,15 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.hosts = args.get_usize("hosts", cfg.hosts)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.epoch_accesses = args.get_usize("epoch", cfg.epoch_accesses)?;
+    cfg.merge_group = args.get_usize("merge-group", cfg.merge_group)?;
     cfg.batch = args.get_usize("batch", cfg.batch)?;
+    anyhow::ensure!(
+        args.get("fleet").is_some() || !args.flag("fleet"),
+        "--fleet needs a spec (e.g. --fleet tenants=8,shape=diurnal,arrival=4096)"
+    );
+    if let Some(spec) = args.get("fleet") {
+        cfg.fleet = Some(FleetSpec::parse(spec)?);
+    }
     cfg.expand.hit_notify_stride =
         args.get_usize("hit-notify-stride", cfg.expand.hit_notify_stride)?;
     cfg.coherence.dir_entries = args.get_usize("dir-entries", cfg.coherence.dir_entries)?;
@@ -268,6 +282,9 @@ fn run_spec(
         }
         if let Some(o) = &stats.aggregate.obs {
             print!("{}", o.render());
+        }
+        if let Some(fleet) = &stats.fleet {
+            print!("{}", fleet.render());
         }
         println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
         anyhow::ensure!(stats.bi_invariant, "shared BI-directory invariant violated");

@@ -464,6 +464,60 @@ impl RunStats {
     }
 }
 
+/// Per-tenant service-level objective metrics for a fleet run: demand
+/// access latency quantiles over the tenant's host block, computed from
+/// the engine's merged obs histograms (exact mergeable buckets, so the
+/// numbers are bit-identical for any thread count or merge-group size).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantSlo {
+    /// Tenant rank (0 = largest under the Zipf size skew).
+    pub tenant: usize,
+    /// Hosts in this tenant's contiguous block.
+    pub hosts: usize,
+    /// Demand accesses the tenant replayed.
+    pub accesses: u64,
+    /// Demand (hit + miss) latency percentiles, picoseconds.
+    pub p50_ps: u64,
+    pub p99_ps: u64,
+    pub p999_ps: u64,
+    /// Exact maximum demand latency observed, picoseconds.
+    pub max_ps: u64,
+}
+
+/// Fleet-level rollup attached to [`MultiHostStats`] when the fleet
+/// workload layer is active (`--fleet` / `[fleet]`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Traffic shape name (steady/diurnal/bursty).
+    pub shape: String,
+    /// One row per tenant, tenant-rank order.
+    pub tenants: Vec<TenantSlo>,
+}
+
+impl FleetStats {
+    /// Aligned per-tenant SLO table for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet tenants ({} shape): {:<8}{:>8}{:>14}{:>14}{:>14}{:>14}{:>14}\n",
+            self.shape, "tenant", "hosts", "accesses", "p50(ns)", "p99(ns)", "p999(ns)", "max(ns)"
+        );
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "{:<30}{:<8}{:>8}{:>14}{:>14.1}{:>14.1}{:>14.1}{:>14.1}\n",
+                "",
+                t.tenant,
+                t.hosts,
+                t.accesses,
+                t.p50_ps as f64 / 1e3,
+                t.p99_ps as f64 / 1e3,
+                t.p999_ps as f64 / 1e3,
+                t.max_ps as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
 /// Everything a multi-host engine run reports: one [`RunStats`] per
 /// host shard plus the pool-wide aggregate and engine-level counters
 /// (see `crate::sim::parallel`).
@@ -501,6 +555,10 @@ pub struct MultiHostStats {
     /// hand-written fingerprint above; its deterministic digest lives in
     /// `aggregate.obs` instead.
     pub obs: Option<Box<crate::obs::ObsRecorder>>,
+    /// Per-tenant SLO rollup — present when the fleet workload layer
+    /// drove the run. Deterministic (mergeable histograms + fixed tenant
+    /// blocks), so it participates in the fingerprint.
+    pub fleet: Option<FleetStats>,
 }
 
 impl MultiHostStats {
@@ -542,6 +600,9 @@ impl MultiHostStats {
             self.bi_invariant
         );
         let _ = writeln!(out, "pool_traffic: {:?}", self.pool_traffic);
+        if let Some(fleet) = &self.fleet {
+            let _ = writeln!(out, "fleet: {fleet:?}");
+        }
         out
     }
 

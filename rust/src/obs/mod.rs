@@ -236,6 +236,35 @@ impl ObsRecorder {
         self.events.absorb(&other.events, host);
     }
 
+    /// Tag-preserving absorb for the engine's hierarchical final merge:
+    /// `other` is a merge-group partial whose series points and events
+    /// were already host-tagged by [`Self::absorb`]. Histograms merge
+    /// element-wise (commutative), tagged rows concatenate — so folding
+    /// group partials in group order equals the flat host-order fold.
+    pub fn absorb_merged(&mut self, other: &ObsRecorder) {
+        for (a, b) in self.class_hist.iter_mut().zip(&other.class_hist) {
+            a.merge(b);
+        }
+        for (a, b) in self.ep_hist.iter_mut().zip(&other.ep_hist) {
+            a.merge(b);
+        }
+        for (a, b) in self.ep_timeliness.iter_mut().zip(&other.ep_timeliness) {
+            a.err.merge(&b.err);
+            a.early += b.early;
+            a.late += b.late;
+        }
+        for (a, b) in self.ep_faults.iter_mut().zip(&other.ep_faults) {
+            a.link_retries += b.link_retries;
+            a.timeouts += b.timeouts;
+            a.poison_drops += b.poison_drops;
+            a.dropped_fills += b.dropped_fills;
+            a.failed_over += b.failed_over;
+            a.redirected += b.redirected;
+        }
+        self.series.points.extend(other.series.points.iter().cloned());
+        self.events.absorb_merged(&other.events);
+    }
+
     pub fn class_histogram(&self, class: AccessClass) -> &Histogram {
         &self.class_hist[class as usize]
     }

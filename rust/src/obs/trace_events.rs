@@ -131,6 +131,19 @@ impl EventRing {
             self.buf.push(ObsEvent { host, ..*ev });
         }
     }
+
+    /// Tag-preserving absorb for hierarchical merges: `other` is itself
+    /// a merge of already-host-tagged rings (a merge-group partial), so
+    /// events keep their tags. Because group partials absorb without
+    /// capacity eviction, group-then-root concatenation carries exactly
+    /// the events a flat host-order fold would — the export sort makes
+    /// the two byte-identical.
+    pub fn absorb_merged(&mut self, other: &EventRing) {
+        self.dropped += other.dropped;
+        for ev in other.chronological() {
+            self.buf.push(*ev);
+        }
+    }
 }
 
 /// Export as Chrome `trace_event` JSON Object Format: a `traceEvents`

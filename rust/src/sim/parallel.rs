@@ -1,21 +1,26 @@
-//! Deterministic multi-host parallel engine: epoch-quantized shards
-//! over a shared CXL pool.
+//! Deterministic fleet-scale multi-host engine: epoch-quantized host
+//! contexts over a shared CXL pool, merged through a hierarchical
+//! (group partial -> root) merge tree.
 //!
 //! The paper's latency model assumes CXL-SSD pools are *shared*
 //! infrastructure behind multi-tiered switching; at-scale measurements
 //! (arXiv:2409.14317) show the interesting regimes appear precisely
-//! under multi-client contention. This engine simulates N host shards —
-//! each a full [`Runner`]: its own LLC hierarchy, access stream, core
-//! clock and per-endpoint ExPAND decider state — running concurrently
-//! against one logical device pool.
+//! under multi-client contention — datacenter tenant mixes of hundreds
+//! of initiators, not 4 identical hosts. This engine simulates N host
+//! contexts — each a [`Runner`] with its own stream cursor, LLC
+//! hierarchy, core clock and decider state, all stamped from one shared
+//! [`HostPlan`] (topology, enumeration, fabric path tables behind an
+//! `Arc`) — multiplexed over a fixed worker pool, so 256+ hosts fit in
+//! memory without 256 topology discoveries.
 //!
 //! ## Epoch quantization
 //!
 //! Time is cut into epochs of `[sim] epoch_accesses` demand accesses
-//! per host. *Within* an epoch a shard touches only shard-local state
-//! plus the read-only `Arc<SimConfig>`/topology, so shards execute on
-//! scoped threads with zero synchronization. Every cross-host effect is
-//! buffered into the shard's [`EffectLog`]:
+//! per host. *Within* an epoch a host context touches only its own
+//! state plus the read-only plan, so contexts execute with zero
+//! synchronization. Every cross-host effect is buffered into the
+//! context's [`EffectLog`] (double-buffered against an engine-side slot,
+//! so steady-state epochs allocate nothing):
 //!
 //! * **grants/revokes** — which lines the host installed or gave up,
 //!   in program order (feeds the shared multi-sharer BI directory);
@@ -24,68 +29,123 @@
 //! * **per-endpoint traffic and device occupancy** — epoch-batched
 //!   fabric accounting and the input to the contention model.
 //!
-//! At the epoch barrier one thread replays all logs **in host-index
-//! order** into the shared state: the multi-sharer directory (per-line
-//! host bitmask, [`BiDirectory::grant_for`]) collects sharers and emits
-//! cross-host BISnp lists; aggregate device occupancy produces a
-//! per-host, per-endpoint queuing penalty (an M/D/1-style `ρ/(1-ρ)`
-//! term from *other* hosts' load) charged on every device access of the
-//! next epoch. Shards then consume their snoop inbox and continue.
+//! ## Hierarchical epoch merging
 //!
-//! ## Determinism
+//! The merge is a three-phase barrier pipeline instead of one leader
+//! thread replaying every log under a global mutex:
 //!
-//! Thread assignment only decides *where* a shard executes, never what
-//! it observes: logs are merged in host-index order, inboxes are
-//! consumed at epoch starts, and the contention arithmetic is a pure
-//! function of the merged logs. `--threads 1` and `--threads N`
-//! therefore produce bit-identical per-host and aggregate [`RunStats`]
-//! (coherence counters included) — asserted by the determinism
-//! proptests and cheap enough to re-check anywhere.
+//! 1. **Run** — every worker runs its hosts' epoch segments.
+//! 2. **Partial merge (parallel)** — merge *groups* of hosts
+//!    (`[sim] merge_group`) pre-reduce the commutative log fields
+//!    (device busy/request sums, span, traffic deltas) into per-group
+//!    partials, while *endpoint owners* replay the coherence ops of all
+//!    hosts **in host-index order** against their endpoint's directory
+//!    shard — directories are per-endpoint, so endpoint replays commute
+//!    and run concurrently. Minted BISnps land in per-endpoint,
+//!    per-host outboxes consumed in endpoint order next epoch.
+//! 3. **Root merge** — the barrier leader folds the group partials in
+//!    group order (= host order), computes the M/D/1 contention row per
+//!    host, and arms the router for the next epoch.
 //!
-//! The batched hot loop (`[sim] batch`) composes cleanly with epoch
-//! quantization: each `run_segment(epoch)` call chops its own accesses
-//! into batches internally, the batching is entirely shard-local (pull
-//! counts and pull order match the scalar loop exactly), and the only
-//! state a segment boundary carries is the shard's own lookahead
-//! window — exactly what the scalar loop carried — so thread-count
-//! invariance and batch-size invariance are independent, and both are
-//! pinned by the differential proptests.
+//! Work is assigned by *index* (merge group `g` and endpoint `e` belong
+//! to worker `g % threads` / `e % threads`), never by thread identity,
+//! so `--threads 1` vs `N`, any host→worker assignment, and any merge
+//! group size produce bit-identical results — pinned by the
+//! determinism proptests.
+//!
+//! ## Beyond 64 hosts: coarse sharer groups
+//!
+//! The shared directory tracks sharers in a 64-bit mask. A fleet of up
+//! to 64 hosts gets one bit per host (exact). Beyond that, hosts fold
+//! into `ceil(hosts/64)`-sized *sharer groups* — the classic coarse
+//! snoop-filter vector: a group bit means "someone in this block may
+//! cache the line". Coarseness only ever *over*-approximates: clean
+//! evictions cannot clear a group bit (a group-mate may still cache the
+//! line), and a write conservatively snoops the writer's group-mates.
+//! The end-of-run coverage invariant (every LLC-resident line carries
+//! its host's group bit) holds in both modes.
+//!
+//! ## Fleet workload layer
+//!
+//! With `[fleet]`/`--fleet`, per-host streams are wrapped by the tenant
+//! model in `crate::workloads::fleet` (Zipf tenant sizes, staggered
+//! arrivals, diurnal/bursty shapes) and the summary gains per-tenant
+//! SLO percentiles (p50/p99/p999 demand latency) from the obs
+//! histograms, merged per tenant block in host order.
 
 use crate::coherence::BiDirectory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};
 use crate::cxl::transaction::TrafficStats;
-use crate::metrics::{MultiHostStats, RunStats};
-use crate::obs::{ObsOptions, ObsRecorder};
+use crate::metrics::{FleetStats, MultiHostStats, RunStats, TenantSlo};
+use crate::obs::{AccessClass, Histogram, ObsOptions, ObsRecorder};
 use crate::runtime::Runtime;
-use crate::sim::runner::{EffectLog, HostEffect, RunCursor, Runner};
+use crate::sim::runner::{EffectLog, HostEffect, HostPlan, RunCursor, Runner};
 use crate::sim::time::Ps;
-use crate::ssd::{pool_interleaver, Interleaver};
+use crate::ssd::pool_interleaver;
+use crate::workloads::fleet::FleetSpec;
 use crate::workloads::{Access, TraceSource};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Barrier, Mutex, RwLock};
+
+/// Hard ceiling on simulated hosts (64 sharer groups x 64-host blocks).
+pub const MAX_HOSTS: usize = 4096;
+
+/// The pooled device's snoop-filter SRAM does not grow with the number
+/// of attached initiators: the shared directory gets one
+/// `dir_entries`-sized tracking segment per host up to this cap.
+const DIR_SEGMENT_CAP: usize = 8;
 
 /// Multi-host engine options (normally sourced from `[sim]` config via
 /// [`MultiHostOpts::from_config`], overridable from the CLI).
 #[derive(Debug, Clone)]
 pub struct MultiHostOpts {
-    /// Host shards sharing the pool (1..=64).
+    /// Host contexts sharing the pool (1..=[`MAX_HOSTS`]).
     pub hosts: usize,
     /// Worker threads (0 = all available cores; capped at `hosts`).
     pub threads: usize,
     /// Demand accesses per host per epoch.
     pub epoch_accesses: usize,
-    /// Artifacts directory for compiled predictors; each shard builds
-    /// its own `Runtime` so predictor state never couples shards.
+    /// Artifacts directory for compiled predictors; each host builds
+    /// its own `Runtime` so predictor state never couples hosts.
     pub artifacts: Option<String>,
-    /// Capture every shard's access stream (`--record`): the traced
+    /// Capture every host's access stream (`--record`): the traced
     /// engine entry point returns one recording per host, ready for
     /// `crate::trace::write_trace` as a host-tagged trace.
     pub record: bool,
     /// Observability options (`--metrics-out`/`--trace-events`): each
-    /// shard records into its own [`ObsRecorder`], merged in host-index
-    /// order at the end so the result is thread-count invariant. The
-    /// series stride is forced to 0 — multi-host series points are
-    /// snapshotted at epoch barriers, not access strides.
+    /// host records into its own [`ObsRecorder`], pre-reduced per merge
+    /// group and folded in group order at the end so the result is
+    /// thread-count invariant. The series stride is forced to 0 —
+    /// multi-host series points are snapshotted at epoch barriers, not
+    /// access strides.
     pub obs: Option<ObsOptions>,
+    /// Hosts per merge group in the hierarchical merge tree (0 = auto:
+    /// `ceil(hosts/threads)`). Any value produces identical results —
+    /// pinned by the merge-tree proptest.
+    pub merge_group: usize,
+    /// Host→worker assignment override (tests): `assignment[h] %
+    /// threads` owns host `h`. `None` = round-robin `h % threads`.
+    /// Assignment decides *where* a host executes, never what it
+    /// observes.
+    pub assignment: Option<Vec<usize>>,
+    /// Fleet workload layer: tenant mix + traffic shaping + per-tenant
+    /// SLO reporting.
+    pub fleet: Option<FleetSpec>,
+}
+
+impl Default for MultiHostOpts {
+    fn default() -> Self {
+        MultiHostOpts {
+            hosts: 1,
+            threads: 0,
+            epoch_accesses: 8192,
+            artifacts: None,
+            record: false,
+            obs: None,
+            merge_group: 0,
+            assignment: None,
+            fleet: None,
+        }
+    }
 }
 
 impl MultiHostOpts {
@@ -97,6 +157,9 @@ impl MultiHostOpts {
             artifacts: Some(cfg.artifacts_dir.clone()),
             record: false,
             obs: None,
+            merge_group: cfg.merge_group,
+            assignment: None,
+            fleet: cfg.fleet.clone(),
         }
     }
 }
@@ -108,165 +171,141 @@ pub fn host_seed(base: u64, host: usize) -> u64 {
     base ^ (host as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
-/// Shared pool state, mutated only at epoch barriers by the merge
-/// leader (host-index order — the determinism anchor).
-struct Shared {
-    /// One multi-sharer BI directory per endpoint: per-line host
-    /// bitmask, capacity `dir_entries * hosts` (each host brings its own
-    /// tracking segment, as a pooled device directory would).
-    dirs: Vec<BiDirectory>,
-    /// Pool-wide per-endpoint traffic (epoch-batched merge of every
-    /// shard's fabric deltas).
+/// Folding of host indices into <= 64 sharer-mask bits. `block == 1`
+/// (up to 64 hosts) is the exact per-host mapping; beyond that, each
+/// bit covers a contiguous block of `ceil(hosts/64)` hosts.
+#[derive(Debug, Clone, Copy)]
+struct SharerFold {
+    block: usize,
+}
+
+impl SharerFold {
+    fn new(hosts: usize) -> Self {
+        SharerFold { block: hosts.div_ceil(64).max(1) }
+    }
+
+    /// Exact mode: one bit per host.
+    fn exact(self) -> bool {
+        self.block == 1
+    }
+
+    /// Sharer-mask bit for `host`.
+    fn bit(self, host: usize) -> usize {
+        host / self.block
+    }
+
+    /// Hosts covered by mask bit `b`.
+    fn members(self, b: usize, hosts: usize) -> std::ops::Range<usize> {
+        (b * self.block).min(hosts)..((b + 1) * self.block).min(hosts)
+    }
+}
+
+/// Per-endpoint shared state: the directory shard, per-host BISnp
+/// outboxes, and the cross-snoop mint counter. Each endpoint is owned
+/// by exactly one worker during the merge phase (`ep % threads`), so
+/// the mutex is uncontended there; host contexts take it briefly at
+/// epoch starts to drain their outbox.
+struct EpShared {
+    dir: BiDirectory,
+    /// Outbox per host: lines to BISnp at the next epoch start, in mint
+    /// order. Buffers are drained with `Vec::append`, retaining
+    /// capacity across epochs.
+    out: Vec<Vec<u64>>,
+    /// BISnp deliveries minted at this endpoint (cumulative).
+    minted: u64,
+}
+
+/// One merge group's pre-reduced log fields (the commutative part of
+/// the epoch merge). Reset and refilled in place every epoch by the
+/// group's owner worker.
+struct GroupPartial {
+    span: Ps,
+    busy: Vec<u128>,
+    reqs: Vec<u64>,
     traffic: Vec<TrafficStats>,
-    /// Address-to-endpoint routing (identical to every shard pool's).
-    router: Interleaver,
-    /// Scheduled hot-removal, translated to the epoch that contains the
-    /// trigger access: `(epoch index, endpoint)`. The shared router
-    /// flips into degraded mode at the head of that epoch's merge, so
-    /// it re-routes exactly when every shard's own pool does (each
-    /// shard flushes its dead-homed LLC lines at its own flip, which
-    /// keeps the shared-directory coverage invariant exact).
+}
+
+impl GroupPartial {
+    fn new(endpoints: usize) -> Self {
+        GroupPartial {
+            span: 0,
+            busy: vec![0; endpoints],
+            reqs: vec![0; endpoints],
+            traffic: vec![TrafficStats::default(); endpoints],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.span = 0;
+        self.busy.iter_mut().for_each(|x| *x = 0);
+        self.reqs.iter_mut().for_each(|x| *x = 0);
+        self.traffic.iter_mut().for_each(|t| *t = TrafficStats::default());
+    }
+}
+
+/// Root merge state, touched only by the barrier leader (and the final
+/// residual-traffic fold, where sums commute).
+struct Root {
+    /// Pool-wide per-endpoint traffic (folded from group partials).
+    traffic: Vec<TrafficStats>,
+    /// Scheduled hot-removal `(epoch index, endpoint)`: the shared
+    /// router arms for merge `e` at the end of merge `e-1` (epoch 0 is
+    /// armed before spawn), so replay `k` routes degraded iff `k >= e` —
+    /// exactly when every host's own pool flips.
     remove_at_epoch: Option<(u64, usize)>,
-    /// BISnp invalidations delivered across hosts.
-    cross_snoops: u64,
     /// Barriers executed.
     epochs: u64,
     /// Engine-level per-epoch, per-endpoint pool occupancy rho
     /// (busy/span over merged logs), captured only when observability
     /// is on. One row per epoch barrier.
     epoch_rho: Option<Vec<Vec<f64>>>,
+    /// Scratch for the leader's fold (reused across epochs).
+    busy_tot: Vec<u128>,
+    reqs_tot: Vec<u64>,
 }
 
-impl Shared {
-    /// Queue a BISnp for every host in `mask`.
-    fn deliver_snoops(&mut self, line: u64, mask: u64, inboxes: &[Mutex<Vec<u64>>]) {
-        let mut m = mask;
-        while m != 0 {
-            let g = m.trailing_zeros() as usize;
-            m &= m - 1;
-            if let Some(slot) = inboxes.get(g) {
-                slot.lock().unwrap().push(line);
-                self.cross_snoops += 1;
+/// Queue a BISnp for every host covered by the group bits of `mask`,
+/// except `skip` (the writer, which keeps its copy).
+fn deliver_groups(
+    out: &mut [Vec<u64>],
+    minted: &mut u64,
+    line: u64,
+    mask: u64,
+    skip: Option<usize>,
+    fold: SharerFold,
+    hosts: usize,
+) {
+    let mut m = mask;
+    while m != 0 {
+        let b = m.trailing_zeros() as usize;
+        m &= m - 1;
+        for h in fold.members(b, hosts) {
+            if Some(h) == skip {
+                continue;
             }
+            out[h].push(line);
+            *minted += 1;
         }
-    }
-
-    /// The barrier merge: drain every host's epoch log in host-index
-    /// order, update the shared directory/traffic, emit cross-host
-    /// snoops, and compute next-epoch contention. Deterministic by
-    /// construction — no wall-clock, no thread identity.
-    fn merge_epoch(
-        &mut self,
-        hosts: usize,
-        logs: &[Mutex<Option<EffectLog>>],
-        inboxes: &[Mutex<Vec<u64>>],
-        contention: &[Mutex<Vec<Ps>>],
-    ) {
-        let endpoints = self.dirs.len();
-        if let Some((e, dead)) = self.remove_at_epoch {
-            if self.epochs >= e && self.router.dead().is_none() {
-                self.router.set_dead(dead);
-            }
-        }
-        let taken: Vec<Option<EffectLog>> =
-            logs.iter().map(|slot| slot.lock().unwrap().take()).collect();
-
-        // Aggregate device occupancy for the contention model.
-        let mut span: Ps = 1;
-        let mut busy_tot: Vec<u128> = vec![0; endpoints];
-        let mut reqs_tot: Vec<u64> = vec![0; endpoints];
-        for log in taken.iter().flatten() {
-            span = span.max(log.sim_advance);
-            for ep in 0..endpoints {
-                busy_tot[ep] += log.dev_busy[ep] as u128;
-                reqs_tot[ep] += log.dev_reqs[ep];
-            }
-        }
-
-        // Replay coherence-visible ops, host 0 first.
-        for (h, log) in taken.iter().enumerate() {
-            let Some(log) = log else { continue };
-            for op in &log.ops {
-                match *op {
-                    HostEffect::Grant { ep, line } => {
-                        if let Some((victim, mask)) = self.dirs[ep as usize].grant_for(line, h) {
-                            // Shared-directory capacity eviction: every
-                            // sharer of the victim is snooped (the
-                            // multi-sharer generalization of the
-                            // single-host BISnp flow).
-                            self.deliver_snoops(victim, mask, inboxes);
-                        }
-                    }
-                    HostEffect::Revoke { ep, line } => {
-                        self.dirs[ep as usize].revoke_for(line, h);
-                    }
-                    HostEffect::Write { line } | HostEffect::DeviceUpdate { line } => {
-                        // The writer keeps its copy (it owns the newest
-                        // data); every *other* sharer is invalidated.
-                        let ep = self.router.route(line);
-                        let mask = self.dirs[ep].sharers(line) & !(1u64 << h);
-                        if mask != 0 {
-                            let mut m = mask;
-                            while m != 0 {
-                                let g = m.trailing_zeros() as usize;
-                                m &= m - 1;
-                                self.dirs[ep].revoke_for(line, g);
-                            }
-                            self.deliver_snoops(line, mask, inboxes);
-                        }
-                    }
-                }
-            }
-            for (total, delta) in self.traffic.iter_mut().zip(&log.traffic) {
-                total.merge(delta);
-            }
-        }
-
-        // Next-epoch contention: the queuing penalty host `h` pays at
-        // endpoint `ep` grows with the *other* hosts' occupancy of that
-        // device over the epoch span — an M/D/1-flavored rho/(1-rho)
-        // times the pool-mean service time. Pure integer/f64 arithmetic
-        // over merged logs: identical for any thread count.
-        for h in 0..hosts {
-            let mut extra: Vec<Ps> = vec![0; endpoints];
-            if let Some(log) = &taken[h] {
-                for ep in 0..endpoints {
-                    let other = busy_tot[ep].saturating_sub(log.dev_busy[ep] as u128);
-                    if other == 0 || reqs_tot[ep] == 0 {
-                        continue;
-                    }
-                    let rho = ((other as f64) / (span as f64)).min(0.95);
-                    let mean_service = (busy_tot[ep] / reqs_tot[ep] as u128) as f64;
-                    extra[ep] = ((rho / (1.0 - rho)) * mean_service) as Ps;
-                }
-            }
-            *contention[h].lock().unwrap() = extra;
-        }
-        if let Some(rows) = &mut self.epoch_rho {
-            let row: Vec<f64> = busy_tot
-                .iter()
-                .map(|&busy| ((busy as f64) / (span as f64)).min(1.0))
-                .collect();
-            rows.push(row);
-        }
-        self.epochs += 1;
     }
 }
 
-/// One host shard owned by a worker thread.
+/// One host context owned by a worker thread.
 struct Shard {
     host: usize,
     runner: Runner,
     source: Box<dyn TraceSource>,
     stats: RunStats,
     cur: RunCursor,
+    /// Snoop drain scratch (retains capacity across epochs).
+    scratch: Vec<u64>,
 }
 
-/// Run `opts.hosts` shards of `cfg` against one shared pool and return
-/// per-host plus aggregate statistics. `make_source` builds host `h`'s
-/// trace source (use [`host_seed`] to decorrelate streams; a failure —
-/// e.g. a missing trace file — surfaces as an engine error); it runs
-/// on worker threads, hence `Sync`.
+/// Run `opts.hosts` host contexts of `cfg` against one shared pool and
+/// return per-host plus aggregate statistics. `make_source` builds host
+/// `h`'s trace source (use [`host_seed`] to decorrelate streams; a
+/// failure — e.g. a missing trace file — surfaces as an engine error);
+/// it runs on worker threads, hence `Sync`. With `opts.fleet`, each
+/// source is additionally wrapped by the tenant traffic model.
 pub fn run_multi_host<F>(
     cfg: &std::sync::Arc<SimConfig>,
     opts: &MultiHostOpts,
@@ -291,7 +330,9 @@ where
 {
     let hosts = opts.hosts;
     anyhow::ensure!(hosts >= 1, "multi-host engine needs at least one host");
-    anyhow::ensure!(hosts <= 64, "sharer bitmask caps the pool at 64 hosts, got {hosts}");
+    anyhow::ensure!(hosts <= MAX_HOSTS, "fleet engine caps the pool at {MAX_HOSTS} hosts, got {hosts}");
+    // Surplus threads would spin on the barriers shard-less: clamp to
+    // the host count.
     let threads = if opts.threads == 0 {
         crate::util::default_parallelism()
     } else {
@@ -301,36 +342,64 @@ where
     let epoch = opts.epoch_accesses.max(1);
     let total = cfg.accesses;
     let epochs = total.div_ceil(epoch).max(1);
+    let fold = SharerFold::new(hosts);
+    // Merge-tree group size: any value gives identical results; auto
+    // splits the hosts evenly over the workers.
+    let gsize = if opts.merge_group == 0 {
+        hosts.div_ceil(threads).max(1)
+    } else {
+        opts.merge_group.max(1)
+    };
+    let groups = hosts.div_ceil(gsize);
+    fn group_range(g: usize, gsize: usize, hosts: usize) -> std::ops::Range<usize> {
+        (g * gsize)..((g + 1) * gsize).min(hosts)
+    }
 
-    let topo = cfg.cxl.build_topology()?;
-    let endpoints = topo.ssds().len();
+    // Build the shared host plan ONCE: topology, enumeration, fabric
+    // path tables. Every host context is stamped from it.
+    let plan = HostPlan::new(std::sync::Arc::clone(cfg))?;
+    let endpoints = plan.topo().ssds().len();
     anyhow::ensure!(endpoints >= 1, "topology has no CXL-SSD endpoints");
-    let router = pool_interleaver(&topo, &cfg.ssd, cfg.cxl.interleave);
-    let shared = Mutex::new(Shared {
-        dirs: (0..endpoints)
-            .map(|_| {
-                BiDirectory::new(
-                    cfg.coherence.dir_entries.saturating_mul(hosts),
+    let mut router0 = pool_interleaver(plan.topo(), &cfg.ssd, cfg.cxl.interleave);
+    let remove_at_epoch = cfg.fault.hot_remove.map(|r| (r.at / epoch as u64, r.ep));
+    if let Some((0, dead)) = remove_at_epoch {
+        // Epoch 0's merge already routes degraded (leader arming covers
+        // every later epoch).
+        router0.set_dead(dead);
+    }
+    let router = RwLock::new(router0);
+
+    let eps: Vec<Mutex<EpShared>> = (0..endpoints)
+        .map(|_| {
+            Mutex::new(EpShared {
+                dir: BiDirectory::new(
+                    cfg.coherence.dir_entries.saturating_mul(hosts.min(DIR_SEGMENT_CAP)),
                     cfg.coherence.dir_ways,
-                )
+                ),
+                out: (0..hosts).map(|_| Vec::new()).collect(),
+                minted: 0,
             })
-            .collect(),
+        })
+        .collect();
+    let partials: Vec<Mutex<GroupPartial>> =
+        (0..groups).map(|_| Mutex::new(GroupPartial::new(endpoints))).collect();
+    let root = Mutex::new(Root {
         traffic: vec![TrafficStats::default(); endpoints],
-        router,
-        remove_at_epoch: cfg.fault.hot_remove.map(|r| (r.at / epoch as u64, r.ep)),
-        cross_snoops: 0,
+        remove_at_epoch,
         epochs: 0,
         epoch_rho: opts.obs.as_ref().map(|_| Vec::new()),
+        busy_tot: vec![0; endpoints],
+        reqs_tot: vec![0; endpoints],
     });
 
-    let logs: Vec<Mutex<Option<EffectLog>>> = (0..hosts).map(|_| Mutex::new(None)).collect();
-    let inboxes: Vec<Mutex<Vec<u64>>> = (0..hosts).map(|_| Mutex::new(Vec::new())).collect();
+    let logs: Vec<Mutex<EffectLog>> =
+        (0..hosts).map(|_| Mutex::new(EffectLog::default())).collect();
     let contention: Vec<Mutex<Vec<Ps>>> =
         (0..hosts).map(|_| Mutex::new(vec![0; endpoints])).collect();
     let barrier = Barrier::new(threads);
-    // One row per shard: (host, stats, shared-directory invariant held,
+    // One row per host: (host, stats, shared-directory invariant held,
     // captured access stream — empty unless `opts.record` — and the
-    // shard's obs recorder when observability is on).
+    // host's obs recorder when observability is on).
     type ShardRow = (usize, RunStats, bool, Vec<Access>, Option<Box<ObsRecorder>>);
     let results: Mutex<Vec<ShardRow>> = Mutex::new(Vec::new());
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -339,33 +408,35 @@ where
         cfg.prefetcher,
         PrefetcherKind::Ml1 | PrefetcherKind::Ml2 | PrefetcherKind::Expand
     );
-    // Under LocalDRAM backing there is no device pool and shards log no
+    // Under LocalDRAM backing there is no device pool and hosts log no
     // grants — the shared-directory coverage invariant is vacuous.
     let cxl_backed = matches!(cfg.backing, Backing::CxlSsd);
+    // Fleet runs need the obs histograms for tenant SLOs even when the
+    // caller did not ask for observability exports.
+    let obs_opts: Option<ObsOptions> =
+        opts.obs.clone().or_else(|| opts.fleet.as_ref().map(|_| ObsOptions::default()));
     let wall_start = std::time::Instant::now();
 
     std::thread::scope(|scope| {
         for t in 0..threads {
-            let cfg = std::sync::Arc::clone(cfg);
-            let (shared, logs, inboxes, contention, barrier, results, errors, make_source) = (
-                &shared,
-                &logs,
-                &inboxes,
-                &contention,
-                &barrier,
-                &results,
-                &errors,
-                &make_source,
-            );
+            let (plan, eps, partials, root, router, logs, contention, barrier) =
+                (&plan, &eps, &partials, &root, &router, &logs, &contention, &barrier);
+            let (results, errors, make_source) = (&results, &errors, &make_source);
             let artifacts = opts.artifacts.clone();
+            let obs_opts = obs_opts.clone();
             scope.spawn(move || {
-                // Build this worker's shards (round-robin assignment —
-                // irrelevant to results, only to load balance).
+                // Build this worker's host contexts. Assignment decides
+                // only *where* a host executes — results are invariant
+                // (pinned by the assignment-permutation proptest).
+                let owned = |h: usize| match &opts.assignment {
+                    Some(a) => a.get(h).copied().unwrap_or(h) % threads == t,
+                    None => h % threads == t,
+                };
                 let mut shards: Vec<Shard> = Vec::new();
                 let mut failed = false;
-                for host in (t..hosts).step_by(threads) {
-                    // One Runtime per shard: predictor state must never
-                    // couple shards, or thread assignment would leak
+                for host in (0..hosts).filter(|&h| owned(h)) {
+                    // One Runtime per host: predictor state must never
+                    // couple hosts, or thread assignment would leak
                     // into results. A load failure is a hard error, like
                     // the single-host CLI path — never a silent fall
                     // back to the mock predictor.
@@ -396,13 +467,19 @@ where
                             continue;
                         }
                     };
-                    match Runner::from_arc(std::sync::Arc::clone(&cfg), rt.as_ref()) {
+                    // The fleet layer wraps every stream with the
+                    // tenant's arrival offset + traffic shape.
+                    let source = match &opts.fleet {
+                        Some(spec) => spec.wrap(source, host, hosts),
+                        None => source,
+                    };
+                    match Runner::from_plan(plan, rt.as_ref()) {
                         Ok(mut runner) => {
                             runner.enable_effect_log();
                             if opts.record {
                                 runner.enable_recording();
                             }
-                            if let Some(o) = &opts.obs {
+                            if let Some(o) = &obs_opts {
                                 // Stride-based sampling would couple
                                 // series rows to batch interleaving;
                                 // multi-host rows come from the epoch
@@ -412,7 +489,14 @@ where
                                 runner.enable_obs(o);
                             }
                             let (stats, cur) = runner.begin_run(&*source);
-                            shards.push(Shard { host, runner, source, stats, cur });
+                            shards.push(Shard {
+                                host,
+                                runner,
+                                source,
+                                stats,
+                                cur,
+                                scratch: Vec::new(),
+                            });
                         }
                         Err(e) => {
                             errors.lock().unwrap().push(format!("host {host}: {e}"));
@@ -421,13 +505,14 @@ where
                     }
                 }
                 // A worker that failed to build must still hit every
-                // barrier or the others deadlock; it just runs no shards.
+                // barrier or the others deadlock; it just runs no hosts.
                 if failed {
                     shards.clear();
                 }
 
                 for e in 0..epochs {
                     let n = if (e + 1) * epoch <= total { epoch } else { total - e * epoch };
+                    // ---- Phase R: run this worker's host contexts ----
                     if !shards.is_empty() {
                         // A panicking worker that never reaches the
                         // barrier would deadlock every other thread:
@@ -438,15 +523,21 @@ where
                                 for sh in &mut shards {
                                     // Apply the previous barrier's
                                     // cross-host effects before the
-                                    // epoch's own accesses.
-                                    let pending = std::mem::take(
-                                        &mut *inboxes[sh.host].lock().unwrap(),
-                                    );
-                                    for line in pending {
-                                        sh.runner.apply_remote_snoop(line);
+                                    // epoch's own accesses, in endpoint
+                                    // order (the canonical delivery
+                                    // order of the parallel merge).
+                                    for s in eps.iter() {
+                                        sh.scratch.clear();
+                                        sh.scratch
+                                            .append(&mut s.lock().unwrap().out[sh.host]);
+                                        for i in 0..sh.scratch.len() {
+                                            let line = sh.scratch[i];
+                                            sh.runner.apply_remote_snoop(line);
+                                        }
                                     }
-                                    let extra = contention[sh.host].lock().unwrap().clone();
-                                    sh.runner.set_contention(&extra);
+                                    sh.runner.set_contention(
+                                        &contention[sh.host].lock().unwrap(),
+                                    );
                                     if n > 0 {
                                         sh.runner.run_segment(
                                             &mut *sh.source,
@@ -456,8 +547,9 @@ where
                                         );
                                     }
                                     sh.runner.obs_epoch_mark(&sh.stats, &sh.cur);
-                                    *logs[sh.host].lock().unwrap() =
-                                        Some(sh.runner.take_effects());
+                                    sh.runner.take_effects_into(
+                                        &mut logs[sh.host].lock().unwrap(),
+                                    );
                                 }
                             },
                         ));
@@ -474,20 +566,187 @@ where
                             shards.clear();
                         }
                     }
+                    barrier.wait();
+
+                    // ---- Phase M: parallel partial merge ----
+                    // Merge groups: pre-reduce the commutative fields.
+                    for g in (t..groups).step_by(threads) {
+                        let mut p = partials[g].lock().unwrap();
+                        p.reset();
+                        for h in group_range(g, gsize, hosts) {
+                            let log = logs[h].lock().unwrap();
+                            if !log.is_active(endpoints) {
+                                continue;
+                            }
+                            p.span = p.span.max(log.sim_advance);
+                            for ep in 0..endpoints {
+                                p.busy[ep] += log.dev_busy[ep] as u128;
+                                p.reqs[ep] += log.dev_reqs[ep];
+                                p.traffic[ep].merge(&log.traffic[ep]);
+                            }
+                        }
+                    }
+                    // Endpoint owners: replay every host's coherence ops
+                    // (host-index order — the determinism anchor) against
+                    // this endpoint's directory shard.
+                    {
+                        let router = router.read().unwrap();
+                        for epx in (t..endpoints).step_by(threads) {
+                            let s = &mut *eps[epx].lock().unwrap();
+                            for h in 0..hosts {
+                                let log = logs[h].lock().unwrap();
+                                if !log.is_active(endpoints) {
+                                    continue;
+                                }
+                                let hb = fold.bit(h);
+                                for op in &log.ops {
+                                    match *op {
+                                        HostEffect::Grant { ep, line } if ep as usize == epx => {
+                                            if let Some((victim, mask)) =
+                                                s.dir.grant_for(line, hb)
+                                            {
+                                                // Shared-directory capacity
+                                                // eviction: every sharer of
+                                                // the victim is snooped.
+                                                deliver_groups(
+                                                    &mut s.out, &mut s.minted, victim, mask,
+                                                    None, fold, hosts,
+                                                );
+                                            }
+                                        }
+                                        HostEffect::Revoke { ep, line } if ep as usize == epx => {
+                                            // Folded mode cannot clear the
+                                            // group bit on a clean evict —
+                                            // a group-mate may still cache
+                                            // the line (coarse filters only
+                                            // over-approximate).
+                                            if fold.exact() {
+                                                s.dir.revoke_for(line, hb);
+                                            }
+                                        }
+                                        HostEffect::Write { line }
+                                        | HostEffect::DeviceUpdate { line }
+                                            if router.route(line) == epx =>
+                                        {
+                                            let sharers = s.dir.sharers(line);
+                                            // The writer keeps its copy (it
+                                            // owns the newest data); every
+                                            // other sharing group is
+                                            // invalidated.
+                                            let others = sharers & !(1u64 << hb);
+                                            if others != 0 {
+                                                let mut m = others;
+                                                while m != 0 {
+                                                    let b = m.trailing_zeros() as usize;
+                                                    m &= m - 1;
+                                                    s.dir.revoke_for(line, b);
+                                                }
+                                                deliver_groups(
+                                                    &mut s.out, &mut s.minted, line, others,
+                                                    None, fold, hosts,
+                                                );
+                                            }
+                                            if !fold.exact() && (sharers >> hb) & 1 == 1 {
+                                                // Coarse filter: snoop the
+                                                // writer's group-mates too —
+                                                // the directory cannot tell
+                                                // which of them cache the
+                                                // line.
+                                                deliver_groups(
+                                                    &mut s.out,
+                                                    &mut s.minted,
+                                                    line,
+                                                    1u64 << hb,
+                                                    Some(h),
+                                                    fold,
+                                                    hosts,
+                                                );
+                                            }
+                                        }
+                                        _ => {}
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // ---- Phase L: deterministic root merge ----
                     if barrier.wait().is_leader() {
-                        shared.lock().unwrap().merge_epoch(hosts, logs, inboxes, contention);
+                        let root = &mut *root.lock().unwrap();
+                        root.busy_tot.iter_mut().for_each(|x| *x = 0);
+                        root.reqs_tot.iter_mut().for_each(|x| *x = 0);
+                        let mut span: Ps = 1;
+                        for p in partials.iter() {
+                            let p = p.lock().unwrap();
+                            span = span.max(p.span);
+                            for ep in 0..endpoints {
+                                root.busy_tot[ep] += p.busy[ep];
+                                root.reqs_tot[ep] += p.reqs[ep];
+                                root.traffic[ep].merge(&p.traffic[ep]);
+                            }
+                        }
+                        // Next-epoch contention: the queuing penalty host
+                        // `h` pays at endpoint `ep` grows with the *other*
+                        // hosts' occupancy of that device over the epoch
+                        // span — an M/D/1-flavored rho/(1-rho) times the
+                        // pool-mean service time. Pure integer/f64
+                        // arithmetic over the folded partials: identical
+                        // for any thread count or group size.
+                        for h in 0..hosts {
+                            let mut log = logs[h].lock().unwrap();
+                            let mut extra = contention[h].lock().unwrap();
+                            extra.iter_mut().for_each(|x| *x = 0);
+                            if log.is_active(endpoints) {
+                                for ep in 0..endpoints {
+                                    let other = root.busy_tot[ep]
+                                        .saturating_sub(log.dev_busy[ep] as u128);
+                                    if other == 0 || root.reqs_tot[ep] == 0 {
+                                        continue;
+                                    }
+                                    let rho = ((other as f64) / (span as f64)).min(0.95);
+                                    let mean_service =
+                                        (root.busy_tot[ep] / root.reqs_tot[ep] as u128) as f64;
+                                    extra[ep] = ((rho / (1.0 - rho)) * mean_service) as Ps;
+                                }
+                            }
+                            // Consume the log: a host whose worker dies
+                            // later must never be replayed twice.
+                            log.reset(0);
+                        }
+                        if let Some(rows) = &mut root.epoch_rho {
+                            let row: Vec<f64> = root
+                                .busy_tot
+                                .iter()
+                                .map(|&busy| ((busy as f64) / (span as f64)).min(1.0))
+                                .collect();
+                            rows.push(row);
+                        }
+                        root.epochs += 1;
+                        // Arm the router for the NEXT merge (this merge
+                        // already routed with the correct state).
+                        if let Some((e, dead)) = root.remove_at_epoch {
+                            if root.epochs >= e {
+                                let mut r = router.write().unwrap();
+                                if r.dead().is_none() {
+                                    r.set_dead(dead);
+                                }
+                            }
+                        }
                     }
                     barrier.wait();
                 }
 
-                // Final inbox drain (snoops minted at the last merge),
+                // Final outbox drain (snoops minted at the last merge),
                 // then finalize and check the shared-directory coverage
                 // invariant: every LLC-resident line carries this
-                // host's sharer bit.
+                // host's sharer-group bit.
                 for sh in &mut shards {
-                    let pending = std::mem::take(&mut *inboxes[sh.host].lock().unwrap());
-                    for line in pending {
-                        sh.runner.apply_remote_snoop(line);
+                    for s in eps.iter() {
+                        sh.scratch.clear();
+                        sh.scratch.append(&mut s.lock().unwrap().out[sh.host]);
+                        for i in 0..sh.scratch.len() {
+                            let line = sh.scratch[i];
+                            sh.runner.apply_remote_snoop(line);
+                        }
                     }
                     sh.runner.finalize(&mut sh.stats, &sh.cur);
                     // The drain itself moved traffic (BISnp/BIRsp, dirty
@@ -496,16 +755,23 @@ where
                     // so cross-thread arrival order cannot change the
                     // result.
                     let residual = sh.runner.take_effects();
-                    let invariant = {
-                        let mut s = shared.lock().unwrap();
-                        for (total, delta) in s.traffic.iter_mut().zip(&residual.traffic) {
+                    {
+                        let mut root = root.lock().unwrap();
+                        for (total, delta) in root.traffic.iter_mut().zip(&residual.traffic) {
                             total.merge(delta);
                         }
-                        !cxl_backed
-                            || sh
-                                .runner
-                                .llc_lines()
-                                .all(|l| s.dirs[s.router.route(l)].contains_host(l, sh.host))
+                    }
+                    let invariant = if cxl_backed {
+                        let router = router.read().unwrap();
+                        sh.runner.llc_lines().all(|l| {
+                            eps[router.route(l)]
+                                .lock()
+                                .unwrap()
+                                .dir
+                                .contains_host(l, fold.bit(sh.host))
+                        })
+                    } else {
+                        true
                     };
                     results.lock().unwrap().push((
                         sh.host,
@@ -529,7 +795,8 @@ where
         rows.len()
     );
 
-    let shared = shared.into_inner().unwrap();
+    let eps: Vec<EpShared> = eps.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let root = root.into_inner().unwrap();
     let bi_invariant = rows.iter().all(|r| r.2);
     let mut per_host: Vec<RunStats> = Vec::with_capacity(hosts);
     let mut recordings: Vec<Vec<Access>> = Vec::with_capacity(hosts);
@@ -544,23 +811,43 @@ where
     // The shared directory is the pool's ground truth for occupancy and
     // displacement cost; overwrite the summed per-host views.
     for (ep, d) in aggregate.per_device.iter_mut().enumerate() {
-        d.dir_occupancy = shared.dirs[ep].occupancy();
-        d.dir_evictions = shared.dirs[ep].stats.capacity_evictions;
+        d.dir_occupancy = eps[ep].dir.occupancy();
+        d.dir_evictions = eps[ep].dir.stats.capacity_evictions;
     }
-    let shared_dir_evictions: u64 =
-        shared.dirs.iter().map(|d| d.stats.capacity_evictions).sum();
+    let shared_dir_evictions: u64 = eps.iter().map(|s| s.dir.stats.capacity_evictions).sum();
+    let cross_snoops: u64 = eps.iter().map(|s| s.minted).sum();
 
-    // Fleet observability: fold every shard's recorder into one, in
-    // host-index order (histogram merges commute, but event/series rows
-    // are host-tagged in a fixed order so exports are byte-stable).
+    // Per-tenant SLO rollup from the per-host demand histograms.
+    let fleet = opts.fleet.as_ref().map(|spec| fleet_stats(spec, hosts, &shard_obs, &per_host));
+
+    // Fleet observability: pre-reduce each merge group's recorders into
+    // a tagged partial (parallel), then fold the partials in group
+    // order. Histogram merges are exact and associative and the
+    // tagged series/event rows concatenate in host order, so this
+    // equals the flat host-order fold byte for byte.
     let obs = opts.obs.as_ref().map(|o| {
-        let mut merged = ObsRecorder::new(endpoints, o.clone());
-        for (h, rec) in shard_obs.iter().enumerate() {
-            if let Some(rec) = rec {
-                merged.absorb(rec, h as u32);
+        let mut parts: Vec<ObsRecorder> =
+            (0..groups).map(|_| ObsRecorder::new(endpoints, o.clone())).collect();
+        let chunk = groups.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let shard_obs = &shard_obs;
+            for (ci, slab) in parts.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (j, part) in slab.iter_mut().enumerate() {
+                        for h in group_range(ci * chunk + j, gsize, hosts) {
+                            if let Some(rec) = &shard_obs[h] {
+                                part.absorb(rec, h as u32);
+                            }
+                        }
+                    }
+                });
             }
+        });
+        let mut merged = ObsRecorder::new(endpoints, o.clone());
+        for part in &parts {
+            merged.absorb_merged(part);
         }
-        merged.epoch_rho = shared.epoch_rho.clone().unwrap_or_default();
+        merged.epoch_rho = root.epoch_rho.clone().unwrap_or_default();
         aggregate.obs = Some(merged.summary());
         Box::new(merged)
     });
@@ -572,16 +859,51 @@ where
             aggregate,
             hosts,
             threads,
-            epochs: shared.epochs,
+            epochs: root.epochs,
             epoch_accesses: epoch,
-            cross_snoops: shared.cross_snoops,
+            cross_snoops,
             shared_dir_evictions,
-            pool_traffic: shared.traffic,
+            pool_traffic: root.traffic,
             bi_invariant,
             obs,
+            fleet,
         },
         recordings,
     ))
+}
+
+/// Per-tenant SLO percentiles over the tenant's contiguous host block:
+/// demand (hit + miss) latency histograms merge exactly in host order,
+/// so the quantiles are bit-identical for any thread count, assignment,
+/// or merge-group size.
+fn fleet_stats(
+    spec: &FleetSpec,
+    hosts: usize,
+    shard_obs: &[Option<Box<ObsRecorder>>],
+    per_host: &[RunStats],
+) -> FleetStats {
+    let mut tenants = Vec::new();
+    for (k, r) in spec.tenant_ranges(hosts).iter().enumerate() {
+        let mut hist = Histogram::new();
+        let mut accesses = 0u64;
+        for h in r.clone() {
+            accesses += per_host[h].accesses;
+            if let Some(rec) = &shard_obs[h] {
+                hist.merge(rec.class_histogram(AccessClass::DemandHit));
+                hist.merge(rec.class_histogram(AccessClass::DemandMiss));
+            }
+        }
+        tenants.push(TenantSlo {
+            tenant: k,
+            hosts: r.len(),
+            accesses,
+            p50_ps: hist.percentile_ps(0.50),
+            p99_ps: hist.percentile_ps(0.99),
+            p999_ps: hist.percentile_ps(0.999),
+            max_ps: hist.max(),
+        });
+    }
+    FleetStats { shape: spec.shape.name().to_string(), tenants }
 }
 
 /// Convenience for benches/tests: run the configured workload id on
@@ -599,6 +921,7 @@ pub fn run_multi_host_workload(
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::workloads::fleet::TrafficShape;
     use crate::workloads::WorkloadId;
     use std::sync::Arc;
 
@@ -610,14 +933,7 @@ mod tests {
     }
 
     fn opts(hosts: usize, threads: usize, epoch: usize) -> MultiHostOpts {
-        MultiHostOpts {
-            hosts,
-            threads,
-            epoch_accesses: epoch,
-            artifacts: None,
-            record: false,
-            obs: None,
-        }
+        MultiHostOpts { hosts, threads, epoch_accesses: epoch, ..MultiHostOpts::default() }
     }
 
     #[test]
@@ -648,6 +964,26 @@ mod tests {
     }
 
     #[test]
+    fn merge_group_size_and_assignment_do_not_change_results() {
+        let cfg = Arc::new(engine_cfg());
+        let base = run_multi_host_workload(&cfg, &opts(6, 1, 2048), WorkloadId::Pr).unwrap();
+        for group in [1usize, 3, 6] {
+            let mut o = opts(6, 3, 2048);
+            o.merge_group = group;
+            let s = run_multi_host_workload(&cfg, &o, WorkloadId::Pr).unwrap();
+            assert_eq!(
+                base.fingerprint(),
+                s.fingerprint(),
+                "merge group {group} must not leak into results"
+            );
+        }
+        let mut o = opts(6, 3, 2048);
+        o.assignment = Some(vec![5, 3, 1, 4, 0, 2]);
+        let s = run_multi_host_workload(&cfg, &o, WorkloadId::Pr).unwrap();
+        assert_eq!(base.fingerprint(), s.fingerprint(), "assignment must not leak into results");
+    }
+
+    #[test]
     fn obs_exports_are_thread_count_invariant() {
         let cfg = Arc::new(engine_cfg());
         let mut o1 = opts(4, 1, 2048);
@@ -655,6 +991,9 @@ mod tests {
             Some(crate::obs::ObsOptions { trace_events: true, ..crate::obs::ObsOptions::default() });
         let mut o4 = o1.clone();
         o4.threads = 4;
+        // Different merge-group sizes on the two runs: the hierarchical
+        // obs merge must still produce byte-identical exports.
+        o4.merge_group = 3;
         let a = run_multi_host_workload(&cfg, &o1, WorkloadId::Pr).unwrap();
         let b = run_multi_host_workload(&cfg, &o4, WorkloadId::Pr).unwrap();
         assert_eq!(a.fingerprint(), b.fingerprint());
@@ -690,7 +1029,7 @@ mod tests {
                 inner,
                 0.2,
                 host_seed(seed, h),
-            )))
+            )) as Box<dyn TraceSource>)
         })
         .unwrap();
         assert_eq!(s.per_host.len(), 2);
@@ -709,6 +1048,64 @@ mod tests {
             assert_eq!(t.m2s_wr, d.mem_writes, "epoch-merged MemWr count");
         }
         assert!(s.bi_invariant);
+    }
+
+    #[test]
+    fn coarse_sharer_groups_cover_fleets_beyond_64_hosts() {
+        // 96 hosts folds into 48 two-host sharer groups: the engine must
+        // accept the fleet, keep the coverage invariant (coarse bits
+        // only over-approximate) and stay thread-count invariant.
+        let mut c = engine_cfg();
+        c.accesses = 1_500;
+        let cfg = Arc::new(c);
+        let a = run_multi_host_workload(&cfg, &opts(96, 3, 512), WorkloadId::Pr).unwrap();
+        assert_eq!(a.per_host.len(), 96);
+        assert!(a.bi_invariant, "coarse sharer groups must keep LLC coverage");
+        let b = run_multi_host_workload(&cfg, &opts(96, 1, 512), WorkloadId::Pr).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "folded mode must stay deterministic");
+        assert!(
+            run_multi_host_workload(&cfg, &opts(MAX_HOSTS + 1, 1, 512), WorkloadId::Pr).is_err(),
+            "fleet cap must be enforced"
+        );
+    }
+
+    #[test]
+    fn fleet_layer_reports_tenant_slos() {
+        let mut c = engine_cfg();
+        c.accesses = 6_000;
+        let cfg = Arc::new(c);
+        let spec = FleetSpec {
+            tenants: 3,
+            shape: TrafficShape::Diurnal,
+            period: 2048,
+            peak: 4,
+            arrival: 1024,
+            ..FleetSpec::default()
+        };
+        let mut o1 = opts(8, 1, 2048);
+        o1.fleet = Some(spec.clone());
+        let mut o2 = o1.clone();
+        o2.threads = 2;
+        let a = run_multi_host_workload(&cfg, &o1, WorkloadId::Pr).unwrap();
+        let b = run_multi_host_workload(&cfg, &o2, WorkloadId::Pr).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fleet shaping must stay deterministic");
+        let fleet = a.fleet.as_ref().expect("fleet rollup present");
+        assert_eq!(fleet.shape, "diurnal");
+        assert_eq!(fleet.tenants.len(), 3);
+        assert_eq!(fleet.tenants.iter().map(|t| t.hosts).sum::<usize>(), 8);
+        assert_eq!(
+            fleet.tenants.iter().map(|t| t.accesses).sum::<u64>(),
+            a.aggregate.accesses,
+            "tenant blocks partition the fleet's accesses"
+        );
+        for t in &fleet.tenants {
+            assert!(t.p50_ps > 0, "tenant {} must observe demand latency", t.tenant);
+            assert!(t.p50_ps <= t.p99_ps && t.p99_ps <= t.p999_ps && t.p999_ps <= t.max_ps);
+        }
+        // Zipf skew: tenant 0 owns the largest host block.
+        assert!(fleet.tenants[0].hosts >= fleet.tenants[2].hosts);
+        // The rollup participates in the fingerprint.
+        assert!(a.fingerprint().contains("fleet:"));
     }
 
     #[test]
@@ -772,7 +1169,7 @@ mod tests {
             let replayed = run_multi_host(&cfg, &opts(4, threads, 2048), |h| {
                 Ok(Box::new(
                     crate::trace::TraceReplay::shard(&header, &tagged, h, 4).unwrap(),
-                ))
+                ) as Box<dyn TraceSource>)
             })
             .unwrap();
             assert_eq!(

@@ -20,7 +20,7 @@ use crate::coherence::ShadowMemory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};
 use crate::cxl::enumeration::Enumeration;
 use crate::cxl::transaction::{m2s_bytes, TrafficStats, M2S};
-use crate::cxl::Fabric;
+use crate::cxl::{Fabric, FabricPlan, Topology};
 use crate::expand::timeliness::DeadlineModel;
 use crate::expand::ExpandPrefetcher;
 use crate::fault::FaultState;
@@ -87,6 +87,27 @@ impl EffectLog {
             dev_busy: vec![0; endpoints],
             ..Default::default()
         }
+    }
+
+    /// Empty the log for reuse as the next epoch's recording buffer,
+    /// retaining every allocation. The fleet engine double-buffers one
+    /// `EffectLog` per host against the runner's active log, so after the
+    /// first epoch the merge path runs allocation-free.
+    pub fn reset(&mut self, endpoints: usize) {
+        self.ops.clear();
+        self.dev_reqs.clear();
+        self.dev_reqs.resize(endpoints, 0);
+        self.dev_busy.clear();
+        self.dev_busy.resize(endpoints, 0);
+        self.traffic.clear();
+        self.sim_advance = 0;
+    }
+
+    /// Whether this log has been filled for the current epoch (a
+    /// default-constructed or reset-to-zero-endpoints log is inert — the
+    /// merge phase skips it, e.g. for a host whose worker died).
+    pub fn is_active(&self, endpoints: usize) -> bool {
+        self.dev_busy.len() == endpoints && self.traffic.len() == endpoints
     }
 }
 
@@ -201,6 +222,35 @@ pub struct Runner {
     fault_counts: Vec<EpFaults>,
 }
 
+/// Build-once host plan: everything about a simulated host that is a pure
+/// function of the config — topology, PCIe enumeration, and the fabric's
+/// dense path/latency tables. The multi-host engine constructs ONE plan and
+/// stamps out every host context from it, so a 256-host fleet runs topology
+/// discovery and path planning once instead of 256 times and the (identical)
+/// tables are shared behind an `Arc` rather than duplicated per host.
+pub struct HostPlan {
+    cfg: Arc<SimConfig>,
+    fabric: Arc<FabricPlan>,
+    enumeration: Enumeration,
+}
+
+impl HostPlan {
+    pub fn new(cfg: Arc<SimConfig>) -> anyhow::Result<Self> {
+        let topo = cfg.cxl.build_topology()?;
+        let enumeration = Enumeration::discover(&topo);
+        let fabric = Arc::new(FabricPlan::new(topo, &cfg.cxl));
+        Ok(HostPlan { cfg, fabric, enumeration })
+    }
+
+    pub fn cfg(&self) -> &Arc<SimConfig> {
+        &self.cfg
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.fabric.topo
+    }
+}
+
 impl Runner {
     /// Build a runner. `runtime` supplies compiled predictors for
     /// ML1/ML2/ExPAND; pass `None` to fall back to the mock predictor
@@ -215,14 +265,27 @@ impl Runner {
     /// conscious entry point: the config is *not* cloned, so sweeps and
     /// benches constructing many runners share one immutable instance.
     pub fn from_arc(cfg: Arc<SimConfig>, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
-        let topo = cfg.cxl.build_topology()?;
-        let enumeration = Enumeration::discover(&topo);
-        let fabric = Fabric::new(topo, &cfg.cxl);
+        Self::from_plan(&HostPlan::new(cfg)?, runtime)
+    }
+
+    /// Build a runner as one host context of a shared [`HostPlan`]: the
+    /// topology, enumeration, and fabric path tables are borrowed from the
+    /// plan (an `Arc` bump), so a 256-host fleet pays for topology
+    /// discovery once and each host carries only its mutable state
+    /// (stream cursor, caches, device pool, effect log).
+    pub fn from_plan(plan: &HostPlan, runtime: Option<&Rc<Runtime>>) -> anyhow::Result<Self> {
+        let cfg = Arc::clone(&plan.cfg);
+        let fabric = Fabric::from_plan(Arc::clone(&plan.fabric));
         // One CxlSsd + config space + timeliness state per endpoint; the
         // reflector's enumeration-time setup writes each device's
         // end-to-end latency into its own config space.
-        let pool =
-            DevicePool::new(&fabric, &enumeration, &cfg.ssd, cfg.cxl.interleave, &cfg.coherence)?;
+        let pool = DevicePool::new(
+            &fabric,
+            &plan.enumeration,
+            &cfg.ssd,
+            cfg.cxl.interleave,
+            &cfg.coherence,
+        )?;
         let hierarchy = Hierarchy::new(&cfg.hierarchy, cfg.cpu.cores, cfg.cpu.cycle_ps());
         let core = CoreModel::new(&cfg.cpu);
         let dram = DramModel::new(&cfg.dram);
@@ -416,21 +479,31 @@ impl Runner {
     /// the per-endpoint traffic and service deltas since the previous
     /// drain). The log keeps recording for the next epoch.
     pub fn take_effects(&mut self) -> EffectLog {
-        let snap = self.device_traffic_snapshot();
+        let mut out = EffectLog::default();
+        self.take_effects_into(&mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::take_effects`]: swaps the active
+    /// log with `out` (whose buffers are recycled as the next epoch's
+    /// recording log) and computes the epoch's traffic deltas in place.
+    /// The engine keeps one `out` slot per host, so the two logs
+    /// ping-pong across epochs and retain their capacity.
+    pub fn take_effects_into(&mut self, out: &mut EffectLog) {
         let now = self.core.now;
         let n = self.pool.len();
-        let mut out = EffectLog::sized(n);
         let eff = self.effects.as_mut().expect("effect log not enabled");
-        std::mem::swap(eff, &mut out);
-        out.traffic = snap
-            .iter()
-            .zip(self.traffic_prev.iter())
-            .map(|(cur, prev)| cur.delta_since(prev))
-            .collect();
+        std::mem::swap(eff, out);
+        // `eff` now holds the caller's old buffer: recycle it.
+        self.effects.as_mut().unwrap().reset(n);
+        out.traffic.clear();
+        for (i, ep) in self.pool.endpoints().iter().enumerate() {
+            let cur = self.fabric.traffic_for(ep.node);
+            out.traffic.push(cur.delta_since(&self.traffic_prev[i]));
+            self.traffic_prev[i] = cur;
+        }
         out.sim_advance = now.saturating_sub(self.last_epoch_now);
-        self.traffic_prev = snap;
         self.last_epoch_now = now;
-        out
     }
 
     /// Install the engine-computed per-endpoint contention delays for

@@ -177,11 +177,11 @@ impl DevicePool {
         policy: InterleavePolicy,
         coherence: &CoherenceConfig,
     ) -> anyhow::Result<Self> {
-        let nodes = fabric.topo.ssds();
+        let nodes = fabric.topo().ssds();
         anyhow::ensure!(!nodes.is_empty(), "topology has no CXL-SSD endpoints");
         let mut endpoints = Vec::with_capacity(nodes.len());
         for node in nodes {
-            let media = fabric.topo.nodes[node].media.unwrap_or(base.media);
+            let media = fabric.topo().nodes[node].media.unwrap_or(base.media);
             let ssd = CxlSsd::new(&endpoint_ssd_config(base, media));
             let mut config_space = ConfigSpace::endpoint(node as u16);
             let timeliness = setup_device(fabric, enumeration, &ssd, node, &mut config_space);

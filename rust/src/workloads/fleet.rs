@@ -1,0 +1,389 @@
+//! Fleet workload layer: tenant mixes over the multi-host engine.
+//!
+//! Datacenter-scale CXL pool studies (PAPERS.md: "Dissecting CXL Memory
+//! Performance at Scale", OpenCXD) model *tenant mixes*, not N identical
+//! hosts: a few large tenants own most of the hosts, tenants arrive
+//! staggered, and each tenant's load follows a diurnal or bursty shape.
+//! This module drives the fleet engine's per-host streams with exactly
+//! that structure:
+//!
+//! * **Skewed tenant sizes** — hosts are partitioned into contiguous
+//!   tenant blocks by a Zipf(`skew`) largest-remainder allocation, so
+//!   tenant 0 is the hyperscale customer and the tail tenants run one
+//!   host each.
+//! * **Arrival process** — tenant `k`'s hosts begin executing after a
+//!   deterministic arrival offset (`arrival` instructions per tenant
+//!   rank), charged as extra `inst_gap` on the first access.
+//! * **Traffic shapes** — `diurnal` (triangle wave) and `bursty`
+//!   (on/off duty cycle) modulate the instruction gap between accesses,
+//!   phase-shifted per tenant so tenant peaks do not align.
+//!
+//! Everything is pure integer arithmetic over the access index — no
+//! wall clock, no RNG — and [`FleetSource`] only implements
+//! [`TraceSource::next_access`], inheriting the default `fill_batch`
+//! loop, so the shaped stream satisfies the trait's batching
+//! determinism contract by construction. Per-tenant SLO percentiles
+//! (p50/p99/p999 demand latency) come out of the engine's obs
+//! histograms, merged per tenant block in host order.
+
+use super::{Access, TraceSource};
+use std::ops::Range;
+
+/// Per-tenant load shape applied to the instruction gap between
+/// accesses (larger gap = lower memory demand).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficShape {
+    /// Unmodulated stream (tenant sizing/arrival still apply).
+    Steady,
+    /// Triangle wave over `period` accesses: gap multiplier ramps
+    /// `peak -> 1 -> peak`, so each tenant sees a load trough and peak
+    /// per period.
+    Diurnal,
+    /// On/off duty cycle: `duty` percent of the period runs unshaped,
+    /// the rest multiplies gaps by `peak`.
+    Bursty,
+}
+
+impl TrafficShape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficShape::Steady => "steady",
+            TrafficShape::Diurnal => "diurnal",
+            TrafficShape::Bursty => "bursty",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "steady" => TrafficShape::Steady,
+            "diurnal" => TrafficShape::Diurnal,
+            "bursty" => TrafficShape::Bursty,
+            other => anyhow::bail!("unknown traffic shape {other:?} (steady|diurnal|bursty)"),
+        })
+    }
+}
+
+/// Fleet workload configuration (`[fleet]` config section / `--fleet`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    /// Tenant count (clamped to the host count at allocation time).
+    pub tenants: usize,
+    /// Zipf size skew × 100 (100 = classic 1/rank; 0 = uniform).
+    pub skew_pct: u32,
+    /// Load shape applied per tenant.
+    pub shape: TrafficShape,
+    /// Accesses per shape cycle.
+    pub period: u64,
+    /// Gap multiplier at the load trough (diurnal) / off window (bursty).
+    pub peak: u32,
+    /// Bursty on-window fraction of the period, percent.
+    pub duty_pct: u32,
+    /// Arrival stagger: instructions of delay per tenant rank, charged
+    /// on the tenant's first access.
+    pub arrival: u32,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            tenants: 4,
+            skew_pct: 100,
+            shape: TrafficShape::Steady,
+            period: 8192,
+            peak: 8,
+            duty_pct: 50,
+            arrival: 0,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Apply one `key = value` pair (config `[fleet]` section and the
+    /// CLI's `--fleet k=v,k=v` spec share this).
+    pub fn apply(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let num = |v: &str| -> anyhow::Result<u64> {
+            v.trim().parse().map_err(|_| anyhow::anyhow!("fleet.{key}: bad number {v:?}"))
+        };
+        match key {
+            "tenants" => self.tenants = (num(value)? as usize).max(1),
+            "skew" | "skew_pct" => self.skew_pct = num(value)? as u32,
+            "shape" => self.shape = TrafficShape::parse(value.trim())?,
+            "period" => self.period = num(value)?.max(1),
+            "peak" => self.peak = (num(value)? as u32).max(1),
+            "duty" | "duty_pct" => self.duty_pct = (num(value)? as u32).min(100),
+            "arrival" => self.arrival = num(value)? as u32,
+            other => anyhow::bail!(
+                "unknown fleet key {other:?} (tenants|skew|shape|period|peak|duty|arrival)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Parse a comma-separated `k=v` spec (CLI `--fleet`). An empty
+    /// string yields the defaults.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut out = FleetSpec::default();
+        for pair in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fleet spec {pair:?} is not key=value"))?;
+            out.apply(k.trim(), v)?;
+        }
+        Ok(out)
+    }
+
+    /// Render as a config `[fleet]` section (round-trips through
+    /// `SimConfig::apply`).
+    pub fn render(&self) -> String {
+        format!(
+            "[fleet]\ntenants = {}\nskew = {}\nshape = {}\nperiod = {}\npeak = {}\nduty = {}\narrival = {}\n",
+            self.tenants,
+            self.skew_pct,
+            self.shape.name(),
+            self.period,
+            self.peak,
+            self.duty_pct,
+            self.arrival
+        )
+    }
+
+    /// Hosts per tenant: Zipf(`skew`) weights, every tenant gets at
+    /// least one host, the remainder goes out by largest remainder
+    /// (ties to the lower tenant rank). Pure function of (spec, hosts):
+    /// identical on every worker thread.
+    pub fn host_allocation(&self, hosts: usize) -> Vec<usize> {
+        let hosts = hosts.max(1);
+        let t = self.tenants.clamp(1, hosts);
+        let s = self.skew_pct as f64 / 100.0;
+        let w: Vec<f64> = (0..t).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+        let tot: f64 = w.iter().sum();
+        let spare = hosts - t;
+        let ideal: Vec<f64> = w.iter().map(|wk| wk / tot * spare as f64).collect();
+        let mut alloc: Vec<usize> = ideal.iter().map(|x| 1 + x.floor() as usize).collect();
+        let mut given: usize = alloc.iter().sum();
+        // Largest fractional remainder first; deterministic tie-break on
+        // tenant rank.
+        let mut order: Vec<usize> = (0..t).collect();
+        order.sort_by(|&a, &b| {
+            let fa = ideal[a] - ideal[a].floor();
+            let fb = ideal[b] - ideal[b].floor();
+            fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        for &k in order.iter().cycle() {
+            if given == hosts {
+                break;
+            }
+            alloc[k] += 1;
+            given += 1;
+        }
+        alloc
+    }
+
+    /// Contiguous host-index range of each tenant.
+    pub fn tenant_ranges(&self, hosts: usize) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut at = 0;
+        for n in self.host_allocation(hosts) {
+            out.push(at..at + n);
+            at += n;
+        }
+        out
+    }
+
+    /// Tenant owning `host`.
+    pub fn tenant_of(&self, host: usize, hosts: usize) -> usize {
+        for (k, r) in self.tenant_ranges(hosts).iter().enumerate() {
+            if r.contains(&host) {
+                return k;
+            }
+        }
+        0
+    }
+
+    /// Wrap a host's base stream with this spec's arrival offset and
+    /// traffic shape.
+    pub fn wrap(
+        &self,
+        inner: Box<dyn TraceSource>,
+        host: usize,
+        hosts: usize,
+    ) -> Box<dyn TraceSource> {
+        let tenant = self.tenant_of(host, hosts);
+        Box::new(FleetSource::new(self, inner, tenant))
+    }
+}
+
+/// A tenant-shaped access stream: wraps any [`TraceSource`] and
+/// modulates `inst_gap` by the tenant's traffic shape. Only
+/// `next_access` is implemented — the default `fill_batch` loop keeps
+/// the shaped stream batch-deterministic.
+pub struct FleetSource {
+    inner: Box<dyn TraceSource>,
+    shape: TrafficShape,
+    period: u64,
+    peak: u64,
+    duty_pct: u64,
+    /// Per-tenant phase offset so tenant peaks are staggered.
+    phase: u64,
+    /// Arrival delay charged on the first access (instructions).
+    arrival: u64,
+    emitted: u64,
+}
+
+impl FleetSource {
+    pub fn new(spec: &FleetSpec, inner: Box<dyn TraceSource>, tenant: usize) -> Self {
+        let t = spec.tenants.max(1) as u64;
+        FleetSource {
+            inner,
+            shape: spec.shape,
+            period: spec.period.max(1),
+            peak: spec.peak.max(1) as u64,
+            duty_pct: spec.duty_pct as u64,
+            phase: (tenant as u64 % t) * (spec.period.max(1) / t),
+            arrival: spec.arrival as u64 * tenant as u64,
+            emitted: 0,
+        }
+    }
+
+    /// Gap multiplier at stream position `p` (1 = unshaped).
+    fn multiplier(&self, p: u64) -> u64 {
+        let pos = (p + self.phase) % self.period;
+        match self.shape {
+            TrafficShape::Steady => 1,
+            TrafficShape::Diurnal => {
+                // Triangle: peak at pos 0, trough (multiplier 1) at
+                // period/2, back to peak.
+                let half = (self.period / 2).max(1);
+                let dist = if pos <= half { half - pos } else { pos - half };
+                1 + (self.peak - 1) * dist / half
+            }
+            TrafficShape::Bursty => {
+                if pos * 100 < self.period * self.duty_pct {
+                    1
+                } else {
+                    self.peak
+                }
+            }
+        }
+    }
+}
+
+impl TraceSource for FleetSource {
+    fn next_access(&mut self) -> Access {
+        let mut a = self.inner.next_access();
+        let m = self.multiplier(self.emitted);
+        if m > 1 {
+            // Multiply the gap, adding m-1 so gap-0 streams still slow
+            // down (a pure multiplier would leave them untouched).
+            let shaped = (a.inst_gap as u64) * m + (m - 1);
+            a.inst_gap = shaped.min(u32::MAX as u64) as u32;
+        }
+        if self.emitted == 0 && self.arrival > 0 {
+            let delayed = a.inst_gap as u64 + self.arrival;
+            a.inst_gap = delayed.min(u32::MAX as u64) as u32;
+        }
+        self.emitted += 1;
+        a
+    }
+
+    fn name(&self) -> String {
+        format!("fleet-{}({})", self.shape.name(), self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadId;
+
+    #[test]
+    fn allocation_covers_hosts_and_skews() {
+        let spec = FleetSpec { tenants: 4, skew_pct: 100, ..FleetSpec::default() };
+        for hosts in [1usize, 3, 4, 7, 64, 256] {
+            let alloc = spec.host_allocation(hosts);
+            assert_eq!(alloc.iter().sum::<usize>(), hosts, "hosts {hosts}");
+            assert!(alloc.iter().all(|&n| n >= 1), "every tenant gets a host");
+            // Zipf: tenant 0 at least as large as the tail.
+            assert!(alloc[0] >= *alloc.last().unwrap());
+        }
+        // Ranges partition [0, hosts).
+        let ranges = spec.tenant_ranges(256);
+        assert_eq!(ranges[0].start, 0);
+        assert_eq!(ranges.last().unwrap().end, 256);
+        for h in [0usize, 17, 128, 255] {
+            let t = spec.tenant_of(h, 256);
+            assert!(ranges[t].contains(&h));
+        }
+    }
+
+    #[test]
+    fn uniform_skew_is_even() {
+        let spec = FleetSpec { tenants: 4, skew_pct: 0, ..FleetSpec::default() };
+        assert_eq!(spec.host_allocation(8), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn shapes_modulate_gaps_deterministically() {
+        let spec = FleetSpec {
+            shape: TrafficShape::Diurnal,
+            period: 64,
+            peak: 4,
+            ..FleetSpec::default()
+        };
+        let mk = || FleetSource::new(&spec, WorkloadId::Pr.source(7), 0);
+        let mut a = mk();
+        let mut b = mk();
+        let mut saw_shaped = false;
+        let mut base = WorkloadId::Pr.source(7);
+        for _ in 0..256 {
+            let x = a.next_access();
+            assert_eq!(x, b.next_access(), "shaping must be deterministic");
+            let raw = base.next_access();
+            assert_eq!(x.line, raw.line, "shaping must not touch addresses");
+            if x.inst_gap > raw.inst_gap {
+                saw_shaped = true;
+            }
+        }
+        assert!(saw_shaped, "diurnal trough must stretch some gaps");
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let spec =
+            FleetSpec { shape: TrafficShape::Bursty, period: 32, peak: 8, ..FleetSpec::default() };
+        let mut scalar = FleetSource::new(&spec, WorkloadId::Pr.source(3), 1);
+        let mut batched = FleetSource::new(&spec, WorkloadId::Pr.source(3), 1);
+        let want: Vec<Access> = (0..300).map(|_| scalar.next_access()).collect();
+        let mut got = Vec::new();
+        batched.fill_batch(&mut got, 300);
+        assert_eq!(want, got, "fill_batch must equal scalar pulls");
+    }
+
+    #[test]
+    fn arrival_delays_first_access_only() {
+        let spec = FleetSpec { arrival: 10_000, ..FleetSpec::default() };
+        let mut late = FleetSource::new(&spec, WorkloadId::Pr.source(3), 2);
+        let mut base = WorkloadId::Pr.source(3);
+        let first = late.next_access();
+        let raw = base.next_access();
+        assert_eq!(first.inst_gap as u64, raw.inst_gap as u64 + 20_000, "2 tenant ranks of delay");
+        assert_eq!(late.next_access().inst_gap, base.next_access().inst_gap);
+    }
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let spec = FleetSpec::parse("tenants=8,skew=120,shape=bursty,period=4096,peak=16,duty=25,arrival=512")
+            .unwrap();
+        assert_eq!(spec.tenants, 8);
+        assert_eq!(spec.skew_pct, 120);
+        assert_eq!(spec.shape, TrafficShape::Bursty);
+        assert_eq!(spec.period, 4096);
+        assert_eq!(spec.peak, 16);
+        assert_eq!(spec.duty_pct, 25);
+        assert_eq!(spec.arrival, 512);
+        assert!(spec.render().contains("shape = bursty"));
+        assert!(FleetSpec::parse("bogus=1").is_err());
+        assert!(FleetSpec::parse("shape=sometimes").is_err());
+        assert_eq!(FleetSpec::parse("").unwrap(), FleetSpec::default());
+    }
+}

@@ -12,6 +12,7 @@
 //! (GB -> MB) with the SSD internal DRAM scaled alongside (DESIGN.md §3).
 
 pub mod apexmap;
+pub mod fleet;
 pub mod graph;
 pub mod mixed;
 pub mod spec;

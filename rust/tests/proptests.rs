@@ -820,9 +820,7 @@ fn prop_multi_host_engine_batch_size_invariant() {
                 // Not a multiple of any batch size above 1: every epoch
                 // ends mid-batch, exercising the partial-batch path.
                 epoch_accesses: 1000,
-                artifacts: None,
-                record: false,
-                obs: None,
+                ..MultiHostOpts::default()
             };
             let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
             assert!(s.bi_invariant, "batch {batch} threads {threads}");
@@ -868,9 +866,7 @@ fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
                     hosts,
                     threads,
                     epoch_accesses: 1024,
-                    artifacts: None,
-                    record: false,
-                    obs: None,
+                    ..MultiHostOpts::default()
                 };
                 let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
                 assert!(s.bi_invariant, "spec {spec} hosts {hosts} threads {threads}");
@@ -887,6 +883,61 @@ fn prop_multi_host_engine_bit_deterministic_across_thread_counts() {
             }
         }
     }
+}
+
+/// PR 9 fleet invariant: at fleet scale (32 hosts) the aggregate
+/// fingerprint must not depend on *how* the epoch merge is scheduled.
+/// Random host→worker assignment permutations and merge-group sizes
+/// {1, 4, 16} are pure scheduling knobs: every variant must reproduce
+/// the threads-1 flat-merge baseline bit for bit, coherence counters
+/// and BI invariant included.
+#[test]
+fn prop_fleet_merge_schedule_is_fingerprint_invariant() {
+    use expand_cxl::config::{presets, PrefetcherKind};
+    use expand_cxl::sim::parallel::{run_multi_host_workload, MultiHostOpts};
+    use expand_cxl::workloads::WorkloadId;
+
+    const HOSTS: usize = 32;
+    let mut cfg = presets::smoke();
+    cfg.accesses = 2_000;
+    cfg.seed = 0xF1EE_7001;
+    cfg.prefetcher = PrefetcherKind::Expand;
+    cfg.cxl.topology = TopologySpec::parse("tree:2,2,4").unwrap();
+    let cfg = std::sync::Arc::new(cfg);
+
+    let run = |threads: usize, merge_group: usize, assignment: Option<Vec<usize>>| {
+        let opts = MultiHostOpts {
+            hosts: HOSTS,
+            threads,
+            epoch_accesses: 512,
+            merge_group,
+            assignment,
+            ..MultiHostOpts::default()
+        };
+        let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
+        assert!(s.bi_invariant, "threads {threads} group {merge_group}");
+        assert_eq!(s.per_host.len(), HOSTS);
+        s.fingerprint()
+    };
+
+    let baseline = run(1, 0, None);
+    forall(2, |rng, case| {
+        for group in [1usize, 4, 16] {
+            // Random host→worker permutation (Fisher–Yates).
+            let mut perm: Vec<usize> = (0..HOSTS).collect();
+            for i in (1..HOSTS).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                perm.swap(i, j);
+            }
+            let threads = [2usize, 3, 4][rng.below(3) as usize];
+            let got = run(threads, group, Some(perm.clone()));
+            assert_eq!(
+                baseline, got,
+                "case {case} group {group} threads {threads} perm {perm:?}: \
+                 merge schedule leaked into results"
+            );
+        }
+    });
 }
 
 /// PR 8 tentpole invariant: any `[fault]` schedule — random CRC and
@@ -939,9 +990,7 @@ fn prop_fault_schedules_thread_and_batch_invariant() {
                     hosts: 2,
                     threads,
                     epoch_accesses: 1000,
-                    artifacts: None,
-                    record: false,
-                    obs: None,
+                    ..MultiHostOpts::default()
                 };
                 let s = run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap();
                 assert!(
@@ -1256,9 +1305,8 @@ fn prop_multi_host_obs_exports_thread_count_invariant() {
                 hosts: 4,
                 threads,
                 epoch_accesses: 1024,
-                artifacts: None,
-                record: false,
                 obs: Some(ObsOptions { trace_events: true, ..ObsOptions::default() }),
+                ..MultiHostOpts::default()
             };
             run_multi_host_workload(&cfg, &opts, WorkloadId::Pr).unwrap()
         };

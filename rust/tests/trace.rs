@@ -96,9 +96,8 @@ fn multi_host_record_replay_is_thread_invariant_and_exact() {
         hosts: 4,
         threads,
         epoch_accesses: 2048,
-        artifacts: None,
         record,
-        obs: None,
+        ..MultiHostOpts::default()
     };
     let wl = WorkloadSpec::parse("pr").unwrap();
     let (original, recordings) = run_multi_host_traced(&cfg, &opts(2, true), |h| {
@@ -134,9 +133,7 @@ fn missing_trace_shard_fails_the_engine_cleanly() {
             hosts: 2,
             threads: 2,
             epoch_accesses: 1024,
-            artifacts: None,
-            record: false,
-            obs: None,
+            ..MultiHostOpts::default()
         },
         |h| wl.source_for_host(cfg.seed, h, 2),
     )
