@@ -338,15 +338,19 @@ fn multi_host_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
 
 /// The `fleet_scaling` group (tracked in `BENCH_PR9.json`): the
 /// hierarchical fleet engine at 256 multiplexed hosts on a shared
-/// 4-SSD pool. Three scenarios: the 256-host run on 1 worker thread
+/// 4-SSD pool. Four scenarios: the 256-host run on 1 worker thread
 /// (the sequential reference for the whole merge tree), the same run
-/// on every available core (threads auto — the headline), and the
+/// on every available core (threads auto — the headline), the
 /// all-core run with an 8-tenant diurnal fleet mix riding along (the
-/// tenant SLO rollup's cost). The serial and all-core runs must
-/// produce bit-identical fingerprints — asserted here, on every
-/// iteration — and the annotated headline is per-core scaling
-/// efficiency `(aps_all / aps_1) / cores` (acceptance floor 0.7).
-fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
+/// tenant SLO rollup's cost), and the all-core run with the engine
+/// self-profiler disabled (the profiler overhead guard — the profiler
+/// is on by default everywhere else). The serial and all-core runs
+/// must produce bit-identical fingerprints — asserted here, on every
+/// iteration, profiler on or off — and the annotated headlines are
+/// per-core scaling efficiency `(aps_all / aps_1) / cores` (acceptance
+/// floor 0.7) and the profiler on/off throughput ratio (target >=0.98,
+/// i.e. <=2% overhead; hard floor 0.90 to absorb wall-clock noise).
+fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>, Option<f64>) {
     const ITERS: usize = 2;
     const HOSTS: usize = 256;
     let mut results = Vec::new();
@@ -359,7 +363,11 @@ fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
     };
     let cores = expand_cxl::util::default_parallelism().min(HOSTS).max(1);
 
-    let mut thr = |name: &str, threads: usize, fleet: Option<&str>| -> Option<(f64, String)> {
+    let mut thr = |name: &str,
+                   threads: usize,
+                   fleet: Option<&str>,
+                   profile: bool|
+     -> Option<(f64, String)> {
         let full = format!("fleet_scaling_{name}");
         if !b.enabled(&full) {
             return None;
@@ -371,6 +379,7 @@ fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             fleet: fleet.map(|s| {
                 expand_cxl::workloads::fleet::FleetSpec::parse(s).unwrap()
             }),
+            profile,
             ..MultiHostOpts::default()
         };
         let total = (base.accesses * HOSTS) as u64;
@@ -385,13 +394,15 @@ fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
         Some((aps, fp))
     };
 
-    let serial = thr("hosts256_threads1", 1, None);
-    let wide = thr("hosts256_threads_all", 0, None);
+    let serial = thr("hosts256_threads1", 1, None, true);
+    let wide = thr("hosts256_threads_all", 0, None, true);
     let _mix = thr(
         "hosts256_fleet_mix",
         0,
         Some("tenants=8,skew=100,shape=diurnal,period=8192,peak=4,arrival=2048"),
+        true,
     );
+    let profile_off = thr("hosts256_profile_off", 0, None, false);
 
     if let (Some((_, f1)), Some((_, fw))) = (&serial, &wide) {
         assert_eq!(
@@ -399,6 +410,12 @@ fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             "threads-1 and all-core fleet runs must be bit-identical"
         );
         println!("fleet scaling: 256-host fingerprint identical at 1 and {cores} threads");
+    }
+    if let (Some((_, fw)), Some((_, fo))) = (&wide, &profile_off) {
+        assert_eq!(
+            fw, fo,
+            "the engine self-profiler must never perturb the fingerprint"
+        );
     }
     let efficiency = match (&serial, &wide) {
         (Some((a, _)), Some((p, _))) if *a > 0.0 => Some((p / a) / cores as f64),
@@ -409,7 +426,22 @@ fn fleet_scaling(b: &Bench) -> (Vec<Throughput>, Option<f64>) {
             "fleet scaling: per-core efficiency = {e:.2}x on {cores} cores (target >=0.7x)"
         );
     }
-    (results, efficiency)
+    // Profiler overhead guard: the all-core run with phase timers on vs
+    // off. The timer cost is a handful of monotonic-clock reads per
+    // worker per epoch, so the ratio should be ~1.0 (target >=0.98);
+    // the hard floor leaves room for wall-clock noise on busy CI boxes.
+    let profiler_ratio = match (&wide, &profile_off) {
+        (Some((on, _)), Some((off, _))) if *off > 0.0 => Some(on / off),
+        _ => None,
+    };
+    if let Some(r) = profiler_ratio {
+        println!(
+            "fleet scaling: profiler on/off throughput ratio = {r:.3} \
+             (target >=0.98, <=2% overhead)"
+        );
+        assert!(r >= 0.90, "engine self-profiler overhead above 10%: ratio {r:.3}");
+    }
+    (results, efficiency, profiler_ratio)
 }
 
 /// The `trace_replay` group (tracked in `BENCH_PR5.json`): trace
@@ -833,7 +865,7 @@ fn main() {
         },
     );
     // --- End-to-end: fleet_scaling group (tracked baseline) -------------
-    let (fl, efficiency) = fleet_scaling(&b);
+    let (fl, efficiency, profiler_ratio) = fleet_scaling(&b);
     let ok_fl = publish_group(
         "fleet_scaling",
         &fl,
@@ -843,12 +875,20 @@ fn main() {
         opts.max_regress,
         |doc| {
             // The fleet headline: per-core scaling efficiency of the
-            // 256-host hierarchical merge (acceptance floor 0.7).
+            // 256-host hierarchical merge (acceptance floor 0.7), plus
+            // the engine self-profiler's on/off throughput ratio
+            // (target >=0.98, i.e. <=2% overhead).
             if let Json::Obj(m) = doc {
                 if let Some(e) = efficiency {
                     m.insert(
                         "per_core_efficiency_hosts256".to_string(),
                         Json::Num((e * 100.0).round() / 100.0),
+                    );
+                }
+                if let Some(r) = profiler_ratio {
+                    m.insert(
+                        "profiler_overhead_on_vs_off".to_string(),
+                        Json::Num((r * 1000.0).round() / 1000.0),
                     );
                 }
                 m.insert(

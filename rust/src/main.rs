@@ -19,6 +19,8 @@ use expand_cxl::cxl::enumeration::Enumeration;
 use expand_cxl::cxl::{Fabric, NodeKind, Topology};
 use expand_cxl::fault::FaultConfig;
 use expand_cxl::figures::{self, FigOpts};
+use expand_cxl::obs::live::{LiveServer, LiveState};
+use expand_cxl::obs::profile::{EngineProfile, Phase};
 use expand_cxl::obs::{self, ObsOptions};
 use expand_cxl::runtime::Runtime;
 use expand_cxl::sim::parallel::{host_seed, run_multi_host_traced, MultiHostOpts};
@@ -26,6 +28,7 @@ use expand_cxl::sim::runner::Runner;
 use expand_cxl::ssd::DevicePool;
 use expand_cxl::trace::{import_file, write_trace, ImportFormat, SharedTrace, TraceReader};
 use expand_cxl::util::cli::{render_help, Args, CommandHelp};
+use expand_cxl::util::json;
 use expand_cxl::util::{default_parallelism, log, write_atomic};
 use expand_cxl::workloads::fleet::FleetSpec;
 use expand_cxl::workloads::{TraceSource, WorkloadSpec};
@@ -44,7 +47,8 @@ const COMMANDS: &[CommandHelp] = &[
                 [--hit-notify-stride N] [--dir-entries N] [--device-update-every N] \
                 [--hosts N] [--threads N] [--epoch N] [--batch N] \
                 [--merge-group N] [--fleet k=v,...] \
-                [--metrics-out PATH] [--trace-events PATH] [--series-out PATH] \
+                [--metrics-out PATH] [--trace-events PATH] [--trace-events-cap N] \
+                [--series-out PATH] [--profile-out PATH] [--live-metrics ADDR] \
                 [--fault SPEC] \
                 (hosts>1 runs the deterministic epoch-quantized fleet engine \
                 — up to 4096 hosts, hierarchical epoch merging, bit-identical \
@@ -55,14 +59,28 @@ const COMMANDS: &[CommandHelp] = &[
                 into a replayable trace; trace:<path> replays one; \
                 --metrics-out dumps latency histograms as JSON, \
                 --trace-events a Perfetto-loadable Chrome trace, --series-out \
-                a per-epoch CSV; --fault injects a deterministic fault \
+                a per-epoch CSV — per-tenant columns when --fleet is \
+                active; --profile-out dumps the engine self-profile \
+                (phase/worker timers, wall clock only, never \
+                fingerprinted) as JSON and a multi-host run prints the \
+                `profile:` table; --live-metrics ADDR serves GET /metrics \
+                (Prometheus text) and GET /snapshot (JSON) for the run's \
+                duration — 127.0.0.1:0 picks a free port, printed on \
+                stdout; --fault injects a deterministic fault \
                 schedule, e.g. 'link_crc=1e-6,dev_stall=ep2@5Macc:200us,\
                 hot_remove=ep3@8Macc,poison=1e-7')",
     },
     CommandHelp {
         name: "obs",
-        summary: "validate observability exports",
-        usage: "expand obs check-metrics <metrics.json> | obs check-trace <trace.json>",
+        summary: "validate observability exports, diff runs, render profiles",
+        usage: "expand obs check-metrics <metrics.json> | check-trace <trace.json> | \
+                check-profile <profile.json> | check-prom <scrape.txt> | \
+                check-snapshot <snap.json> | report <profile.json> | \
+                diff <a.json> <b.json> [--threshold PCT (default 5)] \
+                [--only SUBSTR] [--out PATH]   (diff compares any two \
+                metrics/profile JSON exports, classifies each numeric \
+                delta as a regression or improvement by key name, and \
+                exits nonzero when a regression beats the threshold)",
     },
     CommandHelp {
         name: "trace",
@@ -185,15 +203,17 @@ fn run_spec(
         args.get("workload").is_some() || !args.flag("workload"),
         "--workload needs a value (a workload name or trace:<path>)"
     );
-    for opt in ["metrics-out", "trace-events", "series-out"] {
+    for opt in ["metrics-out", "trace-events", "series-out", "profile-out", "live-metrics"] {
         anyhow::ensure!(
             args.get(opt).is_some() || !args.flag(opt),
-            "--{opt} needs a path (e.g. --{opt} /tmp/out.json)"
+            "--{opt} needs a value (e.g. --{opt} /tmp/out.json, or an ADDR for --live-metrics)"
         );
     }
     let metrics_out = args.get("metrics-out").map(str::to_string);
     let trace_out = args.get("trace-events").map(str::to_string);
     let series_out = args.get("series-out").map(str::to_string);
+    let profile_out = args.get("profile-out").map(str::to_string);
+    let trace_cap = args.get_usize("trace-events-cap", ObsOptions::default().trace_capacity)?;
     let obs_on = metrics_out.is_some() || trace_out.is_some() || series_out.is_some();
     let cfg = Arc::new(build_config(args)?);
     let spec_str = positional_workload
@@ -231,6 +251,26 @@ fn run_spec(
         write_boost = 0.0;
     }
 
+    // Live telemetry: bind before the run starts so a scraper can watch
+    // the whole thing. `127.0.0.1:0` picks a free port; the bound
+    // address goes to stdout (like `fingerprint=`) for harnesses to
+    // parse. The server thread only ever reads the shared state, so it
+    // cannot perturb the simulation.
+    let live = match args.get("live-metrics") {
+        Some(bind) => {
+            let state = LiveState::new();
+            state.publish(|s| {
+                s.workload = spec_str.clone();
+                s.hosts = cfg.hosts;
+                s.threads = cfg.threads;
+            });
+            let server = LiveServer::spawn(bind, state.clone())?;
+            println!("live-metrics: listening on http://{}", server.addr());
+            Some((state, server))
+        }
+        None => None,
+    };
+
     if cfg.hosts > 1 {
         // Epoch-quantized multi-host engine: N shards, one shared pool,
         // bit-identical results for any --threads value. A trace spec
@@ -239,8 +279,10 @@ fn run_spec(
         opts.record = record.is_some();
         opts.obs = obs_on.then(|| ObsOptions {
             trace_events: trace_out.is_some(),
+            trace_capacity: trace_cap,
             ..ObsOptions::default()
         });
+        opts.live = live.as_ref().map(|(state, _)| state.clone());
         let seed = cfg.seed;
         let hosts = opts.hosts;
         // Trace replay: open + decode the file once here (errors surface
@@ -286,17 +328,26 @@ fn run_spec(
         if let Some(fleet) = &stats.fleet {
             print!("{}", fleet.render());
         }
+        if let Some(p) = &stats.profile {
+            print!("{}", p.render());
+        }
         println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
         anyhow::ensure!(stats.bi_invariant, "shared BI-directory invariant violated");
+        let tenants = cfg.fleet.as_ref().map(|f| tenant_of_host(f, hosts));
         if let Some(rec) = &stats.obs {
             write_obs_outputs(
                 rec,
                 stats.fingerprint_hash(),
                 stats.hosts,
+                tenants.as_deref(),
                 metrics_out.as_deref(),
                 trace_out.as_deref(),
                 series_out.as_deref(),
             )?;
+        }
+        if let (Some(path), Some(p)) = (&profile_out, &stats.profile) {
+            write_atomic(path, p.json().as_bytes())?;
+            log::info(&format!("wrote engine profile JSON to {path}"));
         }
         if let Some(path) = record {
             let workload =
@@ -306,6 +357,11 @@ fn run_spec(
                 "recorded {} accesses ({} host streams) to {path}",
                 header.records, header.hosts
             ));
+        }
+        // The engine already published the final snapshot and flipped
+        // `done`; keep serving until shutdown so a last scrape lands.
+        if let Some((_, server)) = live {
+            server.shutdown();
         }
         return Ok(());
     }
@@ -333,8 +389,12 @@ fn run_spec(
         runner.enable_obs(ObsOptions {
             series_stride: cfg.epoch_accesses as u64,
             trace_events: trace_out.is_some(),
+            trace_capacity: trace_cap,
             ..ObsOptions::default()
         });
+    }
+    if let Some((state, _)) = &live {
+        runner.set_live(state.clone(), cfg.epoch_accesses.max(1) as u64);
     }
     let stats = runner.run(&mut *src, cfg.accesses);
     println!("{}", stats.summary());
@@ -355,23 +415,62 @@ fn run_spec(
     if let Some(o) = &stats.obs {
         print!("{}", o.render());
     }
+    // Single-host runs have no merge phases: the whole replay is one
+    // HostExec span, which still yields wall/busy numbers and a
+    // schema-valid file for `obs diff` against engine profiles.
+    let profile = profile_out.is_some().then(|| {
+        let mut p = EngineProfile::new(1);
+        let wall_ns = (stats.wall_s * 1e9) as u64;
+        p.record(0, Phase::HostExec, wall_ns);
+        p.hosts = 1;
+        p.threads = 1;
+        p.wall_ns = wall_ns;
+        p
+    });
+    if let Some(p) = &profile {
+        print!("{}", p.render());
+    }
     println!("fingerprint=0x{:016x}", stats.fingerprint_hash());
     if let Some(rec) = runner.take_obs() {
         write_obs_outputs(
             &rec,
             stats.fingerprint_hash(),
             1,
+            None,
             metrics_out.as_deref(),
             trace_out.as_deref(),
             series_out.as_deref(),
         )?;
+    }
+    if let (Some(path), Some(p)) = (&profile_out, &profile) {
+        write_atomic(path, p.json().as_bytes())?;
+        log::info(&format!("wrote engine profile JSON to {path}"));
     }
     if let Some(path) = record {
         let recording = runner.take_recording();
         let header = write_trace(path, &stats.workload, cfg.seed, &[recording])?;
         log::info(&format!("recorded {} accesses to {path}", header.records));
     }
+    if let Some((state, server)) = live {
+        use std::sync::atomic::Ordering;
+        state.accesses.store(stats.accesses, Ordering::Relaxed);
+        state.publish(|s| s.obs = stats.obs.clone());
+        state.done.store(true, Ordering::Release);
+        server.shutdown();
+    }
     Ok(())
+}
+
+/// Host → tenant index map derived from the fleet spec's contiguous
+/// tenant ranges (feeds the fleet-aware series CSV).
+fn tenant_of_host(fleet: &FleetSpec, hosts: usize) -> Vec<usize> {
+    let mut map = vec![0usize; hosts];
+    for (t, r) in fleet.tenant_ranges(hosts).iter().enumerate() {
+        for h in r.clone() {
+            map[h] = t;
+        }
+    }
+    map
 }
 
 /// Write the requested observability exports from a finished recorder:
@@ -381,6 +480,7 @@ fn write_obs_outputs(
     rec: &obs::ObsRecorder,
     fingerprint: u64,
     hosts: usize,
+    tenants: Option<&[usize]>,
     metrics_out: Option<&str>,
     trace_out: Option<&str>,
     series_out: Option<&str>,
@@ -390,11 +490,24 @@ fn write_obs_outputs(
         log::info(&format!("wrote metrics JSON to {path}"));
     }
     if let Some(path) = trace_out {
+        // Ring truncation must never be silent: the capture count and
+        // overwrite count go to stdout next to the file, and the same
+        // numbers come back out of `obs check-trace`.
+        println!(
+            "trace-events: {} captured, {} dropped (cap {}; raise with --trace-events-cap)",
+            rec.events.len(),
+            rec.events.dropped,
+            rec.opts.trace_capacity
+        );
         write_atomic(path, rec.trace_json().as_bytes())?;
         log::info(&format!("wrote Chrome trace events to {path} (load in ui.perfetto.dev)"));
     }
     if let Some(path) = series_out {
-        write_atomic(path, rec.series.to_csv(rec.endpoints()).as_bytes())?;
+        let csv = match tenants {
+            Some(map) => rec.series.to_csv_fleet(rec.endpoints(), map),
+            None => rec.series.to_csv(rec.endpoints()),
+        };
+        write_atomic(path, csv.as_bytes())?;
         log::info(&format!("wrote per-epoch series CSV to {path}"));
     }
     Ok(())
@@ -402,21 +515,70 @@ fn write_obs_outputs(
 
 fn cmd_obs(args: &Args) -> anyhow::Result<()> {
     let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
-    if !matches!(sub, "check-metrics" | "check-trace") {
-        anyhow::bail!("unknown obs subcommand {sub:?} (check-metrics|check-trace)");
-    }
-    let path = args
-        .positional
-        .get(2)
-        .ok_or_else(|| anyhow::anyhow!("obs {sub}: missing <path>"))?;
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
-    if sub == "check-metrics" {
-        let digest = obs::validate_metrics_json(&text)?;
-        println!("{path}: OK ({digest})");
-    } else {
-        let events = obs::trace_events::validate_chrome_json(&text)?;
-        println!("{path}: OK ({events} trace events)");
+    let read_at = |i: usize, what: &str| -> anyhow::Result<(String, String)> {
+        let path = args
+            .positional
+            .get(i)
+            .ok_or_else(|| anyhow::anyhow!("obs {sub}: missing <{what}>"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        Ok((path.clone(), text))
+    };
+    match sub {
+        "check-metrics" => {
+            let (path, text) = read_at(2, "metrics.json")?;
+            let digest = obs::validate_metrics_json(&text)?;
+            println!("{path}: OK ({digest})");
+        }
+        "check-trace" => {
+            let (path, text) = read_at(2, "trace.json")?;
+            let (events, dropped) = obs::trace_events::validate_chrome_json(&text)?;
+            println!("{path}: OK ({events} trace events, {dropped} dropped)");
+        }
+        "check-profile" => {
+            let (path, text) = read_at(2, "profile.json")?;
+            let digest = obs::profile::validate_profile_json(&text)?;
+            println!("{path}: OK ({digest})");
+        }
+        "check-prom" => {
+            let (path, text) = read_at(2, "scrape.txt")?;
+            let samples = obs::live::validate_prometheus_text(&text)?;
+            println!("{path}: OK ({samples} samples)");
+        }
+        "check-snapshot" => {
+            let (path, text) = read_at(2, "snapshot.json")?;
+            let digest = obs::live::validate_snapshot_json(&text)?;
+            println!("{path}: OK ({digest})");
+        }
+        "report" => {
+            let (_, text) = read_at(2, "profile.json")?;
+            print!("{}", obs::profile::report_from_json(&text)?);
+        }
+        "diff" => {
+            let (a_path, a_text) = read_at(2, "a.json")?;
+            let (b_path, b_text) = read_at(3, "b.json")?;
+            let threshold = args.get_f64("threshold", 5.0)?;
+            let a = json::parse(&a_text)
+                .map_err(|e| anyhow::anyhow!("cannot parse {a_path}: {e}"))?;
+            let b = json::parse(&b_text)
+                .map_err(|e| anyhow::anyhow!("cannot parse {b_path}: {e}"))?;
+            let report = obs::diff::diff_docs(&a, &b, threshold, args.get("only"));
+            let rendered = format!("obs diff {a_path} -> {b_path}\n{}", report.render(threshold));
+            print!("{rendered}");
+            if let Some(out) = args.get("out") {
+                write_atomic(out, rendered.as_bytes())?;
+                log::info(&format!("wrote diff report to {out}"));
+            }
+            anyhow::ensure!(
+                !report.has_regressions(),
+                "obs diff: {} regression(s) beyond {threshold}% (see report above)",
+                report.regressions().count()
+            );
+        }
+        other => anyhow::bail!(
+            "unknown obs subcommand {other:?} (check-metrics|check-trace|check-profile|\
+             check-prom|check-snapshot|report|diff)"
+        ),
     }
     Ok(())
 }

@@ -559,6 +559,11 @@ pub struct MultiHostStats {
     /// drove the run. Deterministic (mergeable histograms + fixed tenant
     /// blocks), so it participates in the fingerprint.
     pub fleet: Option<FleetStats>,
+    /// Engine self-profile (phase timers, worker busy/stall split) —
+    /// wall-clock data, so like `wall_s` it is deliberately EXCLUDED
+    /// from the hand-written fingerprint above: `--profile-out` must
+    /// never perturb determinism checks.
+    pub profile: Option<crate::obs::profile::EngineProfile>,
 }
 
 impl MultiHostStats {

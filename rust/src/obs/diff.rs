@@ -1,0 +1,361 @@
+//! Cross-run regression attribution: structural diff of two exported
+//! JSON documents (engine profiles, metrics files, bench baselines)
+//! with percent deltas and direction-aware regression flags.
+//!
+//! `expand obs diff a.json b.json` walks both documents, pairs leaves
+//! by path (objects by key, arrays by `name` field when every element
+//! has one, else by index), computes percent deltas for numeric leaves
+//! and classifies each path as lower-better (latencies, stalls,
+//! drops), higher-better (throughput, hit ratios, busy fractions) or
+//! neutral. A delta past the threshold in the *worse* direction is a
+//! regression: the report lists regressions first and the CLI exits
+//! nonzero — so the CI bench gate gains a per-phase "what got slower"
+//! explanation instead of a single throughput number.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LowerBetter,
+    HigherBetter,
+    Neutral,
+}
+
+impl Direction {
+    fn tag(self) -> &'static str {
+        match self {
+            Direction::LowerBetter => "lower-better",
+            Direction::HigherBetter => "higher-better",
+            Direction::Neutral => "neutral",
+        }
+    }
+}
+
+/// Heuristic direction classification from the leaf's path.
+pub fn classify(path: &str) -> Direction {
+    let lower = path.to_ascii_lowercase();
+    for good in ["busy_frac", "efficiency", "throughput", "per_sec", "hit"] {
+        if lower.contains(good) {
+            return Direction::HigherBetter;
+        }
+    }
+    for bad in ["barrier", "stall", "dropped"] {
+        if lower.contains(bad) {
+            return Direction::LowerBetter;
+        }
+    }
+    let leaf = lower.rsplit(['.', '/']).next().unwrap_or(&lower);
+    let time_suffix = leaf.ends_with("_ns") || leaf.ends_with("_ps") || leaf.ends_with("_s");
+    let time_prefix = ["p50", "p99", "p999", "max", "mean", "min", "wall"]
+        .iter()
+        .any(|p| leaf.starts_with(p));
+    if time_suffix || time_prefix {
+        return Direction::LowerBetter;
+    }
+    Direction::Neutral
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub path: String,
+    pub a: f64,
+    pub b: f64,
+    /// Signed percent delta b vs a (`+` means b is larger).
+    pub delta_pct: f64,
+    pub direction: Direction,
+    pub regression: bool,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DiffReport {
+    /// Changed numeric leaves (all of them, unfiltered by magnitude).
+    pub rows: Vec<DiffRow>,
+    pub only_a: Vec<String>,
+    pub only_b: Vec<String>,
+    /// Non-numeric leaves whose values differ (strings, bools, type
+    /// mismatches) — reported, never a regression.
+    pub changed_nonnum: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> impl Iterator<Item = &DiffRow> {
+        self.rows.iter().filter(|r| r.regression)
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.rows.iter().any(|r| r.regression)
+    }
+
+    /// Human-readable report: regressions first (sorted by magnitude),
+    /// then the largest other movers, then structural notes.
+    pub fn render(&self, threshold_pct: f64) -> String {
+        let mut out = String::new();
+        let regs: Vec<&DiffRow> = {
+            let mut v: Vec<&DiffRow> = self.rows.iter().filter(|r| r.regression).collect();
+            v.sort_by(|x, y| {
+                y.delta_pct.abs().partial_cmp(&x.delta_pct.abs()).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            v
+        };
+        let _ = writeln!(
+            out,
+            "diff: {} numeric deltas, {} regressions (threshold {threshold_pct}%)",
+            self.rows.len(),
+            regs.len()
+        );
+        for r in &regs {
+            let _ = writeln!(
+                out,
+                "  REGRESSION {:<52} {:>14.3} -> {:>14.3}  {:>+8.1}%  [{}]",
+                r.path,
+                r.a,
+                r.b,
+                r.delta_pct,
+                r.direction.tag()
+            );
+        }
+        let mut movers: Vec<&DiffRow> = self.rows.iter().filter(|r| !r.regression).collect();
+        movers.sort_by(|x, y| {
+            y.delta_pct.abs().partial_cmp(&x.delta_pct.abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in movers.iter().take(20) {
+            let _ = writeln!(
+                out,
+                "  changed    {:<52} {:>14.3} -> {:>14.3}  {:>+8.1}%  [{}]",
+                r.path,
+                r.a,
+                r.b,
+                r.delta_pct,
+                r.direction.tag()
+            );
+        }
+        if movers.len() > 20 {
+            let _ = writeln!(out, "  ... {} more below-threshold deltas elided", movers.len() - 20);
+        }
+        for p in &self.changed_nonnum {
+            let _ = writeln!(out, "  non-numeric change: {p}");
+        }
+        for p in &self.only_a {
+            let _ = writeln!(out, "  only in A: {p}");
+        }
+        for p in &self.only_b {
+            let _ = writeln!(out, "  only in B: {p}");
+        }
+        out
+    }
+}
+
+fn included(only: Option<&str>, path: &str) -> bool {
+    only.map(|f| path.contains(f)).unwrap_or(true)
+}
+
+fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+/// Arrays whose every element is an object with a string `name` field
+/// pair by name (bench result rows); everything else pairs by index.
+fn array_key(items: &[Json]) -> bool {
+    !items.is_empty()
+        && items.iter().all(|it| it.get("name").and_then(|v| v.as_str()).is_some())
+}
+
+fn walk(
+    path: &str,
+    a: &Json,
+    b: &Json,
+    threshold_pct: f64,
+    only: Option<&str>,
+    report: &mut DiffReport,
+) {
+    let here = included(only, path);
+    match (a, b) {
+        (Json::Obj(ma), Json::Obj(mb)) => {
+            for (k, va) in ma {
+                match mb.get(k) {
+                    Some(vb) => walk(&join(path, k), va, vb, threshold_pct, only, report),
+                    None => {
+                        let p = join(path, k);
+                        if included(only, &p) {
+                            report.only_a.push(p);
+                        }
+                    }
+                }
+            }
+            for k in mb.keys().filter(|k| !ma.contains_key(*k)) {
+                let p = join(path, k);
+                if included(only, &p) {
+                    report.only_b.push(p);
+                }
+            }
+        }
+        (Json::Arr(va), Json::Arr(vb)) if array_key(va) && array_key(vb) => {
+            let name_of = |it: &Json| it.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+            for ia in va {
+                let n = name_of(ia);
+                let p = format!("{path}[{n}]");
+                match vb.iter().find(|ib| name_of(ib) == n) {
+                    Some(ib) => walk(&p, ia, ib, threshold_pct, only, report),
+                    None => {
+                        if included(only, &p) {
+                            report.only_a.push(p);
+                        }
+                    }
+                }
+            }
+            for ib in vb {
+                let n = name_of(ib);
+                if !va.iter().any(|ia| name_of(ia) == n) {
+                    let p = format!("{path}[{n}]");
+                    if included(only, &p) {
+                        report.only_b.push(p);
+                    }
+                }
+            }
+        }
+        (Json::Arr(va), Json::Arr(vb)) => {
+            for (i, (ia, ib)) in va.iter().zip(vb).enumerate() {
+                walk(&format!("{path}[{i}]"), ia, ib, threshold_pct, only, report);
+            }
+            match va.len().cmp(&vb.len()) {
+                std::cmp::Ordering::Greater if here => {
+                    report.only_a.push(format!("{path}[{}..{}]", vb.len(), va.len()));
+                }
+                std::cmp::Ordering::Less if here => {
+                    report.only_b.push(format!("{path}[{}..{}]", va.len(), vb.len()));
+                }
+                _ => {}
+            }
+        }
+        (Json::Num(x), Json::Num(y)) => {
+            if x == y || !here {
+                return;
+            }
+            let delta_pct = if *x == 0.0 {
+                100.0 * y.signum()
+            } else {
+                (y - x) / x.abs() * 100.0
+            };
+            let direction = classify(path);
+            let worse = match direction {
+                Direction::LowerBetter => y > x,
+                Direction::HigherBetter => y < x,
+                Direction::Neutral => false,
+            };
+            report.rows.push(DiffRow {
+                path: path.to_string(),
+                a: *x,
+                b: *y,
+                delta_pct,
+                direction,
+                regression: worse && delta_pct.abs() > threshold_pct,
+            });
+        }
+        _ => {
+            if a != b && here {
+                report.changed_nonnum.push(path.to_string());
+            }
+        }
+    }
+}
+
+/// Diff two parsed documents. `only` restricts reporting to paths
+/// containing the substring; `threshold_pct` gates what counts as a
+/// regression (all changed numerics are still listed).
+pub fn diff_docs(a: &Json, b: &Json, threshold_pct: f64, only: Option<&str>) -> DiffReport {
+    let mut report = DiffReport::default();
+    walk("", a, b, threshold_pct, only, &mut report);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn parse(s: &str) -> Json {
+        json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn classifies_directions_from_paths() {
+        assert_eq!(classify("summary.busy_frac"), Direction::HigherBetter);
+        assert_eq!(classify("results[chain].per_sec"), Direction::HigherBetter);
+        assert_eq!(classify("phases.barrier_epoch.share"), Direction::LowerBetter);
+        assert_eq!(classify("dropped_events"), Direction::LowerBetter);
+        assert_eq!(classify("phases.host_exec.p99_ns"), Direction::LowerBetter);
+        assert_eq!(classify("classes.demand_miss.p50_ps"), Direction::LowerBetter);
+        assert_eq!(classify("wall_ns"), Direction::LowerBetter);
+        assert_eq!(classify("phases.host_exec.share"), Direction::Neutral);
+        assert_eq!(classify("hosts"), Direction::Neutral);
+    }
+
+    #[test]
+    fn flags_regressions_only_past_threshold_in_worse_direction() {
+        let a = parse(r#"{"p99_ns": 100, "throughput": 50, "hosts": 8, "share": 0.5}"#);
+        let b = parse(r#"{"p99_ns": 150, "throughput": 60, "hosts": 16, "share": 0.9}"#);
+        let r = diff_docs(&a, &b, 10.0, None);
+        assert_eq!(r.rows.len(), 4);
+        // p99 +50% lower-better -> regression.
+        let p99 = r.rows.iter().find(|x| x.path == "p99_ns").unwrap();
+        assert!(p99.regression && (p99.delta_pct - 50.0).abs() < 1e-9);
+        // throughput went UP: improvement, not regression.
+        assert!(!r.rows.iter().find(|x| x.path == "throughput").unwrap().regression);
+        // neutral paths never regress.
+        assert!(!r.rows.iter().find(|x| x.path == "hosts").unwrap().regression);
+        // Same diff under a 60% threshold: no regressions.
+        assert!(!diff_docs(&a, &b, 60.0, None).has_regressions());
+        // Throughput *drop* past threshold is a regression.
+        let c = parse(r#"{"p99_ns": 100, "throughput": 20, "hosts": 8, "share": 0.5}"#);
+        let r2 = diff_docs(&a, &c, 10.0, None);
+        assert!(r2.rows.iter().find(|x| x.path == "throughput").unwrap().regression);
+    }
+
+    #[test]
+    fn pairs_named_array_rows_and_reports_structure() {
+        let a = parse(
+            r#"{"results": [{"name": "chain", "per_sec": 100}, {"name": "tree", "per_sec": 50}],
+                "note": "x"}"#,
+        );
+        let b = parse(
+            r#"{"results": [{"name": "tree", "per_sec": 25}, {"name": "star", "per_sec": 9}],
+                "note": "y"}"#,
+        );
+        let r = diff_docs(&a, &b, 5.0, None);
+        let tree = r.rows.iter().find(|x| x.path == "results[tree].per_sec").unwrap();
+        assert!(tree.regression, "per_sec halved must regress");
+        assert_eq!(r.only_a, vec!["results[chain]".to_string()]);
+        assert_eq!(r.only_b, vec!["results[star]".to_string()]);
+        assert_eq!(r.changed_nonnum, vec!["note".to_string()]);
+        let rendered = r.render(5.0);
+        assert!(rendered.contains("REGRESSION"), "{rendered}");
+        assert!(rendered.contains("only in A: results[chain]"), "{rendered}");
+    }
+
+    #[test]
+    fn only_filter_restricts_paths() {
+        let a = parse(r#"{"phases": {"barrier_run": {"share": 0.1}}, "wall_ns": 100}"#);
+        let b = parse(r#"{"phases": {"barrier_run": {"share": 0.4}}, "wall_ns": 900}"#);
+        let r = diff_docs(&a, &b, 5.0, Some("share"));
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].path, "phases.barrier_run.share");
+        assert!(r.rows[0].regression, "barrier share tripled");
+    }
+
+    #[test]
+    fn zero_baseline_and_identical_docs() {
+        let a = parse(r#"{"dropped": 0, "same": 5}"#);
+        let b = parse(r#"{"dropped": 40, "same": 5}"#);
+        let r = diff_docs(&a, &b, 5.0, None);
+        assert_eq!(r.rows.len(), 1);
+        assert!((r.rows[0].delta_pct - 100.0).abs() < 1e-9);
+        assert!(r.rows[0].regression);
+        let r2 = diff_docs(&a, &a, 5.0, None);
+        assert!(r2.rows.is_empty() && !r2.has_regressions());
+    }
+}

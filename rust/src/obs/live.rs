@@ -1,0 +1,620 @@
+//! Live telemetry endpoint: a std-only TCP server exposing the state of
+//! an in-flight run as Prometheus text (`GET /metrics`) and a JSON
+//! snapshot (`GET /snapshot`).
+//!
+//! The simulation side publishes into a [`LiveState`] — hot counters as
+//! atomics (bumped at epoch barriers / batch ends, never per access)
+//! and a mutex-guarded [`LiveSnapshot`] republished by the engine's
+//! barrier leader once per epoch. The server thread only ever *reads*,
+//! so a scrape can never perturb simulated state: run fingerprints are
+//! bit-identical with `--live-metrics` on or off (pinned by a test).
+
+use crate::obs::profile::{EngineProfile, PROFILE_SCHEMA};
+use crate::obs::ObsSummary;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub const SNAPSHOT_SCHEMA: &str = "expand-live-snapshot/v1";
+
+/// Periodically re-published structured state (epoch granularity).
+#[derive(Debug, Clone, Default)]
+pub struct LiveSnapshot {
+    pub workload: String,
+    pub hosts: usize,
+    pub threads: usize,
+    /// Latest per-endpoint utilization rho from the epoch merge.
+    pub ep_rho: Vec<f64>,
+    /// Cumulative per-endpoint fabric requests.
+    pub ep_requests: Vec<u64>,
+    /// Latest per-endpoint contention penalty (ps).
+    pub ep_contention_ps: Vec<u64>,
+    /// Merged latency digest — cheap to produce only once shards merge,
+    /// so it appears when the run finishes (None mid-run).
+    pub obs: Option<ObsSummary>,
+    pub profile: Option<EngineProfile>,
+}
+
+/// Shared between the simulation (writer) and the telemetry server
+/// (reader).
+#[derive(Debug, Default)]
+pub struct LiveState {
+    pub accesses: AtomicU64,
+    pub epochs: AtomicU64,
+    pub link_retries: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub poison_drops: AtomicU64,
+    pub busy_ns: AtomicU64,
+    pub stall_ns: AtomicU64,
+    pub done: AtomicBool,
+    snap: Mutex<LiveSnapshot>,
+}
+
+impl LiveState {
+    pub fn new() -> Arc<LiveState> {
+        Arc::new(LiveState::default())
+    }
+
+    /// Mutate the structured snapshot under the lock (leader-only on
+    /// the engine side, so contention is nil).
+    pub fn publish(&self, f: impl FnOnce(&mut LiveSnapshot)) {
+        if let Ok(mut s) = self.snap.lock() {
+            f(&mut s);
+        }
+    }
+
+    pub fn snapshot(&self) -> LiveSnapshot {
+        self.snap.lock().map(|s| s.clone()).unwrap_or_default()
+    }
+
+    pub fn busy_frac(&self) -> f64 {
+        let busy = self.busy_ns.load(Ordering::Relaxed);
+        let stall = self.stall_ns.load(Ordering::Relaxed);
+        if busy + stall == 0 {
+            1.0
+        } else {
+            busy as f64 / (busy + stall) as f64
+        }
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn metric(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Render the current state in the Prometheus text exposition format
+/// (v0.0.4). Counter names end in `_total`; everything else is a gauge.
+pub fn render_prometheus(state: &LiveState) -> String {
+    let snap = state.snapshot();
+    let mut out = String::with_capacity(2048);
+    metric(&mut out, "expand_up", "gauge", "1 while the run is in flight, 0 once finished.");
+    let up = if state.done.load(Ordering::Acquire) { 0 } else { 1 };
+    out.push_str(&format!("expand_up {up}\n"));
+    metric(&mut out, "expand_run_info", "gauge", "Static run metadata carried as labels.");
+    out.push_str(&format!(
+        "expand_run_info{{workload=\"{}\",hosts=\"{}\",threads=\"{}\"}} 1\n",
+        escape_label(&snap.workload),
+        snap.hosts,
+        snap.threads
+    ));
+    metric(&mut out, "expand_accesses_total", "counter", "Accesses simulated so far.");
+    out.push_str(&format!(
+        "expand_accesses_total {}\n",
+        state.accesses.load(Ordering::Relaxed)
+    ));
+    metric(&mut out, "expand_epochs_total", "counter", "Engine epochs merged so far.");
+    out.push_str(&format!("expand_epochs_total {}\n", state.epochs.load(Ordering::Relaxed)));
+    metric(&mut out, "expand_hosts", "gauge", "Host contexts in the fleet.");
+    out.push_str(&format!("expand_hosts {}\n", snap.hosts));
+    metric(
+        &mut out,
+        "expand_worker_busy_fraction",
+        "gauge",
+        "Worker busy ns over busy+stall ns (engine self-profile).",
+    );
+    out.push_str(&format!("expand_worker_busy_fraction {:.6}\n", state.busy_frac()));
+    metric(&mut out, "expand_fault_total", "counter", "Injected-fault events by kind.");
+    for (kind, v) in [
+        ("link_retry", state.link_retries.load(Ordering::Relaxed)),
+        ("dev_timeout", state.timeouts.load(Ordering::Relaxed)),
+        ("poison_drop", state.poison_drops.load(Ordering::Relaxed)),
+    ] {
+        out.push_str(&format!("expand_fault_total{{kind=\"{kind}\"}} {v}\n"));
+    }
+    metric(
+        &mut out,
+        "expand_endpoint_occupancy",
+        "gauge",
+        "Per-endpoint utilization rho from the latest epoch merge.",
+    );
+    for (ep, rho) in snap.ep_rho.iter().enumerate() {
+        out.push_str(&format!("expand_endpoint_occupancy{{endpoint=\"{ep}\"}} {rho:.6}\n"));
+    }
+    metric(
+        &mut out,
+        "expand_endpoint_requests_total",
+        "counter",
+        "Cumulative fabric requests per endpoint.",
+    );
+    for (ep, reqs) in snap.ep_requests.iter().enumerate() {
+        out.push_str(&format!("expand_endpoint_requests_total{{endpoint=\"{ep}\"}} {reqs}\n"));
+    }
+    metric(
+        &mut out,
+        "expand_endpoint_contention_ps",
+        "gauge",
+        "Latest per-endpoint M/D/1 contention penalty (ps).",
+    );
+    for (ep, c) in snap.ep_contention_ps.iter().enumerate() {
+        out.push_str(&format!("expand_endpoint_contention_ps{{endpoint=\"{ep}\"}} {c}\n"));
+    }
+    out
+}
+
+fn summary_json(s: &ObsSummary) -> Json {
+    let quant = |q: &crate::obs::QuantileRow| {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("count".into(), Json::Num(q.count as f64));
+        m.insert("p50_ps".into(), Json::Num(q.p50 as f64));
+        m.insert("p99_ps".into(), Json::Num(q.p99 as f64));
+        m.insert("p999_ps".into(), Json::Num(q.p999 as f64));
+        m.insert("max_ps".into(), Json::Num(q.max as f64));
+        Json::Obj(m)
+    };
+    let mut classes: BTreeMap<String, Json> = BTreeMap::new();
+    for c in &s.classes {
+        classes.insert(c.class.into(), quant(&c.lat));
+    }
+    let endpoints: Vec<Json> = s
+        .endpoints
+        .iter()
+        .map(|e| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("latency".into(), quant(&e.lat));
+            m.insert("timeliness_error".into(), quant(&e.timeliness_err));
+            m.insert("early".into(), Json::Num(e.early as f64));
+            m.insert("late".into(), Json::Num(e.late as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("classes".into(), Json::Obj(classes));
+    root.insert("endpoints".into(), Json::Arr(endpoints));
+    Json::Obj(root)
+}
+
+/// Render the `GET /snapshot` JSON document.
+pub fn snapshot_json(state: &LiveState) -> String {
+    let snap = state.snapshot();
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("schema".into(), Json::Str(SNAPSHOT_SCHEMA.into()));
+    root.insert("up".into(), Json::Bool(!state.done.load(Ordering::Acquire)));
+    root.insert("workload".into(), Json::Str(snap.workload.clone()));
+    root.insert("hosts".into(), Json::Num(snap.hosts as f64));
+    root.insert("threads".into(), Json::Num(snap.threads as f64));
+    root.insert(
+        "accesses".into(),
+        Json::Num(state.accesses.load(Ordering::Relaxed) as f64),
+    );
+    root.insert("epochs".into(), Json::Num(state.epochs.load(Ordering::Relaxed) as f64));
+    root.insert(
+        "worker_busy_fraction".into(),
+        Json::Num((state.busy_frac() * 1e6).round() / 1e6),
+    );
+    let mut faults: BTreeMap<String, Json> = BTreeMap::new();
+    faults.insert(
+        "link_retries".into(),
+        Json::Num(state.link_retries.load(Ordering::Relaxed) as f64),
+    );
+    faults.insert("timeouts".into(), Json::Num(state.timeouts.load(Ordering::Relaxed) as f64));
+    faults.insert(
+        "poison_drops".into(),
+        Json::Num(state.poison_drops.load(Ordering::Relaxed) as f64),
+    );
+    root.insert("faults".into(), Json::Obj(faults));
+    root.insert("ep_rho".into(), Json::Arr(snap.ep_rho.iter().map(|&r| Json::Num(r)).collect()));
+    root.insert(
+        "ep_requests".into(),
+        Json::Arr(snap.ep_requests.iter().map(|&r| Json::Num(r as f64)).collect()),
+    );
+    root.insert(
+        "ep_contention_ps".into(),
+        Json::Arr(snap.ep_contention_ps.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    root.insert(
+        "obs".into(),
+        snap.obs.as_ref().map(summary_json).unwrap_or(Json::Null),
+    );
+    root.insert(
+        "profile".into(),
+        snap.profile.as_ref().map(|p| p.json_value()).unwrap_or(Json::Null),
+    );
+    json::render(&Json::Obj(root))
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .enumerate()
+            .all(|(i, c)| c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit()))
+}
+
+/// Validate Prometheus text exposition: every sample line must parse as
+/// `name[{labels}] value`, every sampled metric must be preceded by a
+/// `# TYPE` declaration, label values must be well-quoted, counters
+/// (`_total`) must be finite and non-negative. Returns the sample count.
+pub fn validate_prometheus_text(text: &str) -> anyhow::Result<usize> {
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            anyhow::ensure!(valid_metric_name(name), "line {n}: bad TYPE metric name {name:?}");
+            anyhow::ensure!(
+                matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "line {n}: bad TYPE kind {kind:?}"
+            );
+            typed.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample: name{labels} value  |  name value
+        let (name, rest) = match line.find(['{', ' ']) {
+            Some(i) => (&line[..i], &line[i..]),
+            None => anyhow::bail!("line {n}: sample missing value: {line:?}"),
+        };
+        anyhow::ensure!(valid_metric_name(name), "line {n}: bad metric name {name:?}");
+        let value_str = if let Some(body) = rest.strip_prefix('{') {
+            // Scan the label block respecting quoted strings.
+            let mut in_str = false;
+            let mut esc = false;
+            let mut end = None;
+            for (i, c) in body.char_indices() {
+                if esc {
+                    esc = false;
+                } else if in_str && c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = !in_str;
+                } else if !in_str && c == '}' {
+                    end = Some(i);
+                    break;
+                }
+            }
+            let end = end.ok_or_else(|| anyhow::anyhow!("line {n}: unterminated label block"))?;
+            let labels = &body[..end];
+            for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                let eq = pair
+                    .find('=')
+                    .ok_or_else(|| anyhow::anyhow!("line {n}: label without '=': {pair:?}"))?;
+                let lv = &pair[eq + 1..];
+                anyhow::ensure!(
+                    lv.len() >= 2 && lv.starts_with('"') && lv.ends_with('"'),
+                    "line {n}: unquoted label value {lv:?}"
+                );
+            }
+            body[end + 1..].trim_start()
+        } else {
+            rest.trim_start()
+        };
+        let value: f64 = value_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {n}: bad sample value {value_str:?}"))?;
+        let kind = typed
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("line {n}: sample {name:?} has no # TYPE"))?;
+        if kind == "counter" {
+            anyhow::ensure!(
+                value.is_finite() && value >= 0.0,
+                "line {n}: counter {name:?} must be finite and non-negative, got {value}"
+            );
+            anyhow::ensure!(
+                name.ends_with("_total"),
+                "line {n}: counter {name:?} should end in _total"
+            );
+        }
+        samples += 1;
+    }
+    anyhow::ensure!(samples > 0, "no samples in exposition");
+    Ok(samples)
+}
+
+/// Validate a `/snapshot` JSON document. Returns a one-line digest.
+pub fn validate_snapshot_json(text: &str) -> anyhow::Result<String> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("snapshot JSON parse error: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("snapshot JSON missing schema"))?;
+    anyhow::ensure!(schema == SNAPSHOT_SCHEMA, "unexpected schema {schema:?}");
+    for key in ["hosts", "threads", "accesses", "epochs", "worker_busy_fraction"] {
+        anyhow::ensure!(
+            doc.get(key).and_then(|v| v.as_f64()).is_some(),
+            "snapshot missing numeric {key}"
+        );
+    }
+    let faults = doc
+        .get("faults")
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing faults object"))?;
+    for key in ["link_retries", "timeouts", "poison_drops"] {
+        anyhow::ensure!(
+            faults.get(key).and_then(|v| v.as_f64()).is_some(),
+            "snapshot faults missing numeric {key}"
+        );
+    }
+    for key in ["ep_rho", "ep_requests", "ep_contention_ps"] {
+        anyhow::ensure!(
+            doc.get(key).and_then(|v| v.as_arr()).is_some(),
+            "snapshot missing array {key}"
+        );
+    }
+    if let Some(profile) = doc.get("profile").filter(|v| !matches!(v, Json::Null)) {
+        let ps = profile
+            .get("schema")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("snapshot profile missing schema"))?;
+        anyhow::ensure!(ps == PROFILE_SCHEMA, "snapshot profile has schema {ps:?}");
+    }
+    Ok(format!(
+        "snapshot OK: workload {:?}, {} hosts, {} accesses, {} epochs, profile {}",
+        doc.get("workload").and_then(|v| v.as_str()).unwrap_or("?"),
+        doc.get("hosts").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        doc.get("accesses").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        doc.get("epochs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        if doc.get("profile").map(|v| !matches!(v, Json::Null)).unwrap_or(false) {
+            "present"
+        } else {
+            "absent"
+        },
+    ))
+}
+
+/// Background HTTP/1.0-ish server for `/metrics` and `/snapshot`.
+pub struct LiveServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LiveServer {
+    /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// from a background thread until [`LiveServer::shutdown`] or drop.
+    pub fn spawn(bind: &str, state: Arc<LiveState>) -> anyhow::Result<LiveServer> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| anyhow::anyhow!("--live-metrics bind {bind}: {e}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("live-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if let Ok(mut sock) = conn {
+                        let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
+                        let _ = serve_one(&mut sock, &state);
+                    }
+                }
+            })?;
+        Ok(LiveServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn stop_inner(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Release);
+        // Wake the accept loop so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+}
+
+impl Drop for LiveServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn serve_one(sock: &mut TcpStream, state: &LiveState) -> std::io::Result<()> {
+    let mut buf = [0u8; 2048];
+    let mut len = 0usize;
+    // Read until the end of the request head (or buffer/timeout limits).
+    loop {
+        let n = match sock.read(&mut buf[len..]) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        len += n;
+        if len >= buf.len() || buf[..len].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..len]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/")
+        .to_string();
+    let (status, ctype, body) = match path.split('?').next().unwrap_or("/") {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            render_prometheus(state),
+        ),
+        "/snapshot" => ("200 OK", "application/json", snapshot_json(state)),
+        "/" => (
+            "200 OK",
+            "text/plain; charset=utf-8",
+            "expand live telemetry: GET /metrics | GET /snapshot\n".to_string(),
+        ),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    sock.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded_state() -> Arc<LiveState> {
+        let state = LiveState::new();
+        state.accesses.store(12_345, Ordering::Relaxed);
+        state.epochs.store(7, Ordering::Relaxed);
+        state.link_retries.store(2, Ordering::Relaxed);
+        state.busy_ns.store(900, Ordering::Relaxed);
+        state.stall_ns.store(100, Ordering::Relaxed);
+        state.publish(|s| {
+            s.workload = "fleet:zipf \"bursty\"\nline2".into();
+            s.hosts = 256;
+            s.threads = 8;
+            s.ep_rho = vec![0.5, 0.25];
+            s.ep_requests = vec![100, 50];
+            s.ep_contention_ps = vec![1_000, 0];
+        });
+        state
+    }
+
+    #[test]
+    fn prometheus_exposition_validates_and_escapes() {
+        let state = seeded_state();
+        let text = render_prometheus(&state);
+        let samples = validate_prometheus_text(&text).unwrap();
+        assert!(samples >= 12, "{samples} samples:\n{text}");
+        // Label escaping: backslash-escaped quote and newline, no raw newline inside.
+        assert!(text.contains("workload=\"fleet:zipf \\\"bursty\\\"\\nline2\""), "{text}");
+        assert!(text.contains("expand_accesses_total 12345"), "{text}");
+        assert!(text.contains("expand_fault_total{kind=\"link_retry\"} 2"), "{text}");
+        assert!(text.contains("expand_endpoint_occupancy{endpoint=\"1\"} 0.25"), "{text}");
+        assert!((state.busy_frac() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_counters_grow_monotonically_across_scrapes() {
+        let state = seeded_state();
+        let grab = |text: &str, name: &str| -> f64 {
+            text.lines()
+                .find(|l| l.starts_with(name) && !l.starts_with('#'))
+                .and_then(|l| l.rsplit(' ').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        let a = render_prometheus(&state);
+        state.accesses.fetch_add(500, Ordering::Relaxed);
+        state.epochs.fetch_add(1, Ordering::Relaxed);
+        let b = render_prometheus(&state);
+        for name in ["expand_accesses_total", "expand_epochs_total", "expand_fault_total"] {
+            assert!(grab(&b, name) >= grab(&a, name), "{name} went backwards");
+        }
+        assert_eq!(grab(&b, "expand_accesses_total") - grab(&a, "expand_accesses_total"), 500.0);
+    }
+
+    #[test]
+    fn prometheus_validator_rejects_malformed_text() {
+        assert!(validate_prometheus_text("").is_err());
+        // Sample without a TYPE declaration.
+        assert!(validate_prometheus_text("foo 1\n").is_err());
+        // Bad value.
+        assert!(validate_prometheus_text("# TYPE foo gauge\nfoo abc\n").is_err());
+        // Unquoted label value.
+        assert!(validate_prometheus_text("# TYPE foo gauge\nfoo{a=b} 1\n").is_err());
+        // Unterminated label block.
+        assert!(validate_prometheus_text("# TYPE foo gauge\nfoo{a=\"b\" 1\n").is_err());
+        // Negative counter.
+        assert!(validate_prometheus_text("# TYPE foo_total counter\nfoo_total -1\n").is_err());
+        // Counter without the _total suffix.
+        assert!(validate_prometheus_text("# TYPE foo counter\nfoo 1\n").is_err());
+        // Well-formed survives.
+        assert_eq!(
+            validate_prometheus_text("# TYPE foo gauge\nfoo{a=\"b\"} 1\nfoo{a=\"c\"} 2\n")
+                .unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn snapshot_json_validates() {
+        let state = seeded_state();
+        let mut profile = EngineProfile::new(2);
+        profile.record(0, crate::obs::profile::Phase::HostExec, 1000);
+        state.publish(|s| s.profile = Some(profile));
+        let text = snapshot_json(&state);
+        let digest = validate_snapshot_json(&text).unwrap();
+        assert!(digest.contains("256 hosts"), "{digest}");
+        assert!(digest.contains("profile present"), "{digest}");
+        assert!(validate_snapshot_json("{\"schema\": \"nope\"}").is_err());
+        // A profile with the wrong schema is rejected.
+        let bad = text.replace(PROFILE_SCHEMA, "bogus/v0");
+        assert!(validate_snapshot_json(&bad).is_err());
+    }
+
+    #[test]
+    fn server_serves_metrics_snapshot_and_404() {
+        let state = seeded_state();
+        let server = LiveServer::spawn("127.0.0.1:0", Arc::clone(&state)).unwrap();
+        let addr = server.addr();
+        let get = |path: &str| -> (String, String) {
+            let mut sock = TcpStream::connect(addr).unwrap();
+            sock.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut resp = String::new();
+            sock.read_to_string(&mut resp).unwrap();
+            let (head, body) = resp.split_once("\r\n\r\n").unwrap();
+            (head.to_string(), body.to_string())
+        };
+        let (head, body) = get("/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        validate_prometheus_text(&body).unwrap();
+        let (head, body) = get("/snapshot");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        validate_snapshot_json(&body).unwrap();
+        let (head, _) = get("/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        server.shutdown();
+    }
+}

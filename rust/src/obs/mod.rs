@@ -19,7 +19,10 @@
 //! 3. [`trace_events`] — a ring of simulation spans exported as Chrome
 //!    `trace_event` JSON for Perfetto.
 
+pub mod diff;
 pub mod hist;
+pub mod live;
+pub mod profile;
 pub mod series;
 pub mod trace_events;
 
@@ -133,6 +136,10 @@ pub struct ObsRecorder {
     pub ep_faults: Vec<EpFaults>,
     pub series: SeriesRecorder,
     pub events: EventRing,
+    /// Demand latencies (hit + miss) since the last series mark; taken
+    /// into the next [`SeriesPoint`] so fleet exports can aggregate
+    /// per-tenant p99 per epoch.
+    epoch_demand: Histogram,
     /// Host tag applied to locally recorded series points and events.
     host: u32,
     /// Engine-level per-epoch, per-endpoint utilization rho (filled by
@@ -150,6 +157,7 @@ impl ObsRecorder {
             ep_timeliness: vec![TimelinessErr::default(); endpoints],
             ep_faults: vec![EpFaults::default(); endpoints],
             series: SeriesRecorder::default(),
+            epoch_demand: Histogram::new(),
             host: 0,
             epoch_rho: Vec::new(),
         }
@@ -162,6 +170,9 @@ impl ObsRecorder {
     #[inline]
     pub fn record(&mut self, class: AccessClass, ps: u64) {
         self.class_hist[class as usize].record(ps);
+        if matches!(class, AccessClass::DemandHit | AccessClass::DemandMiss) {
+            self.epoch_demand.record(ps);
+        }
     }
 
     #[inline]
@@ -203,7 +214,8 @@ impl ObsRecorder {
     }
 
     pub fn series_mark(&mut self, snap: SeriesSnap) {
-        self.series.mark(self.host, snap);
+        let demand = std::mem::take(&mut self.epoch_demand);
+        self.series.mark_with(self.host, snap, demand);
     }
 
     /// Merge a shard recorder into this one. Call in host-index order:
@@ -230,6 +242,7 @@ impl ObsRecorder {
             a.failed_over += b.failed_over;
             a.redirected += b.redirected;
         }
+        self.epoch_demand.merge(&other.epoch_demand);
         for p in &other.series.points {
             self.series.points.push(SeriesPoint { host, ..p.clone() });
         }
@@ -261,6 +274,7 @@ impl ObsRecorder {
             a.failed_over += b.failed_over;
             a.redirected += b.redirected;
         }
+        self.epoch_demand.merge(&other.epoch_demand);
         self.series.points.extend(other.series.points.iter().cloned());
         self.events.absorb_merged(&other.events);
     }
@@ -489,6 +503,11 @@ pub fn validate_metrics_json(text: &str) -> anyhow::Result<String> {
         .and_then(|v| v.as_str())
         .ok_or_else(|| anyhow::anyhow!("metrics JSON missing schema"))?;
     anyhow::ensure!(schema == METRICS_SCHEMA, "unexpected schema {schema:?}");
+    anyhow::ensure!(
+        doc.get("profile").is_none(),
+        "metrics JSON carries an engine profile: profiles are wall-clock (nondeterministic) \
+         and must not ride in a fingerprint-stamped file — use --profile-out"
+    );
     let fp = doc
         .get("fingerprint")
         .and_then(|v| v.as_str())
@@ -588,6 +607,11 @@ mod tests {
         assert_eq!(text, r.metrics_json(0xdead_beef, 1));
         assert!(validate_metrics_json("{\"schema\": \"nope\"}").is_err());
         assert!(validate_metrics_json("not json").is_err());
+        // A wall-clock profile leaked into the fingerprint-stamped file
+        // must fail validation.
+        let leaked = text.replacen('{', "{\"profile\": {}, ", 1);
+        let err = validate_metrics_json(&leaked).unwrap_err().to_string();
+        assert!(err.contains("profile"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,519 @@
+//! Engine self-profiler: monotonic-clock phase timers around the fleet
+//! engine's per-epoch stages plus per-worker utilization accounting.
+//!
+//! The PR 7 observability stack measures *simulated* latency; this
+//! module measures the engine itself — where wall-clock goes inside the
+//! three-phase epoch pipeline (host execution, group stat folds,
+//! per-endpoint directory replay, leader fold) and how long workers
+//! stall at each barrier. Phase durations land in the same log-bucketed
+//! [`Histogram`] the latency layer uses, so per-worker profiles merge
+//! exactly and order-free into one [`EngineProfile`].
+//!
+//! Everything here is wall-clock and therefore nondeterministic: the
+//! profile lives in `MultiHostStats::profile`, is **excluded from run
+//! fingerprints** (like `wall_s`), and must never ride inside a
+//! fingerprint-stamped export — `validate_metrics_json` rejects metrics
+//! files carrying a `profile` key, and [`validate_profile_json`]
+//! rejects profile files carrying a `fingerprint` key.
+
+use crate::obs::Histogram;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+pub const PROFILE_SCHEMA: &str = "expand-engine-profile/v1";
+
+/// One stage of the engine's epoch pipeline (or a barrier wait between
+/// stages). Single-host runs only populate `HostExec`/`Finalize`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Phase R: snoop drain + epoch segment + effect-log handoff.
+    HostExec = 0,
+    /// Phase M: per-merge-group commutative stat folds.
+    GroupFold = 1,
+    /// Phase M: per-endpoint BI-directory replay of the epoch's ops.
+    DirReplay = 2,
+    /// Phase L: the barrier leader's root fold + contention row.
+    LeaderFold = 3,
+    /// Wait at the barrier closing phase R.
+    BarrierRun = 4,
+    /// Wait at the barrier closing the parallel merge.
+    BarrierMerge = 5,
+    /// Wait at the epoch-end barrier (non-leaders waiting out the root
+    /// fold land here).
+    BarrierEpoch = 6,
+    /// Final outbox drain + stat finalization + invariant check.
+    Finalize = 7,
+}
+
+pub const PHASE_COUNT: usize = 8;
+
+impl Phase {
+    pub const ALL: [Phase; PHASE_COUNT] = [
+        Phase::HostExec,
+        Phase::GroupFold,
+        Phase::DirReplay,
+        Phase::LeaderFold,
+        Phase::BarrierRun,
+        Phase::BarrierMerge,
+        Phase::BarrierEpoch,
+        Phase::Finalize,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::HostExec => "host_exec",
+            Phase::GroupFold => "group_fold",
+            Phase::DirReplay => "dir_replay",
+            Phase::LeaderFold => "leader_fold",
+            Phase::BarrierRun => "barrier_run",
+            Phase::BarrierMerge => "barrier_merge",
+            Phase::BarrierEpoch => "barrier_epoch",
+            Phase::Finalize => "finalize",
+        }
+    }
+
+    /// Barrier waits count as stall time; everything else is busy.
+    pub fn is_stall(self) -> bool {
+        matches!(self, Phase::BarrierRun | Phase::BarrierMerge | Phase::BarrierEpoch)
+    }
+
+    /// Stages of the epoch merge (the non-execution busy work).
+    pub fn is_merge(self) -> bool {
+        matches!(self, Phase::GroupFold | Phase::DirReplay | Phase::LeaderFold)
+    }
+}
+
+/// Aggregated timings for one phase: a duration histogram (ns per lap)
+/// plus exact totals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseStat {
+    pub hist: Histogram,
+    pub total_ns: u64,
+    pub count: u64,
+}
+
+/// One worker's busy/stall split (ns).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerLoad {
+    pub busy_ns: u64,
+    pub stall_ns: u64,
+}
+
+impl WorkerLoad {
+    pub fn busy_frac(&self) -> f64 {
+        let total = self.busy_ns + self.stall_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / total as f64
+        }
+    }
+}
+
+/// Mergeable engine self-profile. Each worker records into its own
+/// instance (only its `workers` slot is touched); the engine folds them
+/// with [`EngineProfile::merge`], which is element-wise and therefore
+/// order-invariant — pinned by a proptest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineProfile {
+    pub hosts: usize,
+    pub threads: usize,
+    pub epochs: u64,
+    /// End-to-end engine wall clock (set once by the engine, merged by
+    /// max).
+    pub wall_ns: u64,
+    phases: Vec<PhaseStat>,
+    pub workers: Vec<WorkerLoad>,
+}
+
+impl EngineProfile {
+    pub fn new(threads: usize) -> Self {
+        EngineProfile {
+            hosts: 0,
+            threads,
+            epochs: 0,
+            wall_ns: 0,
+            phases: vec![PhaseStat::default(); PHASE_COUNT],
+            workers: vec![WorkerLoad::default(); threads.max(1)],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, worker: usize, phase: Phase, ns: u64) {
+        let p = &mut self.phases[phase as usize];
+        p.hist.record(ns);
+        p.total_ns += ns;
+        p.count += 1;
+        if let Some(w) = self.workers.get_mut(worker) {
+            if phase.is_stall() {
+                w.stall_ns += ns;
+            } else {
+                w.busy_ns += ns;
+            }
+        }
+    }
+
+    pub fn phase(&self, p: Phase) -> &PhaseStat {
+        &self.phases[p as usize]
+    }
+
+    /// Element-wise merge: histograms and totals add (commutative),
+    /// scalars take the max — so any fold order produces the same
+    /// profile.
+    pub fn merge(&mut self, other: &EngineProfile) {
+        for (a, b) in self.phases.iter_mut().zip(&other.phases) {
+            a.hist.merge(&b.hist);
+            a.total_ns += b.total_ns;
+            a.count += b.count;
+        }
+        if other.workers.len() > self.workers.len() {
+            self.workers.resize(other.workers.len(), WorkerLoad::default());
+        }
+        for (a, b) in self.workers.iter_mut().zip(&other.workers) {
+            a.busy_ns += b.busy_ns;
+            a.stall_ns += b.stall_ns;
+        }
+        self.hosts = self.hosts.max(other.hosts);
+        self.threads = self.threads.max(other.threads);
+        self.epochs = self.epochs.max(other.epochs);
+        self.wall_ns = self.wall_ns.max(other.wall_ns);
+    }
+
+    fn phase_total(&self) -> u64 {
+        self.phases.iter().map(|p| p.total_ns).sum()
+    }
+
+    /// Share of the summed phase time spent in `p` (0.0 when nothing
+    /// was recorded).
+    pub fn phase_share(&self, p: Phase) -> f64 {
+        let total = self.phase_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.phases[p as usize].total_ns as f64 / total as f64
+        }
+    }
+
+    /// Fleet-wide busy fraction: busy ns over busy + stall ns across
+    /// all workers.
+    pub fn busy_frac(&self) -> f64 {
+        let busy: u64 = self.workers.iter().map(|w| w.busy_ns).sum();
+        let stall: u64 = self.workers.iter().map(|w| w.stall_ns).sum();
+        if busy + stall == 0 {
+            0.0
+        } else {
+            busy as f64 / (busy + stall) as f64
+        }
+    }
+
+    /// The barrier phase eating the most wall clock (the scaling
+    /// bottleneck's address), with its share of total phase time.
+    pub fn top_stall(&self) -> (Phase, f64) {
+        let p = *Phase::ALL
+            .iter()
+            .filter(|p| p.is_stall())
+            .max_by_key(|&&p| self.phases[p as usize].total_ns)
+            .unwrap_or(&Phase::BarrierRun);
+        (p, self.phase_share(p))
+    }
+
+    /// Merge-time over execution-time ratio: how much the hierarchical
+    /// epoch merge costs relative to running the hosts.
+    pub fn merge_exec_ratio(&self) -> f64 {
+        let merge: u64 =
+            Phase::ALL.iter().filter(|p| p.is_merge()).map(|&p| self.phases[p as usize].total_ns).sum();
+        let exec = self.phases[Phase::HostExec as usize].total_ns;
+        if exec == 0 {
+            0.0
+        } else {
+            merge as f64 / exec as f64
+        }
+    }
+
+    /// JSON document (`expand-engine-profile/v1`). Wall-clock data:
+    /// deliberately carries NO fingerprint (see [`validate_profile_json`]).
+    pub fn json_value(&self) -> Json {
+        let mut phases: BTreeMap<String, Json> = BTreeMap::new();
+        for &p in &Phase::ALL {
+            let s = &self.phases[p as usize];
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("count".into(), Json::Num(s.count as f64));
+            m.insert("total_ns".into(), Json::Num(s.total_ns as f64));
+            m.insert("mean_ns".into(), Json::Num(s.hist.mean()));
+            m.insert("p50_ns".into(), Json::Num(s.hist.percentile_ps(0.50) as f64));
+            m.insert("p99_ns".into(), Json::Num(s.hist.percentile_ps(0.99) as f64));
+            m.insert("max_ns".into(), Json::Num(s.hist.max() as f64));
+            m.insert(
+                "share".into(),
+                Json::Num((self.phase_share(p) * 1e4).round() / 1e4),
+            );
+            phases.insert(p.name().into(), Json::Obj(m));
+        }
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                m.insert("worker".into(), Json::Num(i as f64));
+                m.insert("busy_ns".into(), Json::Num(w.busy_ns as f64));
+                m.insert("stall_ns".into(), Json::Num(w.stall_ns as f64));
+                m.insert(
+                    "busy_frac".into(),
+                    Json::Num((w.busy_frac() * 1e4).round() / 1e4),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let (stall, stall_share) = self.top_stall();
+        let mut summary: BTreeMap<String, Json> = BTreeMap::new();
+        summary.insert(
+            "busy_frac".into(),
+            Json::Num((self.busy_frac() * 1e4).round() / 1e4),
+        );
+        summary.insert("top_stall_phase".into(), Json::Str(stall.name().into()));
+        summary.insert(
+            "top_stall_share".into(),
+            Json::Num((stall_share * 1e4).round() / 1e4),
+        );
+        summary.insert(
+            "merge_exec_ratio".into(),
+            Json::Num((self.merge_exec_ratio() * 1e4).round() / 1e4),
+        );
+        let mut root: BTreeMap<String, Json> = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(PROFILE_SCHEMA.into()));
+        root.insert("hosts".into(), Json::Num(self.hosts as f64));
+        root.insert("threads".into(), Json::Num(self.threads as f64));
+        root.insert("epochs".into(), Json::Num(self.epochs as f64));
+        root.insert("wall_ns".into(), Json::Num(self.wall_ns as f64));
+        root.insert("phases".into(), Json::Obj(phases));
+        root.insert("workers".into(), Json::Arr(workers));
+        root.insert("summary".into(), Json::Obj(summary));
+        Json::Obj(root)
+    }
+
+    pub fn json(&self) -> String {
+        json::render(&self.json_value())
+    }
+
+    /// Human-readable `profile:` summary block for the CLI.
+    pub fn render(&self) -> String {
+        let (stall, stall_share) = self.top_stall();
+        let mut out = format!(
+            "profile: wall {:.2}s | busy {:.1}% | top stall {} ({:.1}%) | merge/exec {:.2}\n",
+            self.wall_ns as f64 / 1e9,
+            self.busy_frac() * 100.0,
+            stall.name(),
+            stall_share * 100.0,
+            self.merge_exec_ratio(),
+        );
+        out.push_str(&format!(
+            "  {:<14} {:>8} {:>12} {:>7} {:>10} {:>10} {:>10}\n",
+            "phase", "count", "total(ms)", "share", "p50(us)", "p99(us)", "max(us)"
+        ));
+        for &p in &Phase::ALL {
+            let s = &self.phases[p as usize];
+            if s.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {:<14} {:>8} {:>12.2} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}\n",
+                p.name(),
+                s.count,
+                s.total_ns as f64 / 1e6,
+                self.phase_share(p) * 100.0,
+                s.hist.percentile_ps(0.50) as f64 / 1e3,
+                s.hist.percentile_ps(0.99) as f64 / 1e3,
+                s.hist.max() as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+/// Schema-validate an `--profile-out` file (`expand obs check-profile`).
+/// Wall-clock profiles must never masquerade as deterministic exports:
+/// a `fingerprint` key anywhere at the top level is an error.
+pub fn validate_profile_json(text: &str) -> anyhow::Result<String> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("profile JSON parse error: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("profile JSON missing schema"))?;
+    anyhow::ensure!(schema == PROFILE_SCHEMA, "unexpected schema {schema:?}");
+    anyhow::ensure!(
+        doc.get("fingerprint").is_none(),
+        "profile JSON carries a fingerprint: wall-clock profiles are nondeterministic and \
+         must never ride in fingerprint-stamped exports"
+    );
+    for key in ["hosts", "threads", "epochs", "wall_ns"] {
+        anyhow::ensure!(
+            doc.get(key).and_then(|v| v.as_f64()).is_some(),
+            "profile JSON missing numeric {key}"
+        );
+    }
+    let phases = doc
+        .get("phases")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!("profile JSON missing phases object"))?;
+    for &p in &Phase::ALL {
+        let row = phases
+            .get(p.name())
+            .ok_or_else(|| anyhow::anyhow!("phases missing {:?}", p.name()))?;
+        for key in ["count", "total_ns", "mean_ns", "p50_ns", "p99_ns", "max_ns", "share"] {
+            anyhow::ensure!(
+                row.get(key).and_then(|v| v.as_f64()).is_some(),
+                "phase {} missing numeric {key}",
+                p.name()
+            );
+        }
+    }
+    let workers = doc
+        .get("workers")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("profile JSON missing workers array"))?;
+    for (i, w) in workers.iter().enumerate() {
+        for key in ["busy_ns", "stall_ns", "busy_frac"] {
+            anyhow::ensure!(
+                w.get(key).and_then(|v| v.as_f64()).is_some(),
+                "worker {i} missing numeric {key}"
+            );
+        }
+    }
+    let summary = doc
+        .get("summary")
+        .ok_or_else(|| anyhow::anyhow!("profile JSON missing summary object"))?;
+    let busy = summary.get("busy_frac").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let stall = summary
+        .get("top_stall_phase")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("summary missing top_stall_phase"))?;
+    Ok(format!(
+        "profile OK: {} hosts, {} workers, {} epochs, busy {:.1}%, top stall {stall}",
+        doc.get("hosts").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        workers.len(),
+        doc.get("epochs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        busy * 100.0,
+    ))
+}
+
+/// `obs report`: render the `profile:` table from an exported JSON
+/// file (the CLI counterpart of [`EngineProfile::render`] for
+/// post-mortem files).
+pub fn report_from_json(text: &str) -> anyhow::Result<String> {
+    validate_profile_json(text)?;
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let num = |v: &Json, key: &str| v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let summary = doc.get("summary").unwrap();
+    let mut out = format!(
+        "profile: wall {:.2}s | busy {:.1}% | top stall {} ({:.1}%) | merge/exec {:.2}\n",
+        num(&doc, "wall_ns") / 1e9,
+        num(summary, "busy_frac") * 100.0,
+        summary.get("top_stall_phase").and_then(|v| v.as_str()).unwrap_or("?"),
+        num(summary, "top_stall_share") * 100.0,
+        num(summary, "merge_exec_ratio"),
+    );
+    out.push_str(&format!(
+        "  {:<14} {:>8} {:>12} {:>7} {:>10} {:>10} {:>10}\n",
+        "phase", "count", "total(ms)", "share", "p50(us)", "p99(us)", "max(us)"
+    ));
+    let phases = doc.get("phases").and_then(|v| v.as_obj()).unwrap();
+    for &p in &Phase::ALL {
+        let Some(row) = phases.get(p.name()) else { continue };
+        if num(row, "count") == 0.0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {:<14} {:>8} {:>12.2} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}\n",
+            p.name(),
+            num(row, "count"),
+            num(row, "total_ns") / 1e6,
+            num(row, "share") * 100.0,
+            num(row, "p50_ns") / 1e3,
+            num(row, "p99_ns") / 1e3,
+            num(row, "max_ns") / 1e3,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(worker: usize, scale: u64) -> EngineProfile {
+        let mut p = EngineProfile::new(2);
+        p.hosts = 4;
+        p.epochs = 3;
+        for e in 0..3u64 {
+            p.record(worker, Phase::HostExec, scale * (1000 + e * 100));
+            p.record(worker, Phase::GroupFold, scale * 80);
+            p.record(worker, Phase::DirReplay, scale * 120);
+            p.record(worker, Phase::BarrierRun, scale * 40);
+            p.record(worker, Phase::BarrierEpoch, scale * 400);
+        }
+        p.record(worker, Phase::Finalize, scale * 50);
+        p
+    }
+
+    #[test]
+    fn records_split_busy_and_stall() {
+        let p = sample(0, 1);
+        assert_eq!(p.phase(Phase::HostExec).count, 3);
+        assert_eq!(p.phase(Phase::HostExec).total_ns, 1000 + 1100 + 1200);
+        let w = p.workers[0];
+        assert_eq!(w.stall_ns, 3 * (40 + 400));
+        assert!(w.busy_frac() > 0.5);
+        assert_eq!(p.workers[1], WorkerLoad::default());
+        let (stall, share) = p.top_stall();
+        assert_eq!(stall, Phase::BarrierEpoch);
+        assert!(share > 0.0 && share < 1.0);
+        assert!(p.merge_exec_ratio() > 0.0);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_elementwise() {
+        let a = sample(0, 1);
+        let b = sample(1, 7);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must be order-invariant");
+        assert_eq!(
+            ab.phase(Phase::HostExec).count,
+            a.phase(Phase::HostExec).count + b.phase(Phase::HostExec).count
+        );
+        assert_eq!(ab.workers[0], a.workers[0]);
+        assert_eq!(ab.workers[1], b.workers[1]);
+    }
+
+    #[test]
+    fn json_round_trips_and_validates() {
+        let mut p = sample(0, 1);
+        p.threads = 2;
+        p.wall_ns = 5_000_000;
+        let text = p.json();
+        let digest = validate_profile_json(&text).unwrap();
+        assert!(digest.contains("2 workers"), "{digest}");
+        assert_eq!(text, p.json(), "emission is deterministic");
+        let table = report_from_json(&text).unwrap();
+        assert!(table.contains("host_exec"), "{table}");
+        assert!(table.contains("top stall"), "{table}");
+        assert!(validate_profile_json("{\"schema\": \"nope\"}").is_err());
+        assert!(validate_profile_json("not json").is_err());
+        // A leaked fingerprint key must fail validation.
+        let stamped = text.replacen('{', "{\"fingerprint\": \"0xbeef\", ", 1);
+        let err = validate_profile_json(&stamped).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn render_table_lists_active_phases_only() {
+        let p = sample(0, 1);
+        let table = p.render();
+        assert!(table.contains("host_exec"));
+        assert!(table.contains("barrier_epoch"));
+        assert!(!table.contains("leader_fold"), "phases with no laps stay hidden: {table}");
+    }
+}

@@ -9,6 +9,8 @@
 //! Everything is derived from simulated state, never wall clock, so the
 //! series is bit-identical across thread counts.
 
+use crate::obs::hist::Histogram;
+
 /// Cumulative counters at one sampling instant (runner-supplied).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SeriesSnap {
@@ -51,6 +53,10 @@ pub struct SeriesPoint {
     /// Fabric requests per endpoint over the window.
     pub ep_requests: Vec<u64>,
     pub ep_contention_ps: Vec<u64>,
+    /// Demand (hit + miss) latencies recorded inside this window —
+    /// merged across a tenant's hosts for the fleet CSV's per-tenant
+    /// p99 column. Empty unless the recorder fed one in.
+    pub demand_lat: Histogram,
 }
 
 impl SeriesPoint {
@@ -73,6 +79,12 @@ pub struct SeriesRecorder {
 
 impl SeriesRecorder {
     pub fn mark(&mut self, host: u32, snap: SeriesSnap) {
+        self.mark_with(host, snap, Histogram::new());
+    }
+
+    /// Like [`SeriesRecorder::mark`] but attaches the window's demand
+    /// latency histogram to the produced point.
+    pub fn mark_with(&mut self, host: u32, snap: SeriesSnap, demand_lat: Histogram) {
         let zero = SeriesSnap::default();
         let prev = self.last.as_ref().unwrap_or(&zero);
         let lookups = snap.llc_lookups.saturating_sub(prev.llc_lookups);
@@ -96,12 +108,12 @@ impl SeriesRecorder {
             reflector_len: snap.reflector_len,
             ep_requests,
             ep_contention_ps: snap.ep_contention_ps.clone(),
+            demand_lat,
         });
         self.last = Some(snap);
     }
 
-    /// Render every point as CSV (dynamic per-endpoint columns).
-    pub fn to_csv(&self, endpoints: usize) -> String {
+    fn csv_header(endpoints: usize) -> String {
         let mut out = String::from(
             "host,index,sim_ps,accesses,span_ps,throughput_acc_s,llc_hit_ratio,\
              stale_rate,reflector_len",
@@ -109,28 +121,82 @@ impl SeriesRecorder {
         for ep in 0..endpoints {
             out.push_str(&format!(",ep{ep}_reqs,ep{ep}_contention_ps"));
         }
+        out
+    }
+
+    fn csv_row(p: &SeriesPoint, endpoints: usize, out: &mut String) {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.1},{:.6},{:.6},{}",
+            p.host,
+            p.index,
+            p.sim_ps,
+            p.accesses,
+            p.span_ps,
+            p.throughput_acc_s(),
+            p.llc_hit_ratio,
+            p.stale_rate,
+            p.reflector_len
+        ));
+        for ep in 0..endpoints {
+            out.push_str(&format!(
+                ",{},{}",
+                p.ep_requests.get(ep).copied().unwrap_or(0),
+                p.ep_contention_ps.get(ep).copied().unwrap_or(0)
+            ));
+        }
+    }
+
+    /// Render every point as CSV (dynamic per-endpoint columns).
+    pub fn to_csv(&self, endpoints: usize) -> String {
+        let mut out = Self::csv_header(endpoints);
         out.push('\n');
         for p in &self.points {
-            out.push_str(&format!(
-                "{},{},{},{},{},{:.1},{:.6},{:.6},{}",
-                p.host,
-                p.index,
-                p.sim_ps,
-                p.accesses,
-                p.span_ps,
-                p.throughput_acc_s(),
-                p.llc_hit_ratio,
-                p.stale_rate,
-                p.reflector_len
-            ));
-            for ep in 0..endpoints {
-                out.push_str(&format!(
-                    ",{},{}",
-                    p.ep_requests.get(ep).copied().unwrap_or(0),
-                    p.ep_contention_ps.get(ep).copied().unwrap_or(0)
-                ));
-            }
+            Self::csv_row(p, endpoints, &mut out);
             out.push('\n');
+        }
+        out
+    }
+
+    /// Fleet-aware CSV: the per-host columns of [`SeriesRecorder::to_csv`]
+    /// plus `tenant,tenant_thr_acc_s,tenant_p99_ps` — the owning
+    /// tenant's whole-fleet throughput and demand p99 for the row's
+    /// epoch. The epoch index of a point is its per-host occurrence
+    /// number (the engine marks every host once per epoch), and tenant
+    /// aggregates merge the per-host demand histograms exactly, so the
+    /// output is bit-identical across thread counts like the rest of
+    /// the series.
+    pub fn to_csv_fleet(&self, endpoints: usize, tenant_of_host: &[usize]) -> String {
+        use std::collections::BTreeMap;
+        #[derive(Default)]
+        struct TenantAgg {
+            thr: f64,
+            lat: Histogram,
+        }
+        let mut occ: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut epoch_of: Vec<u64> = Vec::with_capacity(self.points.len());
+        let mut agg: BTreeMap<(u64, usize), TenantAgg> = BTreeMap::new();
+        for p in &self.points {
+            let e = occ.entry(p.host).or_insert(0);
+            let epoch = *e;
+            *e += 1;
+            epoch_of.push(epoch);
+            let tenant = tenant_of_host.get(p.host as usize).copied().unwrap_or(0);
+            let a = agg.entry((epoch, tenant)).or_default();
+            a.thr += p.throughput_acc_s();
+            a.lat.merge(&p.demand_lat);
+        }
+        let mut out = Self::csv_header(endpoints);
+        out.push_str(",tenant,tenant_thr_acc_s,tenant_p99_ps\n");
+        for (i, p) in self.points.iter().enumerate() {
+            Self::csv_row(p, endpoints, &mut out);
+            let tenant = tenant_of_host.get(p.host as usize).copied().unwrap_or(0);
+            let a = &agg[&(epoch_of[i], tenant)];
+            out.push_str(&format!(
+                ",{},{:.1},{}\n",
+                tenant,
+                a.thr,
+                a.lat.percentile_ps(0.99)
+            ));
         }
         out
     }
@@ -177,5 +243,44 @@ mod tests {
         assert!(csv.starts_with("host,index,"));
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains(",ep1_reqs"));
+    }
+
+    #[test]
+    fn fleet_csv_aggregates_tenant_throughput_and_p99_per_epoch() {
+        // Hosts 0,1 belong to tenant 0; host 2 to tenant 1. One point
+        // per host = epoch 0 rows (points come pre-tagged, as after the
+        // engine's absorb).
+        let mk = |host: u32, accesses: u64, lat_ps: u64| {
+            let mut demand_lat = Histogram::new();
+            demand_lat.record(lat_ps);
+            SeriesPoint {
+                host,
+                index: accesses,
+                accesses,
+                span_ps: 1_000_000,
+                sim_ps: 1_000_000,
+                demand_lat,
+                ..Default::default()
+            }
+        };
+        let mut r = SeriesRecorder::default();
+        r.points.push(mk(0, 100, 10_000));
+        r.points.push(mk(1, 300, 30_000));
+        r.points.push(mk(2, 500, 50_000));
+        let csv = r.to_csv_fleet(1, &[0, 0, 1]);
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with(",tenant,tenant_thr_acc_s,tenant_p99_ps"), "{header}");
+        assert_eq!(csv.lines().count(), 4);
+        // Tenant 0 rows share the fleet-level aggregate: 1e8 + 3e8 acc/s.
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert!(rows[0].contains(",0,400000000.0,"), "{}", rows[0]);
+        assert!(rows[1].contains(",0,400000000.0,"), "{}", rows[1]);
+        assert!(rows[2].contains(",1,500000000.0,"), "{}", rows[2]);
+        // Tenant 0's p99 covers both hosts' demand latencies (>= the
+        // slower host's sample; log-bucketed upper bound).
+        let t0_p99: u64 = rows[0].rsplit(',').next().unwrap().parse().unwrap();
+        let t1_p99: u64 = rows[2].rsplit(',').next().unwrap().parse().unwrap();
+        assert!(t0_p99 >= 30_000, "{t0_p99}");
+        assert!(t1_p99 >= 50_000 && t1_p99 > t0_p99, "{t1_p99} vs {t0_p99}");
     }
 }

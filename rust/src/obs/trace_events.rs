@@ -184,8 +184,10 @@ pub fn to_chrome_json(ring: &EventRing) -> String {
 
 /// Validate Chrome `trace_event` JSON structure: `traceEvents` must be
 /// an array whose entries carry `name`/`ph`/`ts`/`pid`/`tid`, with
-/// `dur` required on `"X"` events. Returns the event count.
-pub fn validate_chrome_json(text: &str) -> anyhow::Result<usize> {
+/// `dur` required on `"X"` events. Returns `(events, dropped)` so
+/// callers can surface ring truncation instead of leaving it buried in
+/// the file.
+pub fn validate_chrome_json(text: &str) -> anyhow::Result<(usize, u64)> {
     let doc = json::parse(text).map_err(|e| anyhow::anyhow!("trace JSON parse error: {e}"))?;
     let events = doc
         .get("traceEvents")
@@ -210,7 +212,8 @@ pub fn validate_chrome_json(text: &str) -> anyhow::Result<usize> {
             );
         }
     }
-    Ok(events.len())
+    let dropped = doc.get("dropped_events").and_then(|v| v.as_u64()).unwrap_or(0);
+    Ok((events.len(), dropped))
 }
 
 #[cfg(test)]
@@ -231,6 +234,9 @@ mod tests {
         assert_eq!(r.dropped, 2);
         let starts: Vec<u64> = r.chronological().map(|e| e.start_ps).collect();
         assert_eq!(starts, vec![2, 3, 4]);
+        // Truncation is visible through the export + validator, not
+        // just on the ring itself.
+        assert_eq!(validate_chrome_json(&to_chrome_json(&r)).unwrap(), (3, 2));
     }
 
     #[test]
@@ -244,7 +250,7 @@ mod tests {
         r.push(ev(EventKind::PoisonDrop, 6_000_000, 0));
         r.push(ev(EventKind::HotRemove, 7_000_000, 0));
         let text = to_chrome_json(&r);
-        assert_eq!(validate_chrome_json(&text).unwrap(), 7);
+        assert_eq!(validate_chrome_json(&text).unwrap(), (7, 0));
         // Fault events render on the endpoint's device track.
         assert!(text.contains("\"name\": \"link_retry\""), "{text}");
         assert!(text.contains("\"name\": \"hot_remove\""), "{text}");

@@ -77,6 +77,8 @@ use crate::coherence::BiDirectory;
 use crate::config::{Backing, PrefetcherKind, SimConfig};
 use crate::cxl::transaction::TrafficStats;
 use crate::metrics::{FleetStats, MultiHostStats, RunStats, TenantSlo};
+use crate::obs::live::LiveState;
+use crate::obs::profile::{EngineProfile, Phase};
 use crate::obs::{AccessClass, Histogram, ObsOptions, ObsRecorder};
 use crate::runtime::Runtime;
 use crate::sim::runner::{EffectLog, HostEffect, HostPlan, RunCursor, Runner};
@@ -130,6 +132,17 @@ pub struct MultiHostOpts {
     /// Fleet workload layer: tenant mix + traffic shaping + per-tenant
     /// SLO reporting.
     pub fleet: Option<FleetSpec>,
+    /// Engine self-profiler: wall-clock phase timers around the epoch
+    /// pipeline plus per-worker busy/stall accounting, surfaced as
+    /// `MultiHostStats::profile`. On by default — the cost is a handful
+    /// of monotonic-clock reads per worker per epoch — and excluded
+    /// from fingerprints like every other wall-clock field.
+    pub profile: bool,
+    /// Live telemetry sink (`--live-metrics`): counters bumped at epoch
+    /// barriers, structured snapshot republished by the barrier leader.
+    /// The simulation never *reads* this state, so results are
+    /// bit-identical with or without it (pinned by a test).
+    pub live: Option<std::sync::Arc<LiveState>>,
 }
 
 impl Default for MultiHostOpts {
@@ -144,6 +157,8 @@ impl Default for MultiHostOpts {
             merge_group: 0,
             assignment: None,
             fleet: None,
+            profile: true,
+            live: None,
         }
     }
 }
@@ -160,6 +175,8 @@ impl MultiHostOpts {
             merge_group: cfg.merge_group,
             assignment: None,
             fleet: cfg.fleet.clone(),
+            profile: true,
+            live: None,
         }
     }
 }
@@ -169,6 +186,23 @@ impl MultiHostOpts {
 /// streams over the same address space so lines really are shared.
 pub fn host_seed(base: u64, host: usize) -> u64 {
     base ^ (host as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Close a profiler lap: charge the wall-clock since `*last` to `phase`
+/// on `worker` and advance `last`. No-op (and no clock read) when the
+/// profiler is off.
+#[inline]
+fn lap(
+    prof: &mut Option<EngineProfile>,
+    last: &mut std::time::Instant,
+    worker: usize,
+    phase: Phase,
+) {
+    if let Some(p) = prof.as_mut() {
+        let now = std::time::Instant::now();
+        p.record(worker, phase, now.duration_since(*last).as_nanos() as u64);
+        *last = now;
+    }
 }
 
 /// Folding of host indices into <= 64 sharer-mask bits. `block == 1`
@@ -262,6 +296,9 @@ struct Root {
     /// Scratch for the leader's fold (reused across epochs).
     busy_tot: Vec<u128>,
     reqs_tot: Vec<u64>,
+    /// Cumulative per-endpoint requests across all epochs (feeds the
+    /// live telemetry's `expand_endpoint_requests_total`).
+    reqs_cum: Vec<u64>,
 }
 
 /// Queue a BISnp for every host covered by the group bits of `mask`,
@@ -390,6 +427,7 @@ where
         epoch_rho: opts.obs.as_ref().map(|_| Vec::new()),
         busy_tot: vec![0; endpoints],
         reqs_tot: vec![0; endpoints],
+        reqs_cum: vec![0; endpoints],
     });
 
     let logs: Vec<Mutex<EffectLog>> =
@@ -403,6 +441,7 @@ where
     type ShardRow = (usize, RunStats, bool, Vec<Access>, Option<Box<ObsRecorder>>);
     let results: Mutex<Vec<ShardRow>> = Mutex::new(Vec::new());
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let profiles: Mutex<Vec<EngineProfile>> = Mutex::new(Vec::new());
 
     let needs_artifacts = matches!(
         cfg.prefetcher,
@@ -422,6 +461,7 @@ where
             let (plan, eps, partials, root, router, logs, contention, barrier) =
                 (&plan, &eps, &partials, &root, &router, &logs, &contention, &barrier);
             let (results, errors, make_source) = (&results, &errors, &make_source);
+            let profiles = &profiles;
             let artifacts = opts.artifacts.clone();
             let obs_opts = obs_opts.clone();
             scope.spawn(move || {
@@ -510,6 +550,15 @@ where
                     shards.clear();
                 }
 
+                // Engine self-profile for this worker (also feeds the
+                // live busy-fraction when only --live-metrics is on).
+                let mut wprof =
+                    (opts.profile || opts.live.is_some()).then(|| EngineProfile::new(threads));
+                let mut last = std::time::Instant::now();
+                let (mut prev_busy, mut prev_stall) = (0u64, 0u64);
+                let mut prev_acc = 0u64;
+                let mut prev_faults = (0u64, 0u64, 0u64);
+
                 for e in 0..epochs {
                     let n = if (e + 1) * epoch <= total { epoch } else { total - e * epoch };
                     // ---- Phase R: run this worker's host contexts ----
@@ -566,7 +615,9 @@ where
                             shards.clear();
                         }
                     }
+                    lap(&mut wprof, &mut last, t, Phase::HostExec);
                     barrier.wait();
+                    lap(&mut wprof, &mut last, t, Phase::BarrierRun);
 
                     // ---- Phase M: parallel partial merge ----
                     // Merge groups: pre-reduce the commutative fields.
@@ -586,6 +637,7 @@ where
                             }
                         }
                     }
+                    lap(&mut wprof, &mut last, t, Phase::GroupFold);
                     // Endpoint owners: replay every host's coherence ops
                     // (host-index order — the determinism anchor) against
                     // this endpoint's directory shard.
@@ -669,8 +721,11 @@ where
                             }
                         }
                     }
+                    lap(&mut wprof, &mut last, t, Phase::DirReplay);
                     // ---- Phase L: deterministic root merge ----
-                    if barrier.wait().is_leader() {
+                    let leader = barrier.wait().is_leader();
+                    lap(&mut wprof, &mut last, t, Phase::BarrierMerge);
+                    if leader {
                         let root = &mut *root.lock().unwrap();
                         root.busy_tot.iter_mut().for_each(|x| *x = 0);
                         root.reqs_tot.iter_mut().for_each(|x| *x = 0);
@@ -721,6 +776,9 @@ where
                             rows.push(row);
                         }
                         root.epochs += 1;
+                        for ep in 0..endpoints {
+                            root.reqs_cum[ep] += root.reqs_tot[ep];
+                        }
                         // Arm the router for the NEXT merge (this merge
                         // already routed with the correct state).
                         if let Some((e, dead)) = root.remove_at_epoch {
@@ -731,8 +789,63 @@ where
                                 }
                             }
                         }
+                        // Leader-side live publish: epoch count, latest
+                        // pool occupancy, cumulative requests, and the
+                        // pool-level contention penalty per endpoint.
+                        if let Some(live) = &opts.live {
+                            use std::sync::atomic::Ordering;
+                            live.epochs.store(root.epochs, Ordering::Relaxed);
+                            let rho_row: Vec<f64> = root
+                                .busy_tot
+                                .iter()
+                                .map(|&busy| ((busy as f64) / (span as f64)).min(1.0))
+                                .collect();
+                            let mut cont = vec![0u64; endpoints];
+                            for ep in 0..endpoints {
+                                if root.reqs_tot[ep] == 0 {
+                                    continue;
+                                }
+                                let rho =
+                                    ((root.busy_tot[ep] as f64) / (span as f64)).min(0.95);
+                                let mean =
+                                    (root.busy_tot[ep] / root.reqs_tot[ep] as u128) as f64;
+                                cont[ep] = ((rho / (1.0 - rho)) * mean) as u64;
+                            }
+                            let reqs = root.reqs_cum.clone();
+                            live.publish(|s| {
+                                s.ep_rho = rho_row;
+                                s.ep_requests = reqs;
+                                s.ep_contention_ps = cont;
+                            });
+                        }
+                        lap(&mut wprof, &mut last, t, Phase::LeaderFold);
                     }
                     barrier.wait();
+                    lap(&mut wprof, &mut last, t, Phase::BarrierEpoch);
+                    // Worker-side live counters: deltas only, so N
+                    // workers sum to fleet totals without coordination.
+                    if let Some(live) = &opts.live {
+                        use std::sync::atomic::Ordering;
+                        if let Some(p) = &wprof {
+                            let w = p.workers[t];
+                            live.busy_ns.fetch_add(w.busy_ns - prev_busy, Ordering::Relaxed);
+                            live.stall_ns
+                                .fetch_add(w.stall_ns - prev_stall, Ordering::Relaxed);
+                            prev_busy = w.busy_ns;
+                            prev_stall = w.stall_ns;
+                        }
+                        let acc: u64 = shards.iter().map(|sh| sh.cur.index).sum();
+                        live.accesses.fetch_add(acc - prev_acc, Ordering::Relaxed);
+                        prev_acc = acc;
+                        let f = shards.iter().map(|sh| sh.runner.fault_totals()).fold(
+                            (0u64, 0u64, 0u64),
+                            |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+                        );
+                        live.link_retries.fetch_add(f.0 - prev_faults.0, Ordering::Relaxed);
+                        live.timeouts.fetch_add(f.1 - prev_faults.1, Ordering::Relaxed);
+                        live.poison_drops.fetch_add(f.2 - prev_faults.2, Ordering::Relaxed);
+                        prev_faults = f;
+                    }
                 }
 
                 // Final outbox drain (snoops minted at the last merge),
@@ -780,6 +893,10 @@ where
                         sh.runner.take_recording(),
                         sh.runner.take_obs(),
                     ));
+                }
+                lap(&mut wprof, &mut last, t, Phase::Finalize);
+                if let Some(p) = wprof {
+                    profiles.lock().unwrap().push(p);
                 }
             });
         }
@@ -852,6 +969,43 @@ where
         Box::new(merged)
     });
 
+    // Fold the per-worker self-profiles (element-wise, order-invariant)
+    // and stamp the engine-level scalars. Like `wall_s`, the profile is
+    // excluded from fingerprints.
+    let profile = if opts.profile {
+        let mut parts = profiles.into_inner().unwrap();
+        let mut merged = parts.pop().unwrap_or_else(|| EngineProfile::new(threads));
+        for p in &parts {
+            merged.merge(p);
+        }
+        merged.hosts = hosts;
+        merged.threads = threads;
+        merged.epochs = root.epochs;
+        merged.wall_ns = wall_start.elapsed().as_nanos() as u64;
+        Some(merged)
+    } else {
+        None
+    };
+
+    // Final live publish: totals, the merged latency digest, and the
+    // finished profile, then flip `done` (scrapes keep working after
+    // the run so the last state stays inspectable).
+    if let Some(live) = &opts.live {
+        use std::sync::atomic::Ordering;
+        live.accesses.store(aggregate.accesses, Ordering::Relaxed);
+        live.epochs.store(root.epochs, Ordering::Relaxed);
+        live.link_retries.store(aggregate.link_retries, Ordering::Relaxed);
+        live.timeouts.store(aggregate.dev_timeouts, Ordering::Relaxed);
+        live.poison_drops.store(aggregate.poison_drops, Ordering::Relaxed);
+        live.publish(|s| {
+            s.hosts = hosts;
+            s.threads = threads;
+            s.obs = aggregate.obs.clone();
+            s.profile = profile.clone();
+        });
+        live.done.store(true, Ordering::Release);
+    }
+
     Ok((
         MultiHostStats {
             wall_s: aggregate.wall_s,
@@ -867,6 +1021,7 @@ where
             bi_invariant,
             obs,
             fleet,
+            profile,
         },
         recordings,
     ))

@@ -27,6 +27,7 @@ use crate::fault::FaultState;
 use crate::mem::cache::Evicted;
 use crate::mem::{DramModel, Hierarchy, HitLevel};
 use crate::metrics::RunStats;
+use crate::obs::live::LiveState;
 use crate::obs::{AccessClass, EpFaults, EventKind, ObsOptions, ObsRecorder, SeriesSnap};
 use crate::prefetch::ml::MlPrefetcher;
 use crate::prefetch::rule1_best_offset::BestOffset;
@@ -220,6 +221,13 @@ pub struct Runner {
     /// Per-endpoint fault counters (always allocated; all-zero without
     /// fault state).
     fault_counts: Vec<EpFaults>,
+    /// Live-telemetry publisher for single-host `--live-metrics` runs:
+    /// shared state plus the publish stride in accesses. The multi-host
+    /// engine publishes from its epoch barrier instead and leaves this
+    /// `None` — one `is_some` test per batch, never per access.
+    live: Option<(Arc<LiveState>, u64)>,
+    /// Next access index at which to publish a live sample.
+    live_next: u64,
 }
 
 /// Build-once host plan: everything about a simulated host that is a pure
@@ -381,6 +389,8 @@ impl Runner {
             obs: None,
             faults,
             fault_counts: vec![EpFaults::default(); endpoints],
+            live: None,
+            live_next: 0,
         })
     }
 
@@ -512,6 +522,52 @@ impl Runner {
         self.contention.clear();
         self.contention.extend_from_slice(extra);
         self.contention.resize(self.pool.len(), 0);
+    }
+
+    /// Cumulative fault counters summed across endpoints, as
+    /// `(link_retries, dev_timeouts, poison_drops)` — cheap enough to
+    /// call at every epoch barrier (one pass over the per-endpoint
+    /// rows).
+    pub fn fault_totals(&self) -> (u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64);
+        for f in &self.fault_counts {
+            t.0 += f.link_retries;
+            t.1 += f.timeouts;
+            t.2 += f.poison_drops;
+        }
+        t
+    }
+
+    /// Attach a live-telemetry publisher (single-host `--live-metrics`):
+    /// counters and a structured snapshot are pushed every `stride`
+    /// accesses, checked once per batch. Purely observational — every
+    /// published value is derived state, so attaching it cannot perturb
+    /// simulation results or fingerprints.
+    pub fn set_live(&mut self, state: Arc<LiveState>, stride: u64) {
+        self.live = Some((state, stride.max(1)));
+        self.live_next = 0;
+    }
+
+    /// Push one live sample: scrape counters plus the structured
+    /// per-endpoint snapshot.
+    fn publish_live(&self, live: &LiveState, index: u64) {
+        use std::sync::atomic::Ordering;
+        live.accesses.store(index, Ordering::Relaxed);
+        let (lr, to, pd) = self.fault_totals();
+        live.link_retries.store(lr, Ordering::Relaxed);
+        live.timeouts.store(to, Ordering::Relaxed);
+        live.poison_drops.store(pd, Ordering::Relaxed);
+        let reqs: Vec<u64> = self
+            .pool
+            .endpoints()
+            .iter()
+            .map(|ep| self.fabric.requests_for(ep.node))
+            .collect();
+        let cont = self.contention.clone();
+        live.publish(|s| {
+            s.ep_requests = reqs;
+            s.ep_contention_ps = cont;
+        });
     }
 
     /// A BISnp delivered by the engine at an epoch boundary: another
@@ -1411,6 +1467,12 @@ impl Runner {
             if let Some(obs) = &mut self.obs {
                 let span = self.core.now.saturating_sub(batch_start_ps);
                 obs.event(EventKind::Batch, batch_start_ps, span, 0, k as u64);
+            }
+
+            if self.live.is_some() && cur.index >= self.live_next {
+                let (live, stride) = self.live.clone().unwrap();
+                self.live_next = cur.index.saturating_add(stride);
+                self.publish_live(&live, cur.index);
             }
 
             self.stream_pos = k;

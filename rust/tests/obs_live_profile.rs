@@ -1,0 +1,239 @@
+//! Observability tentpole end-to-end tests (ISSUE 10): the engine
+//! self-profiler and the live telemetry sink must be *purely*
+//! observational — fingerprints byte-identical with them on or off —
+//! and every export surface (`--profile-out` JSON, Prometheus text,
+//! `/snapshot` JSON, fleet-aware series CSV) must pass its validator.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use expand_cxl::config::{presets, PrefetcherKind, SimConfig, TopologySpec};
+use expand_cxl::obs::live::{
+    render_prometheus, snapshot_json, validate_prometheus_text, validate_snapshot_json,
+    LiveServer, LiveState,
+};
+use expand_cxl::obs::profile::{validate_profile_json, Phase};
+use expand_cxl::obs::{validate_metrics_json, ObsOptions};
+use expand_cxl::sim::parallel::{run_multi_host, MultiHostOpts};
+use expand_cxl::sim::runner::Runner;
+use expand_cxl::workloads::fleet::FleetSpec;
+use expand_cxl::workloads::{WorkloadId, WorkloadSpec};
+
+fn smoke_cfg(accesses: usize) -> SimConfig {
+    let mut c = presets::smoke();
+    c.accesses = accesses;
+    c.prefetcher = PrefetcherKind::Expand;
+    c.cxl.topology = TopologySpec::parse("tree:1,2,4").unwrap();
+    c
+}
+
+/// 4-host engine run with the observability knobs under test.
+fn run4(
+    cfg: &Arc<SimConfig>,
+    profile: bool,
+    live: Option<Arc<LiveState>>,
+    obs: Option<ObsOptions>,
+    fleet: Option<FleetSpec>,
+) -> expand_cxl::metrics::MultiHostStats {
+    let seed = cfg.seed;
+    let opts = MultiHostOpts {
+        hosts: 4,
+        threads: 2,
+        epoch_accesses: 2048,
+        profile,
+        live,
+        obs,
+        fleet,
+        ..MultiHostOpts::default()
+    };
+    let wl = WorkloadSpec::parse("pr").unwrap();
+    run_multi_host(cfg, &opts, |h| wl.source_for_host(seed, h, 4)).unwrap()
+}
+
+/// Minimal HTTP/1.1 GET against the live server; returns (head, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to live server");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .expect("HTTP response has a header/body split");
+    (head.to_string(), body.to_string())
+}
+
+/// The headline acceptance criterion: profiler on vs off and live
+/// telemetry attached vs detached never move the engine fingerprint.
+#[test]
+fn profiler_and_live_telemetry_never_perturb_fingerprints() {
+    let cfg = Arc::new(smoke_cfg(8_000));
+
+    let off = run4(&cfg, false, None, None, None);
+    assert!(off.profile.is_none(), "profile=false must not emit a profile");
+
+    let on = run4(&cfg, true, None, None, None);
+    let p = on.profile.as_ref().expect("profile=true emits a profile");
+    assert_eq!(p.hosts, 4);
+    assert_eq!(p.threads, 2);
+    assert!(p.epochs > 0, "profile must count epoch barriers");
+    assert!(p.wall_ns > 0);
+    assert!(
+        p.phase(Phase::HostExec).count > 0,
+        "every epoch records a HostExec span"
+    );
+    assert_eq!(p.workers.len(), 2);
+    assert!(p.workers.iter().any(|w| w.busy_ns > 0));
+    let digest = validate_profile_json(&p.json()).expect("profile JSON passes its validator");
+    assert!(digest.contains("4 hosts"), "digest was: {digest}");
+
+    let state = LiveState::new();
+    let live = run4(&cfg, true, Some(state.clone()), None, None);
+    assert!(state.done.load(Ordering::Acquire), "engine flips done at exit");
+    assert_eq!(state.accesses.load(Ordering::Relaxed), live.aggregate.accesses);
+    assert_eq!(state.epochs.load(Ordering::Relaxed), live.epochs);
+    validate_prometheus_text(&render_prometheus(&state))
+        .expect("post-run scrape is valid Prometheus text");
+    let snap = validate_snapshot_json(&snapshot_json(&state))
+        .expect("post-run /snapshot is schema-valid");
+    assert!(snap.contains("profile present"), "snapshot digest was: {snap}");
+
+    assert_eq!(
+        off.fingerprint(),
+        on.fingerprint(),
+        "the self-profiler must be invisible to fingerprints"
+    );
+    assert_eq!(
+        off.fingerprint(),
+        live.fingerprint(),
+        "live telemetry must be invisible to fingerprints"
+    );
+}
+
+/// End-to-end over a real socket: bind on an ephemeral port, run the
+/// engine against the shared state, scrape both endpoints.
+#[test]
+fn live_server_serves_valid_metrics_and_snapshot_over_tcp() {
+    let cfg = Arc::new(smoke_cfg(6_000));
+    let state = LiveState::new();
+    state.publish(|s| {
+        s.workload = "pr".into();
+        s.hosts = 4;
+        s.threads = 2;
+    });
+    let server = LiveServer::spawn("127.0.0.1:0", state.clone()).unwrap();
+    let addr = server.addr();
+
+    // Pre-run scrape: the endpoint is live before the engine starts.
+    let (head, body) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "head was: {head}");
+    validate_prometheus_text(&body).expect("pre-run scrape passes the validator");
+    assert!(body.contains("expand_up 1"), "run not started yet");
+
+    let stats = run4(&cfg, true, Some(state.clone()), None, None);
+    assert!(stats.aggregate.accesses > 0);
+
+    let (head, body) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "head was: {head}");
+    let samples = validate_prometheus_text(&body).expect("scrape passes the validator");
+    assert!(samples >= 1);
+    assert!(body.contains("expand_accesses_total"));
+    assert!(body.contains("expand_up 0"), "run finished: up gauge drops");
+    assert!(body.contains("expand_run_info"));
+
+    let (head, body) = http_get(addr, "/snapshot");
+    assert!(head.starts_with("HTTP/1.1 200"), "head was: {head}");
+    validate_snapshot_json(&body).expect("/snapshot passes the validator");
+
+    let (head, _) = http_get(addr, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "head was: {head}");
+
+    server.shutdown();
+}
+
+/// Single-host runs publish through `Runner::set_live` on the same
+/// terms: counters move, results don't.
+#[test]
+fn single_host_live_publish_is_observational_only() {
+    let cfg = Arc::new(smoke_cfg(10_000));
+
+    let mut plain = Runner::new(&cfg, None).unwrap();
+    let mut src = WorkloadId::Pr.source(cfg.seed);
+    let baseline = plain.run(&mut *src, cfg.accesses);
+
+    let state = LiveState::new();
+    let mut live = Runner::new(&cfg, None).unwrap();
+    live.set_live(state.clone(), 2048);
+    let mut src = WorkloadId::Pr.source(cfg.seed);
+    let observed = live.run(&mut *src, cfg.accesses);
+
+    assert_eq!(
+        baseline.fingerprint(),
+        observed.fingerprint(),
+        "a live sink on the single-host runner must not change results"
+    );
+    assert!(state.accesses.load(Ordering::Relaxed) > 0);
+    validate_prometheus_text(&render_prometheus(&state)).unwrap();
+}
+
+/// `obs check-profile` must refuse fingerprint-bearing metrics files
+/// (and the metrics validator already refuses profile-bearing ones) —
+/// the two schemas stay disjoint so a profile can never leak into a
+/// determinism artifact.
+#[test]
+fn profile_validator_rejects_fingerprint_bearing_metrics_files() {
+    let cfg = Arc::new(smoke_cfg(6_000));
+    let stats = run4(&cfg, true, None, Some(ObsOptions::default()), None);
+    let rec = stats.obs.as_ref().expect("obs recorder present");
+
+    let metrics = rec.metrics_json(stats.fingerprint_hash(), stats.hosts);
+    validate_metrics_json(&metrics).expect("metrics file is valid on its own schema");
+    let err = validate_profile_json(&metrics)
+        .expect_err("check-profile must reject a metrics file");
+    assert!(
+        err.to_string().contains("unexpected schema"),
+        "error was: {err}"
+    );
+}
+
+/// Fleet runs grow per-tenant columns in the series CSV: every row is
+/// tagged with the tenant owning the host block plus that tenant's
+/// per-epoch aggregate throughput and demand p99.
+#[test]
+fn fleet_series_csv_carries_per_tenant_columns() {
+    let cfg = Arc::new(smoke_cfg(8_000));
+    let fleet = FleetSpec::parse("tenants=2").unwrap();
+    let stats = run4(
+        &cfg,
+        true,
+        None,
+        Some(ObsOptions::default()),
+        Some(fleet.clone()),
+    );
+    let rec = stats.obs.as_ref().expect("obs recorder present");
+
+    let mut tenant_of_host = vec![0usize; stats.hosts];
+    for (t, r) in fleet.tenant_ranges(stats.hosts).iter().enumerate() {
+        for h in r.clone() {
+            tenant_of_host[h] = t;
+        }
+    }
+    let csv = rec.series.to_csv_fleet(rec.endpoints(), &tenant_of_host);
+    let mut lines = csv.lines();
+    let header = lines.next().expect("CSV has a header");
+    assert!(
+        header.ends_with(",tenant,tenant_thr_acc_s,tenant_p99_ps"),
+        "header was: {header}"
+    );
+    let mut rows = 0usize;
+    for line in lines {
+        let tenant: usize = {
+            let cols: Vec<&str> = line.split(',').collect();
+            cols[cols.len() - 3].parse().expect("tenant column is an index")
+        };
+        assert!(tenant < 2, "tenant out of range in row: {line}");
+        rows += 1;
+    }
+    assert!(rows > 0, "fleet run must emit series rows");
+}

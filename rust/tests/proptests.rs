@@ -1342,3 +1342,34 @@ fn prop_tokenize_roundtrip_and_python_contract() {
         assert_eq!(u64::from(tokenize::hash_pc(pc)), expect);
     });
 }
+
+#[test]
+fn prop_engine_profile_merge_is_order_invariant() {
+    use expand_cxl::obs::profile::{EngineProfile, Phase, PHASE_COUNT};
+    forall(25, |rng, seed| {
+        let threads = 1 + rng.below(4) as usize;
+        let n = 2 + rng.below(5) as usize;
+        let mut parts: Vec<EngineProfile> =
+            (0..n).map(|_| EngineProfile::new(threads)).collect();
+        for _ in 0..600 {
+            let p = rng.below(n as u64) as usize;
+            let w = rng.below(threads as u64) as usize;
+            let ph = Phase::ALL[rng.below(PHASE_COUNT as u64) as usize];
+            parts[p].record(w, ph, rng.below(2_000_000));
+        }
+        let fold = |order: &[usize]| {
+            let mut m = EngineProfile::new(threads);
+            for &i in order {
+                m.merge(&parts[i]);
+            }
+            m.json()
+        };
+        let fwd: Vec<usize> = (0..n).collect();
+        let rev: Vec<usize> = (0..n).rev().collect();
+        let rot = rng.below(n as u64) as usize;
+        let rotated: Vec<usize> = (0..n).map(|i| (i + rot) % n).collect();
+        let a = fold(&fwd);
+        assert_eq!(a, fold(&rev), "seed {seed}: reverse merge order");
+        assert_eq!(a, fold(&rotated), "seed {seed}: rotated merge order");
+    });
+}
